@@ -1,0 +1,100 @@
+//! Quickstart: one full C3-SL round trip (the paper's Fig. 2 pipeline).
+//!
+//!   edge_fwd → c3_encode → [uplink] → c3_decode → cloud_step
+//!           → c3_encode(gẑ) → [downlink] → c3_decode → edge_bwd → adam
+//!
+//! Run `make artifacts` first, then:
+//!   cargo run --release --example quickstart
+//!
+//! Everything below executes AOT-compiled XLA artifacts through PJRT —
+//! python is not involved.
+
+use anyhow::Result;
+
+use c3sl::runtime::{AdamState, CodecRuntime, Engine, ModelRuntime};
+use c3sl::tensor::{Labels, Tensor};
+use c3sl::transport::wire;
+use c3sl::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // ---- load AOT artifacts (L2 model + L1 Pallas codec) -------------------
+    let model = ModelRuntime::load(&engine, "artifacts/vggt_b32")?;
+    let m = &model.manifest;
+    println!(
+        "model {}: {} image={} classes={} batch={} D={}",
+        m.key, m.arch, m.image, m.classes, m.batch, m.d_tx
+    );
+
+    let mut codec = CodecRuntime::load(&engine, "artifacts/vggt_b32/codec_c3_r4")?;
+    codec.init_keys(0xC3)?; // both sides derive keys from a shared seed
+    println!(
+        "codec: R={} G={} kernel={} (Pallas, AOT)",
+        codec.r(),
+        codec.manifest.g,
+        codec.manifest.kernel
+    );
+
+    // ---- init both halves ---------------------------------------------------
+    let mut edge_params = model.edge_init(1)?;
+    let cloud_params = model.cloud_init(2)?;
+    let mut edge_adam = AdamState::zeros_like(&edge_params)?;
+
+    // ---- a synthetic batch ---------------------------------------------------
+    let mut rng = Rng::new(7);
+    let mut xdata = vec![0.0f32; m.batch * 3 * m.image * m.image];
+    rng.fill_normal(&mut xdata, 0.0, 1.0);
+    let x = Tensor::from_vec(&[m.batch, 3, m.image, m.image], xdata);
+    let y = Labels((0..m.batch as i32).map(|i| i % m.classes as i32).collect());
+
+    // ---- Fig. 2, uplink -----------------------------------------------------
+    let z = model.edge_fwd(&edge_params, &x)?;
+    let s = codec.encode(&z)?;
+    let up_full = wire::tensor_msg_bytes(&z);
+    let up_c3 = wire::tensor_msg_bytes(&s);
+    println!(
+        "\nuplink:   z {:?} ({} B) → S {:?} ({} B) — {:.2}x smaller",
+        z.shape(),
+        up_full,
+        s.shape(),
+        up_c3,
+        up_full as f64 / up_c3 as f64
+    );
+
+    // ---- cloud side ------------------------------------------------------------
+    let zhat = codec.decode(&s)?;
+    let recon = zhat.rel_err(&z);
+    let out = model.cloud_step(&cloud_params, &zhat, &y)?;
+    println!(
+        "cloud:    decode rel-err {:.3} → loss {:.4}, acc {:.1}%",
+        recon,
+        out.loss,
+        100.0 * out.ncorrect / m.batch as f32
+    );
+
+    // ---- Fig. 2, downlink (gradients compressed with the SAME codec) -------
+    let gs = codec.encode(&out.gz)?;
+    let down_full = wire::tensor_msg_bytes(&out.gz);
+    let down_c3 = wire::tensor_msg_bytes(&gs);
+    println!(
+        "downlink: gẑ ({} B) → encoded ({} B) — {:.2}x smaller",
+        down_full,
+        down_c3,
+        down_full as f64 / down_c3 as f64
+    );
+
+    // ---- edge backward + Adam ------------------------------------------------
+    let gz = codec.decode(&gs)?;
+    let grads = model.edge_bwd(&edge_params, &x, &gz)?;
+    edge_params = model.edge_adam(edge_params, &grads, &mut edge_adam, 1e-4)?;
+    let z2 = model.edge_fwd(&edge_params, &x)?;
+    println!(
+        "edge:     adam step applied; features moved by rel {:.5}",
+        z2.rel_err(&z)
+    );
+
+    println!("\nquickstart OK — full Fig. 2 round trip through AOT artifacts");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! End-to-end driver: split-learning training runs over the two-actor
+//! coordinator for every compression scheme, on SynthCIFAR (or real CIFAR if
+//! binaries are present under data/).  This is the run recorded in
+//! EXPERIMENTS.md: loss curves per scheme, accuracy after N steps, and the
+//! measured wire traffic.
+//!
+//!   cargo run --release --example train_split             # default 150 steps
+//!   C3SL_STEPS=400 cargo run --release --example train_split
+//!
+//! Loss curves land in runs/train_split_<scheme>.csv.
+
+use anyhow::Result;
+
+use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
+use c3sl::coordinator::run_experiment;
+
+fn cfg(scheme: SchemeKind, steps: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "train_split".into(),
+        model_key: "vggt_b32".into(),
+        artifacts_root: "artifacts".into(),
+        scheme,
+        codec_venue: CodecVenue::Artifact,
+        transport: TransportKind::InProc,
+        steps,
+        lr: 1e-3,
+        seed,
+        augment: false,
+        eval_every: steps / 3,
+        eval_batches: 8,
+        synth_train: 2048,
+        synth_test: 512,
+        ..Default::default()
+    }
+}
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("C3SL_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150);
+    let seed: u64 = std::env::var("C3SL_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+
+    let schemes: Vec<SchemeKind> = vec![
+        SchemeKind::Vanilla,
+        SchemeKind::C3 { r: 2 },
+        SchemeKind::C3 { r: 4 },
+        SchemeKind::C3 { r: 8 },
+        SchemeKind::C3 { r: 16 },
+        SchemeKind::BottleNetPP { r: 4 },
+    ];
+
+    println!(
+        "train_split: vggt_b32 on synthcifar10, {steps} steps, seed {seed}\n"
+    );
+    println!(
+        "{:<12} {:>10} {:>10} {:>12} {:>12} {:>9} {:>8}",
+        "scheme", "final loss", "eval acc", "uplink B", "downlink B", "vs van.", "wall s"
+    );
+
+    let mut vanilla_up = 0u64;
+    for scheme in schemes {
+        let c = cfg(scheme, steps, seed);
+        let out = run_experiment(&c)?;
+        let rec = &out.recorder;
+        let eval_acc = rec.evals.last().map(|e| e.2).unwrap_or(f64::NAN);
+        let up = rec.total_uplink();
+        if scheme == SchemeKind::Vanilla {
+            vanilla_up = up;
+        }
+        let reduction = if up > 0 { vanilla_up as f64 / up as f64 } else { 0.0 };
+        println!(
+            "{:<12} {:>10.4} {:>9.1}% {:>12} {:>12} {:>8.2}x {:>8.1}",
+            scheme.name(),
+            rec.final_loss().unwrap_or(f64::NAN),
+            eval_acc * 100.0,
+            up,
+            rec.total_downlink(),
+            reduction,
+            out.wall_seconds
+        );
+        let csv = format!("runs/train_split_{}.csv", scheme.name());
+        rec.write_csv(&csv)?;
+    }
+    println!("\nloss curves written to runs/train_split_<scheme>.csv");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Two-process split learning over TCP — demonstrates that the edge and
+//! cloud really are independent actors speaking the wire protocol.
+//!
+//! This example forks the cloud into a second OS process (re-executing this
+//! binary with `--role cloud`), trains a few steps over localhost TCP and
+//! reports the traffic.
+//!
+//!   cargo run --release --example train_tcp
+
+use anyhow::Result;
+
+use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
+use c3sl::coordinator::{CloudWorker, EdgeWorker};
+use c3sl::data::open_dataset;
+use c3sl::runtime::Engine;
+use c3sl::transport::tcp::Tcp;
+use c3sl::transport::Transport;
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "train_tcp".into(),
+        model_key: "vggt_b32".into(),
+        scheme: SchemeKind::C3 { r: 4 },
+        codec_venue: CodecVenue::Artifact,
+        transport: TransportKind::Tcp,
+        tcp_addr: "127.0.0.1:39717".into(),
+        steps: 10,
+        lr: 1e-3,
+        seed: 3,
+        eval_every: 10,
+        eval_batches: 2,
+        synth_train: 256,
+        synth_test: 64,
+        ..Default::default()
+    }
+}
+
+fn run_cloud() -> Result<()> {
+    let c = cfg();
+    let engine = Engine::cpu()?;
+    let mut cloud = CloudWorker::new(&engine, &c)?;
+    let mut tp: Box<dyn Transport> = Box::new(Tcp::listen(&c.tcp_addr)?);
+    cloud.run(tp.as_mut())?;
+    eprintln!("[cloud-proc] done; mean cloud step {:.4}s", cloud.step_latency.mean());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    if std::env::args().any(|a| a == "cloud") {
+        return run_cloud();
+    }
+
+    // Fork the cloud as a separate OS process.
+    let exe = std::env::current_exe()?;
+    let mut child = std::process::Command::new(exe)
+        .arg("--role")
+        .arg("cloud")
+        .spawn()?;
+
+    let c = cfg();
+    let engine = Engine::cpu()?;
+    let mut edge = EdgeWorker::new(&engine, &c)?;
+    let manifest = c3sl::runtime::ModelManifest::load(c.model_dir())?;
+    let train = open_dataset(&c.data_root, manifest.classes, manifest.image, true, 256);
+    let test = open_dataset(&c.data_root, manifest.classes, manifest.image, false, 64);
+
+    let mut tp: Box<dyn Transport> = Box::new(Tcp::connect(&c.tcp_addr)?);
+    let rec = edge.run(tp.as_mut(), train.as_ref(), test.as_ref(), &c)?;
+    let status = child.wait()?;
+    anyhow::ensure!(status.success(), "cloud process failed");
+
+    println!("[edge-proc] {}", rec.summary());
+    println!(
+        "[edge-proc] tcp traffic: tx={}B rx={}B over {} steps",
+        tp.stats().tx(),
+        tp.stats().rx(),
+        c.steps
+    );
+    println!("train_tcp OK — two OS processes, real sockets, compressed both ways");
+    Ok(())
+}

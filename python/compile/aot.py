@@ -1,0 +1,203 @@
+# AOT compiler: lower every split-learning step function to HLO **text** and
+# emit a manifest.json describing argument/result shapes for the rust runtime.
+#
+# HLO text — NOT lowered.compile() or proto .serialize() — is the interchange
+# format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+# the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+# the text parser reassigns ids and round-trips cleanly.  See
+# /opt/xla-example/README.md and gen_hlo.py.
+#
+# Usage:
+#   cd python && python -m compile.aot --preset tiny --out ../artifacts
+#   cd python && python -m compile.aot --preset tiny --kernel fft ...
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_registry
+from . import split
+
+DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("uint32"): "u32",
+    jnp.dtype("bfloat16"): "bf16",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return {"shape": list(x.shape), "dtype": DTYPE_NAMES[jnp.dtype(x.dtype)]}
+
+
+def lower_fn(fn, example_args, path: str):
+    """Lower fn at example_args, write HLO text, return manifest entry."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *example_args)
+    entry = {
+        "args": [_spec(a) for a in example_args],
+        "outputs": [_spec(o) for o in out_avals],
+        "hlo_bytes": len(text),
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    return entry
+
+
+def _shape_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit_model(cfg, out_root: str) -> dict:
+    """Emit the full artifact set for one ModelConfig; return manifest dict."""
+    edge, cloud, d_tx, d_cut = cfg.build()
+    b, img, ncls = cfg.batch, cfg.image, cfg.classes
+    in_shape = (3, img, img)
+
+    rng = jax.random.PRNGKey(0)
+    edge_params, edge_out = edge.init(rng, in_shape)
+    cloud_params, cloud_out = cloud.init(rng, edge_out)
+    assert edge_out == (d_tx,), (edge_out, d_tx)
+    assert cloud_out == (ncls,), (cloud_out, ncls)
+
+    edge_leaves, edge_tree = split.flatten_spec(edge_params)
+    cloud_leaves, cloud_tree = split.flatten_spec(cloud_params)
+    ne, nc = len(edge_leaves), len(cloud_leaves)
+
+    outdir = os.path.join(out_root, cfg.key)
+    os.makedirs(outdir, exist_ok=True)
+
+    seed = _shape_struct((2,), jnp.uint32)
+    x = _shape_struct((b, 3, img, img))
+    y = _shape_struct((b,), jnp.int32)
+    ztx = _shape_struct((b, d_tx))
+    eleaf_specs = [_shape_struct(l.shape, l.dtype) for l in edge_leaves]
+    cleaf_specs = [_shape_struct(l.shape, l.dtype) for l in cloud_leaves]
+    scalar = _shape_struct((), jnp.float32)
+
+    manifest = {
+        "key": cfg.key,
+        "arch": cfg.arch,
+        "width": cfg.width,
+        "image": img,
+        "classes": ncls,
+        "batch": b,
+        "d_tx": d_tx,
+        "d_cut": d_cut,
+        "bnpp_ratio": cfg.bnpp_ratio,
+        "edge_param_leaves": ne,
+        "cloud_param_leaves": nc,
+        "edge_params": [_spec(l) for l in edge_leaves],
+        "cloud_params": [_spec(l) for l in cloud_leaves],
+        "artifacts": {},
+    }
+    art = manifest["artifacts"]
+
+    def emit(name, fn, args):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        art[name] = lower_fn(fn, args, path)
+        art[name]["file"] = f"{name}.hlo.txt"
+        print(f"  {cfg.key}/{name}: {art[name]['hlo_bytes']} bytes "
+              f"({art[name]['lower_seconds']}s)")
+
+    emit("edge_init", split.make_init(edge, in_shape), (seed,))
+    emit("cloud_init", split.make_init(cloud, edge_out), (seed,))
+    emit("edge_fwd", split.make_edge_fwd(edge, edge_tree, ne),
+         tuple(eleaf_specs) + (x,))
+    emit("edge_bwd", split.make_edge_bwd(edge, edge_tree, ne),
+         tuple(eleaf_specs) + (x, ztx))
+    emit("cloud_step", split.make_cloud_step(cloud, cloud_tree, nc),
+         tuple(cleaf_specs) + (ztx, y))
+    emit("cloud_eval", split.make_cloud_eval(cloud, cloud_tree, nc),
+         tuple(cleaf_specs) + (ztx, y))
+    emit("edge_adam", split.make_adam(ne),
+         tuple(eleaf_specs) * 4 + (scalar, scalar))
+    emit("cloud_adam", split.make_adam(nc),
+         tuple(cleaf_specs) * 4 + (scalar, scalar))
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def emit_codec(cfg, r: int, kernel: str, out_root: str) -> dict:
+    """Emit the C3 codec artifact set for ratio R (model-independent except
+    for B and D_tx)."""
+    _, _, d_tx, _ = cfg.build()
+    b = cfg.batch
+    if b % r != 0:
+        raise ValueError(f"batch {b} not divisible by R={r}")
+    g = b // r
+
+    outdir = os.path.join(out_root, cfg.key, f"codec_c3_r{r}")
+    os.makedirs(outdir, exist_ok=True)
+
+    seed = _shape_struct((2,), jnp.uint32)
+    zflat = _shape_struct((b, d_tx))
+    keys = _shape_struct((r, d_tx))
+    s = _shape_struct((g, d_tx))
+
+    manifest = {"key": cfg.key, "r": r, "g": g, "d": d_tx, "batch": b,
+                "kernel": kernel, "artifacts": {}}
+    art = manifest["artifacts"]
+
+    def emit(name, fn, args):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        art[name] = lower_fn(fn, args, path)
+        art[name]["file"] = f"{name}.hlo.txt"
+        print(f"  {cfg.key}/codec_c3_r{r}/{name}: {art[name]['hlo_bytes']} bytes "
+              f"({art[name]['lower_seconds']}s)")
+
+    emit("gen_keys", split.make_gen_keys(r, d_tx), (seed,))
+    emit("c3_encode", split.make_c3_encode(b, r, d_tx, kernel), (zflat, keys))
+    emit("c3_decode", split.make_c3_decode(b, r, d_tx, kernel), (s, keys))
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny",
+                    help="preset name or model key (see compile/model.py)")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--kernel", default="pallas", choices=["pallas", "fft"],
+                    help="C3 codec implementation to lower")
+    ap.add_argument("--ratios", default=None,
+                    help="comma-separated C3 ratios (default: 2,4,8,16)")
+    args = ap.parse_args()
+
+    cfgs = model_registry.resolve(args.preset)
+    ratios = ([int(r) for r in args.ratios.split(",")] if args.ratios
+              else model_registry.C3_RATIOS)
+
+    t0 = time.time()
+    for cfg in cfgs:
+        print(f"[aot] model {cfg.key}")
+        emit_model(cfg, args.out)
+        # C3 codecs only make sense for the un-composed (non-bnpp) models.
+        if cfg.bnpp_ratio is None:
+            for r in ratios:
+                emit_codec(cfg, r, args.kernel, args.out)
+    print(f"[aot] done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+# L1: Pallas kernels for the C3-SL codec (paper §3.1 encoder, §3.2 decoder).
+#
+# The paper's encoder is the *direct* O(D^2) circular convolution (Table 2
+# counts D^2 MACs per bind, not D log D) fused with the superposition sum.
+# On GPU the authors relied on framework ops; here the hot-spot is re-thought
+# for the TPU memory hierarchy:
+#
+#   * Circular convolution with a fixed key is a matvec against a circulant
+#     matrix.  We tile the OUTPUT index n into TN-wide blocks; for each block
+#     we materialize the rotated feature slice Zrot[n, m] = z[(n − m) mod D]
+#     in VMEM via broadcasted_iota index arithmetic and contract it against
+#     the key on the MXU:  out[n0:n0+TN] = Zrot @ k   — an (TN, D)·(D,)
+#     systolic-friendly contraction instead of a gather-per-output loop.
+#   * The superposition Σ_i K_i ⊛ Z_i accumulates across the sequential key
+#     grid dimension directly into the output ref, so the compressed feature
+#     never round-trips to HBM between binds (the GPU equivalent would be a
+#     shared-memory reduction; on TPU the output block simply stays in VMEM).
+#   * VMEM budget per grid step:  TN·D·4 (rotated slice) + D·4 (feature row)
+#     + D·4 (key row) + TN·4 (out tile).  With TN=256, D=4096 that is
+#     ≈ 4.2 MiB — comfortably inside a 16 MiB VMEM budget, leaving room for
+#     double buffering of the streamed z rows.
+#
+# interpret=True is mandatory here: the CPU PJRT client cannot execute the
+# Mosaic custom-calls a real TPU lowering would emit.  Numerics are verified
+# against the FFT oracle in ref.py (a different algorithm) by pytest.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["c3_encode", "c3_decode", "pick_tile", "DEFAULT_TILE", "DEFAULT_VARIANT"]
+
+DEFAULT_TILE = 256
+
+# Kernel variant (see §Perf in DESIGN.md / EXPERIMENTS.md):
+#   "matvec" — v1: grid (G, R, D/TN); each step gathers the rotated FEATURE
+#              slice and contracts (TN, D) @ (D,) — one matvec per feature.
+#              Simple, but a matvec feeds the 128×128 MXU one output column
+#              at a time (~1/128 utilization at f32).
+#   "matmul" — v2 (default): uses the transposed identity
+#              (k ⊛ z)[n] = Σ_m z[m] · k[(n−m) mod D],
+#              so the gather builds a circulant tile of the KEY, shared by
+#              every group, and each grid step computes
+#              (G, D) @ (D, TN) → (G, TN) — a true matmul that batches all
+#              G groups onto the MXU (utilization ∝ min(G,128)/1 better).
+#              VMEM per step: D·TN·4 (key tile) + G·D·4 (features) + G·TN·4;
+#              at D=4096, TN=256, G=8 that is 4.2 + 0.13 + 0.01 MiB.
+DEFAULT_VARIANT = "matmul"
+
+
+def pick_tile(d: int, requested: int = DEFAULT_TILE) -> int:
+    """Largest power-of-two tile ≤ requested that divides D."""
+    t = min(requested, d)
+    while t > 1 and d % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+# ---------------------------------------------------------------------------
+# Encoder: bind (circular convolution) + superpose, Eq. (1)+(2)
+# ---------------------------------------------------------------------------
+
+def _encode_kernel(z_ref, k_ref, o_ref, *, tile: int, d: int):
+    """Grid = (G, R, D // tile).
+
+    Block views:  z_ref (1, 1, D) — feature row Z_i^g, resident in VMEM;
+                  k_ref (1, D)    — key row K_i;
+                  o_ref (1, tile) — output tile of S^g, accumulated over i.
+    """
+    i = pl.program_id(1)            # key index — sequential: safe accumulate
+    t = pl.program_id(2)            # output-tile index
+    z = z_ref[0, 0, :]              # (D,)
+    k = k_ref[0, :]                 # (D,)
+
+    n = t * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)   # (tile,1)
+    m = jax.lax.broadcasted_iota(jnp.int32, (tile, d), 1)              # (tile,D)
+    idx = (n - m) % d                                                  # (n−m) mod D
+    zrot = jnp.take(z, idx, axis=0)                                    # (tile, D) in VMEM
+    part = jnp.dot(zrot, k, preferred_element_type=jnp.float32)        # MXU contraction
+    part = part.astype(o_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, :] = part
+
+    @pl.when(i != 0)
+    def _accum():
+        o_ref[0, :] += part
+
+
+def _encode_matvec(z, keys, tn):
+    g, r, d = z.shape
+    grid = (g, r, d // tn)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, tile=tn, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda gi, ri, ti: (gi, ri, 0)),
+            pl.BlockSpec((1, d), lambda gi, ri, ti: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tn), lambda gi, ri, ti: (gi, ti)),
+        out_shape=jax.ShapeDtypeStruct((g, d), z.dtype),
+        interpret=True,
+    )(z, keys)
+
+
+def _encode_matmul_kernel(z_ref, k_ref, o_ref, *, tile: int, d: int):
+    """Grid = (R, D // tile).  v2: circulant-tile matmul, groups batched.
+
+    Block views:  z_ref (G, 1, D) — feature rows Z_{:,i,:} for key i;
+                  k_ref (1, D)    — key row K_i;
+                  o_ref (G, tile) — output tile of S, accumulated over i.
+
+    Uses (K_i ⊛ Z)[n] = Σ_m Z[m] · K_i[(n − m) mod D]: the gathered circulant
+    tile Krot[m, n] = K_i[(n−m) mod D] is SHARED across groups, so the MXU
+    sees one (G, D) @ (D, tile) contraction per step.
+    """
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    zg = z_ref[:, 0, :]                                                # (G, D)
+    k = k_ref[0, :]                                                    # (D,)
+
+    m = jax.lax.broadcasted_iota(jnp.int32, (d, tile), 0)              # (D, tile)
+    n = t * tile + jax.lax.broadcasted_iota(jnp.int32, (d, tile), 1)
+    krot = jnp.take(k, (n - m) % d, axis=0)                            # (D, tile)
+    part = jnp.dot(zg, krot, preferred_element_type=jnp.float32)       # (G, tile)
+    part = part.astype(o_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i != 0)
+    def _accum():
+        o_ref[...] += part
+
+
+def _encode_matmul(z, keys, tn):
+    g, r, d = z.shape
+    grid = (r, d // tn)
+    return pl.pallas_call(
+        functools.partial(_encode_matmul_kernel, tile=tn, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((g, 1, d), lambda ri, ti: (0, ri, 0)),
+            pl.BlockSpec((1, d), lambda ri, ti: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, tn), lambda ri, ti: (0, ti)),
+        out_shape=jax.ShapeDtypeStruct((g, d), z.dtype),
+        interpret=True,
+    )(z, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "variant"))
+def c3_encode(z: jnp.ndarray, keys: jnp.ndarray, tile: int = DEFAULT_TILE,
+              variant: str = DEFAULT_VARIANT) -> jnp.ndarray:
+    """Compress z (G, R, D) with keys (R, D) into s (G, D).  Paper Eq. (1)+(2)."""
+    g, r, d = z.shape
+    assert keys.shape == (r, d), (z.shape, keys.shape)
+    tn = pick_tile(d, tile)
+    if variant == "matmul":
+        return _encode_matmul(z, keys, tn)
+    return _encode_matvec(z, keys, tn)
+
+
+# ---------------------------------------------------------------------------
+# Decoder: unbind (circular correlation), Eq. (3)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(s_ref, k_ref, o_ref, *, tile: int, d: int):
+    """Grid = (G, R, D // tile).
+
+    Block views:  s_ref (1, D)       — compressed feature S^g;
+                  k_ref (1, D)       — key row K_i;
+                  o_ref (1, 1, tile) — output tile of Ẑ_i^g.
+    """
+    t = pl.program_id(2)
+    s = s_ref[0, :]
+    k = k_ref[0, :]
+
+    n = t * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    m = jax.lax.broadcasted_iota(jnp.int32, (tile, d), 1)
+    idx = (n + m) % d                                                  # (n+m) mod D
+    srot = jnp.take(s, idx, axis=0)                                    # (tile, D)
+    out = jnp.dot(srot, k, preferred_element_type=jnp.float32)
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+
+
+def _decode_matvec(s, keys, tn):
+    g, d = s.shape
+    r = keys.shape[0]
+    grid = (g, r, d // tn)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, tile=tn, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda gi, ri, ti: (gi, 0)),
+            pl.BlockSpec((1, d), lambda gi, ri, ti: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tn), lambda gi, ri, ti: (gi, ri, ti)),
+        out_shape=jax.ShapeDtypeStruct((g, r, d), s.dtype),
+        interpret=True,
+    )(s, keys)
+
+
+def _decode_matmul_kernel(s_ref, k_ref, o_ref, *, tile: int, d: int):
+    """Grid = (R, D // tile).  v2: circulant-tile matmul for correlation.
+
+    (K_i ⋆ S)[n] = Σ_m S[m] · K_i[(m − n) mod D]: gather the key circulant
+    Krot[m, n] = K_i[(m−n) mod D] (shared across groups) and contract
+    (G, D) @ (D, tile) → (G, tile).
+    """
+    t = pl.program_id(1)
+    sg = s_ref[...]                                                    # (G, D)
+    k = k_ref[0, :]
+
+    m = jax.lax.broadcasted_iota(jnp.int32, (d, tile), 0)
+    n = t * tile + jax.lax.broadcasted_iota(jnp.int32, (d, tile), 1)
+    krot = jnp.take(k, (m - n) % d, axis=0)                            # (D, tile)
+    out = jnp.dot(sg, krot, preferred_element_type=jnp.float32)        # (G, tile)
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+def _decode_matmul(s, keys, tn):
+    g, d = s.shape
+    r = keys.shape[0]
+    grid = (r, d // tn)
+    return pl.pallas_call(
+        functools.partial(_decode_matmul_kernel, tile=tn, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((g, d), lambda ri, ti: (0, 0)),
+            pl.BlockSpec((1, d), lambda ri, ti: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, 1, tn), lambda ri, ti: (0, ri, ti)),
+        out_shape=jax.ShapeDtypeStruct((g, r, d), s.dtype),
+        interpret=True,
+    )(s, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "variant"))
+def c3_decode(s: jnp.ndarray, keys: jnp.ndarray, tile: int = DEFAULT_TILE,
+              variant: str = DEFAULT_VARIANT) -> jnp.ndarray:
+    """Decode s (G, D) with keys (R, D) into ẑ (G, R, D).  Paper Eq. (3)."""
+    g, d = s.shape
+    r = keys.shape[0]
+    assert keys.shape == (r, d), (s.shape, keys.shape)
+    tn = pick_tile(d, tile)
+    if variant == "matmul":
+        return _decode_matmul(s, keys, tn)
+    return _decode_matvec(s, keys, tn)

@@ -1,0 +1,117 @@
+# Pure-jnp correctness oracles for the C3-SL circular-convolution codec.
+#
+# Two independent reference implementations:
+#   * FFT-based  (O(D log D)) — uses the convolution theorem; this is a
+#     *different algorithm* from the Pallas kernel's direct tiled-circulant
+#     formulation, so agreement between the two is a strong correctness
+#     signal rather than a tautology.
+#   * roll-based (O(D^2))     — literal transcription of the paper's Eq. (1)
+#     and Eq. (3) definitions; used as a second, dumb-but-obvious oracle.
+#
+# Conventions (paper §3.1–3.2):
+#   circular convolution  (k ⊛ z)[n] = Σ_m k[m] · z[(n − m) mod D]
+#   circular correlation  (k ⋆ s)[n] = Σ_m k[m] · s[(n + m) mod D]
+#   encode:  S^g   = Σ_{i=1..R} K_i ⊛ Z_i^g                      (Eq. 1–2)
+#   decode:  Ẑ_i^g = K_i ⋆ S^g                                   (Eq. 3)
+#   keys:    K_i ~ N(0, 1/D), normalized to unit L2 norm.
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "circ_conv_fft",
+    "circ_corr_fft",
+    "circ_conv_roll",
+    "circ_corr_roll",
+    "generate_keys",
+    "encode_ref",
+    "decode_ref",
+    "encode_decode_ref",
+    "crosstalk_decomposition",
+]
+
+
+# ---------------------------------------------------------------------------
+# FFT oracle
+# ---------------------------------------------------------------------------
+
+def circ_conv_fft(k: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Circular convolution along the last axis via the convolution theorem."""
+    d = k.shape[-1]
+    out = jnp.fft.irfft(jnp.fft.rfft(k) * jnp.fft.rfft(z), n=d)
+    return out.astype(z.dtype)
+
+
+def circ_corr_fft(k: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Circular correlation along the last axis: conjugate in the spectrum."""
+    d = k.shape[-1]
+    out = jnp.fft.irfft(jnp.conj(jnp.fft.rfft(k)) * jnp.fft.rfft(s), n=d)
+    return out.astype(s.dtype)
+
+
+# ---------------------------------------------------------------------------
+# roll oracle (literal Eq. 1 / Eq. 3)
+# ---------------------------------------------------------------------------
+
+def _rotated_matrix(x: jnp.ndarray, sign: int) -> jnp.ndarray:
+    """M[..., n, m] = x[..., (n + sign*m) mod D]."""
+    d = x.shape[-1]
+    n = jnp.arange(d)
+    idx = (n[:, None] + sign * n[None, :]) % d
+    return x[..., idx]
+
+
+def circ_conv_roll(k: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Direct O(D^2) circular convolution: out[n] = Σ_m k[m] z[(n−m) mod D]."""
+    zmat = _rotated_matrix(z, sign=-1)            # zmat[..., n, m] = z[(n−m)%D]
+    return jnp.einsum("...nm,...m->...n", zmat, jnp.broadcast_to(k, z.shape))
+
+
+def circ_corr_roll(k: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Direct O(D^2) circular correlation: out[n] = Σ_m k[m] s[(n+m) mod D]."""
+    smat = _rotated_matrix(s, sign=+1)            # smat[..., n, m] = s[(n+m)%D]
+    return jnp.einsum("...nm,...m->...n", smat, jnp.broadcast_to(k, s.shape))
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+
+def generate_keys(rng: jax.Array, r: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    """R keys, each D-dim, sampled N(0, 1/D) then unit-normalized (paper §3.1)."""
+    k = jax.random.normal(rng, (r, d), dtype=jnp.float32) / jnp.sqrt(jnp.float32(d))
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    return k.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode over groups
+# ---------------------------------------------------------------------------
+
+def encode_ref(z: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (1)+(2): z (G, R, D), keys (R, D) → s (G, D) via the FFT oracle."""
+    v = circ_conv_fft(keys[None, :, :], z)        # (G, R, D)
+    return v.sum(axis=1)
+
+
+def decode_ref(s: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (3): s (G, D), keys (R, D) → ẑ (G, R, D) via the FFT oracle."""
+    return circ_corr_fft(keys[None, :, :], s[:, None, :])
+
+
+def encode_decode_ref(z: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Round trip ẑ = D(E(z)); the lossy map whose error Eq. (4) decomposes."""
+    return decode_ref(encode_ref(z, keys), keys)
+
+
+def crosstalk_decomposition(z: jnp.ndarray, keys: jnp.ndarray):
+    """Eq. (4): split the decode output into self-unbinding and crosstalk terms.
+
+    Returns (self_term, cross_term), each (G, R, D), with
+    decode(encode(z)) == self_term + cross_term exactly (up to fp error).
+    """
+    v = circ_conv_fft(keys[None, :, :], z)        # (G, R, D) bound features
+    self_term = circ_corr_fft(keys[None, :, :], v)             # K_i ⋆ V_i
+    s = v.sum(axis=1, keepdims=True)                            # (G, 1, D)
+    cross_term = circ_corr_fft(keys[None, :, :], s - v)         # K_i ⋆ Σ_{j≠i} V_j
+    return self_term, cross_term

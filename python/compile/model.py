@@ -1,0 +1,127 @@
+# Experiment-configuration registry: ties a model, a split point, a batch
+# size and a compression scheme into the concrete artifact set aot.py emits.
+#
+# Artifact layout (consumed by rust/src/runtime/registry.rs):
+#   artifacts/<model_key>/               edge_init, cloud_init, edge_fwd,
+#                                        edge_bwd, cloud_step, cloud_eval,
+#                                        edge_adam, cloud_adam, manifest.json
+#   artifacts/<model_key>/codec_c3_r<R>/ gen_keys, c3_encode, c3_decode,
+#                                        manifest.json
+# BottleNet++ variants are separate model_keys (the codec lives inside the
+# edge/cloud networks — see models/bottlenetpp.py).
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn, split
+from .models import bottlenetpp_codec, resnet50_split, vgg16_split, vgg_tiny_split
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    key: str                    # artifact dir name
+    arch: str                   # vgg16 | vgg_tiny | resnet50
+    width: float
+    image: int
+    classes: int
+    batch: int
+    bnpp_ratio: Optional[int] = None   # set → BottleNet++ codec composed in
+    norm: bool = True
+
+    def build(self) -> Tuple[nn.Layer, nn.Layer, int, int]:
+        """Return (edge, cloud, d_tx, d_cut).
+
+        d_cut: dimension of the raw cut tensor (f_theta output).
+        d_tx:  dimension actually transmitted (≠ d_cut only for BottleNet++).
+        """
+        if self.arch == "vgg16":
+            edge, cloud, d = vgg16_split(self.classes, self.width, self.image,
+                                         self.norm)
+            cut_c, cut_hw = _vgg16_cut(self.width, self.image)
+        elif self.arch == "vgg_tiny":
+            edge, cloud, d = vgg_tiny_split(self.classes, self.width, self.image,
+                                            self.norm)
+            cut_c, cut_hw = _vggtiny_cut(self.width, self.image)
+        elif self.arch == "resnet50":
+            edge, cloud, d = resnet50_split(self.classes, self.width, self.image,
+                                            self.norm)
+            cut_c, cut_hw = _resnet50_cut(self.width, self.image)
+        else:
+            raise ValueError(self.arch)
+
+        if self.bnpp_ratio is None:
+            return edge, cloud, d, d
+
+        enc, dec, d_tx = bottlenetpp_codec(cut_c, cut_hw, cut_hw, self.bnpp_ratio)
+        unflat = nn.Lambda(
+            "unflatten",
+            lambda x: x.reshape(x.shape[0], cut_c, cut_hw, cut_hw),
+            lambda s: (cut_c, cut_hw, cut_hw))
+        edge_bnpp = nn.Sequential([edge, unflat, enc], name=edge.name + "+bnppenc")
+        cloud_bnpp = nn.Sequential([dec, cloud], name="bnppdec+" + cloud.name)
+        return edge_bnpp, cloud_bnpp, d_tx, d
+
+
+def _scale(c, w):
+    return max(8, int(round(c * w)))
+
+
+def _vgg16_cut(width, image):
+    return _scale(512, width), image // 16
+
+
+def _vggtiny_cut(width, image):
+    return _scale(64, width), image // 4
+
+
+def _resnet50_cut(width, image):
+    return _scale(256, width) * 4, image // 16
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+def _tiny(key, **kw):
+    base = dict(arch="vgg_tiny", width=1.0, image=16, classes=10, batch=32)
+    base.update(kw)
+    return ModelConfig(key=key, **base)
+
+
+PRESETS: Dict[str, List[ModelConfig]] = {
+    # Fast CPU set used by `make artifacts`, the examples and the benches.
+    "tiny": [
+        _tiny("vggt_b32"),
+        _tiny("vggt_b32_bnpp_r2", bnpp_ratio=2),
+        _tiny("vggt_b32_bnpp_r4", bnpp_ratio=4),
+        _tiny("vggt_b32_bnpp_r8", bnpp_ratio=8),
+        _tiny("vggt_b32_bnpp_r16", bnpp_ratio=16),
+    ],
+    # Paper-faithful (slimmed width for 1-core CPU) CIFAR-scale models.
+    "slim": [
+        ModelConfig("vgg16s_b32", "vgg16", 0.25, 32, 10, 32),
+        ModelConfig("resnet50s_b32", "resnet50", 0.25, 32, 100, 32),
+    ],
+    # Full-fidelity paper models (AOT-compile only; too slow to train here).
+    "full": [
+        ModelConfig("vgg16_b64", "vgg16", 1.0, 32, 10, 64),
+        ModelConfig("resnet50_b64", "resnet50", 1.0, 32, 100, 64),
+    ],
+}
+
+# C3 codec ratios emitted for every model key (paper Table 1 sweep).
+C3_RATIOS = [2, 4, 8, 16]
+
+
+def resolve(preset_or_key: str) -> List[ModelConfig]:
+    if preset_or_key in PRESETS:
+        return PRESETS[preset_or_key]
+    for cfgs in PRESETS.values():
+        for c in cfgs:
+            if c.key == preset_or_key:
+                return [c]
+    raise KeyError(preset_or_key)

@@ -1,0 +1,5 @@
+from .vgg import vgg16_split, vgg_tiny_split
+from .resnet import resnet50_split
+from .bottlenetpp import bottlenetpp_codec
+
+__all__ = ["vgg16_split", "vgg_tiny_split", "resnet50_split", "bottlenetpp_codec"]

@@ -1,0 +1,52 @@
+# BottleNet++ (Shao & Zhang, ICC 2020) — the paper's dimension-wise baseline.
+#
+# Encoder (edge side):  conv k=2×2 stride (2,2) C → C′, BatchNorm, Sigmoid.
+# Decoder (cloud side): deconv k=2×2 stride (2,2) C′ → C, BatchNorm, ReLU.
+# Channel-condition layers are removed, as in the paper's §4.1 setup.
+#
+# Overall compression R combines 4× spatial (k=s=2) with channel scaling:
+# C′ = 4C/R (paper Table 2), so bytes shrink by exactly R.
+#
+# In this reproduction BottleNet++ is *model composition*: the encoder is
+# appended to f_theta (trained on the edge) and the decoder prepended to
+# f_psi (trained on the cloud), so the standard split-SL gradient path trains
+# the codec end-to-end, exactly like the original.
+
+from typing import Tuple
+
+from .. import nn
+
+
+def bottlenetpp_codec(c: int, h: int, w: int, ratio: int,
+                      k: int = 2, stride: int = 2) -> Tuple[nn.Layer, nn.Layer, int]:
+    """Return (encoder, decoder, d_tx) for a cut tensor (c, h, w).
+
+    encoder: (c,h,w) → flat (d_tx,);  decoder: flat (d_tx,) → (c,h,w).
+    d_tx = C′·(H/2)·(W/2) = (C·H·W)/ratio.
+    """
+    spatial = stride * stride
+    assert ratio >= 1 and (ratio * h * w) % (spatial * h * w) == 0 or True
+    c_prime = max(1, (spatial * c) // ratio)          # C′ = 4C/R
+    h2, w2 = h // stride, w // stride
+    d_tx = c_prime * h2 * w2
+
+    encoder = nn.Sequential([
+        nn.Conv2d(c, c_prime, k=k, stride=stride, padding="SAME"),
+        nn.BatchNormStatic(c_prime),
+        nn.Sigmoid(),
+        nn.Flatten(),
+    ], name=f"bnpp_enc/{c}->{c_prime}")
+
+    unflat = nn.Lambda(
+        "unflatten",
+        lambda x: x.reshape(x.shape[0], c_prime, h2, w2),
+        lambda s: (c_prime, h2, w2))
+    decoder = nn.Sequential([
+        unflat,
+        nn.Deconv2d(c_prime, c, k=k, stride=stride),
+        nn.BatchNormStatic(c),
+        nn.ReLU(),
+        nn.Flatten(),
+    ], name=f"bnpp_dec/{c_prime}->{c}")
+
+    return encoder, decoder, d_tx

@@ -1,0 +1,101 @@
+# ResNet-50 (He et al.) split for SL at the output of the 3rd residual stage,
+# as the paper's §4.1.  The paper's Table 2 numbers imply D = 4096 for the cut
+# tensor, i.e. the ImageNet-style stem (7×7/2 conv + 3×3/2 max-pool) applied
+# to 32×32 CIFAR: 32→16→8 after the stem, stage2 →4, stage3 →2, so the cut is
+# (1024, 2, 2) → D = 4096.  We reproduce exactly that topology.
+
+import math
+from typing import List, Tuple
+
+import jax
+
+from .. import nn
+
+BLOCKS = [3, 4, 6, 3]          # ResNet-50 bottleneck counts per stage
+EXPANSION = 4
+
+
+def _scale(c: int, w: float) -> int:
+    return max(8, int(round(c * w)))
+
+
+def _bottleneck(c_in: int, c_mid: int, stride: int, norm: bool) -> nn.Layer:
+    """Standard bottleneck: 1×1 reduce → 3×3 → 1×1 expand, + skip."""
+    c_out = c_mid * EXPANSION
+
+    main = nn.Sequential(
+        [nn.Conv2d(c_in, c_mid, k=1)]
+        + ([nn.GroupNorm(c_mid)] if norm else []) + [nn.ReLU(),
+           nn.Conv2d(c_mid, c_mid, k=3, stride=stride)]
+        + ([nn.GroupNorm(c_mid)] if norm else []) + [nn.ReLU(),
+           nn.Conv2d(c_mid, c_out, k=1)]
+        + ([nn.GroupNorm(c_out)] if norm else []),
+        name="bottleneck_main")
+
+    needs_proj = stride != 1 or c_in != c_out
+    proj = (nn.Sequential(
+        [nn.Conv2d(c_in, c_out, k=1, stride=stride)]
+        + ([nn.GroupNorm(c_out)] if norm else []), name="proj")
+        if needs_proj else nn.Identity())
+
+    def init(rng, in_shape):
+        r1, r2 = jax.random.split(rng)
+        pm, out_shape = main.init(r1, in_shape)
+        pp, out_shape_p = proj.init(r2, in_shape)
+        assert out_shape == out_shape_p or not needs_proj, (out_shape, out_shape_p)
+        return [pm, pp], out_shape
+
+    def apply(params, x):
+        y = main.apply(params[0], x)
+        s = proj.apply(params[1], x)
+        return jax.nn.relu(y + s)
+
+    return nn.Layer(f"bottleneck/{c_in}->{c_out}/s{stride}", init, apply)
+
+
+def _stage(c_in: int, c_mid: int, n_blocks: int, stride: int, norm: bool):
+    layers = [_bottleneck(c_in, c_mid, stride, norm)]
+    c = c_mid * EXPANSION
+    for _ in range(n_blocks - 1):
+        layers.append(_bottleneck(c, c_mid, 1, norm))
+    return layers, c
+
+
+def resnet50_split(num_classes: int = 100, width: float = 1.0,
+                   image: int = 32, norm: bool = True,
+                   split_after_stage: int = 3) -> Tuple[nn.Layer, nn.Layer, int]:
+    """ResNet-50 split after stage `split_after_stage` (paper: 3).
+
+    Returns (edge, cloud, cut_dim D).
+    """
+    c64 = _scale(64, width)
+    stem = [nn.Conv2d(3, c64, k=7, stride=2)] \
+        + ([nn.GroupNorm(c64)] if norm else []) + [nn.ReLU(), nn.MaxPool2d(2, 2)]
+
+    stages: List[List[nn.Layer]] = []
+    c_in = c64
+    for si, nb in enumerate(BLOCKS):
+        c_mid = _scale(64 * (2 ** si), width)
+        layers, c_in = _stage(c_in, c_mid, nb, stride=1 if si == 0 else 2, norm=norm)
+        stages.append(layers)
+
+    edge_layers = stem + [l for s in stages[:split_after_stage] for l in s]
+    cloud_stages = [l for s in stages[split_after_stage:] for l in s]
+
+    # Spatial size at the cut: stem /4, then one /2 per stage after stage 1.
+    hw = image // 4
+    for si in range(1, split_after_stage):
+        hw //= 2
+    cut_c = _scale(64 * (2 ** (split_after_stage - 1)), width) * EXPANSION
+    d = cut_c * hw * hw
+
+    edge = nn.Sequential(edge_layers + [nn.Flatten()], name="resnet50_edge")
+    unflat = nn.Lambda(
+        "unflatten",
+        lambda x: x.reshape(x.shape[0], cut_c, hw, hw),
+        lambda s: (cut_c, hw, hw))
+    head_c = _scale(512, width) * EXPANSION
+    cloud = nn.Sequential(
+        [unflat] + cloud_stages + [nn.GlobalAvgPool(), nn.Dense(head_c, num_classes)],
+        name="resnet50_cloud")
+    return edge, cloud, d

@@ -1,0 +1,93 @@
+# VGG-16 (Simonyan & Zisserman) split for SL at the 4th max-pool output,
+# exactly as the paper's §4.1: for 32×32 CIFAR input the cut tensor is
+# (512, 2, 2) → D = 2048 (slim width w scales channels; D scales with w).
+
+import math
+from typing import Tuple
+
+from .. import nn
+
+# Standard VGG-16 configuration; 'M' = 2×2 max-pool.
+VGG16_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+             512, 512, 512, "M", 512, 512, 512, "M"]
+
+# Tiny config for fast CPU experiments (same structure, 3 pools).
+VGG_TINY_CFG = [32, "M", 64, "M", 128, "M"]
+
+
+def _scale(c: int, w: float) -> int:
+    return max(8, int(round(c * w)))
+
+
+def _conv_block(c_in: int, c_out: int, norm: bool) -> list:
+    layers = [nn.Conv2d(c_in, c_out, k=3, stride=1)]
+    if norm:
+        layers.append(nn.GroupNorm(c_out))
+    layers.append(nn.ReLU())
+    return layers
+
+
+def _build(cfg, split_after_pool: int, width: float, in_ch: int, norm: bool):
+    """Return (edge_layers, cloud_conv_layers, cut_channels, pools_total)."""
+    edge, cloud = [], []
+    pools = 0
+    c_prev = in_ch
+    cut_c = None
+    for item in cfg:
+        target = edge if pools < split_after_pool else cloud
+        if item == "M":
+            target.append(nn.MaxPool2d(2, 2))
+            pools += 1
+            if pools == split_after_pool:
+                cut_c = c_prev
+        else:
+            c = _scale(item, width)
+            target.extend(_conv_block(c_prev, c, norm))
+            c_prev = c
+    return edge, cloud, cut_c, pools
+
+
+def vgg16_split(num_classes: int = 10, width: float = 1.0,
+                image: int = 32, norm: bool = True,
+                split_after_pool: int = 4) -> Tuple[nn.Layer, nn.Layer, int]:
+    """VGG-16 split at the `split_after_pool`-th max-pool (paper: 4th).
+
+    Returns (edge, cloud, cut_dim D).  edge: (3,H,W)→(B,D) flattened cut
+    features; cloud: (B,D)→logits.
+    """
+    edge_l, cloud_l, cut_c, total_pools = _build(
+        VGG16_CFG, split_after_pool, width, 3, norm)
+    cut_hw = image // (2 ** split_after_pool)
+    d = cut_c * cut_hw * cut_hw
+    edge = nn.Sequential(edge_l + [nn.Flatten()], name="vgg16_edge")
+
+    # Cloud re-inflates the flat cut tensor and finishes conv + classifier.
+    unflat = nn.Lambda(
+        "unflatten",
+        lambda x: x.reshape(x.shape[0], cut_c, cut_hw, cut_hw),
+        lambda s: (cut_c, cut_hw, cut_hw))
+    head_c = _scale(512, width)
+    cloud = nn.Sequential(
+        [unflat] + cloud_l + [nn.GlobalAvgPool(),
+                              nn.Dense(head_c, num_classes)],
+        name="vgg16_cloud")
+    return edge, cloud, d
+
+
+def vgg_tiny_split(num_classes: int = 10, width: float = 1.0,
+                   image: int = 16, norm: bool = True,
+                   split_after_pool: int = 2) -> Tuple[nn.Layer, nn.Layer, int]:
+    """Small VGG-style net for fast CPU experiments; split mid-stack."""
+    edge_l, cloud_l, cut_c, _ = _build(VGG_TINY_CFG, split_after_pool, width, 3, norm)
+    cut_hw = image // (2 ** split_after_pool)
+    d = cut_c * cut_hw * cut_hw
+    edge = nn.Sequential(edge_l + [nn.Flatten()], name="vggt_edge")
+    unflat = nn.Lambda(
+        "unflatten",
+        lambda x: x.reshape(x.shape[0], cut_c, cut_hw, cut_hw),
+        lambda s: (cut_c, cut_hw, cut_hw))
+    head_c = _scale(128, width)
+    cloud = nn.Sequential(
+        [unflat] + cloud_l + [nn.GlobalAvgPool(), nn.Dense(head_c, num_classes)],
+        name="vggt_cloud")
+    return edge, cloud, d

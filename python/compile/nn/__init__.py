@@ -1,0 +1,26 @@
+# Minimal functional NN framework for the L2 JAX models.
+#
+# No flax/haiku in this environment — and the reproduction mandate is to own
+# every substrate — so this is a tiny combinator library: a Layer is an
+# (init, apply) pair; Sequential chains them; parameters are nested lists of
+# arrays (a JAX pytree), so jax.grad / jit / vjp work untouched.
+
+from .core import Layer, Sequential, Identity, Lambda
+from .layers import (
+    Conv2d,
+    Deconv2d,
+    Dense,
+    ReLU,
+    Sigmoid,
+    MaxPool2d,
+    GlobalAvgPool,
+    Flatten,
+    GroupNorm,
+    BatchNormStatic,
+)
+
+__all__ = [
+    "Layer", "Sequential", "Identity", "Lambda",
+    "Conv2d", "Deconv2d", "Dense", "ReLU", "Sigmoid", "MaxPool2d",
+    "GlobalAvgPool", "Flatten", "GroupNorm", "BatchNormStatic",
+]

@@ -1,0 +1,50 @@
+# Core combinators: Layer = (init, apply); Sequential chains layers.
+#
+# init(rng, in_shape) -> (params, out_shape)   — shapes exclude the batch dim
+# apply(params, x)    -> y                     — x is batched (N leading)
+#
+# Params are nested lists/tuples of jnp arrays: a plain JAX pytree.
+
+from typing import Callable, NamedTuple, Sequence, Tuple
+
+import jax
+
+
+class Layer(NamedTuple):
+    """A pure (init, apply) pair with a debug name."""
+
+    name: str
+    init: Callable  # (rng, in_shape) -> (params, out_shape)
+    apply: Callable  # (params, x) -> y
+
+
+def Identity() -> Layer:
+    """No-op layer (used for the vanilla-SL codec slot)."""
+    return Layer("identity", lambda rng, s: ([], s), lambda p, x: x)
+
+
+def Lambda(name: str, fn: Callable, shape_fn: Callable = None) -> Layer:
+    """Parameter-free layer from a function.  shape_fn maps in_shape→out_shape."""
+    sf = shape_fn or (lambda s: s)
+    return Layer(name, lambda rng, s: ([], sf(s)), lambda p, x: fn(x))
+
+
+def Sequential(layers: Sequence[Layer], name: str = "seq") -> Layer:
+    """Chain layers; params is the list of per-layer params."""
+    layers = list(layers)
+
+    def init(rng, in_shape):
+        params = []
+        shape = in_shape
+        for layer in layers:
+            rng, sub = jax.random.split(rng)
+            p, shape = layer.init(sub, shape)
+            params.append(p)
+        return params, shape
+
+    def apply(params, x):
+        for layer, p in zip(layers, params):
+            x = layer.apply(p, x)
+        return x
+
+    return Layer(name, init, apply)

@@ -1,0 +1,167 @@
+# Concrete layers: conv / deconv / dense / norms / pools / activations.
+#
+# Data layout is NCHW throughout (matches the paper's (C, W, H) notation and
+# the rust tensor module's row-major layout).  Shapes passed to init exclude
+# the batch dimension: in_shape = (C, H, W) or (D,).
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .core import Layer, Lambda
+
+_DIMNUMS = ("NCHW", "OIHW", "NCHW")
+
+
+def _kaiming(rng, shape, fan_in):
+    """He-normal init, the standard choice for ReLU conv stacks."""
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(rng, shape, dtype=jnp.float32) * std
+
+
+def Conv2d(c_in: int, c_out: int, k: int = 3, stride: int = 1,
+           padding: str = "SAME", bias: bool = True) -> Layer:
+    """2D convolution, NCHW, square kernel."""
+
+    def init(rng, in_shape):
+        c, h, w = in_shape
+        assert c == c_in, (c, c_in)
+        wkey, _ = jax.random.split(rng)
+        weight = _kaiming(wkey, (c_out, c_in, k, k), fan_in=c_in * k * k)
+        params = [weight] + ([jnp.zeros((c_out,))] if bias else [])
+        if padding == "SAME":
+            ho, wo = -(-h // stride), -(-w // stride)
+        else:  # VALID
+            ho, wo = (h - k) // stride + 1, (w - k) // stride + 1
+        return params, (c_out, ho, wo)
+
+    def apply(params, x):
+        y = jax.lax.conv_general_dilated(
+            x, params[0], window_strides=(stride, stride), padding=padding,
+            dimension_numbers=_DIMNUMS)
+        if bias:
+            y = y + params[1][None, :, None, None]
+        return y
+
+    return Layer(f"conv{k}x{k}/{c_in}->{c_out}/s{stride}", init, apply)
+
+
+def Deconv2d(c_in: int, c_out: int, k: int = 2, stride: int = 2,
+             bias: bool = True) -> Layer:
+    """Transposed convolution (BottleNet++ decoder restores W,H with stride)."""
+
+    def init(rng, in_shape):
+        c, h, w = in_shape
+        assert c == c_in, (c, c_in)
+        wkey, _ = jax.random.split(rng)
+        # With transpose_kernel=True, lax.conv_transpose takes the kernel in
+        # the FORWARD conv's layout: (O=c_in, I=c_out, H, W) under "OIHW" —
+        # it swaps the feature axes internally.
+        weight = _kaiming(wkey, (c_in, c_out, k, k), fan_in=c_in * k * k)
+        params = [weight] + ([jnp.zeros((c_out,))] if bias else [])
+        return params, (c_out, h * stride, w * stride)
+
+    def apply(params, x):
+        y = jax.lax.conv_transpose(
+            x, params[0], strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"), transpose_kernel=True)
+        if bias:
+            y = y + params[1][None, :, None, None]
+        return y
+
+    return Layer(f"deconv{k}x{k}/{c_in}->{c_out}/s{stride}", init, apply)
+
+
+def Dense(d_in: int, d_out: int, bias: bool = True) -> Layer:
+    def init(rng, in_shape):
+        assert in_shape == (d_in,), (in_shape, d_in)
+        wkey, _ = jax.random.split(rng)
+        weight = _kaiming(wkey, (d_in, d_out), fan_in=d_in)
+        params = [weight] + ([jnp.zeros((d_out,))] if bias else [])
+        return params, (d_out,)
+
+    def apply(params, x):
+        y = x @ params[0]
+        if bias:
+            y = y + params[1]
+        return y
+
+    return Layer(f"dense/{d_in}->{d_out}", init, apply)
+
+
+def ReLU() -> Layer:
+    return Lambda("relu", jax.nn.relu)
+
+
+def Sigmoid() -> Layer:
+    return Lambda("sigmoid", jax.nn.sigmoid)
+
+
+def MaxPool2d(k: int = 2, stride: int = 2) -> Layer:
+    def shape_fn(s):
+        c, h, w = s
+        return (c, h // stride, w // stride)
+
+    def fn(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, 1, k, k), window_strides=(1, 1, stride, stride),
+            padding="VALID")
+
+    return Lambda(f"maxpool{k}", fn, shape_fn)
+
+
+def GlobalAvgPool() -> Layer:
+    return Lambda("gap", lambda x: x.mean(axis=(2, 3)), lambda s: (s[0],))
+
+
+def Flatten() -> Layer:
+    def shape_fn(s):
+        n = 1
+        for d in s:
+            n *= d
+        return (n,)
+
+    return Lambda("flatten", lambda x: x.reshape(x.shape[0], -1), shape_fn)
+
+
+def GroupNorm(c: int, groups: int = 8, eps: float = 1e-5) -> Layer:
+    """GroupNorm: state-free normalization (deterministic at eval, batch-size
+    independent).  Stands in for the paper's BatchNorm — see DESIGN.md §3;
+    the compression claims are norm-agnostic."""
+    g = math.gcd(groups, c)
+
+    def init(rng, in_shape):
+        return [jnp.ones((c,)), jnp.zeros((c,))], in_shape
+
+    def apply(params, x):
+        n, cc, h, w = x.shape
+        xg = x.reshape(n, g, cc // g, h, w)
+        mean = xg.mean(axis=(2, 3, 4), keepdims=True)
+        var = xg.var(axis=(2, 3, 4), keepdims=True)
+        xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+        x = xg.reshape(n, cc, h, w)
+        return x * params[0][None, :, None, None] + params[1][None, :, None, None]
+
+    return Layer(f"groupnorm/{c}g{g}", init, apply)
+
+
+def BatchNormStatic(c: int, eps: float = 1e-5) -> Layer:
+    """BatchNorm using current-batch statistics in both train and eval.
+
+    Keeps artifact signatures state-free (no running stats threaded through
+    the AOT boundary).  Used by the BottleNet++ codec blocks, matching the
+    paper's encoder/decoder structure (conv + BN + act)."""
+
+    def init(rng, in_shape):
+        return [jnp.ones((c,)), jnp.zeros((c,))], in_shape
+
+    def apply(params, x):
+        mean = x.mean(axis=(0, 2, 3), keepdims=True)
+        var = x.var(axis=(0, 2, 3), keepdims=True)
+        xn = (x - mean) * jax.lax.rsqrt(var + eps)
+        return xn * params[0][None, :, None, None] + params[1][None, :, None, None]
+
+    return Layer(f"batchnorm/{c}", init, apply)

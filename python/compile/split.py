@@ -1,0 +1,205 @@
+# Split-learning step functions — the pure-JAX functions that become HLO
+# artifacts.  Every function here takes/returns FLAT tuples of arrays so the
+# rust runtime can hold parameters as an opaque ordered Vec<Literal> and pass
+# them positionally (manifest.json records the order/shapes/dtypes).
+#
+# Gradient path (paper Algorithm 1, realized distributed — DESIGN.md §1):
+#   edge:  z = f_theta(x)                      [edge_fwd]
+#   edge:  s = E(z, K)                         [c3_encode]       → uplink
+#   cloud: ẑ = D(s, K)                         [c3_decode]
+#   cloud: loss, dL/dθ_cloud, dL/dẑ            [cloud_step]
+#   cloud: gs = E(dL/dẑ, K)                    [c3_encode]       → downlink
+#   edge:  gz = D(gs, K)                       [c3_decode]
+#   edge:  dL/dθ_edge = VJP_{f_theta}(x, gz)   [edge_bwd]
+# Because decode = encodeᵀ, the distributed gz equals the single-process
+# autograd gradient exactly (verified in tests/test_split.py).
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .kernels import circconv, ref
+
+
+# ---------------------------------------------------------------------------
+# Flat-params plumbing
+# ---------------------------------------------------------------------------
+
+def flatten_spec(params):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return leaves, treedef
+
+
+def make_init(net: nn.Layer, in_shape):
+    """(seed u32[2]) → flat param leaves."""
+
+    def init_fn(seed):
+        params, _ = net.init(jax.random.wrap_key_data(seed, impl="threefry2x32"), in_shape)
+        return tuple(jax.tree_util.tree_leaves(params))
+
+    return init_fn
+
+
+def _unflatten(treedef, leaves):
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def xent_and_ncorrect(logits: jnp.ndarray, y: jnp.ndarray):
+    """Mean cross-entropy and number of correct predictions (both f32)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    ncorrect = (logits.argmax(axis=-1) == y).sum().astype(jnp.float32)
+    return loss, ncorrect
+
+
+# ---------------------------------------------------------------------------
+# Edge / cloud step functions (flat in, flat out)
+# ---------------------------------------------------------------------------
+
+def make_edge_fwd(edge: nn.Layer, treedef, n_leaves: int):
+    def edge_fwd(*args):
+        params = _unflatten(treedef, args[:n_leaves])
+        x = args[n_leaves]
+        return (edge.apply(params, x),)
+
+    return edge_fwd
+
+
+def make_edge_bwd(edge: nn.Layer, treedef, n_leaves: int):
+    def edge_bwd(*args):
+        params = _unflatten(treedef, args[:n_leaves])
+        x, gz = args[n_leaves], args[n_leaves + 1]
+        _, vjp = jax.vjp(lambda p: edge.apply(p, x), params)
+        (gparams,) = vjp(gz)
+        return tuple(jax.tree_util.tree_leaves(gparams))
+
+    return edge_bwd
+
+
+def make_cloud_step(cloud: nn.Layer, treedef, n_leaves: int):
+    def cloud_step(*args):
+        params = _unflatten(treedef, args[:n_leaves])
+        zhat, y = args[n_leaves], args[n_leaves + 1]
+
+        def loss_fn(p, zz):
+            logits = cloud.apply(p, zz)
+            loss, nc = xent_and_ncorrect(logits, y)
+            return loss, nc
+
+        (loss, nc), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+            params, zhat)
+        gparams, gz = grads
+        return (loss, nc) + tuple(jax.tree_util.tree_leaves(gparams)) + (gz,)
+
+    return cloud_step
+
+
+def make_cloud_eval(cloud: nn.Layer, treedef, n_leaves: int):
+    def cloud_eval(*args):
+        params = _unflatten(treedef, args[:n_leaves])
+        zhat, y = args[n_leaves], args[n_leaves + 1]
+        logits = cloud.apply(params, zhat)
+        loss, nc = xent_and_ncorrect(logits, y)
+        return (loss, nc)
+
+    return cloud_eval
+
+
+# ---------------------------------------------------------------------------
+# Adam (Kingma & Ba) — the paper's optimizer, lr 1e-4 (traced as an arg)
+# ---------------------------------------------------------------------------
+
+def make_adam(n_leaves: int, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    """args = params(N) + grads(N) + m(N) + v(N) + (step, lr) → params', m', v'."""
+
+    def adam(*args):
+        p = args[0:n_leaves]
+        g = args[n_leaves:2 * n_leaves]
+        m = args[2 * n_leaves:3 * n_leaves]
+        v = args[3 * n_leaves:4 * n_leaves]
+        step, lr = args[4 * n_leaves], args[4 * n_leaves + 1]
+        t = step + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        new_p, new_m, new_v = [], [], []
+        for pi, gi, mi, vi in zip(p, g, m, v):
+            mi = b1 * mi + (1.0 - b1) * gi
+            vi = b2 * vi + (1.0 - b2) * gi * gi
+            mhat = mi / bc1
+            vhat = vi / bc2
+            new_p.append(pi - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+    return adam
+
+
+# ---------------------------------------------------------------------------
+# Codec functions (C3: fixed keys; kernel selectable pallas|fft)
+# ---------------------------------------------------------------------------
+
+def make_gen_keys(r: int, d: int):
+    def gen_keys(seed):
+        return (ref.generate_keys(
+            jax.random.wrap_key_data(seed, impl="threefry2x32"), r, d),)
+
+    return gen_keys
+
+
+def make_c3_encode(b: int, r: int, d: int, kernel: str = "pallas"):
+    """(z[B,D], keys[R,D]) → s[G,D]; groups are consecutive batch rows."""
+    g = b // r
+
+    def encode(z, keys):
+        zg = z.reshape(g, r, d)
+        if kernel == "pallas":
+            return (circconv.c3_encode(zg, keys),)
+        return (ref.encode_ref(zg, keys),)
+
+    return encode
+
+
+def make_c3_decode(b: int, r: int, d: int, kernel: str = "pallas"):
+    """(s[G,D], keys[R,D]) → ẑ[B,D] (groups unpacked back to batch order)."""
+    g = b // r
+
+    def decode(s, keys):
+        if kernel == "pallas":
+            zh = circconv.c3_decode(s, keys)
+        else:
+            zh = ref.decode_ref(s, keys)
+        return (zh.reshape(b, d),)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Single-process oracle (for tests): full C3-SL step == paper Algorithm 1
+# ---------------------------------------------------------------------------
+
+def singleprocess_c3_step(edge: nn.Layer, cloud: nn.Layer, edge_params,
+                          cloud_params, keys, x, y, r: int):
+    """Paper Algorithm 1 in one jax.grad — the ground truth the distributed
+    pipeline must match bit-for-bit (up to fp reassociation)."""
+
+    def loss_fn(ep, cp):
+        z = edge.apply(ep, x)                      # (B, D)
+        b, d = z.shape
+        zg = z.reshape(b // r, r, d)
+        s = ref.encode_ref(zg, keys)
+        zh = ref.decode_ref(s, keys).reshape(b, d)
+        logits = cloud.apply(cp, zh)
+        loss, nc = xent_and_ncorrect(logits, y)
+        return loss, nc
+
+    (loss, nc), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+        edge_params, cloud_params)
+    return loss, nc, grads[0], grads[1]

@@ -1,0 +1,244 @@
+# L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+#
+# The Pallas kernels implement direct tiled-circulant contraction; the FFT
+# oracle uses the convolution theorem; the roll oracle is a literal Eq. (1)/
+# Eq. (3) transcription.  Agreement across all three is the core correctness
+# signal for the codec.  Hypothesis sweeps shapes/dtypes/tiles.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import circconv, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == jnp.float32 else dict(rtol=5e-2, atol=5e-2)
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape golden checks
+# ---------------------------------------------------------------------------
+
+class TestEncodeDecodeGolden:
+    def test_encode_matches_fft_oracle(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(0), 4, 256)
+        z = _rand((2, 4, 256), 1)
+        np.testing.assert_allclose(
+            circconv.c3_encode(z, keys), ref.encode_ref(z, keys), **_tol(jnp.float32))
+
+    def test_decode_matches_fft_oracle(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(0), 4, 256)
+        s = _rand((2, 256), 2)
+        np.testing.assert_allclose(
+            circconv.c3_decode(s, keys), ref.decode_ref(s, keys), **_tol(jnp.float32))
+
+    def test_encode_matches_roll_oracle(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(3), 3, 128)
+        z = _rand((1, 3, 128), 4)
+        s_roll = sum(ref.circ_conv_roll(keys[i], z[0, i]) for i in range(3))
+        np.testing.assert_allclose(
+            circconv.c3_encode(z, keys)[0], s_roll, **_tol(jnp.float32))
+
+    def test_decode_matches_roll_oracle(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(5), 3, 128)
+        s = _rand((1, 128), 6)
+        zh = circconv.c3_decode(s, keys)
+        for i in range(3):
+            np.testing.assert_allclose(
+                zh[0, i], ref.circ_corr_roll(keys[i], s[0]), **_tol(jnp.float32))
+
+    def test_r1_delta_key_roundtrip_is_identity(self):
+        # The delta key pins down index conventions exactly:
+        # delta ⊛ z = z and delta ⋆ s = s.
+        d = 64
+        delta = jnp.zeros((1, d)).at[0, 0].set(1.0)
+        z = _rand((2, 1, d), 7)
+        s = circconv.c3_encode(z, delta)
+        np.testing.assert_allclose(s, z[:, 0, :], rtol=1e-5, atol=1e-5)
+        zh = circconv.c3_decode(s, delta)
+        np.testing.assert_allclose(zh, z, rtol=1e-5, atol=1e-5)
+
+    def test_shift_key_rotates(self):
+        # Binding with a one-hot key at position p circularly shifts z by p.
+        d, p = 32, 5
+        key = jnp.zeros((1, d)).at[0, p].set(1.0)
+        z = _rand((1, 1, d), 8)
+        s = circconv.c3_encode(z, key)
+        np.testing.assert_allclose(s[0], jnp.roll(z[0, 0], p), rtol=1e-5, atol=1e-5)
+        zh = circconv.c3_decode(s, key)
+        np.testing.assert_allclose(zh[0, 0], z[0, 0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Algebraic properties
+# ---------------------------------------------------------------------------
+
+class TestAlgebra:
+    def test_linearity_of_encode(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(0), 2, 128)
+        z1, z2 = _rand((1, 2, 128), 1), _rand((1, 2, 128), 2)
+        a, b = 0.7, -1.3
+        lhs = circconv.c3_encode(a * z1 + b * z2, keys)
+        rhs = a * circconv.c3_encode(z1, keys) + b * circconv.c3_encode(z2, keys)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    def test_adjointness_encode_decode(self):
+        # <E(z), s> == <z, D(s)>: decode is the transpose of encode.  This is
+        # the identity that makes distributed gradient compression exact
+        # (DESIGN.md §1).
+        keys = ref.generate_keys(jax.random.PRNGKey(1), 4, 256)
+        z = _rand((2, 4, 256), 3)
+        s = _rand((2, 256), 4)
+        lhs = jnp.vdot(circconv.c3_encode(z, keys), s)
+        rhs = jnp.vdot(z, circconv.c3_decode(s, keys))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+    def test_autodiff_vjp_equals_manual_adjoint(self):
+        # jax VJP through encode == decode applied to the cotangent.
+        keys = ref.generate_keys(jax.random.PRNGKey(2), 3, 128)
+        z = _rand((2, 3, 128), 5)
+        ct = _rand((2, 128), 6)
+        _, vjp = jax.vjp(lambda zz: ref.encode_ref(zz, keys), z)
+        np.testing.assert_allclose(
+            vjp(ct)[0], ref.decode_ref(ct, keys), rtol=1e-4, atol=1e-4)
+
+    def test_crosstalk_decomposition_is_exact(self):
+        # Eq. (4): decode(encode(z)) == self_term + cross_term.
+        keys = ref.generate_keys(jax.random.PRNGKey(3), 4, 256)
+        z = _rand((2, 4, 256), 7)
+        zh = ref.encode_decode_ref(z, keys)
+        self_t, cross_t = ref.crosstalk_decomposition(z, keys)
+        np.testing.assert_allclose(zh, self_t + cross_t, rtol=1e-4, atol=1e-4)
+
+    def test_crosstalk_energy_grows_with_r(self):
+        # Quasi-orthogonality: crosstalk-to-signal energy rises with R.
+        d = 1024
+        energies = []
+        for r in (2, 8, 32):
+            keys = ref.generate_keys(jax.random.PRNGKey(4), r, d)
+            z = _rand((1, r, d), 8)
+            _, cross = ref.crosstalk_decomposition(z, keys)
+            energies.append(float(jnp.linalg.norm(cross) / jnp.linalg.norm(z)))
+        assert energies[0] < energies[1] < energies[2], energies
+
+    def test_keys_are_unit_norm(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(5), 16, 2048)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(keys, axis=-1), jnp.ones(16), rtol=1e-5, atol=1e-5)
+
+    def test_keys_quasi_orthogonal(self):
+        keys = ref.generate_keys(jax.random.PRNGKey(6), 16, 4096)
+        gram = keys @ keys.T
+        off = gram - jnp.diag(jnp.diag(gram))
+        # random unit vectors in D=4096: |<k_i,k_j>| ~ 1/sqrt(D) ≈ 0.016
+        assert float(jnp.abs(off).max()) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, dtypes, tiles
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.integers(1, 4),
+    r=st.sampled_from([1, 2, 3, 4, 8]),
+    logd=st.integers(5, 9),               # D ∈ {32 … 512}
+    tile=st.sampled_from([32, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encode_hypothesis(g, r, logd, tile, seed):
+    d = 1 << logd
+    keys = ref.generate_keys(jax.random.PRNGKey(seed), r, d)
+    z = _rand((g, r, d), seed % 1000 + 1)
+    np.testing.assert_allclose(
+        circconv.c3_encode(z, keys, tile=tile), ref.encode_ref(z, keys),
+        rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.integers(1, 4),
+    r=st.sampled_from([1, 2, 4, 8]),
+    logd=st.integers(5, 9),
+    tile=st.sampled_from([32, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_hypothesis(g, r, logd, tile, seed):
+    d = 1 << logd
+    keys = ref.generate_keys(jax.random.PRNGKey(seed), r, d)
+    s = _rand((g, d), seed % 1000 + 1)
+    np.testing.assert_allclose(
+        circconv.c3_decode(s, keys, tile=tile), ref.decode_ref(s, keys),
+        rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    logd=st.integers(6, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_correlates_hypothesis(logd, seed):
+    # Reconstruction correlates positively with the original for modest R.
+    d = 1 << logd
+    r = 2
+    keys = ref.generate_keys(jax.random.PRNGKey(seed), r, d)
+    z = _rand((1, r, d), seed % 1000 + 1)
+    zh = circconv.c3_decode(circconv.c3_encode(z, keys), keys)
+    cos = jnp.vdot(z, zh) / (jnp.linalg.norm(z) * jnp.linalg.norm(zh))
+    assert float(cos) > 0.15, float(cos)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    keys = ref.generate_keys(jax.random.PRNGKey(0), 2, 128, dtype=dtype)
+    z = _rand((1, 2, 128), 1, dtype)
+    s = circconv.c3_encode(z, keys)
+    assert s.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(s, dtype=np.float32),
+        np.asarray(ref.encode_ref(z.astype(jnp.float32), keys.astype(jnp.float32))),
+        **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    g=st.integers(1, 4),
+    r=st.sampled_from([1, 2, 4]),
+    logd=st.integers(5, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_and_matmul_variants_agree(g, r, logd, seed):
+    # v1 (per-feature matvec) and v2 (circulant-tile matmul, MXU-batched)
+    # are different tilings of the same math — they must agree exactly.
+    d = 1 << logd
+    keys = ref.generate_keys(jax.random.PRNGKey(seed), r, d)
+    z = _rand((g, r, d), seed % 1000 + 1)
+    np.testing.assert_allclose(
+        circconv.c3_encode(z, keys, variant="matvec"),
+        circconv.c3_encode(z, keys, variant="matmul"),
+        rtol=2e-4, atol=2e-4)
+    s = _rand((g, d), seed % 1000 + 2)
+    np.testing.assert_allclose(
+        circconv.c3_decode(s, keys, variant="matvec"),
+        circconv.c3_decode(s, keys, variant="matmul"),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_non_pow2_d_tile_fallback():
+    # D=96 is not a power of two; pick_tile must find a divisor.
+    d = 96
+    assert d % circconv.pick_tile(d) == 0
+    keys = ref.generate_keys(jax.random.PRNGKey(0), 2, d)
+    z = _rand((2, 2, d), 1)
+    np.testing.assert_allclose(
+        circconv.c3_encode(z, keys), ref.encode_ref(z, keys), rtol=5e-4, atol=5e-4)

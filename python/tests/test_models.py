@@ -1,0 +1,92 @@
+# L2 model-construction tests: shapes, split dimensions, parameter counts.
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.models import (bottlenetpp_codec, resnet50_split, vgg16_split,
+                            vgg_tiny_split)
+
+
+class TestVGG16:
+    def test_cut_dim_matches_paper(self):
+        # Paper Table 2 ⇒ D = 2048 for VGG-16 on 32×32 CIFAR (512·2·2).
+        edge, cloud, d = vgg16_split(num_classes=10, width=1.0, image=32)
+        assert d == 2048
+
+    def test_shapes_end_to_end(self):
+        edge, cloud, d = vgg16_split(num_classes=10, width=0.125, image=32)
+        rng = jax.random.PRNGKey(0)
+        ep, eo = edge.init(rng, (3, 32, 32))
+        cp, co = cloud.init(rng, eo)
+        assert eo == (d,) and co == (10,)
+        x = jnp.zeros((2, 3, 32, 32))
+        z = edge.apply(ep, x)
+        assert z.shape == (2, d)
+        assert cloud.apply(cp, z).shape == (2, 10)
+
+    def test_slim_width_scales_cut(self):
+        _, _, d_full = vgg16_split(width=1.0, image=32)
+        _, _, d_slim = vgg16_split(width=0.25, image=32)
+        assert d_slim == d_full // 4
+
+
+class TestResNet50:
+    def test_cut_dim_matches_paper(self):
+        # Paper Table 2 ⇒ D = 4096 for ResNet-50 on 32×32 CIFAR (1024·2·2).
+        edge, cloud, d = resnet50_split(num_classes=100, width=1.0, image=32)
+        assert d == 4096
+
+    def test_shapes_end_to_end_slim(self):
+        edge, cloud, d = resnet50_split(num_classes=100, width=0.125, image=32)
+        rng = jax.random.PRNGKey(0)
+        ep, eo = edge.init(rng, (3, 32, 32))
+        cp, co = cloud.init(rng, eo)
+        assert eo == (d,) and co == (100,)
+        x = jnp.zeros((2, 3, 32, 32))
+        z = edge.apply(ep, x)
+        assert z.shape == (2, d)
+        assert cloud.apply(cp, z).shape == (2, 100)
+
+
+class TestBottleNetPP:
+    @pytest.mark.parametrize("ratio", [2, 4, 8, 16])
+    def test_tx_dim_is_cut_over_r(self, ratio):
+        c, h, w = 64, 4, 4
+        enc, dec, d_tx = bottlenetpp_codec(c, h, w, ratio)
+        assert d_tx == (c * h * w) // ratio
+
+    def test_roundtrip_shapes(self):
+        c, h, w = 16, 4, 4
+        enc, dec, d_tx = bottlenetpp_codec(c, h, w, 4)
+        rng = jax.random.PRNGKey(0)
+        pe, oe = enc.init(rng, (c, h, w))
+        pd, od = dec.init(rng, oe)
+        assert oe == (d_tx,)
+        assert od == (c * h * w,)
+        x = jnp.ones((3, c, h, w))
+        s = enc.apply(pe, x)
+        assert s.shape == (3, d_tx)
+        assert dec.apply(pd, s).shape == (3, c * h * w)
+        # Sigmoid bounds the transmitted tensor — quantization-friendly.
+        assert float(s.min()) >= 0.0 and float(s.max()) <= 1.0
+
+
+class TestRegistry:
+    def test_presets_resolve(self):
+        for preset in ("tiny", "slim", "full"):
+            assert len(M.resolve(preset)) >= 1
+
+    def test_single_key_resolves(self):
+        (cfg,) = M.resolve("vggt_b32")
+        assert cfg.key == "vggt_b32"
+
+    def test_unknown_key_raises(self):
+        with pytest.raises(KeyError):
+            M.resolve("nope")
+
+    def test_bnpp_config_tx_dim(self):
+        (cfg,) = M.resolve("vggt_b32_bnpp_r4")
+        _, _, d_tx, d_cut = cfg.build()
+        assert d_tx == d_cut // 4

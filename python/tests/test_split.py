@@ -1,0 +1,169 @@
+# L2 split-step tests.  The critical one is gradient equivalence: the
+# DISTRIBUTED pipeline (edge_fwd → encode → decode → cloud_step →
+# encode(grads) → decode(grads) → edge_bwd), which is what the rust
+# coordinator executes, must match the paper's single-process Algorithm 1
+# (one loss.backward() through the whole graph) exactly.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M, split
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    (cfg,) = M.resolve("vggt_b32")
+    edge, cloud, d_tx, _ = cfg.build()
+    rng = jax.random.PRNGKey(0)
+    ep, eo = edge.init(rng, (3, 16, 16))
+    cp, _ = cloud.init(jax.random.PRNGKey(1), eo)
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 3, 16, 16))
+    y = jax.random.randint(jax.random.PRNGKey(3), (32,), 0, 10)
+    return cfg, edge, cloud, ep, cp, x, y, d_tx
+
+
+def _distributed_c3_step(edge, cloud, ep, cp, keys, x, y, r, d):
+    """Exactly the message flow the rust coordinator drives."""
+    b = x.shape[0]
+    g = b // r
+    # edge
+    z = edge.apply(ep, x)                                   # edge_fwd
+    s = ref.encode_ref(z.reshape(g, r, d), keys)            # c3_encode  → uplink
+    # cloud
+    zhat = ref.decode_ref(s, keys).reshape(b, d)            # c3_decode
+
+    def loss_fn(p, zz):
+        logits = cloud.apply(p, zz)
+        return split.xent_and_ncorrect(logits, zz_y)[0]
+
+    zz_y = y
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(cp, zhat)
+    gcloud, gzhat = grads
+    gs = ref.encode_ref(gzhat.reshape(g, r, d), keys)       # c3_encode  → downlink
+    # edge
+    gz = ref.decode_ref(gs, keys).reshape(b, d)             # c3_decode
+    _, vjp = jax.vjp(lambda p: edge.apply(p, x), ep)
+    (gedge,) = vjp(gz)
+    return loss, gedge, gcloud
+
+
+class TestGradientEquivalence:
+    @pytest.mark.parametrize("r", [2, 4, 8])
+    def test_distributed_equals_singleprocess(self, tiny, r):
+        cfg, edge, cloud, ep, cp, x, y, d = tiny
+        keys = ref.generate_keys(jax.random.PRNGKey(7), r, d)
+        loss1, nc1, ge1, gc1 = split.singleprocess_c3_step(
+            edge, cloud, ep, cp, keys, x, y, r)
+        loss2, ge2, gc2 = _distributed_c3_step(
+            edge, cloud, ep, cp, keys, x, y, r, d)
+        np.testing.assert_allclose(loss1, loss2, rtol=1e-5, atol=1e-6)
+        for a, b in zip(jax.tree_util.tree_leaves(ge1),
+                        jax.tree_util.tree_leaves(ge2)):
+            np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(gc1),
+                        jax.tree_util.tree_leaves(gc2)):
+            np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-5)
+
+
+class TestFlatWrappers:
+    def test_edge_fwd_flat_matches_apply(self, tiny):
+        cfg, edge, cloud, ep, cp, x, y, d = tiny
+        leaves, tree = split.flatten_spec(ep)
+        fwd = split.make_edge_fwd(edge, tree, len(leaves))
+        (z_flat,) = fwd(*leaves, x)
+        np.testing.assert_allclose(z_flat, edge.apply(ep, x), rtol=1e-6)
+
+    def test_cloud_step_outputs(self, tiny):
+        cfg, edge, cloud, ep, cp, x, y, d = tiny
+        z = edge.apply(ep, x)
+        leaves, tree = split.flatten_spec(cp)
+        step = split.make_cloud_step(cloud, tree, len(leaves))
+        outs = step(*leaves, z, y)
+        loss, nc = outs[0], outs[1]
+        gleaves, gz = outs[2:-1], outs[-1]
+        assert len(gleaves) == len(leaves)
+        assert gz.shape == z.shape
+        assert 0.0 <= float(nc) <= 32.0
+        assert float(loss) > 0.0
+
+    def test_edge_bwd_matches_vjp(self, tiny):
+        cfg, edge, cloud, ep, cp, x, y, d = tiny
+        gz = jax.random.normal(jax.random.PRNGKey(9), (32, d))
+        leaves, tree = split.flatten_spec(ep)
+        bwd = split.make_edge_bwd(edge, tree, len(leaves))
+        gleaves = bwd(*leaves, x, gz)
+        _, vjp = jax.vjp(lambda p: edge.apply(p, x), ep)
+        (want,) = vjp(gz)
+        for a, b in zip(gleaves, jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+class TestAdam:
+    def test_adam_single_param_matches_closed_form(self):
+        adam = split.make_adam(1)
+        p = jnp.array([1.0, 2.0])
+        g = jnp.array([0.5, -0.5])
+        m = jnp.zeros(2)
+        v = jnp.zeros(2)
+        step = jnp.array(0.0)
+        lr = jnp.array(0.1)
+        new_p, new_m, new_v = adam(p, g, m, v, step, lr)
+        # closed form for t=1: mhat = g, vhat = g^2 → update = -lr*g/(|g|+eps)
+        want = p - 0.1 * jnp.sign(g)
+        np.testing.assert_allclose(new_p, want, rtol=1e-4)
+        np.testing.assert_allclose(new_m, 0.1 * g, rtol=1e-6)
+        np.testing.assert_allclose(new_v, 0.001 * g * g, rtol=1e-4)
+
+    def test_adam_decreases_quadratic(self):
+        # Minimize f(p) = |p|^2 with Adam for a few steps.
+        adam = split.make_adam(1)
+        p = jnp.array([3.0, -2.0])
+        m = jnp.zeros(2)
+        v = jnp.zeros(2)
+        lr = jnp.array(0.2)
+        for t in range(50):
+            g = 2.0 * p
+            p, m, v = adam(p, g, m, v, jnp.array(float(t)), lr)
+        assert float(jnp.abs(p).max()) < 1.0
+
+
+class TestTrainingSmoke:
+    def test_loss_decreases_singleprocess(self, tiny):
+        # A few Adam steps on one batch must reduce the C3-SL loss (R=4).
+        cfg, edge, cloud, ep, cp, x, y, d = tiny
+        keys = ref.generate_keys(jax.random.PRNGKey(11), 4, d)
+        eleaves, etree = split.flatten_spec(ep)
+        cleaves, ctree = split.flatten_spec(cp)
+        eadam = split.make_adam(len(eleaves))
+        cadam = split.make_adam(len(cleaves))
+        em = [jnp.zeros_like(l) for l in eleaves]
+        ev = [jnp.zeros_like(l) for l in eleaves]
+        cm = [jnp.zeros_like(l) for l in cleaves]
+        cv = [jnp.zeros_like(l) for l in cleaves]
+        lr = jnp.array(1e-3)
+
+        @jax.jit
+        def one_step(eleaves, cleaves, em, ev, cm, cv, t):
+            ep_ = jax.tree_util.tree_unflatten(etree, eleaves)
+            cp_ = jax.tree_util.tree_unflatten(ctree, cleaves)
+            loss, nc, ge, gc = split.singleprocess_c3_step(
+                edge, cloud, ep_, cp_, keys, x, y, 4)
+            geleaves = jax.tree_util.tree_leaves(ge)
+            gcleaves = jax.tree_util.tree_leaves(gc)
+            eout = eadam(*eleaves, *geleaves, *em, *ev, t, lr)
+            cout = cadam(*cleaves, *gcleaves, *cm, *cv, t, lr)
+            n = len(eleaves)
+            k = len(cleaves)
+            return (loss, list(eout[:n]), list(cout[:k]),
+                    list(eout[n:2 * n]), list(eout[2 * n:]),
+                    list(cout[k:2 * k]), list(cout[2 * k:]))
+
+        losses = []
+        for t in range(8):
+            loss, eleaves, cleaves, em, ev, cm, cv = one_step(
+                eleaves, cleaves, em, ev, cm, cv, jnp.array(float(t)))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses

@@ -1,0 +1,85 @@
+//! Bench: codec hot-path microbenchmarks — the perf-pass instrument.
+//!
+//!   cargo bench --bench codec_hotpath
+//!
+//! Sweeps the three codec venues:
+//!   host/direct   — paper-faithful O(D²) loops
+//!   host/fft      — convolution-theorem O(D log D)
+//!   artifact      — AOT Pallas kernels through PJRT (includes runtime
+//!                   dispatch + literal marshalling — the end-to-end cost the
+//!                   coordinator actually pays)
+//! across D ∈ {512..4096} at B=32 (grouped by the tiny model's batch), and
+//! reports per-batch time + effective throughput.  Results and the
+//! optimization log live in EXPERIMENTS.md §Perf.
+
+use c3sl::hdc::{Backend, KeySet, C3};
+use c3sl::runtime::{CodecRuntime, Engine};
+use c3sl::tensor::Tensor;
+use c3sl::util::rng::Rng;
+use c3sl::util::timer::{bench, fmt_secs};
+
+fn main() {
+    let quick = std::env::var("C3SL_BENCH_QUICK").is_ok();
+    let iters = if quick { 3 } else { 10 };
+    let b = 32usize;
+    let r = 4usize;
+    println!("# codec hot path: encode+decode per batch (B={b}, R={r}, {iters} iters)\n");
+    println!(
+        "{:<14} {:>6} | {:>12} {:>12} | {:>14}",
+        "venue", "D", "encode", "decode", "batch MB/s"
+    );
+
+    let mut rng = Rng::new(9);
+    for d in [512usize, 1024, 2048, 4096] {
+        let mut zdata = vec![0.0f32; b * d];
+        rng.fill_normal(&mut zdata, 0.0, 1.0);
+        let z = Tensor::from_vec(&[b, d], zdata);
+        let bytes = (b * d * 4) as f64;
+
+        for backend in [Backend::Direct, Backend::Fft] {
+            let keys = KeySet::generate(&mut rng, r, d);
+            let c3 = C3::new(keys, backend);
+            let it = if backend == Backend::Direct && d >= 2048 { 2 } else { iters };
+            let enc = bench(1, it, || c3.encode(&z));
+            let s = c3.encode(&z);
+            let dec = bench(1, it, || c3.decode(&s));
+            println!(
+                "{:<14} {:>6} | {:>12} {:>12} | {:>14.1}",
+                format!("host/{backend:?}").to_lowercase(),
+                d,
+                fmt_secs(enc.mean_s),
+                fmt_secs(dec.mean_s),
+                bytes / (enc.mean_s + dec.mean_s) / 1e6,
+            );
+        }
+    }
+
+    // Artifact venue at the tiny model's real geometry (D=1024, B=32, R=4).
+    let dir = "artifacts/vggt_b32/codec_c3_r4";
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let engine = Engine::cpu().expect("engine");
+        let mut codec = CodecRuntime::load(&engine, dir).expect("codec artifacts");
+        codec.init_keys(1).expect("keys");
+        let d = codec.d();
+        let mut zdata = vec![0.0f32; b * d];
+        rng.fill_normal(&mut zdata, 0.0, 1.0);
+        let z = Tensor::from_vec(&[b, d], zdata);
+        let enc = bench(1, iters, || codec.encode(&z).unwrap());
+        let s = codec.encode(&z).unwrap();
+        let dec = bench(1, iters, || codec.decode(&s).unwrap());
+        let bytes = (b * d * 4) as f64;
+        println!(
+            "{:<14} {:>6} | {:>12} {:>12} | {:>14.1}",
+            "artifact", d,
+            fmt_secs(enc.mean_s),
+            fmt_secs(dec.mean_s),
+            bytes / (enc.mean_s + dec.mean_s) / 1e6,
+        );
+    } else {
+        println!("(artifact venue skipped — run `make artifacts`)");
+    }
+
+    println!("\nreading: fft wins past D≈512; the artifact venue pays PJRT dispatch +");
+    println!("interpret-mode Pallas gather cost — acceptable off the edge hot path,");
+    println!("hence the coordinator defaults the HOST venue for gradient decode.");
+}

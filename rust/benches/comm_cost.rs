@@ -1,0 +1,44 @@
+//! Bench: communication cost (the paper's §1 16× claim + link crossovers).
+//!
+//!   cargo bench --bench comm_cost
+//!
+//! Prints wire-accurate per-step bytes and projected epoch times for
+//! vanilla / C3 / BottleNet++ across WiFi, LTE and NB-IoT link models at
+//! both paper operating points.
+
+use c3sl::flops::{CutSpec, Scheme};
+use c3sl::sim::{comm_report, step_payload_bytes};
+
+fn main() {
+    for (label, spec) in [
+        ("VGG-16 / CIFAR-10 cut (D=2048, B=64)", CutSpec::vgg16_cifar10()),
+        ("ResNet-50 / CIFAR-100 cut (D=4096, B=64)", CutSpec::resnet50_cifar100()),
+    ] {
+        println!("== {label}, 781 steps/epoch\n");
+        println!(
+            "{:<12} {:>3} {:<6} {:>12} {:>12} {:>12} {:>10}",
+            "scheme", "R", "link", "up B/step", "down B/step", "epoch s", "reduction"
+        );
+        for row in comm_report(&spec, 781) {
+            println!(
+                "{:<12} {:>3} {:<6} {:>12} {:>12} {:>12.2} {:>9.2}x",
+                row.scheme,
+                row.r,
+                row.link,
+                row.uplink_bytes_per_step,
+                row.downlink_bytes_per_step,
+                row.epoch_seconds,
+                row.reduction_vs_vanilla
+            );
+        }
+        let (vup, vdown) = step_payload_bytes(&spec, 1, Scheme::Vanilla);
+        let (cup, cdown) = step_payload_bytes(&spec, 16, Scheme::C3);
+        println!(
+            "\nbyte reduction @R=16: {:.2}x (paper §1: \"16x communication costs\")\n",
+            (vup + vdown) as f64 / (cup + cdown) as f64
+        );
+    }
+    println!("reading: on bandwidth-bound links (wifi) reduction ≈ R; on");
+    println!("latency-bound links (nbiot @100ms RTT) per-message latency caps the");
+    println!("gain — the crossover the paper's edge-device motivation implies.");
+}

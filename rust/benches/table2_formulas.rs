@@ -1,0 +1,90 @@
+//! Bench: Table 2 + the params/FLOPs columns of Table 1 — exact analytical
+//! regeneration of the paper's overhead numbers.
+//!
+//!   cargo bench --bench table2_formulas
+//!
+//! Expected output (paper Table 1):
+//!   VGG-16  C3 params: 4.1k/8.2k/16.4k/32.8k, FLOPs 0.54e9
+//!   ResNet  C3 params: 8.2k/…/65.5k, FLOPs 2.15e9
+//!   memory ratios 576×/1152× (R=2, published), compute 2.24×/2.25×
+
+use c3sl::flops::{
+    bottlenetpp_cost, bottlenetpp_cost_published, c3sl_cost, CutSpec,
+};
+
+fn main() {
+    println!("# Table 2 formulas evaluated at the paper's operating points\n");
+    println!("BottleNet++: params = (C·k²+1)(4C/R) + ((4C/R)k²+1)C");
+    println!("             flops  = B(2Ck²+1)(4C/R)H'W' + B((8C/R)k²+1)CHW");
+    println!("C3-SL:       params = R·D          flops = 2·B·D²\n");
+
+    for (label, spec, paper_bnpp_params, paper_bnpp_gflops) in [
+        (
+            "Table 1 (left): VGG-16 on CIFAR-10 — C=512 H=W=2 D=2048 B=64 k=2",
+            CutSpec::vgg16_cifar10(),
+            [2_360_000u64, 2_098_200, 1_049_300, 524_900],
+            [1.21f64, 0.67, 0.34, 0.17],
+        ),
+        (
+            "Table 1 (right): ResNet-50 on CIFAR-100 — C=1024 H=W=2 D=4096 B=64 k=2",
+            CutSpec::resnet50_cifar100(),
+            [9_438_700, 8_390_700, 4_195_800, 2_098_400],
+            [4.83, 2.68, 1.34, 0.67],
+        ),
+    ] {
+        println!("== {label}");
+        println!(
+            "{:>4} | {:>12} {:>12} {:>7} | {:>10} {:>10} | {:>12} {:>10} | {:>7} {:>7}",
+            "R", "BN++ params", "paper", "Δ%", "BN++ GF", "paper", "C3 params", "C3 GF",
+            "mem x", "flop x"
+        );
+        for (i, r) in [2usize, 4, 8, 16].iter().enumerate() {
+            let bn = bottlenetpp_cost_published(&spec, *r);
+            let c3 = c3sl_cost(&spec, *r);
+            let delta = 100.0 * (bn.params as f64 - paper_bnpp_params[i] as f64)
+                / paper_bnpp_params[i] as f64;
+            println!(
+                "{:>4} | {:>12} {:>12} {:>6.1}% | {:>10.3} {:>10.2} | {:>12} {:>10.3} | {:>6.0}x {:>6.2}x",
+                r,
+                bn.params,
+                paper_bnpp_params[i],
+                delta,
+                bn.flops as f64 / 1e9,
+                paper_bnpp_gflops[i],
+                c3.params,
+                c3.flops as f64 / 1e9,
+                bn.params as f64 / c3.params as f64,
+                bn.flops as f64 / c3.flops as f64,
+            );
+        }
+        let f2 = bottlenetpp_cost(&spec, 2);
+        println!(
+            "   note: R=2 published row implies C'=9C/8; Table-2 formula as printed gives {} params\n",
+            f2.params
+        );
+    }
+
+    println!("# Headline claims (paper abstract):");
+    let rn = CutSpec::resnet50_cifar100();
+    let bn2 = bottlenetpp_cost_published(&rn, 2);
+    let c32 = c3sl_cost(&rn, 2);
+    println!(
+        "  memory  reduction @R=2 CIFAR-100: {:.0}x   (paper: 1152x)",
+        bn2.params as f64 / c32.params as f64
+    );
+    println!(
+        "  compute reduction @R=2 CIFAR-100: {:.2}x  (paper: 2.25x, published FLOPs 4.83e9/2.15e9)",
+        4.83e9 / c32.flops as f64
+    );
+    let vg = CutSpec::vgg16_cifar10();
+    let bn2v = bottlenetpp_cost_published(&vg, 2);
+    let c32v = c3sl_cost(&vg, 2);
+    println!(
+        "  memory  reduction @R=2 CIFAR-10:  {:.0}x    (paper: 576x)",
+        bn2v.params as f64 / c32v.params as f64
+    );
+    println!(
+        "  compute reduction @R=2 CIFAR-10:  {:.2}x   (paper: 2.24x, published FLOPs 1.21e9/0.54e9)",
+        1.21e9 / c32v.flops as f64
+    );
+}

@@ -1,0 +1,179 @@
+//! Compression schemes for the cut-layer tensors.
+//!
+//! `Codec` is the host-side interface the coordinator uses for both
+//! directions (features uplink, gradients downlink — C3-SL compresses both,
+//! paper §1).  The C3 codec here is the rust-native hot path mirroring the
+//! L1 Pallas kernels; the coordinator can alternatively route encode/decode
+//! through the AOT artifacts (runtime::codec) — both are tested to agree.
+//!
+//! Extension codecs (fp16 / int8 quantization) implement the "combine
+//! dimension-wise and batch-wise compression" future-work note in the
+//! paper's §5: they stack with C3 by quantizing the compressed feature.
+
+pub mod quant;
+
+use crate::hdc::{Backend, KeySet, C3};
+use crate::tensor::Tensor;
+
+/// A (possibly lossy) batch codec.  encode: (B, D) → smaller; decode: inverse.
+pub trait Codec: Send {
+    fn name(&self) -> String;
+    /// Nominal compression ratio on payload bytes.
+    fn ratio(&self) -> f64;
+    fn encode(&self, z: &Tensor) -> Tensor;
+    fn decode(&self, s: &Tensor) -> Tensor;
+    /// Payload bytes actually transmitted for an encoded tensor.
+    fn tx_bytes(&self, encoded: &Tensor) -> usize {
+        encoded.len() * 4
+    }
+}
+
+/// Vanilla SL: no compression.
+pub struct IdentityCodec;
+
+impl Codec for IdentityCodec {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn ratio(&self) -> f64 {
+        1.0
+    }
+
+    fn encode(&self, z: &Tensor) -> Tensor {
+        z.clone()
+    }
+
+    fn decode(&self, s: &Tensor) -> Tensor {
+        s.clone()
+    }
+}
+
+/// C3-SL batch-wise codec over a fixed key set (paper §3).
+pub struct C3Codec {
+    c3: C3,
+}
+
+impl C3Codec {
+    pub fn new(keys: KeySet, backend: Backend) -> Self {
+        C3Codec { c3: C3::new(keys, backend) }
+    }
+
+    pub fn r(&self) -> usize {
+        self.c3.keys.r
+    }
+
+    pub fn d(&self) -> usize {
+        self.c3.keys.d
+    }
+}
+
+impl Codec for C3Codec {
+    fn name(&self) -> String {
+        format!("c3-r{}", self.c3.keys.r)
+    }
+
+    fn ratio(&self) -> f64 {
+        self.c3.keys.r as f64
+    }
+
+    fn encode(&self, z: &Tensor) -> Tensor {
+        self.c3.encode(z)
+    }
+
+    fn decode(&self, s: &Tensor) -> Tensor {
+        self.c3.decode(s)
+    }
+}
+
+/// Stack two codecs: `outer` runs on the already-compressed tensor.
+/// (paper §5 future work: dimension-wise + batch-wise combined.)
+pub struct Stacked<A: Codec, B: Codec> {
+    pub inner: A,
+    pub outer: B,
+}
+
+impl<A: Codec, B: Codec> Codec for Stacked<A, B> {
+    fn name(&self) -> String {
+        format!("{}+{}", self.inner.name(), self.outer.name())
+    }
+
+    fn ratio(&self) -> f64 {
+        self.inner.ratio() * self.outer.ratio()
+    }
+
+    fn encode(&self, z: &Tensor) -> Tensor {
+        self.outer.encode(&self.inner.encode(z))
+    }
+
+    fn decode(&self, s: &Tensor) -> Tensor {
+        self.inner.decode(&self.outer.decode(s))
+    }
+
+    fn tx_bytes(&self, encoded: &Tensor) -> usize {
+        self.outer.tx_bytes(encoded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut d = vec![0.0f32; shape.iter().product()];
+        rng.fill_normal(&mut d, 0.0, 1.0);
+        Tensor::from_vec(shape, d)
+    }
+
+    #[test]
+    fn identity_is_lossless() {
+        let mut rng = Rng::new(1);
+        let z = rand_tensor(&mut rng, &[8, 64]);
+        let c = IdentityCodec;
+        assert_eq!(c.decode(&c.encode(&z)), z);
+        assert_eq!(c.ratio(), 1.0);
+    }
+
+    #[test]
+    fn c3_shapes_and_ratio() {
+        let mut rng = Rng::new(2);
+        let keys = KeySet::generate(&mut rng, 4, 128);
+        let c = C3Codec::new(keys, Backend::Auto);
+        let z = rand_tensor(&mut rng, &[16, 128]);
+        let s = c.encode(&z);
+        assert_eq!(s.shape(), &[4, 128]);
+        assert_eq!(c.tx_bytes(&s) * 4, c.tx_bytes(&z)); // 4× fewer bytes
+        let zh = c.decode(&s);
+        assert_eq!(zh.shape(), &[16, 128]);
+    }
+
+    #[test]
+    fn c3_reconstruction_correlates() {
+        let mut rng = Rng::new(3);
+        let keys = KeySet::generate(&mut rng, 2, 512);
+        let c = C3Codec::new(keys, Backend::Fft);
+        let z = rand_tensor(&mut rng, &[4, 512]);
+        let zh = c.decode(&c.encode(&z));
+        let cos = z.dot(&zh) / (z.norm() * zh.norm());
+        assert!(cos > 0.3, "cos={cos}");
+    }
+
+    #[test]
+    fn stacked_ratio_multiplies() {
+        let mut rng = Rng::new(4);
+        let keys = KeySet::generate(&mut rng, 4, 64);
+        let stacked = Stacked {
+            inner: C3Codec::new(keys, Backend::Auto),
+            outer: quant::QuantCodec::f16(),
+        };
+        assert_eq!(stacked.ratio(), 8.0);
+        let z = rand_tensor(&mut rng, &[8, 64]);
+        let s = stacked.encode(&z);
+        assert_eq!(s.shape(), &[2, 64]);
+        // fp16 payload: 2 bytes per element
+        assert_eq!(stacked.tx_bytes(&s), s.len() * 2);
+        let zh = stacked.decode(&s);
+        assert_eq!(zh.shape(), &[8, 64]);
+    }
+}

@@ -1,0 +1,221 @@
+//! Quantization codecs (extension): fp16 and per-row int8.
+//!
+//! These realize the paper's §5 future-work direction — combining
+//! dimension-wise (precision) and batch-wise (C3) compression.  The fp16
+//! conversion is implemented from scratch (round-to-nearest-even), since no
+//! half crate is available.
+
+use super::Codec;
+use crate::tensor::Tensor;
+
+/// f32 → IEEE 754 binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (m + half - 1 + ((m >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    let half = 0x0000_0fff + ((mant >> 13) & 1);
+    let m = mant + half;
+    if m & 0x0080_0000 != 0 {
+        // mantissa overflow bumps exponent
+        let e2 = e + 1;
+        if e2 >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((e2 as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | ((m >> 13) as u16)
+}
+
+/// IEEE 754 binary16 bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 - 10;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 10 + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantization mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    F16,
+    Int8,
+}
+
+/// Precision-reduction codec.  `encode` returns an f32 tensor holding the
+/// dequantized values (so downstream math sees the quantization error), and
+/// `tx_bytes` reports the true wire size.
+pub struct QuantCodec {
+    mode: Mode,
+}
+
+impl QuantCodec {
+    pub fn f16() -> Self {
+        QuantCodec { mode: Mode::F16 }
+    }
+
+    pub fn int8() -> Self {
+        QuantCodec { mode: Mode::Int8 }
+    }
+}
+
+impl Codec for QuantCodec {
+    fn name(&self) -> String {
+        match self.mode {
+            Mode::F16 => "f16".into(),
+            Mode::Int8 => "int8".into(),
+        }
+    }
+
+    fn ratio(&self) -> f64 {
+        match self.mode {
+            Mode::F16 => 2.0,
+            Mode::Int8 => 4.0,
+        }
+    }
+
+    fn encode(&self, z: &Tensor) -> Tensor {
+        match self.mode {
+            Mode::F16 => {
+                let data = z
+                    .data()
+                    .iter()
+                    .map(|&v| f16_bits_to_f32(f32_to_f16_bits(v)))
+                    .collect();
+                Tensor::from_vec(z.shape(), data)
+            }
+            Mode::Int8 => {
+                // per-row absmax scaling for 2-D tensors; global otherwise
+                let rows = if z.ndim() == 2 { z.shape()[0] } else { 1 };
+                let w = z.len() / rows;
+                let mut out = vec![0.0f32; z.len()];
+                for r in 0..rows {
+                    let row = &z.data()[r * w..(r + 1) * w];
+                    let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                    for (o, &v) in out[r * w..(r + 1) * w].iter_mut().zip(row) {
+                        let q = (v / scale).round().clamp(-127.0, 127.0);
+                        *o = q * scale;
+                    }
+                }
+                Tensor::from_vec(z.shape(), out)
+            }
+        }
+    }
+
+    fn decode(&self, s: &Tensor) -> Tensor {
+        s.clone() // dequantized representation already carries the error
+    }
+
+    fn tx_bytes(&self, encoded: &Tensor) -> usize {
+        match self.mode {
+            Mode::F16 => encoded.len() * 2,
+            // int8 payload + one f32 scale per row
+            Mode::Int8 => {
+                let rows = if encoded.ndim() == 2 { encoded.shape()[0] } else { 1 };
+                encoded.len() + rows * 4
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn f16_exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back, v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16_bits(1e30), 0x7c00); // overflow → inf
+        assert_eq!(f32_to_f16_bits(1e-30), 0); // underflow → 0
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        Prop::new("f16 rel err < 2^-10", 200).run(|g| {
+            let v = g.f32_in(-1000.0, 1000.0);
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let err = (back - v).abs();
+            assert!(err <= v.abs() * 1.0e-3 + 1e-6, "{v} -> {back}");
+        });
+    }
+
+    #[test]
+    fn f16_subnormal_roundtrip() {
+        let v = 3.0e-5; // subnormal range for f16 (min normal ≈ 6.1e-5)
+        let back = f16_bits_to_f32(f32_to_f16_bits(v));
+        assert!((back - v).abs() < 1e-6, "{back}");
+    }
+
+    #[test]
+    fn int8_error_bounded_by_scale() {
+        let z = Tensor::from_vec(&[2, 4], vec![1.0, -2.0, 0.5, 0.0, 100.0, -50.0, 25.0, 12.5]);
+        let q = QuantCodec::int8();
+        let zq = q.encode(&z);
+        for (r, amax) in [(0usize, 2.0f32), (1, 100.0)] {
+            let scale = amax / 127.0;
+            for i in 0..4 {
+                let e = (zq.row(r)[i] - z.row(r)[i]).abs();
+                assert!(e <= scale / 2.0 + 1e-6, "row {r} err {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn tx_bytes_reflect_precision() {
+        let z = Tensor::zeros(&[4, 8]);
+        assert_eq!(QuantCodec::f16().tx_bytes(&z), 32 * 2);
+        assert_eq!(QuantCodec::int8().tx_bytes(&z), 32 + 4 * 4);
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (no clap in this environment).
+//!
+//! Grammar: `c3sl <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing subcommand")]
+    NoSubcommand,
+    #[error("flag --{0} needs a value")]
+    MissingValue(String),
+    #[error("flag --{0} is required")]
+    Required(String),
+    #[error("cannot parse --{flag} value '{value}': {why}")]
+    BadValue { flag: String, value: String, why: String },
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self, CliError> {
+        let mut it = argv.iter().peekable();
+        let subcommand = it.next().cloned().ok_or(CliError::NoSubcommand)?;
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => switches.push(name.to_string()),
+                }
+            } else {
+                switches.push(arg.clone());
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Required(name.into()))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>().map_err(|e| CliError::BadValue {
+                    flag: name.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                })
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>().map_err(|e| CliError::BadValue {
+                    flag: name.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                })
+            })
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>().map_err(|e| CliError::BadValue {
+                    flag: name.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                })
+            })
+            .transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv("train --steps 100 --verbose --lr 0.001")).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get_usize("steps").unwrap(), Some(100));
+        assert_eq!(a.get_f64("lr").unwrap(), Some(0.001));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn missing_subcommand_errors() {
+        assert!(matches!(Args::parse(&[]), Err(CliError::NoSubcommand)));
+    }
+
+    #[test]
+    fn require_and_bad_value() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.require("missing").is_err());
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("x")).unwrap();
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+}

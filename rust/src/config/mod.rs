@@ -1,0 +1,322 @@
+//! Typed experiment configuration.
+//!
+//! A config file (TOML subset, see `toml.rs`) fully describes one training
+//! run: model artifacts, compression scheme, optimizer, dataset, transport,
+//! and link model.  `ExperimentConfig::load` validates everything up front
+//! so the coordinator never hits a half-configured state.
+
+pub mod cli;
+pub mod toml;
+
+use crate::transport::sim::LinkModel;
+use toml::{Doc, Value};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// Vanilla SL: identity codec.
+    Vanilla,
+    /// C3-SL batch-wise codec with ratio R.
+    C3 { r: usize },
+    /// BottleNet++ (codec lives inside the model artifacts).
+    BottleNetPP { r: usize },
+}
+
+impl SchemeKind {
+    pub fn name(&self) -> String {
+        match self {
+            SchemeKind::Vanilla => "vanilla".into(),
+            SchemeKind::C3 { r } => format!("c3-r{r}"),
+            SchemeKind::BottleNetPP { r } => format!("bnpp-r{r}"),
+        }
+    }
+
+    pub fn ratio(&self) -> usize {
+        match self {
+            SchemeKind::Vanilla => 1,
+            SchemeKind::C3 { r } | SchemeKind::BottleNetPP { r } => *r,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    InProc,
+    Tcp,
+}
+
+/// C3 codec execution venue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecVenue {
+    /// rust-native hdc implementation (FFT or direct).
+    Host,
+    /// AOT artifacts (the Pallas kernels) through PJRT.
+    Artifact,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Artifact directory key, e.g. "vggt_b32" (see python/compile/model.py).
+    pub model_key: String,
+    pub artifacts_root: String,
+    pub scheme: SchemeKind,
+    pub codec_venue: CodecVenue,
+    pub transport: TransportKind,
+    pub tcp_addr: String,
+    pub link: Option<LinkModel>,
+
+    // training
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub augment: bool,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+
+    // data
+    pub data_root: String,
+    pub synth_train: usize,
+    pub synth_test: usize,
+
+    // output
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            model_key: "vggt_b32".into(),
+            artifacts_root: "artifacts".into(),
+            scheme: SchemeKind::C3 { r: 4 },
+            codec_venue: CodecVenue::Artifact,
+            transport: TransportKind::InProc,
+            tcp_addr: "127.0.0.1:7070".into(),
+            link: None,
+            steps: 200,
+            lr: 1e-4, // paper §4.1
+            seed: 0,
+            augment: false,
+            eval_every: 50,
+            eval_batches: 4,
+            data_root: "data".into(),
+            synth_train: 4096,
+            synth_test: 1024,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("toml: {0}")]
+    Toml(#[from] toml::TomlError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+fn get<'a>(doc: &'a Doc, section: &str, key: &str) -> Option<&'a Value> {
+    doc.get(section).and_then(|s| s.get(key))
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
+        let doc = toml::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        let inv = |m: String| ConfigError::Invalid(m);
+
+        if let Some(v) = get(&doc, "", "name") {
+            cfg.name = v.as_str().ok_or_else(|| inv("name must be string".into()))?.into();
+        }
+        if let Some(v) = get(&doc, "model", "key") {
+            cfg.model_key = v.as_str().ok_or_else(|| inv("model.key".into()))?.into();
+        }
+        if let Some(v) = get(&doc, "model", "artifacts_root") {
+            cfg.artifacts_root = v.as_str().ok_or_else(|| inv("model.artifacts_root".into()))?.into();
+        }
+        if let Some(v) = get(&doc, "scheme", "kind") {
+            let r = get(&doc, "scheme", "r").and_then(|v| v.as_i64()).unwrap_or(4) as usize;
+            cfg.scheme = match v.as_str() {
+                Some("vanilla") => SchemeKind::Vanilla,
+                Some("c3") => SchemeKind::C3 { r },
+                Some("bnpp") | Some("bottlenetpp") => SchemeKind::BottleNetPP { r },
+                other => return Err(inv(format!("scheme.kind: {other:?}"))),
+            };
+        }
+        if let Some(v) = get(&doc, "scheme", "venue") {
+            cfg.codec_venue = match v.as_str() {
+                Some("host") => CodecVenue::Host,
+                Some("artifact") => CodecVenue::Artifact,
+                other => return Err(inv(format!("scheme.venue: {other:?}"))),
+            };
+        }
+        if let Some(v) = get(&doc, "transport", "kind") {
+            cfg.transport = match v.as_str() {
+                Some("inproc") => TransportKind::InProc,
+                Some("tcp") => TransportKind::Tcp,
+                other => return Err(inv(format!("transport.kind: {other:?}"))),
+            };
+        }
+        if let Some(v) = get(&doc, "transport", "addr") {
+            cfg.tcp_addr = v.as_str().ok_or_else(|| inv("transport.addr".into()))?.into();
+        }
+        if let (Some(lat), Some(bw)) = (
+            get(&doc, "link", "latency_ms").and_then(|v| v.as_f64()),
+            get(&doc, "link", "bandwidth_mbps").and_then(|v| v.as_f64()),
+        ) {
+            cfg.link = Some(LinkModel::new(lat / 1e3, bw * 1e6 / 8.0));
+        }
+        for (key, field) in [
+            ("steps", &mut cfg.steps as *mut usize),
+            ("eval_every", &mut cfg.eval_every as *mut usize),
+            ("eval_batches", &mut cfg.eval_batches as *mut usize),
+        ] {
+            if let Some(v) = get(&doc, "train", key) {
+                let val = v.as_i64().ok_or_else(|| inv(format!("train.{key}")))? as usize;
+                unsafe { *field = val };
+            }
+        }
+        if let Some(v) = get(&doc, "train", "lr") {
+            cfg.lr = v.as_f64().ok_or_else(|| inv("train.lr".into()))? as f32;
+        }
+        if let Some(v) = get(&doc, "train", "seed") {
+            cfg.seed = v.as_i64().ok_or_else(|| inv("train.seed".into()))? as u64;
+        }
+        if let Some(v) = get(&doc, "train", "augment") {
+            cfg.augment = v.as_bool().ok_or_else(|| inv("train.augment".into()))?;
+        }
+        if let Some(v) = get(&doc, "data", "root") {
+            cfg.data_root = v.as_str().ok_or_else(|| inv("data.root".into()))?.into();
+        }
+        if let Some(v) = get(&doc, "data", "synth_train") {
+            cfg.synth_train = v.as_i64().ok_or_else(|| inv("data.synth_train".into()))? as usize;
+        }
+        if let Some(v) = get(&doc, "data", "synth_test") {
+            cfg.synth_test = v.as_i64().ok_or_else(|| inv("data.synth_test".into()))? as usize;
+        }
+        if let Some(v) = get(&doc, "out", "dir") {
+            cfg.out_dir = v.as_str().ok_or_else(|| inv("out.dir".into()))?.into();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let r = self.scheme.ratio();
+        if r == 0 || (r & (r - 1)) != 0 && r % 2 != 0 {
+            return Err(ConfigError::Invalid(format!("ratio {r} must be even")));
+        }
+        if self.steps == 0 {
+            return Err(ConfigError::Invalid("steps must be > 0".into()));
+        }
+        if self.lr <= 0.0 {
+            return Err(ConfigError::Invalid("lr must be > 0".into()));
+        }
+        if matches!(self.scheme, SchemeKind::BottleNetPP { .. })
+            && self.codec_venue == CodecVenue::Host
+        {
+            return Err(ConfigError::Invalid(
+                "BottleNet++ has no host codec — its codec lives in the model artifacts".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Artifact directory for the model.
+    pub fn model_dir(&self) -> String {
+        match self.scheme {
+            SchemeKind::BottleNetPP { r } => {
+                format!("{}/{}_bnpp_r{}", self.artifacts_root, self.model_key, r)
+            }
+            _ => format!("{}/{}", self.artifacts_root, self.model_key),
+        }
+    }
+
+    /// Codec artifact directory (C3 only).
+    pub fn codec_dir(&self) -> Option<String> {
+        match self.scheme {
+            SchemeKind::C3 { r } => {
+                Some(format!("{}/{}/codec_c3_r{}", self.artifacts_root, self.model_key, r))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        name = "tiny-c3-r4"
+        [model]
+        key = "vggt_b32"
+        artifacts_root = "artifacts"
+        [scheme]
+        kind = "c3"
+        r = 4
+        venue = "artifact"
+        [transport]
+        kind = "inproc"
+        [train]
+        steps = 100
+        lr = 0.0001
+        seed = 7
+        [link]
+        latency_ms = 2.0
+        bandwidth_mbps = 50.0
+    "#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "tiny-c3-r4");
+        assert_eq!(cfg.scheme, SchemeKind::C3 { r: 4 });
+        assert_eq!(cfg.steps, 100);
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.link.is_some());
+        assert_eq!(cfg.codec_dir().unwrap(), "artifacts/vggt_b32/codec_c3_r4");
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"\n").unwrap();
+        assert_eq!(cfg.lr, 1e-4);
+        assert_eq!(cfg.transport, TransportKind::InProc);
+    }
+
+    #[test]
+    fn bnpp_model_dir_is_suffixed() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[scheme]\nkind = \"bnpp\"\nr = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model_dir(), "artifacts/vggt_b32_bnpp_r8");
+        assert!(cfg.codec_dir().is_none());
+    }
+
+    #[test]
+    fn rejects_bad_scheme() {
+        assert!(ExperimentConfig::from_toml_str("[scheme]\nkind = \"magic\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_steps() {
+        assert!(ExperimentConfig::from_toml_str("[train]\nsteps = 0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bnpp_host_venue() {
+        let r = ExperimentConfig::from_toml_str(
+            "[scheme]\nkind = \"bnpp\"\nr = 4\nvenue = \"host\"\n",
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! TOML-subset parser (from scratch — no serde/toml crates).
+//!
+//! Supported grammar: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! That covers every experiment config in configs/.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// section → key → value.  Root-level keys live under the "" section.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(input: &str) -> Result<Doc, TomlError> {
+    let mut doc: Doc = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut section = String::new();
+
+    for (ln, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but fine: we don't allow '#' inside strings in our configs
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth -= 1,
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = parse(
+            r#"
+            # experiment
+            name = "tiny"
+            [train]
+            steps = 200
+            lr = 0.0001
+            augment = true
+            ratios = [2, 4, 8, 16]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("tiny"));
+        assert_eq!(doc["train"]["steps"].as_i64(), Some(200));
+        assert_eq!(doc["train"]["lr"].as_f64(), Some(1e-4));
+        assert_eq!(doc["train"]["augment"].as_bool(), Some(true));
+        let rs: Vec<i64> = doc["train"]["ratios"]
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(rs, vec![2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("# hi\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(doc[""]["x"].as_i64(), Some(1));
+    }
+
+    #[test]
+    fn string_with_hash_kept() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc[""]["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = parse("i = 3\nf = 3.5\n").unwrap();
+        assert_eq!(doc[""]["i"].as_i64(), Some(3));
+        assert_eq!(doc[""]["i"].as_f64(), Some(3.0)); // ints coerce to f64
+        assert_eq!(doc[""]["f"].as_i64(), None);
+        assert_eq!(doc[""]["f"].as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("a = []\n").unwrap();
+        assert_eq!(doc[""]["a"].as_arr().unwrap().len(), 0);
+    }
+}

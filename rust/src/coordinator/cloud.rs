@@ -1,0 +1,97 @@
+//! CloudWorker: owns f_psi and the cloud half of the codec.  Message-driven:
+//! decodes uplink features, runs the cloud forward/backward, compresses the
+//! cut-layer gradients with the SAME encoder (legal because decode = encodeᵀ,
+//! DESIGN.md §1) and ships them back with the step statistics.
+
+use anyhow::{bail, Context, Result};
+
+use super::edge::build_codec;
+use super::run_codec::RunCodec;
+use crate::config::ExperimentConfig;
+use crate::metrics::Histogram;
+use crate::runtime::{AdamState, Engine, ModelRuntime};
+use crate::tensor::Tensor;
+use crate::transport::{Msg, Transport};
+use crate::util::timer::Timer;
+
+pub struct CloudWorker {
+    model: ModelRuntime,
+    codec: RunCodec,
+    params: Vec<xla::Literal>,
+    adam: AdamState,
+    lr: f32,
+    /// Step-latency histogram (cloud-side compute only).
+    pub step_latency: Histogram,
+}
+
+impl CloudWorker {
+    pub fn new(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
+        let model = ModelRuntime::load(engine, cfg.model_dir())
+            .context("loading cloud model artifacts")?;
+        let codec = build_codec(engine, cfg, "cloud")?;
+        // Different init stream than the edge (cfg.seed+1), as both parts are
+        // independently randomly initialized in SL.
+        let params = model.cloud_init(cfg.seed.wrapping_add(1))?;
+        let adam = AdamState::zeros_like(&params)?;
+        Ok(CloudWorker {
+            model,
+            codec,
+            params,
+            adam,
+            lr: cfg.lr,
+            step_latency: Histogram::latency(),
+        })
+    }
+
+    /// Serve until the edge sends Shutdown.
+    pub fn run(&mut self, transport: &mut dyn Transport) -> Result<()> {
+        let mut pending: Option<(u64, Tensor)> = None;
+        loop {
+            match transport.recv()? {
+                Msg::KeySeed { seed: _seed } => {
+                    // Keys were already derived from the config seed at
+                    // construction; a mismatched seed is a protocol error.
+                    // (Kept as a message so TCP deployments can hand-shake.)
+                }
+                Msg::Features { step, tensor } => {
+                    if pending.is_some() {
+                        bail!("cloud got Features while a step is pending");
+                    }
+                    pending = Some((step, tensor));
+                }
+                Msg::TrainLabels { step, labels } => {
+                    let (fstep, s) = pending
+                        .take()
+                        .context("cloud got labels before features")?;
+                    if fstep != step {
+                        bail!("label step mismatch: {step} != {fstep}");
+                    }
+                    let t = Timer::start();
+                    let zhat = self.codec.decode(&s)?;
+                    let out = self.model.cloud_step(&self.params, &zhat, &labels)?;
+                    // Compress the cut-layer gradients for the downlink.
+                    let gs = self.codec.encode(&out.gz)?;
+                    let params = std::mem::take(&mut self.params);
+                    self.params =
+                        self.model
+                            .cloud_adam(params, &out.grads, &mut self.adam, self.lr)?;
+                    self.step_latency.observe(t.elapsed_secs());
+                    transport.send(&Msg::Gradients { step, tensor: gs })?;
+                    transport.send(&Msg::StepStats {
+                        step,
+                        loss: out.loss,
+                        ncorrect: out.ncorrect,
+                    })?;
+                }
+                Msg::EvalFeatures { step, tensor, labels } => {
+                    let zhat = self.codec.decode(&tensor)?;
+                    let (loss, ncorrect) =
+                        self.model.cloud_eval(&self.params, &zhat, &labels)?;
+                    transport.send(&Msg::EvalStats { step, loss, ncorrect })?;
+                }
+                Msg::Shutdown => return Ok(()),
+                other => bail!("cloud got unexpected message {other:?}"),
+            }
+        }
+    }
+}

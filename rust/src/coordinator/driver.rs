@@ -1,0 +1,103 @@
+//! Driver: assembles datasets, transports and the two workers for one
+//! experiment, runs them concurrently, and returns the run record.
+//!
+//! In-proc mode spawns the cloud on its own OS thread (its own PJRT engine —
+//! xla handles are not Send, so each actor constructs everything inside its
+//! thread) and runs the edge on the caller's thread.  TCP mode is driven from
+//! main.rs with `c3sl edge` / `c3sl cloud` in separate processes.
+
+use anyhow::{Context, Result};
+
+use super::{CloudWorker, EdgeWorker};
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::data::open_dataset;
+use crate::metrics::RunRecorder;
+use crate::runtime::Engine;
+use crate::transport::sim::{LinkModel, SimLink};
+use crate::transport::{inproc_pair, Transport};
+
+/// Everything a finished run reports.
+pub struct RunOutput {
+    pub recorder: RunRecorder,
+    /// Total bytes on the wire (uplink+downlink, serialized frames).
+    pub wire_tx: u64,
+    pub wire_rx: u64,
+    /// Virtual link time if a LinkModel was configured.
+    pub virtual_link_seconds: Option<f64>,
+    pub wall_seconds: f64,
+}
+
+/// Run one experiment end to end (in-proc transport).
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutput> {
+    anyhow::ensure!(
+        cfg.transport == TransportKind::InProc,
+        "run_experiment drives in-proc runs; use `c3sl edge`/`c3sl cloud` for tcp"
+    );
+    let t0 = std::time::Instant::now();
+    let (edge_tp, cloud_tp) = inproc_pair();
+
+    // Cloud actor on its own thread with its own engine.
+    let cloud_cfg = cfg.clone();
+    let cloud_handle = std::thread::Builder::new()
+        .name("cloud".into())
+        .spawn(move || -> Result<()> {
+            let engine = Engine::cpu().context("cloud engine")?;
+            let mut cloud = CloudWorker::new(&engine, &cloud_cfg)?;
+            let mut tp: Box<dyn Transport> = Box::new(cloud_tp);
+            cloud.run(tp.as_mut())
+        })
+        .context("spawning cloud thread")?;
+
+    // Edge actor on this thread.
+    let engine = Engine::cpu().context("edge engine")?;
+    let mut edge = EdgeWorker::new(&engine, cfg)?;
+    let manifest_batch = edge.batch_size();
+
+    let train = open_dataset(
+        &cfg.data_root,
+        classes_of(cfg)?,
+        image_of(cfg)?,
+        true,
+        cfg.synth_train.max(manifest_batch),
+    );
+    let test = open_dataset(
+        &cfg.data_root,
+        classes_of(cfg)?,
+        image_of(cfg)?,
+        false,
+        cfg.synth_test.max(manifest_batch),
+    );
+
+    let mut edge_transport: Box<dyn Transport> = match cfg.link {
+        Some(link) => Box::new(SimLink::new(edge_tp, link)),
+        None => Box::new(edge_tp),
+    };
+
+    let recorder = edge.run(edge_transport.as_mut(), train.as_ref(), test.as_ref(), cfg)?;
+
+    cloud_handle
+        .join()
+        .map_err(|e| anyhow::anyhow!("cloud thread panicked: {e:?}"))??;
+
+    let stats = edge_transport.stats();
+    let virtual_link_seconds = cfg.link.map(|l: LinkModel| {
+        // recompute from byte totals (tx and rx see the same link)
+        l.transfer_time(stats.tx()) + l.transfer_time(stats.rx())
+    });
+    Ok(RunOutput {
+        recorder,
+        wire_tx: stats.tx(),
+        wire_rx: stats.rx(),
+        virtual_link_seconds,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Read classes from the model manifest (single source of truth).
+fn classes_of(cfg: &ExperimentConfig) -> Result<usize> {
+    Ok(crate::runtime::ModelManifest::load(cfg.model_dir())?.classes)
+}
+
+fn image_of(cfg: &ExperimentConfig) -> Result<usize> {
+    Ok(crate::runtime::ModelManifest::load(cfg.model_dir())?.image)
+}

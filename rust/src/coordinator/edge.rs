@@ -1,0 +1,172 @@
+//! EdgeWorker: owns f_theta, the training data, and the edge half of the
+//! codec.  Drives the training loop (it is the data owner, as in the paper's
+//! SL formulation) and records all metrics.
+
+use anyhow::{bail, Context, Result};
+
+use super::run_codec::RunCodec;
+use crate::config::ExperimentConfig;
+use crate::data::{Batch, Dataset, Loader};
+use crate::metrics::{RunRecorder, StepRecord};
+use crate::runtime::{AdamState, Engine, ModelRuntime};
+use crate::transport::{Msg, Transport};
+use crate::util::timer::Timer;
+
+pub struct EdgeWorker {
+    model: ModelRuntime,
+    codec: RunCodec,
+    params: Vec<xla::Literal>,
+    adam: AdamState,
+    lr: f32,
+}
+
+impl EdgeWorker {
+    /// Build the edge side: engine, artifacts, params, codec.
+    pub fn new(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
+        let model = ModelRuntime::load(engine, cfg.model_dir())
+            .context("loading edge model artifacts")?;
+        let codec = build_codec(engine, cfg, /*role=*/ "edge")?;
+        let params = model.edge_init(cfg.seed)?;
+        let adam = AdamState::zeros_like(&params)?;
+        Ok(EdgeWorker { model, codec, params, adam, lr: cfg.lr })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.model.manifest.batch
+    }
+
+    pub fn d_tx(&self) -> usize {
+        self.model.manifest.d_tx
+    }
+
+    /// Run `steps` training steps against the cloud over `transport`,
+    /// evaluating on `test` every `eval_every` steps.  Consumes the
+    /// transport's message protocol documented in coordinator/mod.rs.
+    pub fn run(
+        &mut self,
+        transport: &mut dyn Transport,
+        train: &dyn Dataset,
+        test: &dyn Dataset,
+        cfg: &ExperimentConfig,
+    ) -> Result<RunRecorder> {
+        let mut rec = RunRecorder::new();
+        let mut loader = Loader::new(train, self.batch_size(), cfg.seed ^ 0xDA7A, cfg.augment);
+        let eval_batches = Loader::eval_batches(test, self.batch_size());
+        let stats = transport.stats();
+
+        // Key agreement: tell the cloud which seed to derive the codec keys
+        // from (the keys themselves never cross the wire).
+        transport.send(&Msg::KeySeed { seed: key_seed(cfg) })?;
+
+        for step in 0..cfg.steps as u64 {
+            let t = Timer::start();
+            let tx0 = stats.tx();
+            let rx0 = stats.rx();
+
+            let batch = loader.next_batch();
+            let z = self.model.edge_fwd(&self.params, &batch.images)?;
+            let s = self.codec.encode(&z)?;
+            transport.send(&Msg::Features { step, tensor: s })?;
+            transport.send(&Msg::TrainLabels { step, labels: batch.labels.clone() })?;
+
+            // Downlink: compressed gradients + step stats.
+            let gs = match transport.recv()? {
+                Msg::Gradients { step: gstep, tensor } => {
+                    if gstep != step {
+                        bail!("gradient step mismatch: {gstep} != {step}");
+                    }
+                    tensor
+                }
+                other => bail!("edge expected Gradients, got {other:?}"),
+            };
+            let (loss, ncorrect) = match transport.recv()? {
+                Msg::StepStats { loss, ncorrect, .. } => (loss, ncorrect),
+                other => bail!("edge expected StepStats, got {other:?}"),
+            };
+
+            let gz = self.codec.decode(&gs)?;
+            let grads = self.model.edge_bwd(&self.params, &batch.images, &gz)?;
+            let params = std::mem::take(&mut self.params);
+            self.params = self.model.edge_adam(params, &grads, &mut self.adam, self.lr)?;
+
+            rec.record(StepRecord {
+                step: step as usize,
+                loss: loss as f64,
+                acc: ncorrect as f64 / self.batch_size() as f64,
+                uplink_bytes: stats.tx() - tx0,
+                downlink_bytes: stats.rx() - rx0,
+                step_seconds: t.elapsed_secs(),
+            });
+
+            let is_last = step as usize + 1 == cfg.steps;
+            if cfg.eval_every > 0 && ((step as usize + 1) % cfg.eval_every == 0 || is_last) {
+                let (eloss, eacc) =
+                    self.evaluate(transport, &eval_batches[..cfg.eval_batches.min(eval_batches.len())], step)?;
+                rec.record_eval(step as usize, eloss, eacc);
+            }
+        }
+        transport.send(&Msg::Shutdown)?;
+        rec.set_scalar("d_tx", self.d_tx() as f64);
+        rec.set_scalar("ratio", self.codec.ratio() as f64);
+        Ok(rec)
+    }
+
+    /// Evaluate through the full compressed pipeline (codec in place, as the
+    /// paper does: the codec IS part of the deployed model).
+    fn evaluate(
+        &mut self,
+        transport: &mut dyn Transport,
+        batches: &[Batch],
+        step: u64,
+    ) -> Result<(f64, f64)> {
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total_n = 0usize;
+        for b in batches {
+            let z = self.model.edge_fwd(&self.params, &b.images)?;
+            let s = self.codec.encode(&z)?;
+            transport.send(&Msg::EvalFeatures {
+                step,
+                tensor: s,
+                labels: b.labels.clone(),
+            })?;
+            match transport.recv()? {
+                Msg::EvalStats { loss, ncorrect, .. } => {
+                    total_loss += loss as f64;
+                    total_correct += ncorrect as f64;
+                    total_n += b.labels.len();
+                }
+                other => bail!("edge expected EvalStats, got {other:?}"),
+            }
+        }
+        let nb = batches.len().max(1) as f64;
+        Ok((total_loss / nb, total_correct / total_n.max(1) as f64))
+    }
+}
+
+/// Codec construction shared by both workers.
+pub(crate) fn build_codec(engine: &Engine, cfg: &ExperimentConfig, role: &str) -> Result<RunCodec> {
+    use crate::config::{CodecVenue, SchemeKind};
+    Ok(match cfg.scheme {
+        SchemeKind::Vanilla | SchemeKind::BottleNetPP { .. } => RunCodec::None,
+        SchemeKind::C3 { r } => match cfg.codec_venue {
+            CodecVenue::Artifact => {
+                let dir = cfg
+                    .codec_dir()
+                    .context("C3 scheme requires a codec artifact dir")?;
+                RunCodec::artifact(engine, &dir, key_seed(cfg))
+                    .with_context(|| format!("loading {role} codec from {dir}"))?
+            }
+            CodecVenue::Host => {
+                // d_tx comes from the model manifest; read it cheaply.
+                let manifest = crate::runtime::ModelManifest::load(cfg.model_dir())?;
+                RunCodec::host(key_seed(cfg), r, manifest.d_tx)
+            }
+        },
+    })
+}
+
+/// The key seed both sides derive the fixed key set from.
+pub(crate) fn key_seed(cfg: &ExperimentConfig) -> u64 {
+    cfg.seed ^ 0xC3_C3_C3_C3u64
+}

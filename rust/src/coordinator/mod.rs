@@ -1,0 +1,31 @@
+//! Coordinator: the split-learning runtime (the paper's system realized as
+//! two actors).
+//!
+//! ```text
+//!            EDGE (f_theta)                      CLOUD (f_psi)
+//!   ┌──────────────────────────┐       ┌──────────────────────────────┐
+//!   │ loader → edge_fwd → enc ─┼─────▶ │ dec → cloud_step ─┐          │
+//!   │ edge_adam ◀─ edge_bwd ◀─ dec ◀───┼── enc(gẑ) ◀───────┘          │
+//!   └──────────────────────────┘       └──────────────────────────────┘
+//!          uplink: S^g (+labels)          downlink: encoded gradients
+//! ```
+//!
+//! Both directions are compressed (paper §1: "compresses a batch of features
+//! and gradients").  Because decode = encodeᵀ (DESIGN.md §1), the distributed
+//! gradient path is numerically identical to the paper's single-process
+//! Algorithm 1.
+//!
+//! The two actors speak `transport::Msg` over any `Transport` (in-proc
+//! channels, TCP between processes), so byte accounting reflects real
+//! serialized traffic.  Keys are derived from a shared seed on both sides —
+//! the R×D key matrix itself never crosses the wire.
+
+pub mod cloud;
+pub mod driver;
+pub mod edge;
+pub mod run_codec;
+
+pub use cloud::CloudWorker;
+pub use driver::{run_experiment, RunOutput};
+pub use edge::EdgeWorker;
+pub use run_codec::RunCodec;

@@ -1,0 +1,72 @@
+//! RunCodec: the codec venue abstraction the workers use on both directions.
+//!
+//! * `None`      — vanilla SL and BottleNet++ (whose codec is inside the
+//!                 model artifacts): tensors pass through untouched.
+//! * `Host`      — rust-native hdc implementation (FFT/direct), no XLA call.
+//! * `Artifact`  — the AOT-lowered Pallas kernels through PJRT.
+//!
+//! Host and Artifact venues must agree numerically when fed the same keys;
+//! rust/tests/integration.rs checks exactly that.
+
+use anyhow::Result;
+
+use crate::compress::{C3Codec, Codec};
+use crate::hdc::{Backend, KeySet};
+use crate::runtime::{CodecRuntime, Engine};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub enum RunCodec {
+    None,
+    Host(C3Codec),
+    Artifact(CodecRuntime),
+}
+
+impl RunCodec {
+    /// Host venue: keys from the (deterministic) rust PRNG at `seed`.
+    pub fn host(seed: u64, r: usize, d: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        RunCodec::Host(C3Codec::new(KeySet::generate(&mut rng, r, d), Backend::Auto))
+    }
+
+    /// Artifact venue: keys from the gen_keys artifact at `seed`.
+    pub fn artifact(engine: &Engine, dir: &str, seed: u64) -> Result<Self> {
+        let mut rt = CodecRuntime::load(engine, dir)?;
+        rt.init_keys(seed)?;
+        Ok(RunCodec::Artifact(rt))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RunCodec::None => "none".into(),
+            RunCodec::Host(c) => format!("host/{}", c.name()),
+            RunCodec::Artifact(rt) => {
+                format!("artifact/c3-r{} ({})", rt.r(), rt.manifest.kernel)
+            }
+        }
+    }
+
+    pub fn ratio(&self) -> usize {
+        match self {
+            RunCodec::None => 1,
+            RunCodec::Host(c) => c.r(),
+            RunCodec::Artifact(rt) => rt.r(),
+        }
+    }
+
+    pub fn encode(&self, z: &Tensor) -> Result<Tensor> {
+        match self {
+            RunCodec::None => Ok(z.clone()),
+            RunCodec::Host(c) => Ok(Codec::encode(c, z)),
+            RunCodec::Artifact(rt) => rt.encode(z),
+        }
+    }
+
+    pub fn decode(&self, s: &Tensor) -> Result<Tensor> {
+        match self {
+            RunCodec::None => Ok(s.clone()),
+            RunCodec::Host(c) => Ok(Codec::decode(c, s)),
+            RunCodec::Artifact(rt) => rt.decode(s),
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Loader for the standard CIFAR-10 / CIFAR-100 binary formats.
+//!
+//! CIFAR-10:  data_batch_{1..5}.bin / test_batch.bin — records of
+//!            1 label byte + 3072 pixel bytes (RRR..GGG..BBB, row-major).
+//! CIFAR-100: train.bin / test.bin — records of 2 label bytes
+//!            (coarse, fine) + 3072 pixel bytes.
+//!
+//! Pixels are normalized with the usual per-channel CIFAR statistics.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use super::Dataset;
+
+const IMG_BYTES: usize = 3072;
+const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+fn read_file(path: &Path) -> std::io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+fn normalize_into(pixels: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(pixels.len(), IMG_BYTES);
+    debug_assert_eq!(out.len(), IMG_BYTES);
+    for ch in 0..3 {
+        for px in 0..1024 {
+            let v = pixels[ch * 1024 + px] as f32 / 255.0;
+            out[ch * 1024 + px] = (v - MEAN[ch]) / STD[ch];
+        }
+    }
+}
+
+pub struct Cifar10 {
+    records: Vec<u8>,
+    n: usize,
+    name: String,
+}
+
+impl Cifar10 {
+    pub fn open(root: &str, train: bool) -> std::io::Result<Self> {
+        let dir = PathBuf::from(root).join("cifar-10-batches-bin");
+        let files: Vec<PathBuf> = if train {
+            (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect()
+        } else {
+            vec![dir.join("test_batch.bin")]
+        };
+        let mut records = Vec::new();
+        for f in &files {
+            records.extend(read_file(f)?);
+        }
+        let rec = 1 + IMG_BYTES;
+        if records.len() % rec != 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "cifar-10 file size not a multiple of record size",
+            ));
+        }
+        let n = records.len() / rec;
+        Ok(Cifar10 {
+            records,
+            n,
+            name: format!("cifar10-{}", if train { "train" } else { "test" }),
+        })
+    }
+}
+
+impl Dataset for Cifar10 {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn image_shape(&self) -> (usize, usize, usize) {
+        (3, 32, 32)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fetch(&self, i: usize, out: &mut [f32]) -> i32 {
+        let rec = 1 + IMG_BYTES;
+        let r = &self.records[i * rec..(i + 1) * rec];
+        normalize_into(&r[1..], out);
+        r[0] as i32
+    }
+}
+
+pub struct Cifar100 {
+    records: Vec<u8>,
+    n: usize,
+    name: String,
+}
+
+impl Cifar100 {
+    pub fn open(root: &str, train: bool) -> std::io::Result<Self> {
+        let dir = PathBuf::from(root).join("cifar-100-binary");
+        let file = dir.join(if train { "train.bin" } else { "test.bin" });
+        let records = read_file(&file)?;
+        let rec = 2 + IMG_BYTES;
+        if records.len() % rec != 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "cifar-100 file size not a multiple of record size",
+            ));
+        }
+        let n = records.len() / rec;
+        Ok(Cifar100 {
+            records,
+            n,
+            name: format!("cifar100-{}", if train { "train" } else { "test" }),
+        })
+    }
+}
+
+impl Dataset for Cifar100 {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn num_classes(&self) -> usize {
+        100
+    }
+
+    fn image_shape(&self) -> (usize, usize, usize) {
+        (3, 32, 32)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fetch(&self, i: usize, out: &mut [f32]) -> i32 {
+        let rec = 2 + IMG_BYTES;
+        let r = &self.records[i * rec..(i + 1) * rec];
+        normalize_into(&r[2..], out);
+        r[1] as i32 // fine label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_cifar10(dir: &Path, n: usize) {
+        let d = dir.join("cifar-10-batches-bin");
+        std::fs::create_dir_all(&d).unwrap();
+        for b in 1..=5 {
+            let mut f = std::fs::File::create(d.join(format!("data_batch_{b}.bin"))).unwrap();
+            for i in 0..n {
+                let mut rec = vec![(i % 10) as u8];
+                rec.extend(std::iter::repeat((i % 251) as u8).take(IMG_BYTES));
+                f.write_all(&rec).unwrap();
+            }
+        }
+        let mut f = std::fs::File::create(d.join("test_batch.bin")).unwrap();
+        for i in 0..n {
+            let mut rec = vec![(i % 10) as u8];
+            rec.extend(std::iter::repeat(0u8).take(IMG_BYTES));
+            f.write_all(&rec).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_cifar10_binary_format() {
+        let tmp = std::env::temp_dir().join("c3sl_cifar_test");
+        fake_cifar10(&tmp, 4);
+        let train = Cifar10::open(tmp.to_str().unwrap(), true).unwrap();
+        assert_eq!(train.len(), 20);
+        assert_eq!(train.num_classes(), 10);
+        let mut buf = vec![0.0; IMG_BYTES];
+        let label = train.fetch(3, &mut buf);
+        assert_eq!(label, 3);
+        // normalization: pixel 3 → (3/255 - mean)/std, well within [-3, 3]
+        assert!(buf.iter().all(|v| v.abs() < 3.5));
+        let test = Cifar10::open(tmp.to_str().unwrap(), false).unwrap();
+        assert_eq!(test.len(), 4);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_files_error() {
+        assert!(Cifar10::open("/definitely/nope", true).is_err());
+        assert!(Cifar100::open("/definitely/nope", false).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let tmp = std::env::temp_dir().join("c3sl_cifar_trunc");
+        let d = tmp.join("cifar-100-binary");
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("train.bin"), vec![0u8; 100]).unwrap();
+        assert!(Cifar100::open(tmp.to_str().unwrap(), true).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,269 @@
+//! FFT substrate (from scratch): iterative radix-2 Cooley–Tukey over
+//! interleaved complex buffers, plus real-input convolution helpers used by
+//! the rust-native C3 codec hot path.
+//!
+//! Only power-of-two lengths go through the FFT; the `hdc` module falls back
+//! to the direct O(D²) path otherwise (real workloads here have D = 2^k).
+
+use std::f64::consts::PI;
+
+/// Complex number as (re, im) over f64 for accumulation accuracy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline]
+    pub fn conj(self) -> C64 {
+        C64::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// Twiddle-factor table for a given power-of-two length, reused across calls.
+#[derive(Clone, Debug)]
+pub struct FftPlan {
+    pub n: usize,
+    /// twiddles[k] = exp(-2πi k / n) for k < n/2
+    twiddles: Vec<C64>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "FftPlan requires power-of-two n, got {n}");
+        let twiddles = (0..n / 2)
+            .map(|k| {
+                let ang = -2.0 * PI * k as f64 / n as f64;
+                C64::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        FftPlan { n, twiddles }
+    }
+
+    /// In-place forward FFT (decimation in time, bit-reversal permutation).
+    pub fn forward(&self, buf: &mut [C64]) {
+        self.transform(buf, false);
+    }
+
+    /// In-place inverse FFT (includes the 1/n normalization).
+    pub fn inverse(&self, buf: &mut [C64]) {
+        self.transform(buf, true);
+        let inv = 1.0 / self.n as f64;
+        for c in buf.iter_mut() {
+            c.re *= inv;
+            c.im *= inv;
+        }
+    }
+
+    fn transform(&self, buf: &mut [C64], inverse: bool) {
+        let n = self.n;
+        assert_eq!(buf.len(), n);
+        // bit reversal
+        let bits = n.trailing_zeros();
+        for i in 0..n {
+            let j = i.reverse_bits() >> (usize::BITS - bits);
+            if j > i {
+                buf.swap(i, j);
+            }
+        }
+        // butterflies
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let mut w = self.twiddles[k * step];
+                    if inverse {
+                        w = w.conj();
+                    }
+                    let a = buf[start + k];
+                    let b = buf[start + k + half].mul(w);
+                    buf[start + k] = a.add(b);
+                    buf[start + k + half] = a.sub(b);
+                }
+            }
+            len <<= 1;
+        }
+    }
+}
+
+/// Forward FFT of a real f32 signal → full complex spectrum.
+pub fn rfft(plan: &FftPlan, x: &[f32]) -> Vec<C64> {
+    assert_eq!(x.len(), plan.n);
+    let mut buf: Vec<C64> = x.iter().map(|&v| C64::new(v as f64, 0.0)).collect();
+    plan.forward(&mut buf);
+    buf
+}
+
+/// Inverse FFT → real part as f32 (imaginary parts must be ~0 for our uses).
+pub fn irfft(plan: &FftPlan, mut spec: Vec<C64>) -> Vec<f32> {
+    plan.inverse(&mut spec);
+    spec.iter().map(|c| c.re as f32).collect()
+}
+
+/// Circular convolution via the convolution theorem (power-of-two n).
+pub fn circular_convolve_fft(plan: &FftPlan, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let fa = rfft(plan, a);
+    let fb = rfft(plan, b);
+    let prod: Vec<C64> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    irfft(plan, prod)
+}
+
+/// Circular correlation via conj(F(a))·F(b) (power-of-two n).
+pub fn circular_correlate_fft(plan: &FftPlan, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let fa = rfft(plan, a);
+    let fb = rfft(plan, b);
+    let prod: Vec<C64> = fa.iter().zip(&fb).map(|(x, y)| x.conj().mul(*y)).collect();
+    irfft(plan, prod)
+}
+
+/// Naive O(n²) DFT — test oracle for the FFT itself.
+#[allow(dead_code)]
+pub fn dft_naive(x: &[C64], inverse: bool) -> Vec<C64> {
+    let n = x.len();
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut acc = C64::new(0.0, 0.0);
+        for (j, &v) in x.iter().enumerate() {
+            let ang = sign * PI * (k * j) as f64 / n as f64;
+            acc = acc.add(v.mul(C64::new(ang.cos(), ang.sin())));
+        }
+        if inverse {
+            acc.re /= n as f64;
+            acc.im /= n as f64;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for &n in &[2usize, 4, 8, 64, 256] {
+            let plan = FftPlan::new(n);
+            let x: Vec<C64> = (0..n)
+                .map(|_| C64::new(rng.normal(), rng.normal()))
+                .collect();
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            let want = dft_naive(&x, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(close(g.re, w.re, 1e-9) && close(g.im, w.im, 1e-9));
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        Prop::new("ifft(fft(x)) == x", 30).run(|g| {
+            let n = g.pow2_in(1, 10);
+            let plan = FftPlan::new(n);
+            let x = g.vec_normal(n, 0.0, 1.0);
+            let spec = rfft(&plan, &x);
+            let back = irfft(&plan, spec);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn convolution_theorem_matches_direct() {
+        Prop::new("fft conv == direct conv", 20).run(|g| {
+            let n = g.pow2_in(2, 8);
+            let plan = FftPlan::new(n);
+            let a = g.vec_normal(n, 0.0, 1.0);
+            let b = g.vec_normal(n, 0.0, 1.0);
+            let got = circular_convolve_fft(&plan, &a, &b);
+            // direct: out[k] = Σ_m a[m] b[(k−m) mod n]
+            for k in 0..n {
+                let want: f32 = (0..n)
+                    .map(|m| a[m] * b[(k + n - m) % n])
+                    .sum();
+                assert!((got[k] - want).abs() < 1e-3, "n={n} k={k}: {} vs {want}", got[k]);
+            }
+        });
+    }
+
+    #[test]
+    fn correlation_matches_direct() {
+        Prop::new("fft corr == direct corr", 20).run(|g| {
+            let n = g.pow2_in(2, 8);
+            let plan = FftPlan::new(n);
+            let a = g.vec_normal(n, 0.0, 1.0);
+            let b = g.vec_normal(n, 0.0, 1.0);
+            let got = circular_correlate_fft(&plan, &a, &b);
+            // direct: out[k] = Σ_m a[m] b[(k+m) mod n]
+            for k in 0..n {
+                let want: f32 = (0..n).map(|m| a[m] * b[(k + m) % n]).sum();
+                assert!((got[k] - want).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn delta_convolution_is_identity() {
+        let n = 16;
+        let plan = FftPlan::new(n);
+        let mut delta = vec![0.0f32; n];
+        delta[0] = 1.0;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y = circular_convolve_fft(&plan, &delta, &x);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_pow2_rejected() {
+        FftPlan::new(12);
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 128;
+        let plan = FftPlan::new(n);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let spec = rfft(&plan, &x);
+        let time_e: f64 = x.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let freq_e: f64 =
+            spec.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / n as f64;
+        assert!(close(time_e, freq_e, 1e-9));
+    }
+}

@@ -1,0 +1,269 @@
+//! Analytical parameter / FLOP accounting — regenerates the paper's Table 2
+//! formulas and the "Number of Parameters" / "FLOPs" columns of Table 1.
+//!
+//! Paper Table 2 (verbatim):
+//!   BottleNet++  params = (C·k²+1)·(4C/R) + ((4C/R)·k²+1)·C
+//!                flops  = B·(2C·k²+1)·(4C/R)·H'·W' + B·((8C/R)·k²+1)·C·H·W
+//!   C3-SL        params = R·D
+//!                flops  = 2·B·D²
+//!
+//! Note (documented in EXPERIMENTS.md): the paper's published Table 1 row for
+//! BottleNet++ at R=2 (2,360.0k / 9,438.7k params) does NOT satisfy its own
+//! Table 2 formula (which yields 4,195.8k / 16,780.3k); the published numbers
+//! imply C′ = 9C/8 rather than C′ = 4C/R = 2C.  For R ∈ {4, 8, 16} formula
+//! and table agree to rounding.  We expose both: `formula` values and the
+//! `published` Table 1 values.
+
+/// Cut-layer geometry for one model/dataset pair (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CutSpec {
+    /// Channels of the cut tensor.
+    pub c: usize,
+    /// Spatial height/width of the cut tensor.
+    pub h: usize,
+    pub w: usize,
+    /// Batch size.
+    pub b: usize,
+    /// BottleNet++ kernel size (2 in the paper).
+    pub k: usize,
+}
+
+impl CutSpec {
+    /// D = C·H·W (flattened feature dimension).
+    pub fn d(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// VGG-16 on CIFAR-10, split at the 4th max-pool: (512, 2, 2), B=64.
+    pub fn vgg16_cifar10() -> Self {
+        CutSpec { c: 512, h: 2, w: 2, b: 64, k: 2 }
+    }
+
+    /// ResNet-50 on CIFAR-100, split after stage 3: (1024, 2, 2), B=64.
+    pub fn resnet50_cifar100() -> Self {
+        CutSpec { c: 1024, h: 2, w: 2, b: 64, k: 2 }
+    }
+}
+
+/// Codec cost (parameters + training-time FLOPs per batch).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CodecCost {
+    pub params: u64,
+    pub flops: u64,
+}
+
+/// BottleNet++ cost by the paper's Table 2 formula.
+pub fn bottlenetpp_cost(spec: &CutSpec, r: usize) -> CodecCost {
+    let (c, k, b) = (spec.c as u64, spec.k as u64, spec.b as u64);
+    let (h, w) = (spec.h as u64, spec.w as u64);
+    let c_prime = 4 * c / r as u64; // C′ = 4C/R
+    let (h2, w2) = (h / spec.k as u64, w / spec.k as u64); // H′ = H/stride
+    let params = (c * k * k + 1) * c_prime + (c_prime * k * k + 1) * c;
+    let flops =
+        b * (2 * c * k * k + 1) * c_prime * h2 * w2 + b * (2 * c_prime * k * k + 1) * c * h * w;
+    CodecCost { params, flops }
+}
+
+/// BottleNet++ cost with the channel width the paper's *published* Table 1
+/// numbers imply at R=2 (C′ = 9C/8); identical to the formula for R ≥ 4.
+pub fn bottlenetpp_cost_published(spec: &CutSpec, r: usize) -> CodecCost {
+    if r != 2 {
+        return bottlenetpp_cost(spec, r);
+    }
+    let (c, k, b) = (spec.c as u64, spec.k as u64, spec.b as u64);
+    let (h, w) = (spec.h as u64, spec.w as u64);
+    let c_prime = 9 * c / 8;
+    let (h2, w2) = (h / spec.k as u64, w / spec.k as u64);
+    let params = (c * k * k + 1) * c_prime + (c_prime * k * k + 1) * c;
+    let flops =
+        b * (2 * c * k * k + 1) * c_prime * h2 * w2 + b * (2 * c_prime * k * k + 1) * c * h * w;
+    CodecCost { params, flops }
+}
+
+/// C3-SL cost by the paper's Table 2 formula: params = R·D, flops = 2·B·D².
+pub fn c3sl_cost(spec: &CutSpec, r: usize) -> CodecCost {
+    let d = spec.d() as u64;
+    CodecCost {
+        params: r as u64 * d,
+        flops: 2 * spec.b as u64 * d * d,
+    }
+}
+
+/// Communication bytes per batch (uplink, f32 elements × 4 bytes).
+pub fn uplink_bytes_per_batch(spec: &CutSpec, r: usize, scheme: Scheme) -> u64 {
+    let d = spec.d() as u64;
+    let b = spec.b as u64;
+    match scheme {
+        Scheme::Vanilla => b * d * 4,
+        Scheme::C3 | Scheme::BottleNetPP => b * d * 4 / r as u64,
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Vanilla,
+    C3,
+    BottleNetPP,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Vanilla => "vanilla",
+            Scheme::C3 => "c3",
+            Scheme::BottleNetPP => "bottlenetpp",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic layer-level accounting (model-side params/FLOPs, used by DESIGN.md
+// inventory numbers and the e2e examples' reporting).
+// ---------------------------------------------------------------------------
+
+/// FLOPs for a conv layer: 2·Cin·k²·Cout·Hout·Wout (MACs counted as 2).
+pub fn conv2d_flops(c_in: usize, c_out: usize, k: usize, h_out: usize, w_out: usize) -> u64 {
+    2 * (c_in * k * k * c_out * h_out * w_out) as u64
+}
+
+pub fn conv2d_params(c_in: usize, c_out: usize, k: usize, bias: bool) -> u64 {
+    (c_in * k * k * c_out + if bias { c_out } else { 0 }) as u64
+}
+
+pub fn dense_flops(d_in: usize, d_out: usize) -> u64 {
+    2 * (d_in * d_out) as u64
+}
+
+pub fn dense_params(d_in: usize, d_out: usize, bias: bool) -> u64 {
+    (d_in * d_out + if bias { d_out } else { 0 }) as u64
+}
+
+/// Per-image forward FLOPs of the full VGG-16 feature stack on `image`².
+pub fn vgg16_forward_flops(image: usize) -> u64 {
+    let cfg: &[isize] = &[64, 64, -1, 128, 128, -1, 256, 256, 256, -1,
+                          512, 512, 512, -1, 512, 512, 512, -1];
+    let mut c_in = 3usize;
+    let mut hw = image;
+    let mut total = 0u64;
+    for &item in cfg {
+        if item < 0 {
+            hw /= 2;
+        } else {
+            let c_out = item as usize;
+            total += conv2d_flops(c_in, c_out, 3, hw, hw);
+            c_in = c_out;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The assertions below ARE the paper's Table 1 params/FLOPs columns.
+
+    #[test]
+    fn c3_params_match_table1_vgg() {
+        let spec = CutSpec::vgg16_cifar10();
+        assert_eq!(spec.d(), 2048);
+        // R: 2→4.1k, 4→8.2k, 8→16.4k, 16→32.8k
+        assert_eq!(c3sl_cost(&spec, 2).params, 4_096);
+        assert_eq!(c3sl_cost(&spec, 4).params, 8_192);
+        assert_eq!(c3sl_cost(&spec, 8).params, 16_384);
+        assert_eq!(c3sl_cost(&spec, 16).params, 32_768);
+    }
+
+    #[test]
+    fn c3_params_match_table1_resnet() {
+        let spec = CutSpec::resnet50_cifar100();
+        assert_eq!(spec.d(), 4096);
+        // R: 2→8.2k, 4→16.4k, 8→32.8k, 16→65.5k
+        assert_eq!(c3sl_cost(&spec, 2).params, 8_192);
+        assert_eq!(c3sl_cost(&spec, 16).params, 65_536);
+    }
+
+    #[test]
+    fn c3_flops_match_table1() {
+        // VGG: 2·64·2048² = 0.54e9 (all R); ResNet: 2·64·4096² = 2.15e9.
+        let vgg = CutSpec::vgg16_cifar10();
+        assert_eq!(c3sl_cost(&vgg, 4).flops, 536_870_912);
+        let rn = CutSpec::resnet50_cifar100();
+        assert_eq!(c3sl_cost(&rn, 4).flops, 2_147_483_648);
+    }
+
+    #[test]
+    fn bnpp_params_match_table1_for_r_ge_4() {
+        let vgg = CutSpec::vgg16_cifar10();
+        // published: R=4→2,098.2k, R=8→1,049.3k, R=16→524.9k
+        assert_eq!(bottlenetpp_cost(&vgg, 4).params, 2_098_176);
+        assert_eq!(bottlenetpp_cost(&vgg, 8).params, 1_049_344);
+        assert_eq!(bottlenetpp_cost(&vgg, 16).params, 524_928);
+        let rn = CutSpec::resnet50_cifar100();
+        // published: R=4→8,390.7k, R=8→4,195.8k, R=16→2,098.4k
+        assert_eq!(bottlenetpp_cost(&rn, 4).params, 8_390_656);
+        assert_eq!(bottlenetpp_cost(&rn, 8).params, 4_195_840);
+        assert_eq!(bottlenetpp_cost(&rn, 16).params, 2_098_432);
+    }
+
+    #[test]
+    fn bnpp_published_r2_matches_table1() {
+        // Published R=2 rows imply C′ = 9C/8 (see module docs).
+        let vgg = CutSpec::vgg16_cifar10();
+        let got = bottlenetpp_cost_published(&vgg, 2).params;
+        assert!((got as i64 - 2_360_000).abs() < 5_000, "{got}");
+        let rn = CutSpec::resnet50_cifar100();
+        let got = bottlenetpp_cost_published(&rn, 2).params;
+        assert!((got as i64 - 9_438_700).abs() < 10_000, "{got}");
+    }
+
+    #[test]
+    fn headline_ratios_hold() {
+        // Paper abstract: at R=2 on CIFAR-100, C3 saves 1152× memory and
+        // 2.25× compute vs BottleNet++ (published values).
+        let rn = CutSpec::resnet50_cifar100();
+        let bn = bottlenetpp_cost_published(&rn, 2);
+        let c3 = c3sl_cost(&rn, 2);
+        let mem_ratio = bn.params as f64 / c3.params as f64;
+        assert!((mem_ratio - 1152.0).abs() < 5.0, "mem ratio {mem_ratio}");
+        // Paper's 4.83e9 BN++ FLOPs at R=2 vs C3 2.15e9 → 2.25×.  Our
+        // formula evaluation gives the same order; check the published one.
+        let flops_ratio = 4.83e9 / c3.flops as f64;
+        assert!((flops_ratio - 2.25).abs() < 0.02, "flops ratio {flops_ratio}");
+    }
+
+    #[test]
+    fn bnpp_flops_match_table1_for_r_ge_4_vgg() {
+        let vgg = CutSpec::vgg16_cifar10();
+        // R=4 → 0.67e9
+        let f = bottlenetpp_cost(&vgg, 4).flops as f64;
+        assert!((f / 1e9 - 0.67).abs() < 0.01, "{f}");
+        // R=8 → 0.34e9, R=16 → 0.17e9
+        assert!((bottlenetpp_cost(&vgg, 8).flops as f64 / 1e9 - 0.34).abs() < 0.01);
+        assert!((bottlenetpp_cost(&vgg, 16).flops as f64 / 1e9 - 0.17).abs() < 0.01);
+    }
+
+    #[test]
+    fn uplink_bytes_scale_with_r() {
+        let spec = CutSpec::vgg16_cifar10();
+        let v = uplink_bytes_per_batch(&spec, 1, Scheme::Vanilla);
+        for r in [2, 4, 8, 16] {
+            assert_eq!(uplink_bytes_per_batch(&spec, r, Scheme::C3) * r as u64, v);
+        }
+    }
+
+    #[test]
+    fn vgg16_forward_flops_ballpark() {
+        // Known value ≈ 0.31 GFLOPs·2 (MAC=2) for 32×32 CIFAR VGG-16.
+        let f = vgg16_forward_flops(32) as f64;
+        assert!(f > 5e8 && f < 7e8, "{f}");
+    }
+
+    #[test]
+    fn layer_accounting_basics() {
+        assert_eq!(conv2d_params(3, 64, 3, true), 3 * 9 * 64 + 64);
+        assert_eq!(conv2d_flops(3, 64, 3, 32, 32), 2 * 3 * 9 * 64 * 32 * 32);
+        assert_eq!(dense_params(128, 10, true), 1290);
+        assert_eq!(dense_flops(128, 10), 2560);
+    }
+}

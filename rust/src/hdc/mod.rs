@@ -1,0 +1,470 @@
+//! Hyperdimensional-computing substrate: the C3-SL codec math, rust-native.
+//!
+//! This mirrors the L1 Pallas kernels (python/compile/kernels/circconv.py)
+//! so the coordinator can (a) run the codec on the host hot path without an
+//! XLA round trip, (b) cross-check the AOT artifacts' numerics, and (c)
+//! reproduce the paper's Eq. (4) crosstalk analysis.
+//!
+//! Conventions (paper §3.1–3.2):
+//!   bind    (k ⊛ z)[n] = Σ_m k[m] · z[(n−m) mod D]      circular convolution
+//!   unbind  (k ⋆ s)[n] = Σ_m k[m] · s[(n+m) mod D]      circular correlation
+//!   encode  S^g = Σ_i K_i ⊛ Z_i^g            decode  Ẑ_i^g = K_i ⋆ S^g
+//!   keys    K_i ~ N(0, 1/D), unit-normalized.
+
+use crate::fft::{circular_convolve_fft, circular_correlate_fft, FftPlan};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Fixed random key set for one compression ratio R at dimension D.
+#[derive(Clone, Debug)]
+pub struct KeySet {
+    pub r: usize,
+    pub d: usize,
+    /// Row-major (R, D).
+    keys: Vec<f32>,
+}
+
+impl KeySet {
+    /// Sample R keys from N(0, 1/D) and normalize each to unit L2 norm.
+    pub fn generate(rng: &mut Rng, r: usize, d: usize) -> Self {
+        let std = (1.0 / d as f32).sqrt();
+        let mut keys = vec![0.0f32; r * d];
+        rng.fill_normal(&mut keys, 0.0, std);
+        for i in 0..r {
+            let row = &mut keys[i * d..(i + 1) * d];
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for v in row.iter_mut() {
+                    *v /= norm;
+                }
+            }
+        }
+        KeySet { r, d, keys }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Self {
+        assert_eq!(t.ndim(), 2);
+        KeySet { r: t.shape()[0], d: t.shape()[1], keys: t.data().to_vec() }
+    }
+
+    pub fn key(&self, i: usize) -> &[f32] {
+        &self.keys[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn as_tensor(&self) -> Tensor {
+        Tensor::from_vec(&[self.r, self.d], self.keys.clone())
+    }
+
+    /// Max |<k_i, k_j>| over i≠j — the quasi-orthogonality figure of merit.
+    pub fn max_cross_correlation(&self) -> f32 {
+        let mut max = 0.0f32;
+        for i in 0..self.r {
+            for j in (i + 1)..self.r {
+                let dot: f32 = self
+                    .key(i)
+                    .iter()
+                    .zip(self.key(j))
+                    .map(|(a, b)| a * b)
+                    .sum();
+                max = max.max(dot.abs());
+            }
+        }
+        max
+    }
+}
+
+/// Direct O(D²) circular convolution (paper Table 2 counts exactly this).
+pub fn bind_direct(k: &[f32], z: &[f32], out: &mut [f32]) {
+    let d = k.len();
+    debug_assert_eq!(z.len(), d);
+    debug_assert_eq!(out.len(), d);
+    for n in 0..d {
+        let mut acc = 0.0f32;
+        // split the wrap to avoid a mod in the inner loop
+        for m in 0..=n {
+            acc += k[m] * z[n - m];
+        }
+        for m in (n + 1)..d {
+            acc += k[m] * z[d + n - m];
+        }
+        out[n] = acc;
+    }
+}
+
+/// Direct O(D²) circular correlation.
+pub fn unbind_direct(k: &[f32], s: &[f32], out: &mut [f32]) {
+    let d = k.len();
+    debug_assert_eq!(s.len(), d);
+    debug_assert_eq!(out.len(), d);
+    for n in 0..d {
+        let mut acc = 0.0f32;
+        for m in 0..(d - n) {
+            acc += k[m] * s[n + m];
+        }
+        for m in (d - n)..d {
+            acc += k[m] * s[n + m - d];
+        }
+        out[n] = acc;
+    }
+}
+
+/// Codec backend selection for the host hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Paper-faithful O(D²) loops.
+    Direct,
+    /// O(D log D) via the convolution theorem (power-of-two D only).
+    Fft,
+    /// Fft when D is a power of two, Direct otherwise.
+    Auto,
+}
+
+/// Host-side C3 encoder/decoder over a fixed KeySet.
+///
+/// Perf (§Perf in EXPERIMENTS.md): with the FFT backend the key spectra are
+/// precomputed once (keys are fixed!), and encode/decode superpose in the
+/// frequency domain — one inverse FFT per *group* instead of one per bound
+/// feature, cutting FFT work from R·(2 fwd + 1 inv) to (R fwd + 1 inv) per
+/// group on encode (and symmetrically on decode).
+pub struct C3 {
+    pub keys: KeySet,
+    plan: Option<FftPlan>,
+    /// rfft of each key row (FFT backend only).
+    key_spectra: Vec<Vec<crate::fft::C64>>,
+    backend: Backend,
+}
+
+impl C3 {
+    pub fn new(keys: KeySet, backend: Backend) -> Self {
+        let use_fft = match backend {
+            Backend::Direct => false,
+            Backend::Fft => {
+                assert!(keys.d.is_power_of_two(), "FFT backend needs power-of-two D");
+                true
+            }
+            Backend::Auto => keys.d.is_power_of_two(),
+        };
+        let plan = use_fft.then(|| FftPlan::new(keys.d));
+        let key_spectra = match &plan {
+            Some(p) => (0..keys.r).map(|i| crate::fft::rfft(p, keys.key(i))).collect(),
+            None => Vec::new(),
+        };
+        C3 { keys, plan, key_spectra, backend }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn bind(&self, i: usize, z: &[f32], out: &mut [f32]) {
+        match &self.plan {
+            Some(plan) => {
+                let v = circular_convolve_fft(plan, self.keys.key(i), z);
+                out.copy_from_slice(&v);
+            }
+            None => bind_direct(self.keys.key(i), z, out),
+        }
+    }
+
+    fn unbind(&self, i: usize, s: &[f32], out: &mut [f32]) {
+        match &self.plan {
+            Some(plan) => {
+                let v = circular_correlate_fft(plan, self.keys.key(i), s);
+                out.copy_from_slice(&v);
+            }
+            None => unbind_direct(self.keys.key(i), s, out),
+        }
+    }
+
+    /// Encode a batch (B, D) → (B/R, D).  Groups are consecutive rows,
+    /// matching python/compile/split.py's make_c3_encode.
+    pub fn encode(&self, z: &Tensor) -> Tensor {
+        let (r, d) = (self.keys.r, self.keys.d);
+        assert_eq!(z.ndim(), 2);
+        assert_eq!(z.shape()[1], d, "feature dim mismatch");
+        let b = z.shape()[0];
+        assert_eq!(b % r, 0, "batch {b} not divisible by R={r}");
+        let g = b / r;
+        let mut out = vec![0.0f32; g * d];
+        match &self.plan {
+            Some(plan) => {
+                // frequency-domain superposition: Σ_i K̂_i ⊙ ẑ_i, ONE irfft
+                let mut acc = vec![crate::fft::C64::new(0.0, 0.0); d];
+                for gi in 0..g {
+                    for a in acc.iter_mut() {
+                        *a = crate::fft::C64::new(0.0, 0.0);
+                    }
+                    for i in 0..r {
+                        let zs = crate::fft::rfft(plan, z.row(gi * r + i));
+                        for ((a, k), zv) in
+                            acc.iter_mut().zip(&self.key_spectra[i]).zip(&zs)
+                        {
+                            *a = a.add(k.mul(*zv));
+                        }
+                    }
+                    let srow = crate::fft::irfft(plan, acc.clone());
+                    out[gi * d..(gi + 1) * d].copy_from_slice(&srow);
+                }
+            }
+            None => {
+                let mut bound = vec![0.0f32; d];
+                for gi in 0..g {
+                    let srow = &mut out[gi * d..(gi + 1) * d];
+                    for i in 0..r {
+                        bind_direct(self.keys.key(i), z.row(gi * r + i), &mut bound);
+                        for (o, v) in srow.iter_mut().zip(&bound) {
+                            *o += v;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[g, d], out)
+    }
+
+    /// Decode (B/R, D) → (B, D).
+    pub fn decode(&self, s: &Tensor) -> Tensor {
+        let (r, d) = (self.keys.r, self.keys.d);
+        assert_eq!(s.ndim(), 2);
+        assert_eq!(s.shape()[1], d);
+        let g = s.shape()[0];
+        let b = g * r;
+        let mut out = vec![0.0f32; b * d];
+        match &self.plan {
+            Some(plan) => {
+                // ONE forward FFT per group, reused for all R unbinds
+                for gi in 0..g {
+                    let ss = crate::fft::rfft(plan, s.row(gi));
+                    for i in 0..r {
+                        let spec: Vec<crate::fft::C64> = self.key_spectra[i]
+                            .iter()
+                            .zip(&ss)
+                            .map(|(k, sv)| k.conj().mul(*sv))
+                            .collect();
+                        let row = gi * r + i;
+                        out[row * d..(row + 1) * d]
+                            .copy_from_slice(&crate::fft::irfft(plan, spec));
+                    }
+                }
+            }
+            None => {
+                for gi in 0..g {
+                    for i in 0..r {
+                        let row = gi * r + i;
+                        unbind_direct(
+                            self.keys.key(i),
+                            s.row(gi),
+                            &mut out[row * d..(row + 1) * d],
+                        );
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[b, d], out)
+    }
+}
+
+/// Eq. (4) crosstalk analysis: decompose decode(encode(z)) for one group into
+/// the self-unbinding term and the crosstalk term; report energies.
+#[derive(Clone, Debug)]
+pub struct CrosstalkReport {
+    pub r: usize,
+    pub d: usize,
+    /// ‖ẑ − z‖ / ‖z‖ over the whole group.
+    pub rel_recon_err: f32,
+    /// ‖crosstalk‖ / ‖z‖.
+    pub rel_crosstalk: f32,
+    /// mean cosine similarity between ẑ_i and z_i.
+    pub mean_cos: f32,
+}
+
+pub fn crosstalk_report(c3: &C3, z_group: &Tensor) -> CrosstalkReport {
+    let (r, d) = (c3.keys.r, c3.keys.d);
+    assert_eq!(z_group.shape(), &[r, d]);
+    let s = c3.encode(z_group);
+    let zhat = c3.decode(&s);
+
+    // crosstalk_i = ẑ_i − K_i ⋆ (K_i ⊛ z_i)
+    let mut bound = vec![0.0f32; d];
+    let mut selfterm = vec![0.0f32; d];
+    let mut cross_e = 0.0f64;
+    let mut cos_sum = 0.0f64;
+    for i in 0..r {
+        c3.bind(i, z_group.row(i), &mut bound);
+        c3.unbind(i, &bound, &mut selfterm);
+        let zh = zhat.row(i);
+        for n in 0..d {
+            let c = zh[n] - selfterm[n];
+            cross_e += (c as f64) * (c as f64);
+        }
+        let zi = z_group.row(i);
+        let dot: f64 = zh.iter().zip(zi).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let na: f64 = zh.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+        let nb: f64 = zi.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+        if na > 0.0 && nb > 0.0 {
+            cos_sum += dot / (na * nb);
+        }
+    }
+    let zn = z_group.norm() as f64;
+    CrosstalkReport {
+        r,
+        d,
+        rel_recon_err: zhat.rel_err(z_group),
+        rel_crosstalk: if zn > 0.0 { (cross_e.sqrt() / zn) as f32 } else { 0.0 },
+        mean_cos: (cos_sum / r as f64) as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut data = vec![0.0f32; shape.iter().product()];
+        rng.fill_normal(&mut data, 0.0, 1.0);
+        Tensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn keys_are_unit_norm() {
+        let mut rng = Rng::new(1);
+        let ks = KeySet::generate(&mut rng, 8, 512);
+        for i in 0..8 {
+            let n: f32 = ks.key(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "key {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn keys_quasi_orthogonal_at_high_d() {
+        let mut rng = Rng::new(2);
+        let ks = KeySet::generate(&mut rng, 16, 4096);
+        // |<k_i,k_j>| ~ 1/sqrt(D) ≈ 0.016; allow generous slack.
+        assert!(ks.max_cross_correlation() < 0.1);
+    }
+
+    #[test]
+    fn direct_fft_backends_agree() {
+        Prop::new("direct == fft codec", 10).run(|g| {
+            let d = g.pow2_in(5, 9);
+            let r = *g.choose(&[1usize, 2, 4]);
+            let gcount = g.usize_in(1, 3);
+            let mut rng = Rng::new(42);
+            let ks = KeySet::generate(&mut rng, r, d);
+            let z = {
+                let mut data = g.vec_normal(gcount * r * d, 0.0, 1.0);
+                data.truncate(gcount * r * d);
+                Tensor::from_vec(&[gcount * r, d], data)
+            };
+            let direct = C3::new(ks.clone(), Backend::Direct);
+            let fft = C3::new(ks, Backend::Fft);
+            let e1 = direct.encode(&z);
+            let e2 = fft.encode(&z);
+            assert!(e1.rel_err(&e2) < 1e-4, "encode rel err {}", e1.rel_err(&e2));
+            let d1 = direct.decode(&e1);
+            let d2 = fft.decode(&e2);
+            assert!(d1.rel_err(&d2) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn delta_key_roundtrip_identity() {
+        // Pin index conventions exactly as the python test does.
+        let d = 64;
+        let mut keys = vec![0.0f32; d];
+        keys[0] = 1.0;
+        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, d], keys));
+        let c3 = C3::new(ks, Backend::Direct);
+        let mut rng = Rng::new(3);
+        let z = rand_tensor(&mut rng, &[1, d]);
+        let s = c3.encode(&z);
+        assert!(s.rel_err(&z) < 1e-6);
+        let zh = c3.decode(&s);
+        assert!(zh.rel_err(&z) < 1e-6);
+    }
+
+    #[test]
+    fn shift_key_rotates() {
+        let d = 32;
+        let p = 5;
+        let mut key = vec![0.0f32; d];
+        key[p] = 1.0;
+        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, d], key));
+        let c3 = C3::new(ks, Backend::Direct);
+        let mut rng = Rng::new(4);
+        let z = rand_tensor(&mut rng, &[1, d]);
+        let s = c3.encode(&z);
+        for n in 0..d {
+            assert!((s.data()[n] - z.data()[(n + d - p) % d]).abs() < 1e-5);
+        }
+        let zh = c3.decode(&s);
+        assert!(zh.rel_err(&z) < 1e-5);
+    }
+
+    #[test]
+    fn encode_reduces_rows_by_r() {
+        let mut rng = Rng::new(5);
+        let ks = KeySet::generate(&mut rng, 4, 128);
+        let c3 = C3::new(ks, Backend::Auto);
+        let z = rand_tensor(&mut rng, &[16, 128]);
+        let s = c3.encode(&z);
+        assert_eq!(s.shape(), &[4, 128]);
+        let zh = c3.decode(&s);
+        assert_eq!(zh.shape(), &[16, 128]);
+    }
+
+    #[test]
+    fn adjointness_encode_decode() {
+        // <E(z), s> == <z, D(s)> — the distributed-gradient identity.
+        let mut rng = Rng::new(6);
+        let ks = KeySet::generate(&mut rng, 4, 256);
+        let c3 = C3::new(ks, Backend::Fft);
+        let z = rand_tensor(&mut rng, &[8, 256]);
+        let s = rand_tensor(&mut rng, &[2, 256]);
+        let lhs = c3.encode(&z).dot(&s);
+        let rhs = z.dot(&c3.decode(&s));
+        assert!(
+            (lhs - rhs).abs() < 1e-2 * (1.0 + lhs.abs()),
+            "{lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn crosstalk_grows_with_r() {
+        let mut rng = Rng::new(7);
+        let d = 1024;
+        let mut prev = 0.0f32;
+        for &r in &[2usize, 8, 32] {
+            let ks = KeySet::generate(&mut rng, r, d);
+            let c3 = C3::new(ks, Backend::Fft);
+            let z = rand_tensor(&mut rng, &[r, d]);
+            let rep = crosstalk_report(&c3, &z);
+            assert!(rep.rel_crosstalk > prev, "r={r}: {rep:?}");
+            prev = rep.rel_crosstalk;
+        }
+    }
+
+    #[test]
+    fn crosstalk_decomposition_closes() {
+        // self + cross must equal the decode output: rel_recon_err should be
+        // consistent with the reported crosstalk for random inputs.
+        let mut rng = Rng::new(8);
+        let ks = KeySet::generate(&mut rng, 4, 512);
+        let c3 = C3::new(ks, Backend::Fft);
+        let z = rand_tensor(&mut rng, &[4, 512]);
+        let rep = crosstalk_report(&c3, &z);
+        assert!(rep.mean_cos > 0.2, "{rep:?}");
+        assert!(rep.rel_crosstalk > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn encode_rejects_bad_batch() {
+        let mut rng = Rng::new(9);
+        let ks = KeySet::generate(&mut rng, 4, 64);
+        let c3 = C3::new(ks, Backend::Direct);
+        let z = rand_tensor(&mut rng, &[6, 64]);
+        c3.encode(&z);
+    }
+}

@@ -1,0 +1,34 @@
+//! # c3sl — C3-SL: Circular Convolution-Based Batch-Wise Compression for
+//! Communication-Efficient Split Learning
+//!
+//! A three-layer reproduction of Hsieh, Chuang & Wu (2022):
+//!
+//! * **L3 (this crate)** — the split-learning coordinator: edge/cloud
+//!   workers, transports with byte accounting, compression codecs, dataset
+//!   substrates, metrics, and a CLI.
+//! * **L2 (python/compile)** — JAX model definitions (VGG-16 / ResNet-50 and
+//!   slim variants) AOT-lowered to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels)** — Pallas circular-convolution kernels
+//!   (the paper's encoder/decoder), lowered into the same artifacts.
+//!
+//! At runtime Python is never on the path: `runtime` loads the HLO artifacts
+//! through the PJRT C API and the coordinator drives training entirely from
+//! rust.  See DESIGN.md for the system inventory and experiment index.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fft;
+pub mod flops;
+pub mod hdc;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod transport;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

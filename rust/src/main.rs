@@ -1,0 +1,261 @@
+//! c3sl — CLI entry point for the split-learning coordinator.
+//!
+//! Subcommands:
+//!   train      in-proc edge+cloud training run (one process, two actors)
+//!   edge       edge worker over TCP (connects to a cloud)
+//!   cloud      cloud worker over TCP (listens for an edge)
+//!   flops      print the paper's Table 1/Table 2 params & FLOPs analysis
+//!   comm       print the communication-cost report (bytes + link times)
+//!   crosstalk  Eq. (4) crosstalk/SNR analysis over (R, D)
+//!
+//! Examples:
+//!   c3sl train --model-key vggt_b32 --scheme c3 --r 4 --steps 100
+//!   c3sl train --config configs/tiny_c3_r4.toml
+//!   c3sl cloud --config configs/tiny_tcp.toml   # terminal 1
+//!   c3sl edge  --config configs/tiny_tcp.toml   # terminal 2
+
+use anyhow::{bail, Context, Result};
+
+use c3sl::config::cli::Args;
+use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
+use c3sl::coordinator::{run_experiment, CloudWorker, EdgeWorker};
+use c3sl::data::open_dataset;
+use c3sl::flops::{bottlenetpp_cost, bottlenetpp_cost_published, c3sl_cost, CutSpec};
+use c3sl::hdc::{crosstalk_report, Backend, KeySet, C3};
+use c3sl::runtime::Engine;
+use c3sl::sim::comm_report;
+use c3sl::tensor::Tensor;
+use c3sl::transport::tcp::Tcp;
+use c3sl::transport::Transport;
+use c3sl::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "c3sl {} — C3-SL split-learning coordinator\n\
+         usage: c3sl <train|edge|cloud|flops|comm|crosstalk> [--flags]\n\
+         see README.md for the full flag reference",
+        c3sl::version()
+    );
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "edge" => cmd_edge(&args),
+        "cloud" => cmd_cloud(&args),
+        "flops" => cmd_flops(),
+        "comm" => cmd_comm(&args),
+        "crosstalk" => cmd_crosstalk(&args),
+        other => {
+            usage();
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+/// Build a config from --config file + flag overrides.
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)
+            .with_context(|| format!("loading config {path}"))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(k) = args.get("model-key") {
+        cfg.model_key = k.into();
+    }
+    if let Some(root) = args.get("artifacts") {
+        cfg.artifacts_root = root.into();
+    }
+    if let Some(scheme) = args.get("scheme") {
+        let r = args.get_usize("r")?.unwrap_or(4);
+        cfg.scheme = match scheme {
+            "vanilla" => SchemeKind::Vanilla,
+            "c3" => SchemeKind::C3 { r },
+            "bnpp" => SchemeKind::BottleNetPP { r },
+            other => bail!("unknown scheme '{other}'"),
+        };
+    }
+    if let Some(v) = args.get("venue") {
+        cfg.codec_venue = match v {
+            "host" => CodecVenue::Host,
+            "artifact" => CodecVenue::Artifact,
+            other => bail!("unknown venue '{other}'"),
+        };
+    }
+    if let Some(s) = args.get_usize("steps")? {
+        cfg.steps = s;
+    }
+    if let Some(lr) = args.get_f64("lr")? {
+        cfg.lr = lr as f32;
+    }
+    if let Some(seed) = args.get_u64("seed")? {
+        cfg.seed = seed;
+    }
+    if let Some(e) = args.get_usize("eval-every")? {
+        cfg.eval_every = e;
+    }
+    if let Some(addr) = args.get("addr") {
+        cfg.tcp_addr = addr.into();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    cfg.transport = TransportKind::InProc;
+    println!(
+        "[c3sl] train: model={} scheme={} steps={} lr={} seed={}",
+        cfg.model_key,
+        cfg.scheme.name(),
+        cfg.steps,
+        cfg.lr,
+        cfg.seed
+    );
+    let out = run_experiment(&cfg)?;
+    println!("[c3sl] {}", out.recorder.summary());
+    println!(
+        "[c3sl] wire: tx={}B rx={}B wall={:.1}s{}",
+        out.wire_tx,
+        out.wire_rx,
+        out.wall_seconds,
+        out.virtual_link_seconds
+            .map(|s| format!(" virtual_link={s:.2}s"))
+            .unwrap_or_default()
+    );
+    let csv = format!("{}/{}_{}.csv", cfg.out_dir, cfg.name, cfg.scheme.name());
+    out.recorder.write_csv(&csv)?;
+    println!("[c3sl] loss curve → {csv}");
+    Ok(())
+}
+
+fn cmd_edge(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    cfg.transport = TransportKind::Tcp;
+    let engine = Engine::cpu()?;
+    let mut edge = EdgeWorker::new(&engine, &cfg)?;
+    let manifest = c3sl::runtime::ModelManifest::load(cfg.model_dir())?;
+    let train = open_dataset(&cfg.data_root, manifest.classes, manifest.image, true,
+                             cfg.synth_train.max(manifest.batch));
+    let test = open_dataset(&cfg.data_root, manifest.classes, manifest.image, false,
+                            cfg.synth_test.max(manifest.batch));
+    println!("[edge] connecting to {}", cfg.tcp_addr);
+    let mut tp: Box<dyn Transport> = Box::new(Tcp::connect(&cfg.tcp_addr)?);
+    let rec = edge.run(tp.as_mut(), train.as_ref(), test.as_ref(), &cfg)?;
+    println!("[edge] {}", rec.summary());
+    Ok(())
+}
+
+fn cmd_cloud(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    cfg.transport = TransportKind::Tcp;
+    let engine = Engine::cpu()?;
+    let mut cloud = CloudWorker::new(&engine, &cfg)?;
+    println!("[cloud] listening on {}", cfg.tcp_addr);
+    let mut tp: Box<dyn Transport> = Box::new(Tcp::listen(&cfg.tcp_addr)?);
+    cloud.run(tp.as_mut())?;
+    println!(
+        "[cloud] served; mean step latency {:.4}s",
+        cloud.step_latency.mean()
+    );
+    Ok(())
+}
+
+fn cmd_flops() -> Result<()> {
+    println!("Table 2 evaluation (paper formulas) + Table 1 params/FLOPs columns\n");
+    for (label, spec) in [
+        ("VGG-16 / CIFAR-10  (C=512, 2x2, D=2048, B=64)", CutSpec::vgg16_cifar10()),
+        ("ResNet-50 / CIFAR-100 (C=1024, 2x2, D=4096, B=64)", CutSpec::resnet50_cifar100()),
+    ] {
+        println!("== {label}");
+        println!(
+            "{:>4} | {:>14} {:>12} | {:>14} {:>12} | {:>9} {:>8}",
+            "R", "BN++ params", "BN++ GFLOPs", "C3 params", "C3 GFLOPs", "mem x", "flop x"
+        );
+        for r in [2usize, 4, 8, 16] {
+            let bn = bottlenetpp_cost_published(&spec, r);
+            let bn_formula = bottlenetpp_cost(&spec, r);
+            let c3 = c3sl_cost(&spec, r);
+            let note = if bn != bn_formula { "*" } else { " " };
+            println!(
+                "{:>4} | {:>13}{note} {:>12.3} | {:>14} {:>12.3} | {:>8.0}x {:>7.2}x",
+                r,
+                bn.params,
+                bn.flops as f64 / 1e9,
+                c3.params,
+                c3.flops as f64 / 1e9,
+                bn.params as f64 / c3.params as f64,
+                bn.flops as f64 / c3.flops as f64,
+            );
+        }
+        println!("   (* published Table 1 row; the paper's own Table 2 formula gives a different R=2 value — see EXPERIMENTS.md)\n");
+    }
+    Ok(())
+}
+
+fn cmd_comm(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps")?.unwrap_or(781); // 50000/64
+    let spec = match args.get_or("cut", "vgg16") {
+        "vgg16" => CutSpec::vgg16_cifar10(),
+        "resnet50" => CutSpec::resnet50_cifar100(),
+        other => bail!("unknown cut '{other}'"),
+    };
+    println!(
+        "Communication report (steps/epoch={steps}, D={}, B={})\n",
+        spec.d(),
+        spec.b
+    );
+    println!(
+        "{:<12} {:>3} {:<6} {:>12} {:>12} {:>12} {:>10}",
+        "scheme", "R", "link", "up B/step", "down B/step", "epoch s", "reduction"
+    );
+    for row in comm_report(&spec, steps as u64) {
+        println!(
+            "{:<12} {:>3} {:<6} {:>12} {:>12} {:>12.2} {:>9.2}x",
+            row.scheme,
+            row.r,
+            row.link,
+            row.uplink_bytes_per_step,
+            row.downlink_bytes_per_step,
+            row.epoch_seconds,
+            row.reduction_vs_vanilla
+        );
+    }
+    Ok(())
+}
+
+fn cmd_crosstalk(args: &Args) -> Result<()> {
+    let d = args.get_usize("d")?.unwrap_or(2048);
+    println!("Eq. (4) crosstalk analysis at D={d} (random unit features)\n");
+    println!(
+        "{:>4} {:>16} {:>16} {:>12}",
+        "R", "rel recon err", "rel crosstalk", "mean cos"
+    );
+    let mut rng = Rng::new(args.get_u64("seed")?.unwrap_or(0));
+    for r in [1usize, 2, 4, 8, 16, 32] {
+        let keys = KeySet::generate(&mut rng, r, d);
+        let c3 = C3::new(keys, Backend::Auto);
+        let mut z = vec![0.0f32; r * d];
+        rng.fill_normal(&mut z, 0.0, 1.0);
+        let z = Tensor::from_vec(&[r, d], z);
+        let rep = crosstalk_report(&c3, &z);
+        println!(
+            "{:>4} {:>16.4} {:>16.4} {:>12.4}",
+            r, rep.rel_recon_err, rep.rel_crosstalk, rep.mean_cos
+        );
+    }
+    Ok(())
+}

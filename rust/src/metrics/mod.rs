@@ -1,0 +1,256 @@
+//! Metrics substrate: counters, gauges, EWMA, histograms, and a run recorder
+//! that writes loss curves / throughput as CSV for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::csv::CsvWriter;
+
+/// Monotonic counter.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(pub u64);
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.0 += 1;
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+}
+
+/// Exponentially weighted moving average (for smoothed loss display).
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Fixed-bucket histogram (log-ish bounds supplied by the caller).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub total: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len() + 1;
+        Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Latency-style default buckets (µs → s).
+    pub fn latency() -> Self {
+        Self::new(vec![1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0])
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let idx = self.bounds.iter().position(|b| x <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+/// A step record in a training run.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub acc: f64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub step_seconds: f64,
+}
+
+/// Collects per-step records and writes them out as CSV.
+#[derive(Debug, Default)]
+pub struct RunRecorder {
+    pub records: Vec<StepRecord>,
+    pub evals: Vec<(usize, f64, f64)>, // (step, eval_loss, eval_acc)
+    pub scalars: BTreeMap<String, f64>,
+}
+
+impl RunRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, rec: StepRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f64, acc: f64) {
+        self.evals.push((step, loss, acc));
+    }
+
+    pub fn set_scalar(&mut self, key: &str, v: f64) {
+        self.scalars.insert(key.to_string(), v);
+    }
+
+    pub fn total_uplink(&self) -> u64 {
+        self.records.iter().map(|r| r.uplink_bytes).sum()
+    }
+
+    pub fn total_downlink(&self) -> u64 {
+        self.records.iter().map(|r| r.downlink_bytes).sum()
+    }
+
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.step_seconds).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "loss", "acc", "uplink_bytes", "downlink_bytes", "step_seconds"],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.step.to_string(),
+                format!("{:.6}", r.loss),
+                format!("{:.4}", r.acc),
+                r.uplink_bytes.to_string(),
+                r.downlink_bytes.to_string(),
+                format!("{:.6}", r.step_seconds),
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "steps={} final_loss={:.4} up={}B down={}B mean_step={:.3}s",
+            self.records.len(),
+            self.final_loss().unwrap_or(f64::NAN),
+            self.total_uplink(),
+            self.total_downlink(),
+            self.mean_step_seconds(),
+        );
+        if let Some((step, loss, acc)) = self.evals.last() {
+            let _ = write!(s, " eval@{step}: loss={loss:.4} acc={:.2}%", acc * 100.0);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_ewma() {
+        let mut c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.0, 5);
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.update(2.0), 2.0);
+        assert_eq!(e.update(4.0), 3.0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for x in [0.5, 1.5, 1.7, 3.0, 8.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.total, 5);
+        assert!(h.mean() > 0.0);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert_eq!(h.min, 0.5);
+        assert_eq!(h.max, 8.0);
+    }
+
+    #[test]
+    fn recorder_accumulates_and_writes() {
+        let mut r = RunRecorder::new();
+        for step in 0..3 {
+            r.record(StepRecord {
+                step,
+                loss: 2.0 - step as f64 * 0.1,
+                acc: 0.1 * step as f64,
+                uplink_bytes: 100,
+                downlink_bytes: 50,
+                step_seconds: 0.01,
+            });
+        }
+        r.record_eval(2, 1.5, 0.3);
+        assert_eq!(r.total_uplink(), 300);
+        assert_eq!(r.total_downlink(), 150);
+        assert!(r.summary().contains("steps=3"));
+        let path = std::env::temp_dir().join("c3sl_run_test.csv");
+        r.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,96 @@
+//! CodecRuntime: the C3 encode/decode artifacts (the L1 Pallas kernels,
+//! AOT-lowered) plus key generation, executed through PJRT.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use super::convert::{literal_to_tensor, seed_literal, tensor_to_literal};
+use super::engine::{Engine, Executable};
+use super::manifest::CodecManifest;
+use crate::tensor::Tensor;
+
+pub struct CodecRuntime {
+    pub manifest: CodecManifest,
+    gen_keys: std::sync::Arc<Executable>,
+    encode: std::sync::Arc<Executable>,
+    decode: std::sync::Arc<Executable>,
+    /// Keys as a literal, set by `init_keys` (shared by edge and cloud via
+    /// the seed — the keys themselves never cross the wire).
+    keys: Option<xla::Literal>,
+    keys_tensor: Option<Tensor>,
+}
+
+impl CodecRuntime {
+    pub fn load(engine: &Engine, dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let manifest = CodecManifest::load(&dir)
+            .with_context(|| format!("loading codec manifest from {}", dir.display()))?;
+        let load = |name: &str| -> Result<std::sync::Arc<Executable>> {
+            let file = &manifest.artifact(name)?.file;
+            engine.load(dir.join(file))
+        };
+        Ok(CodecRuntime {
+            gen_keys: load("gen_keys")?,
+            encode: load("c3_encode")?,
+            decode: load("c3_decode")?,
+            manifest,
+            keys: None,
+            keys_tensor: None,
+        })
+    }
+
+    pub fn r(&self) -> usize {
+        self.manifest.r
+    }
+
+    pub fn d(&self) -> usize {
+        self.manifest.d
+    }
+
+    /// Generate the fixed key set from a seed (deterministic; both sides call
+    /// this with the same seed instead of transmitting R×D key floats).
+    pub fn init_keys(&mut self, seed: u64) -> Result<()> {
+        let s = seed_literal(seed)?;
+        let outs = self.gen_keys.run(&[&s])?;
+        let t = literal_to_tensor(&outs[0])?;
+        ensure!(
+            t.shape() == [self.manifest.r, self.manifest.d],
+            "keys shape {:?}",
+            t.shape()
+        );
+        self.keys = Some(tensor_to_literal(&t)?);
+        self.keys_tensor = Some(t);
+        Ok(())
+    }
+
+    pub fn keys_tensor(&self) -> Option<&Tensor> {
+        self.keys_tensor.as_ref()
+    }
+
+    /// Encode (B, D) → (G, D) through the Pallas kernel artifact.
+    pub fn encode(&self, z: &Tensor) -> Result<Tensor> {
+        let keys = self.keys.as_ref().context("codec keys not initialized")?;
+        ensure!(
+            z.shape() == [self.manifest.batch, self.manifest.d],
+            "encode input shape {:?}",
+            z.shape()
+        );
+        let zl = tensor_to_literal(z)?;
+        let outs = self.encode.run(&[&zl, keys])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Decode (G, D) → (B, D).
+    pub fn decode(&self, s: &Tensor) -> Result<Tensor> {
+        let keys = self.keys.as_ref().context("codec keys not initialized")?;
+        ensure!(
+            s.shape() == [self.manifest.g, self.manifest.d],
+            "decode input shape {:?}",
+            s.shape()
+        );
+        let sl = tensor_to_literal(s)?;
+        let outs = self.decode.run(&[&sl, keys])?;
+        literal_to_tensor(&outs[0])
+    }
+}

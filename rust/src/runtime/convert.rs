@@ -1,0 +1,97 @@
+//! Tensor / Literal conversions.
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::{Labels, Tensor};
+
+/// f32 Tensor → XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes,
+    )?)
+}
+
+/// XLA literal → f32 Tensor (copies out).
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Labels → i32 literal of shape (B,).
+pub fn labels_to_literal(l: &Labels) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(l.0.as_ptr() as *const u8, l.0.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[l.0.len()],
+        bytes,
+    )?)
+}
+
+/// 64-bit seed → u32[2] literal (jax PRNG key data).
+pub fn seed_literal(seed: u64) -> Result<xla::Literal> {
+    let words = [(seed >> 32) as u32, seed as u32];
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, 8) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        &[2],
+        bytes,
+    )?)
+}
+
+/// f32 scalar literal (rank 0).
+pub fn scalar_literal(x: f32) -> Result<xla::Literal> {
+    let bytes = x.to_le_bytes();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[],
+        &bytes,
+    )?)
+}
+
+/// Scalar f32 out of a literal (rank 0 or single element).
+pub fn literal_scalar(l: &xla::Literal) -> Result<f32> {
+    let v = l.to_vec::<f32>()?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn labels_literal_has_right_type() {
+        let l = labels_to_literal(&Labels(vec![1, 2, 3])).unwrap();
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn seed_packs_hi_lo() {
+        let l = seed_literal(0x0123_4567_89AB_CDEF).unwrap();
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![0x0123_4567, 0x89AB_CDEF]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = scalar_literal(2.5).unwrap();
+        assert_eq!(literal_scalar(&l).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,76 @@
+//! PJRT engine: client + compiled-executable cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client; cheap to clone (the underlying client is
+/// reference-counted by the xla crate).
+#[derive(Clone)]
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Arc<Mutex<HashMap<String, Arc<Executable>>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact; cached by absolute path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let exe = Arc::new(Executable { exe, name: key.clone() });
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+/// A compiled artifact.  All our artifacts are lowered with
+/// `return_tuple=True`, so execution yields one tuple literal that we
+/// decompose into the output list.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Run with literal inputs, return decomposed output literals.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Run with device-buffer inputs (hot path: params stay on device).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = outs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}

@@ -1,0 +1,223 @@
+//! Manifest parsing: the JSON descriptions aot.py writes next to each
+//! artifact set (argument/result shapes, parameter leaf counts, geometry).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_artifacts(j: &Json) -> Result<BTreeMap<String, ArtifactSpec>> {
+    let obj = j
+        .get("artifacts")
+        .and_then(|a| a.as_obj())
+        .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+    let mut out = BTreeMap::new();
+    for (name, spec) in obj {
+        let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            spec.get(key)
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        out.insert(
+            name.clone(),
+            ArtifactSpec {
+                file: spec
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .to_string(),
+                args: parse_list("args")?,
+                outputs: parse_list("outputs")?,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Manifest of a model artifact set (edge/cloud nets + steps + adam).
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub key: String,
+    pub arch: String,
+    pub image: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub d_tx: usize,
+    pub d_cut: usize,
+    pub bnpp_ratio: Option<usize>,
+    pub edge_params: Vec<TensorSpec>,
+    pub cloud_params: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = json::parse(&text).context("parsing model manifest")?;
+        let field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let spec_list = |k: &str| -> Result<Vec<TensorSpec>> {
+            j.get(k)
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ModelManifest {
+            key: j.get("key").and_then(|v| v.as_str()).unwrap_or("?").into(),
+            arch: j.get("arch").and_then(|v| v.as_str()).unwrap_or("?").into(),
+            image: field("image")?,
+            classes: field("classes")?,
+            batch: field("batch")?,
+            d_tx: field("d_tx")?,
+            d_cut: field("d_cut")?,
+            bnpp_ratio: j.get("bnpp_ratio").and_then(|v| v.as_usize()),
+            edge_params: spec_list("edge_params")?,
+            cloud_params: spec_list("cloud_params")?,
+            artifacts: parse_artifacts(&j)?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no artifact {name}", self.key))
+    }
+
+    pub fn edge_param_count(&self) -> usize {
+        self.edge_params.iter().map(|s| s.elems()).sum()
+    }
+
+    pub fn cloud_param_count(&self) -> usize {
+        self.cloud_params.iter().map(|s| s.elems()).sum()
+    }
+}
+
+/// Manifest of a C3 codec artifact set.
+#[derive(Clone, Debug)]
+pub struct CodecManifest {
+    pub r: usize,
+    pub g: usize,
+    pub d: usize,
+    pub batch: usize,
+    pub kernel: String,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl CodecManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = json::parse(&text).context("parsing codec manifest")?;
+        let field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("codec manifest missing {k}"))
+        };
+        Ok(CodecManifest {
+            r: field("r")?,
+            g: field("g")?,
+            d: field("d")?,
+            batch: field("batch")?,
+            kernel: j.get("kernel").and_then(|v| v.as_str()).unwrap_or("?").into(),
+            artifacts: parse_artifacts(&j)?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("codec has no artifact {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "key": "vggt_b32", "arch": "vgg_tiny", "width": 1.0,
+      "image": 16, "classes": 10, "batch": 32,
+      "d_tx": 1024, "d_cut": 1024, "bnpp_ratio": null,
+      "edge_param_leaves": 2, "cloud_param_leaves": 1,
+      "edge_params": [
+        {"shape": [32, 3, 3, 3], "dtype": "f32"},
+        {"shape": [32], "dtype": "f32"}],
+      "cloud_params": [{"shape": [128, 10], "dtype": "f32"}],
+      "artifacts": {
+        "edge_fwd": {
+          "file": "edge_fwd.hlo.txt",
+          "args": [{"shape": [32, 3, 3, 3], "dtype": "f32"},
+                   {"shape": [32], "dtype": "f32"},
+                   {"shape": [32, 3, 16, 16], "dtype": "f32"}],
+          "outputs": [{"shape": [32, 1024], "dtype": "f32"}],
+          "hlo_bytes": 100, "lower_seconds": 0.1
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_model_manifest() {
+        let dir = std::env::temp_dir().join("c3sl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = ModelManifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.d_tx, 1024);
+        assert_eq!(m.bnpp_ratio, None);
+        assert_eq!(m.edge_params.len(), 2);
+        assert_eq!(m.edge_param_count(), 32 * 27 + 32);
+        let a = m.artifact("edge_fwd").unwrap();
+        assert_eq!(a.args.len(), 3);
+        assert_eq!(a.outputs[0].shape, vec![32, 1024]);
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

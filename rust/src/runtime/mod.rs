@@ -1,0 +1,18 @@
+//! Runtime: loads the AOT HLO artifacts through the PJRT C API (the `xla`
+//! crate) and exposes typed call wrappers for the coordinator.
+//!
+//! Python is only ever involved at build time (`make artifacts`); everything
+//! here is pure rust + the XLA CPU plugin.  See /opt/xla-example/load_hlo for
+//! the interchange pattern (HLO *text*, not serialized protos — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects).
+
+pub mod codec;
+pub mod convert;
+pub mod engine;
+pub mod manifest;
+pub mod model;
+
+pub use codec::CodecRuntime;
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactSpec, CodecManifest, ModelManifest, TensorSpec};
+pub use model::{AdamState, ModelRuntime, StepOutput};

@@ -1,0 +1,229 @@
+//! ModelRuntime: typed wrappers over one model artifact set.
+//!
+//! Holds the compiled executables and exposes the split-learning step
+//! functions with rust signatures.  Parameter/optimizer state lives in
+//! `Vec<xla::Literal>` ordered exactly as the manifest's leaf lists.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use super::convert::{
+    labels_to_literal, literal_scalar, literal_to_tensor, scalar_literal, seed_literal,
+    tensor_to_literal,
+};
+use super::engine::{Engine, Executable};
+use super::manifest::ModelManifest;
+use crate::tensor::{Labels, Tensor};
+
+/// Adam moment state for one parameter list.
+pub struct AdamState {
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: usize,
+}
+
+impl AdamState {
+    /// Zero-initialized moments matching `params`.
+    pub fn zeros_like(params: &[xla::Literal]) -> Result<Self> {
+        let zero = |p: &xla::Literal| -> Result<xla::Literal> {
+            let t = literal_to_tensor(p)?;
+            tensor_to_literal(&Tensor::zeros(t.shape()))
+        };
+        Ok(AdamState {
+            m: params.iter().map(zero).collect::<Result<Vec<_>>>()?,
+            v: params.iter().map(zero).collect::<Result<Vec<_>>>()?,
+            step: 0,
+        })
+    }
+}
+
+/// Output of one cloud training step.
+pub struct StepOutput {
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub grads: Vec<xla::Literal>,
+    /// dL/dẑ — gradient w.r.t. the (decoded) transmitted features.
+    pub gz: Tensor,
+}
+
+/// Compiled artifact set for one model (edge side + cloud side).
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    dir: PathBuf,
+    edge_init: std::sync::Arc<Executable>,
+    cloud_init: std::sync::Arc<Executable>,
+    edge_fwd: std::sync::Arc<Executable>,
+    edge_bwd: std::sync::Arc<Executable>,
+    cloud_step: std::sync::Arc<Executable>,
+    cloud_eval: std::sync::Arc<Executable>,
+    edge_adam: std::sync::Arc<Executable>,
+    cloud_adam: std::sync::Arc<Executable>,
+}
+
+impl ModelRuntime {
+    /// Load and compile every artifact in `dir` (model_key directory).
+    pub fn load(engine: &Engine, dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let manifest = ModelManifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let load = |name: &str| -> Result<std::sync::Arc<Executable>> {
+            let file = &manifest.artifact(name)?.file;
+            engine.load(dir.join(file))
+        };
+        Ok(ModelRuntime {
+            edge_init: load("edge_init")?,
+            cloud_init: load("cloud_init")?,
+            edge_fwd: load("edge_fwd")?,
+            edge_bwd: load("edge_bwd")?,
+            cloud_step: load("cloud_step")?,
+            cloud_eval: load("cloud_eval")?,
+            edge_adam: load("edge_adam")?,
+            cloud_adam: load("cloud_adam")?,
+            manifest,
+            dir,
+        })
+    }
+
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    // ---- initialization ----------------------------------------------------
+
+    pub fn edge_init(&self, seed: u64) -> Result<Vec<xla::Literal>> {
+        let s = seed_literal(seed)?;
+        self.edge_init.run(&[&s])
+    }
+
+    pub fn cloud_init(&self, seed: u64) -> Result<Vec<xla::Literal>> {
+        let s = seed_literal(seed)?;
+        self.cloud_init.run(&[&s])
+    }
+
+    // ---- edge side -----------------------------------------------------------
+
+    /// z = f_theta(x): (B,3,H,W) → (B, d_tx).
+    pub fn edge_fwd(&self, params: &[xla::Literal], x: &Tensor) -> Result<Tensor> {
+        ensure!(
+            params.len() == self.manifest.edge_params.len(),
+            "edge param arity"
+        );
+        let xl = tensor_to_literal(x)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&xl);
+        let outs = self.edge_fwd.run(&args)?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// dL/dθ_edge given x and the (decoded) gradient gz at the cut.
+    pub fn edge_bwd(
+        &self,
+        params: &[xla::Literal],
+        x: &Tensor,
+        gz: &Tensor,
+    ) -> Result<Vec<xla::Literal>> {
+        let xl = tensor_to_literal(x)?;
+        let gl = tensor_to_literal(gz)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&xl);
+        args.push(&gl);
+        self.edge_bwd.run(&args)
+    }
+
+    // ---- cloud side -----------------------------------------------------------
+
+    /// Forward + backward through f_psi; returns loss/acc/grads/gẑ.
+    pub fn cloud_step(
+        &self,
+        params: &[xla::Literal],
+        zhat: &Tensor,
+        y: &Labels,
+    ) -> Result<StepOutput> {
+        ensure!(
+            params.len() == self.manifest.cloud_params.len(),
+            "cloud param arity"
+        );
+        let zl = tensor_to_literal(zhat)?;
+        let yl = labels_to_literal(y)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&zl);
+        args.push(&yl);
+        let mut outs = self.cloud_step.run(&args)?;
+        // outputs: loss, ncorrect, grads..., gz
+        ensure!(outs.len() == 2 + params.len() + 1, "cloud_step arity");
+        let gz = literal_to_tensor(&outs.pop().unwrap())?;
+        let grads = outs.split_off(2);
+        let ncorrect = literal_scalar(&outs[1])?;
+        let loss = literal_scalar(&outs[0])?;
+        Ok(StepOutput { loss, ncorrect, grads, gz })
+    }
+
+    /// Evaluation-only pass: (loss, ncorrect).
+    pub fn cloud_eval(
+        &self,
+        params: &[xla::Literal],
+        zhat: &Tensor,
+        y: &Labels,
+    ) -> Result<(f32, f32)> {
+        let zl = tensor_to_literal(zhat)?;
+        let yl = labels_to_literal(y)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&zl);
+        args.push(&yl);
+        let outs = self.cloud_eval.run(&args)?;
+        Ok((literal_scalar(&outs[0])?, literal_scalar(&outs[1])?))
+    }
+
+    // ---- optimizer ---------------------------------------------------------------
+
+    fn adam(
+        exe: &Executable,
+        params: Vec<xla::Literal>,
+        grads: &[xla::Literal],
+        state: &mut AdamState,
+        lr: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        let n = params.len();
+        ensure!(grads.len() == n && state.m.len() == n && state.v.len() == n);
+        let step_l = scalar_literal(state.step as f32)?;
+        let lr_l = scalar_literal(lr)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 * n + 2);
+        args.extend(params.iter());
+        args.extend(grads.iter());
+        args.extend(state.m.iter());
+        args.extend(state.v.iter());
+        args.push(&step_l);
+        args.push(&lr_l);
+        let mut outs = exe.run(&args)?;
+        ensure!(outs.len() == 3 * n, "adam output arity");
+        let v = outs.split_off(2 * n);
+        let m = outs.split_off(n);
+        state.m = m;
+        state.v = v;
+        state.step += 1;
+        Ok(outs)
+    }
+
+    /// In-place Adam update of the edge parameters.
+    pub fn edge_adam(
+        &self,
+        params: Vec<xla::Literal>,
+        grads: &[xla::Literal],
+        state: &mut AdamState,
+        lr: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        Self::adam(&self.edge_adam, params, grads, state, lr)
+    }
+
+    /// In-place Adam update of the cloud parameters.
+    pub fn cloud_adam(
+        &self,
+        params: Vec<xla::Literal>,
+        grads: &[xla::Literal],
+        state: &mut AdamState,
+        lr: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        Self::adam(&self.cloud_adam, params, grads, state, lr)
+    }
+}

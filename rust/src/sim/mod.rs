@@ -1,0 +1,160 @@
+//! Communication-efficiency simulator: evaluates per-epoch bytes and virtual
+//! link time for each compression scheme over a link grid.  This regenerates
+//! the paper's §1 headline ("reduces 16× communication costs") and the
+//! crossover analysis in `cargo bench --bench comm_cost`.
+
+use crate::flops::{CutSpec, Scheme};
+use crate::transport::sim::LinkModel;
+use crate::transport::wire;
+use crate::tensor::Tensor;
+
+/// One row of the communication report.
+#[derive(Clone, Debug)]
+pub struct CommRow {
+    pub scheme: &'static str,
+    pub r: usize,
+    pub link: &'static str,
+    pub uplink_bytes_per_step: u64,
+    pub downlink_bytes_per_step: u64,
+    pub epoch_seconds: f64,
+    pub reduction_vs_vanilla: f64,
+}
+
+/// Wire-accurate per-step payload bytes for a scheme at a cut spec.
+/// Uses the actual frame encoding (header included), not element counts.
+pub fn step_payload_bytes(spec: &CutSpec, r: usize, scheme: Scheme) -> (u64, u64) {
+    let d = spec.d();
+    let b = spec.b;
+    let tensor_rows = match scheme {
+        Scheme::Vanilla => b,
+        Scheme::C3 => b / r,
+        // BottleNet++ shrinks the feature dim instead of the batch dim.
+        Scheme::BottleNetPP => b,
+    };
+    let tensor_cols = match scheme {
+        Scheme::Vanilla | Scheme::C3 => d,
+        Scheme::BottleNetPP => d / r,
+    };
+    let t = Tensor::zeros(&[tensor_rows, tensor_cols]);
+    let bytes = wire::tensor_msg_bytes(&t) as u64;
+    // uplink: features (+ labels, 4B each); downlink: gradients (same shape).
+    let label_bytes = 4 * b as u64 + 13; // labels message overhead
+    (bytes + label_bytes, bytes)
+}
+
+/// Evaluate the full scheme × R × link grid.
+pub fn comm_report(spec: &CutSpec, steps_per_epoch: u64) -> Vec<CommRow> {
+    let links: &[(&'static str, LinkModel)] = &[
+        ("wifi", LinkModel::wifi()),
+        ("lte", LinkModel::lte()),
+        ("nbiot", LinkModel::nbiot()),
+    ];
+    let mut rows = Vec::new();
+    for &(lname, link) in links {
+        let (vup, vdown) = step_payload_bytes(spec, 1, Scheme::Vanilla);
+        let vanilla_t = steps_per_epoch as f64
+            * (link.transfer_time(vup) + link.transfer_time(vdown));
+        rows.push(CommRow {
+            scheme: "vanilla",
+            r: 1,
+            link: lname,
+            uplink_bytes_per_step: vup,
+            downlink_bytes_per_step: vdown,
+            epoch_seconds: vanilla_t,
+            reduction_vs_vanilla: 1.0,
+        });
+        for &scheme in &[Scheme::C3, Scheme::BottleNetPP] {
+            for &r in &[2usize, 4, 8, 16] {
+                let (up, down) = step_payload_bytes(spec, r, scheme);
+                let t = steps_per_epoch as f64
+                    * (link.transfer_time(up) + link.transfer_time(down));
+                rows.push(CommRow {
+                    scheme: scheme.name(),
+                    r,
+                    link: lname,
+                    uplink_bytes_per_step: up,
+                    downlink_bytes_per_step: down,
+                    epoch_seconds: t,
+                    reduction_vs_vanilla: vanilla_t / t,
+                });
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c3_payload_shrinks_by_r() {
+        let spec = CutSpec::vgg16_cifar10();
+        let (up1, down1) = step_payload_bytes(&spec, 1, Scheme::Vanilla);
+        for r in [2, 4, 8, 16] {
+            let (up, down) = step_payload_bytes(&spec, r, Scheme::C3);
+            // data dominates; header+labels make the ratio slightly < r
+            let ratio = down1 as f64 / down as f64;
+            assert!(
+                (ratio - r as f64).abs() / (r as f64) < 0.01,
+                "r={r} ratio={ratio}"
+            );
+            assert!(up < up1);
+        }
+    }
+
+    #[test]
+    fn bnpp_and_c3_same_payload_at_same_r() {
+        let spec = CutSpec::resnet50_cifar100();
+        let (c3u, c3d) = step_payload_bytes(&spec, 8, Scheme::C3);
+        let (bnu, bnd) = step_payload_bytes(&spec, 8, Scheme::BottleNetPP);
+        // identical element count, slightly different headers
+        assert!((c3u as i64 - bnu as i64).abs() < 64);
+        assert!((c3d as i64 - bnd as i64).abs() < 64);
+    }
+
+    #[test]
+    fn report_covers_grid_and_reductions_reasonable() {
+        let spec = CutSpec::vgg16_cifar10();
+        let rows = comm_report(&spec, 100);
+        // 3 links × (1 vanilla + 2 schemes × 4 ratios) = 27 rows
+        assert_eq!(rows.len(), 27);
+        let (vup, _) = step_payload_bytes(&spec, 1, Scheme::Vanilla);
+        for row in &rows {
+            assert!(row.epoch_seconds > 0.0);
+            if row.scheme == "c3" && row.link == "wifi" {
+                // BYTES shrink by ≈R (the paper's 16× claim is about bytes);
+                // wall-time reduction is capped below R by per-message
+                // latency — it must stay between 60% of R and R.
+                let byte_ratio = vup as f64 / row.uplink_bytes_per_step as f64;
+                assert!(
+                    (byte_ratio - row.r as f64).abs() / (row.r as f64) < 0.05,
+                    "{row:?} byte_ratio={byte_ratio}"
+                );
+                assert!(
+                    row.reduction_vs_vanilla > 0.6 * row.r as f64
+                        && row.reduction_vs_vanilla <= row.r as f64 + 0.01,
+                    "{row:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_headline_16x_byte_reduction() {
+        // The §1 claim "reduces 16× communication costs" is about transmitted
+        // volume; verify bytes shrink 16× (within header overhead) and that
+        // the time reduction on a bandwidth-rich link is close behind.
+        let spec = CutSpec::vgg16_cifar10();
+        let rows = comm_report(&spec, 100);
+        let r16 = rows
+            .iter()
+            .find(|r| r.scheme == "c3" && r.r == 16 && r.link == "wifi")
+            .unwrap();
+        let (vup, vdown) = step_payload_bytes(&spec, 1, Scheme::Vanilla);
+        let byte_ratio = (vup + vdown) as f64
+            / (r16.uplink_bytes_per_step + r16.downlink_bytes_per_step) as f64;
+        assert!(byte_ratio > 15.5 && byte_ratio <= 16.0, "{byte_ratio}");
+        assert!(r16.reduction_vs_vanilla > 10.0, "{}", r16.reduction_vs_vanilla);
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense row-major f32 tensor substrate.
+//!
+//! Deliberately small: the heavy math runs inside AOT-compiled XLA
+//! executables; this type exists for host-side plumbing (datasets, codecs,
+//! oracles for tests, metrics) and for the rust-native C3 hot path.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(len={})", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    // ---- construction ----------------------------------------------------
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn filled(shape: &[usize], x: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![x; n] }
+    }
+
+    // ---- accessors --------------------------------------------------------
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    // ---- shape ops ---------------------------------------------------------
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Concatenate along axis 0 (all other dims must match).
+    pub fn cat0(parts: &[&Tensor]) -> Self {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail);
+            rows += p.shape[0];
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+
+    /// Slice rows [lo, hi) along axis 0.
+    pub fn slice0(&self, lo: usize, hi: usize) -> Tensor {
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::from_vec(&shape, self.data[lo * stride..hi * stride].to_vec())
+    }
+
+    // ---- math (host-side oracles / codecs) ---------------------------------
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|a| a * a).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖/‖b‖ (0 if both zero).
+    pub fn rel_err(&self, other: &Tensor) -> f32 {
+        let d = self.sub(other).norm();
+        let n = other.norm();
+        if n == 0.0 {
+            d
+        } else {
+            d / n
+        }
+    }
+
+    /// argmax along the last axis of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Integer label vector (class targets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Labels(pub Vec<i32>);
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = t.reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.row(1), &[3., 4.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_wrong_size_panics() {
+        Tensor::zeros(&[2, 2]).reshape(&[3]);
+    }
+
+    #[test]
+    fn cat_and_slice_roundtrip() {
+        let a = Tensor::from_vec(&[1, 2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2, 2], vec![3., 4., 5., 6.]);
+        let c = Tensor::cat0(&[&a, &b]);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.slice0(1, 3), b);
+        assert_eq!(c.slice0(0, 1), a);
+    }
+
+    #[test]
+    fn math_ops() {
+        let a = Tensor::from_vec(&[2], vec![3., 4.]);
+        let b = Tensor::from_vec(&[2], vec![1., 1.]);
+        assert_eq!(a.add(&b).data(), &[4., 5.]);
+        assert_eq!(a.sub(&b).data(), &[2., 3.]);
+        assert_eq!(a.scale(2.0).data(), &[6., 8.]);
+        assert_eq!(a.dot(&b), 7.0);
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        let a = Tensor::from_vec(&[3], vec![1., -2., 3.]);
+        assert_eq!(a.rel_err(&a), 0.0);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,153 @@
+//! SimLink: a virtual-time network cost model layered over any transport.
+//!
+//! The paper's motivation is communication cost on constrained edge links;
+//! this wrapper charges each message `latency + bytes / bandwidth` seconds of
+//! *virtual* time (no real sleeping — the benches sweep many configurations)
+//! and tracks per-direction totals, so `cargo bench --bench comm_cost` can
+//! report epoch times for vanilla vs C3 vs BottleNet++ under WiFi / LTE /
+//! BLE-class links.
+
+use std::sync::Arc;
+
+use super::{LinkStats, Msg, Transport, TransportError};
+use crate::transport::wire;
+
+/// Link parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+    /// Bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl LinkModel {
+    pub fn new(latency_s: f64, bandwidth_bps: f64) -> Self {
+        assert!(bandwidth_bps > 0.0);
+        LinkModel { latency_s, bandwidth_bps }
+    }
+
+    /// Transfer time for one message of `bytes` bytes.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    // Named profiles used by the benches (nominal, order-of-magnitude).
+    pub fn wifi() -> Self {
+        Self::new(2e-3, 50e6 / 8.0) // 50 Mbit/s, 2 ms
+    }
+
+    pub fn lte() -> Self {
+        Self::new(30e-3, 10e6 / 8.0) // 10 Mbit/s, 30 ms
+    }
+
+    pub fn nbiot() -> Self {
+        Self::new(100e-3, 100e3 / 8.0) // 100 kbit/s, 100 ms
+    }
+}
+
+/// Virtual clock accumulating transfer time per direction.
+#[derive(Debug, Default, Clone)]
+pub struct VirtualClock {
+    pub tx_seconds: f64,
+    pub rx_seconds: f64,
+}
+
+/// Transport wrapper charging virtual time for every frame.
+pub struct SimLink<T: Transport> {
+    inner: T,
+    model: LinkModel,
+    pub clock: VirtualClock,
+}
+
+impl<T: Transport> SimLink<T> {
+    pub fn new(inner: T, model: LinkModel) -> Self {
+        SimLink { inner, model, clock: VirtualClock::default() }
+    }
+
+    pub fn model(&self) -> LinkModel {
+        self.model
+    }
+
+    pub fn total_virtual_seconds(&self) -> f64 {
+        self.clock.tx_seconds + self.clock.rx_seconds
+    }
+}
+
+impl<T: Transport> Transport for SimLink<T> {
+    fn send(&mut self, msg: &Msg) -> Result<(), TransportError> {
+        let bytes = wire::encode(msg).len() as u64;
+        self.clock.tx_seconds += self.model.transfer_time(bytes);
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<Msg, TransportError> {
+        let msg = self.inner.recv()?;
+        let bytes = wire::encode(&msg).len() as u64;
+        self.clock.rx_seconds += self.model.transfer_time(bytes);
+        Ok(msg)
+    }
+
+    fn stats(&self) -> Arc<LinkStats> {
+        self.inner.stats()
+    }
+}
+
+/// Pure cost-model evaluation (no transport): epoch communication time for a
+/// scheme that sends `uplink_bytes` and receives `downlink_bytes` per step.
+pub fn epoch_comm_time(model: &LinkModel, steps: u64, uplink_bytes: u64,
+                       downlink_bytes: u64) -> f64 {
+    steps as f64 * (model.transfer_time(uplink_bytes) + model.transfer_time(downlink_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::transport::inproc_pair;
+
+    #[test]
+    fn transfer_time_formula() {
+        let m = LinkModel::new(0.01, 1000.0);
+        assert!((m.transfer_time(500) - 0.51).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simlink_charges_both_directions() {
+        let (a, b) = inproc_pair();
+        let m = LinkModel::new(0.0, 1000.0);
+        let mut sa = SimLink::new(a, m);
+        let mut sb = SimLink::new(b, m);
+        let msg = Msg::Features { step: 0, tensor: Tensor::zeros(&[10]) };
+        sa.send(&msg).unwrap();
+        sb.recv().unwrap();
+        let bytes = wire::encode(&msg).len() as f64;
+        assert!((sa.clock.tx_seconds - bytes / 1000.0).abs() < 1e-9);
+        assert!((sb.clock.rx_seconds - bytes / 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_reduces_virtual_time_by_r() {
+        let m = LinkModel::new(0.0, 1e6);
+        let full = epoch_comm_time(&m, 100, 4096, 4096);
+        let c3 = epoch_comm_time(&m, 100, 4096 / 16, 4096 / 16);
+        assert!((full / c3 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        // On a high-latency link, compressing tiny messages barely helps —
+        // the crossover behaviour the comm bench plots.
+        let m = LinkModel::nbiot();
+        let full = epoch_comm_time(&m, 10, 1000, 1000);
+        let c3 = epoch_comm_time(&m, 10, 1000 / 16, 1000 / 16);
+        let speedup = full / c3;
+        assert!(speedup < 3.0, "latency-bound speedup {speedup} should be modest");
+    }
+
+    #[test]
+    fn profiles_ordered_by_bandwidth() {
+        assert!(LinkModel::wifi().bandwidth_bps > LinkModel::lte().bandwidth_bps);
+        assert!(LinkModel::lte().bandwidth_bps > LinkModel::nbiot().bandwidth_bps);
+    }
+}

@@ -1,0 +1,105 @@
+//! TCP transport: length-prefixed frames over a socket, so the edge and the
+//! cloud can run as separate OS processes (or separate machines).
+//!
+//! Frame on the socket: [len u32 LE][frame bytes] where the inner frame is
+//! wire::encode's output.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::{LinkStats, Msg, Transport, TransportError};
+use crate::transport::wire;
+
+pub struct Tcp {
+    stream: TcpStream,
+    stats: Arc<LinkStats>,
+}
+
+impl Tcp {
+    /// Listen on `addr` and accept one peer (cloud side).
+    pub fn listen(addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let (stream, _peer) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        Ok(Tcp { stream, stats: Arc::new(LinkStats::default()) })
+    }
+
+    /// Connect to a listening peer (edge side), retrying briefly while the
+    /// server comes up.
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let mut last_err = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    return Ok(Tcp { stream, stats: Arc::new(LinkStats::default()) });
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+            }
+        }
+        Err(last_err.unwrap())
+    }
+}
+
+impl Transport for Tcp {
+    fn send(&mut self, msg: &Msg) -> Result<(), TransportError> {
+        let frame = wire::encode(msg);
+        let len = frame.len() as u32;
+        self.stream.write_all(&len.to_le_bytes())?;
+        self.stream.write_all(&frame)?;
+        self.stats
+            .tx_bytes
+            .fetch_add(4 + frame.len() as u64, Ordering::Relaxed);
+        self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Msg, TransportError> {
+        let mut lenb = [0u8; 4];
+        self.stream.read_exact(&mut lenb)?;
+        let len = u32::from_le_bytes(lenb) as usize;
+        let mut frame = vec![0u8; len];
+        self.stream.read_exact(&mut frame)?;
+        self.stats
+            .rx_bytes
+            .fetch_add(4 + len as u64, Ordering::Relaxed);
+        self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(wire::decode(&frame)?)
+    }
+
+    fn stats(&self) -> Arc<LinkStats> {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn tcp_roundtrip_between_threads() {
+        let addr = "127.0.0.1:39381";
+        let server = std::thread::spawn(move || {
+            let mut t = Tcp::listen(addr).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap(); // echo
+            t.recv().unwrap() // shutdown
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        let m = Msg::Features {
+            step: 9,
+            tensor: Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+        };
+        c.send(&m).unwrap();
+        assert_eq!(c.recv().unwrap(), m);
+        c.send(&Msg::Shutdown).unwrap();
+        assert_eq!(server.join().unwrap(), Msg::Shutdown);
+        assert!(c.stats().tx() > 0 && c.stats().rx() > 0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Tiny CSV writer for loss curves and bench tables.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.w, "{}", fields.join(","))
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let path = std::env::temp_dir().join("c3sl_csv_test.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row_f64(&[0.0, 2.5]).unwrap();
+            w.row_f64(&[1.0, 2.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,loss");
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! Utility substrates: PRNG, JSON, timing, property-testing harness, CSV.
+
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

