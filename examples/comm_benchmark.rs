@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example comm_benchmark
 
-use anyhow::Result;
+use c3sl::util::error::Result;
 
 use c3sl::compress::{quant::QuantCodec, C3Codec, Codec, IdentityCodec, Stacked};
 use c3sl::flops::CutSpec;

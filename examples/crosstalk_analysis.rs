@@ -11,7 +11,7 @@
 //! Writes runs/crosstalk.csv (columns: d, r, rel_recon_err, rel_crosstalk,
 //! mean_cos).
 
-use anyhow::Result;
+use c3sl::util::error::Result;
 
 use c3sl::hdc::{crosstalk_report, Backend, KeySet, C3};
 use c3sl::tensor::Tensor;

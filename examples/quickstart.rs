@@ -9,7 +9,7 @@
 //! Everything below executes AOT-compiled XLA artifacts through PJRT —
 //! python is not involved.
 
-use anyhow::Result;
+use c3sl::util::error::Result;
 
 use c3sl::runtime::{AdamState, CodecRuntime, Engine, ModelRuntime};
 use c3sl::tensor::{Labels, Tensor};
@@ -17,6 +17,10 @@ use c3sl::transport::wire;
 use c3sl::util::rng::Rng;
 
 fn main() -> Result<()> {
+    if !std::path::Path::new("artifacts/vggt_b32/manifest.json").exists() {
+        println!("SKIP quickstart: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
     let engine = Engine::cpu()?;
     println!("PJRT platform: {}", engine.platform());
 

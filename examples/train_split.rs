@@ -9,7 +9,7 @@
 //!
 //! Loss curves land in runs/train_split_<scheme>.csv.
 
-use anyhow::Result;
+use c3sl::util::error::Result;
 
 use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
 use c3sl::coordinator::run_experiment;
@@ -35,6 +35,10 @@ fn cfg(scheme: SchemeKind, steps: usize, seed: u64) -> ExperimentConfig {
 }
 
 fn main() -> Result<()> {
+    if !std::path::Path::new("artifacts/vggt_b32/manifest.json").exists() {
+        println!("SKIP train_split: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
     let steps: usize = std::env::var("C3SL_STEPS")
         .ok()
         .and_then(|v| v.parse().ok())

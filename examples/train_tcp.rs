@@ -7,7 +7,7 @@
 //!
 //!   cargo run --release --example train_tcp
 
-use anyhow::Result;
+use c3sl::util::error::Result;
 
 use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
 use c3sl::coordinator::{CloudWorker, EdgeWorker};
@@ -46,6 +46,10 @@ fn run_cloud() -> Result<()> {
 }
 
 fn main() -> Result<()> {
+    if !std::path::Path::new("artifacts/vggt_b32/manifest.json").exists() {
+        println!("SKIP train_tcp: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
     if std::env::args().any(|a| a == "cloud") {
         return run_cloud();
     }
@@ -67,7 +71,7 @@ fn main() -> Result<()> {
     let mut tp: Box<dyn Transport> = Box::new(Tcp::connect(&c.tcp_addr)?);
     let rec = edge.run(tp.as_mut(), train.as_ref(), test.as_ref(), &c)?;
     let status = child.wait()?;
-    anyhow::ensure!(status.success(), "cloud process failed");
+    c3sl::ensure!(status.success(), "cloud process failed");
 
     println!("[edge-proc] {}", rec.summary());
     println!(

@@ -59,12 +59,21 @@ impl C3Codec {
         C3Codec { c3: C3::new(keys, backend) }
     }
 
+    /// C3 codec with group-parallel encode/decode across `workers` threads.
+    pub fn with_workers(keys: KeySet, backend: Backend, workers: usize) -> Self {
+        C3Codec { c3: C3::with_workers(keys, backend, workers) }
+    }
+
     pub fn r(&self) -> usize {
         self.c3.keys.r
     }
 
     pub fn d(&self) -> usize {
         self.c3.keys.d
+    }
+
+    pub fn workers(&self) -> usize {
+        self.c3.workers()
     }
 }
 

@@ -11,16 +11,33 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing subcommand")]
     NoSubcommand,
-    #[error("flag --{0} needs a value")]
     MissingValue(String),
-    #[error("flag --{0} is required")]
     Required(String),
-    #[error("cannot parse --{flag} value '{value}': {why}")]
     BadValue { flag: String, value: String, why: String },
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::NoSubcommand => write!(f, "missing subcommand"),
+            CliError::MissingValue(flag) => write!(f, "flag --{flag} needs a value"),
+            CliError::Required(flag) => write!(f, "flag --{flag} is required"),
+            CliError::BadValue { flag, value, why } => {
+                write!(f, "cannot parse --{flag} value '{value}': {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl From<CliError> for crate::util::error::C3Error {
+    fn from(e: CliError) -> Self {
+        Self::msg(e.to_string())
+    }
 }
 
 impl Args {

@@ -61,8 +61,12 @@ pub struct ExperimentConfig {
     pub artifacts_root: String,
     pub scheme: SchemeKind,
     pub codec_venue: CodecVenue,
+    /// Worker threads for group-parallel host codec encode/decode.
+    pub codec_workers: usize,
     pub transport: TransportKind,
     pub tcp_addr: String,
+    /// Concurrent edge clients the cloud accepts (multi-edge scenarios).
+    pub num_edges: usize,
     pub link: Option<LinkModel>,
 
     // training
@@ -90,8 +94,10 @@ impl Default for ExperimentConfig {
             artifacts_root: "artifacts".into(),
             scheme: SchemeKind::C3 { r: 4 },
             codec_venue: CodecVenue::Artifact,
+            codec_workers: 1,
             transport: TransportKind::InProc,
             tcp_addr: "127.0.0.1:7070".into(),
+            num_edges: 1,
             link: None,
             steps: 200,
             lr: 1e-4, // paper §4.1
@@ -107,14 +113,49 @@ impl Default for ExperimentConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("toml: {0}")]
-    Toml(#[from] toml::TomlError),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("invalid config: {0}")]
+    Toml(toml::TomlError),
+    Io(std::io::Error),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Toml(e) => write!(f, "toml: {e}"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Toml(e) => Some(e),
+            ConfigError::Io(e) => Some(e),
+            ConfigError::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<toml::TomlError> for ConfigError {
+    fn from(e: toml::TomlError) -> Self {
+        ConfigError::Toml(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
+}
+
+impl From<ConfigError> for crate::util::error::C3Error {
+    fn from(e: ConfigError) -> Self {
+        Self::msg(e.to_string())
+    }
 }
 
 fn get<'a>(doc: &'a Doc, section: &str, key: &str) -> Option<&'a Value> {
@@ -151,6 +192,20 @@ impl ExperimentConfig {
                 Some("artifact") => CodecVenue::Artifact,
                 other => return Err(inv(format!("scheme.venue: {other:?}"))),
             };
+        }
+        if let Some(v) = get(&doc, "scheme", "workers") {
+            let w = v.as_i64().ok_or_else(|| inv("scheme.workers".into()))?;
+            if w < 1 {
+                return Err(inv(format!("scheme.workers must be >= 1, got {w}")));
+            }
+            cfg.codec_workers = w as usize;
+        }
+        if let Some(v) = get(&doc, "transport", "edges") {
+            let n = v.as_i64().ok_or_else(|| inv("transport.edges".into()))?;
+            if n < 1 {
+                return Err(inv(format!("transport.edges must be >= 1, got {n}")));
+            }
+            cfg.num_edges = n as usize;
         }
         if let Some(v) = get(&doc, "transport", "kind") {
             cfg.transport = match v.as_str() {
@@ -218,6 +273,12 @@ impl ExperimentConfig {
         }
         if self.lr <= 0.0 {
             return Err(ConfigError::Invalid("lr must be > 0".into()));
+        }
+        if self.codec_workers == 0 {
+            return Err(ConfigError::Invalid("scheme.workers must be >= 1".into()));
+        }
+        if self.num_edges == 0 {
+            return Err(ConfigError::Invalid("transport.edges must be >= 1".into()));
         }
         if matches!(self.scheme, SchemeKind::BottleNetPP { .. })
             && self.codec_venue == CodecVenue::Host
@@ -300,6 +361,29 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.model_dir(), "artifacts/vggt_b32_bnpp_r8");
         assert!(cfg.codec_dir().is_none());
+    }
+
+    #[test]
+    fn parses_workers_and_edges() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[scheme]\nkind = \"c3\"\nworkers = 4\n[transport]\nedges = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.codec_workers, 4);
+        assert_eq!(cfg.num_edges, 3);
+        // defaults are serial single-edge
+        let d = ExperimentConfig::default();
+        assert_eq!(d.codec_workers, 1);
+        assert_eq!(d.num_edges, 1);
+    }
+
+    #[test]
+    fn rejects_zero_or_negative_workers_or_edges() {
+        assert!(ExperimentConfig::from_toml_str("[scheme]\nworkers = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[transport]\nedges = 0\n").is_err());
+        // negative values must not wrap through the i64 → usize cast
+        assert!(ExperimentConfig::from_toml_str("[scheme]\nworkers = -1\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[transport]\nedges = -3\n").is_err());
     }
 
     #[test]

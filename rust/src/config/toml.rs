@@ -56,12 +56,19 @@ impl Value {
 /// section → key → value.  Root-level keys live under the "" section.
 pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(input: &str) -> Result<Doc, TomlError> {
     let mut doc: Doc = BTreeMap::new();

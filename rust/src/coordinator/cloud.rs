@@ -3,15 +3,16 @@
 //! cut-layer gradients with the SAME encoder (legal because decode = encodeᵀ,
 //! DESIGN.md §1) and ships them back with the step statistics.
 
-use anyhow::{bail, Context, Result};
-
 use super::edge::build_codec;
 use super::run_codec::RunCodec;
+use crate::bail;
 use crate::config::ExperimentConfig;
 use crate::metrics::Histogram;
+use crate::runtime::xla_stub as xla;
 use crate::runtime::{AdamState, Engine, ModelRuntime};
 use crate::tensor::Tensor;
 use crate::transport::{Msg, Transport};
+use crate::util::error::{Context, Result};
 use crate::util::timer::Timer;
 
 pub struct CloudWorker {

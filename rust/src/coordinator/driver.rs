@@ -6,15 +6,18 @@
 //! thread) and runs the edge on the caller's thread.  TCP mode is driven from
 //! main.rs with `c3sl edge` / `c3sl cloud` in separate processes.
 
-use anyhow::{Context, Result};
-
+use super::multi::{self, EdgeReport, MultiStats};
+use super::run_codec::RunCodec;
 use super::{CloudWorker, EdgeWorker};
 use crate::config::{ExperimentConfig, TransportKind};
 use crate::data::open_dataset;
+use crate::ensure;
 use crate::metrics::RunRecorder;
 use crate::runtime::Engine;
 use crate::transport::sim::{LinkModel, SimLink};
+use crate::transport::tcp::Tcp;
 use crate::transport::{inproc_pair, Transport};
+use crate::util::error::{C3Error, Context, Result};
 
 /// Everything a finished run reports.
 pub struct RunOutput {
@@ -29,7 +32,7 @@ pub struct RunOutput {
 
 /// Run one experiment end to end (in-proc transport).
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutput> {
-    anyhow::ensure!(
+    ensure!(
         cfg.transport == TransportKind::InProc,
         "run_experiment drives in-proc runs; use `c3sl edge`/`c3sl cloud` for tcp"
     );
@@ -77,7 +80,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutput> {
 
     cloud_handle
         .join()
-        .map_err(|e| anyhow::anyhow!("cloud thread panicked: {e:?}"))??;
+        .map_err(|e| C3Error::msg(format!("cloud thread panicked: {e:?}")))??;
 
     let stats = edge_transport.stats();
     let virtual_link_seconds = cfg.link.map(|l: LinkModel| {
@@ -91,6 +94,170 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutput> {
         virtual_link_seconds,
         wall_seconds: t0.elapsed().as_secs_f64(),
     })
+}
+
+// ---------------------------------------------------------------------------
+// Multi-edge scenario: N concurrent clients against one cloud.
+// ---------------------------------------------------------------------------
+
+/// Geometry + venue for one multi-edge codec run (the model halves stay out:
+/// this is the codec/transport scale path — see coordinator::multi).
+#[derive(Clone, Debug)]
+pub struct MultiEdgeSpec {
+    /// Concurrent edge clients.
+    pub edges: usize,
+    /// Training steps per edge.
+    pub steps: u64,
+    /// Per-edge batch size B (must be divisible by `r`).
+    pub r: usize,
+    pub d: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// Group-parallel codec workers per endpoint.
+    pub workers: usize,
+    pub transport: TransportKind,
+    /// Listen/connect address for the TCP venue.
+    pub tcp_addr: String,
+    /// Optional virtual-link cost model on the edge side (in-proc venue).
+    pub link: Option<LinkModel>,
+}
+
+impl Default for MultiEdgeSpec {
+    fn default() -> Self {
+        MultiEdgeSpec {
+            edges: 2,
+            steps: 10,
+            r: 4,
+            d: 1024,
+            batch: 16,
+            seed: 0,
+            workers: 1,
+            transport: TransportKind::InProc,
+            tcp_addr: "127.0.0.1:7071".into(),
+            link: None,
+        }
+    }
+}
+
+/// Everything a finished multi-edge run reports.
+#[derive(Clone, Debug)]
+pub struct MultiRunOutput {
+    /// Cloud-side per-client + aggregate stats.
+    pub cloud: MultiStats,
+    /// Edge-side reports, in spawn order.
+    pub edges: Vec<EdgeReport>,
+    pub wall_seconds: f64,
+}
+
+/// Run N concurrent edges against one multi-client cloud, end to end, over
+/// the in-proc (optionally SimLink-wrapped) or TCP transport.  Both sides
+/// derive their codec from the shared key seed — keys never cross the wire.
+pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
+    ensure!(spec.edges >= 1, "need at least one edge");
+    ensure!(spec.steps >= 1, "need at least one step");
+    ensure!(spec.r >= 1, "compression ratio R must be >= 1");
+    ensure!(spec.d >= 1, "feature dim D must be >= 1");
+    ensure!(
+        spec.batch % spec.r == 0,
+        "batch {} not divisible by R={}",
+        spec.batch,
+        spec.r
+    );
+    let t0 = std::time::Instant::now();
+    let key_seed = spec.seed ^ 0xC3_C3_C3_C3u64;
+    let cloud_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
+    let edge_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
+
+    let (cloud, edges) = match spec.transport {
+        TransportKind::InProc => {
+            let mut cloud_tps = Vec::with_capacity(spec.edges);
+            let mut edge_tps: Vec<Box<dyn Transport>> = Vec::with_capacity(spec.edges);
+            for _ in 0..spec.edges {
+                let (e, c) = inproc_pair();
+                cloud_tps.push(c);
+                edge_tps.push(match spec.link {
+                    Some(link) => Box::new(SimLink::new(e, link)),
+                    None => Box::new(e),
+                });
+            }
+            std::thread::scope(|sc| -> Result<(MultiStats, Vec<EdgeReport>)> {
+                let cloud_handle = sc.spawn(|| multi::serve_clients(&cloud_codec, cloud_tps));
+                let mut edge_handles = Vec::with_capacity(spec.edges);
+                for (i, mut tp) in edge_tps.into_iter().enumerate() {
+                    let codec = &edge_codec;
+                    edge_handles.push(sc.spawn(move || {
+                        multi::run_edge(
+                            codec,
+                            tp.as_mut(),
+                            spec.steps,
+                            key_seed,
+                            spec.seed.wrapping_add(i as u64),
+                            spec.batch,
+                            spec.d,
+                        )
+                    }));
+                }
+                let mut edges = Vec::with_capacity(spec.edges);
+                for h in edge_handles {
+                    edges.push(
+                        h.join()
+                            .map_err(|_| C3Error::msg("edge thread panicked"))??,
+                    );
+                }
+                let cloud = cloud_handle
+                    .join()
+                    .map_err(|_| C3Error::msg("cloud thread panicked"))??;
+                Ok((cloud, edges))
+            })?
+        }
+        TransportKind::Tcp => {
+            // Bind before spawning edges so connects never race the listener.
+            let listener = Tcp::bind(&spec.tcp_addr)
+                .with_context(|| format!("binding {}", spec.tcp_addr))?;
+            std::thread::scope(|sc| -> Result<(MultiStats, Vec<EdgeReport>)> {
+                let n = spec.edges;
+                let cloud_handle = sc.spawn(move || -> Result<MultiStats> {
+                    // Deadline-bounded accept: a client that never connects
+                    // must not hang the scope join forever.
+                    let tps =
+                        Tcp::accept_n(&listener, n, std::time::Duration::from_secs(30))
+                            .context("accepting edges")?;
+                    multi::serve_clients(&cloud_codec, tps)
+                });
+                let mut edge_handles = Vec::with_capacity(spec.edges);
+                for i in 0..spec.edges {
+                    let codec = &edge_codec;
+                    let addr = spec.tcp_addr.clone();
+                    edge_handles.push(sc.spawn(move || -> Result<EdgeReport> {
+                        let mut tp =
+                            Tcp::connect(&addr).with_context(|| format!("connecting {addr}"))?;
+                        multi::run_edge(
+                            codec,
+                            &mut tp,
+                            spec.steps,
+                            key_seed,
+                            spec.seed.wrapping_add(i as u64),
+                            spec.batch,
+                            spec.d,
+                        )
+                    }));
+                }
+                let mut edges = Vec::with_capacity(spec.edges);
+                for h in edge_handles {
+                    edges.push(
+                        h.join()
+                            .map_err(|_| C3Error::msg("edge thread panicked"))??,
+                    );
+                }
+                let cloud = cloud_handle
+                    .join()
+                    .map_err(|_| C3Error::msg("cloud thread panicked"))??;
+                Ok((cloud, edges))
+            })?
+        }
+    };
+
+    Ok(MultiRunOutput { cloud, edges, wall_seconds: t0.elapsed().as_secs_f64() })
 }
 
 /// Read classes from the model manifest (single source of truth).

@@ -2,14 +2,15 @@
 //! codec.  Drives the training loop (it is the data owner, as in the paper's
 //! SL formulation) and records all metrics.
 
-use anyhow::{bail, Context, Result};
-
 use super::run_codec::RunCodec;
+use crate::bail;
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, Dataset, Loader};
 use crate::metrics::{RunRecorder, StepRecord};
+use crate::runtime::xla_stub as xla;
 use crate::runtime::{AdamState, Engine, ModelRuntime};
 use crate::transport::{Msg, Transport};
+use crate::util::error::{Context, Result};
 use crate::util::timer::Timer;
 
 pub struct EdgeWorker {
@@ -160,7 +161,7 @@ pub(crate) fn build_codec(engine: &Engine, cfg: &ExperimentConfig, role: &str) -
             CodecVenue::Host => {
                 // d_tx comes from the model manifest; read it cheaply.
                 let manifest = crate::runtime::ModelManifest::load(cfg.model_dir())?;
-                RunCodec::host(key_seed(cfg), r, manifest.d_tx)
+                RunCodec::host(key_seed(cfg), r, manifest.d_tx, cfg.codec_workers)
             }
         },
     })

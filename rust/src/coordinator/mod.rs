@@ -23,9 +23,11 @@
 pub mod cloud;
 pub mod driver;
 pub mod edge;
+pub mod multi;
 pub mod run_codec;
 
 pub use cloud::CloudWorker;
-pub use driver::{run_experiment, RunOutput};
+pub use driver::{run_experiment, run_multi_edge, MultiEdgeSpec, MultiRunOutput, RunOutput};
 pub use edge::EdgeWorker;
+pub use multi::{ClientReport, EdgeReport, MultiStats};
 pub use run_codec::RunCodec;

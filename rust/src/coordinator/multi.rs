@@ -1,0 +1,284 @@
+//! Multi-client coordinator: one cloud serving N concurrent edges,
+//! thread-per-client, with per-client and aggregate `LinkStats`.
+//!
+//! The PJRT model halves are artifact-gated (runtime::xla_stub), so this
+//! scenario exercises the full *codec + transport + accounting* stack
+//! host-natively: each edge holds a feature buffer z, uplinks `encode(z)`
+//! with labels, and the cloud decodes, evaluates the quadratic probe
+//! objective L = ½·mean(ẑ²), encodes the gradient gẑ = ẑ/N and downlinks it
+//! with the step stats — the same message protocol the single-edge
+//! CloudWorker speaks.  The edge applies the decoded gradient to z (toy
+//! SGD), so the objective genuinely decreases end-to-end *through* the lossy
+//! codec in both directions — the property the tests assert.
+//!
+//! Both endpoints build their `RunCodec` from the shared key seed; the R×D
+//! key matrix never crosses the wire (same key-agreement contract as the
+//! single-edge coordinator).
+
+use super::run_codec::RunCodec;
+use crate::tensor::{Labels, Tensor};
+use crate::transport::{Msg, Transport};
+use crate::util::error::{C3Error, Context, Result};
+use crate::util::rng::Rng;
+use crate::{bail, ensure};
+
+/// Per-client report from the multi-edge cloud (its half of the link).
+#[derive(Clone, Debug)]
+pub struct ClientReport {
+    /// Accept-order client index.
+    pub client: usize,
+    pub steps: u64,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub tx_msgs: u64,
+    pub rx_msgs: u64,
+    pub last_loss: f32,
+}
+
+/// Aggregated multi-client stats.
+#[derive(Clone, Debug, Default)]
+pub struct MultiStats {
+    pub per_client: Vec<ClientReport>,
+}
+
+impl MultiStats {
+    pub fn total_tx(&self) -> u64 {
+        self.per_client.iter().map(|c| c.tx_bytes).sum()
+    }
+
+    pub fn total_rx(&self) -> u64 {
+        self.per_client.iter().map(|c| c.rx_bytes).sum()
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.per_client.iter().map(|c| c.steps).sum()
+    }
+}
+
+/// Per-edge report (the edge's half of the link).
+#[derive(Clone, Debug)]
+pub struct EdgeReport {
+    pub steps: u64,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+}
+
+fn probe_loss(zhat: &Tensor) -> f32 {
+    let n = zhat.len().max(1) as f32;
+    0.5 * zhat.data().iter().map(|v| v * v).sum::<f32>() / n
+}
+
+/// Serve one edge until it sends Shutdown: decode uplink features, evaluate
+/// the probe objective, encode the gradients back.
+pub fn serve_one(
+    codec: &RunCodec,
+    transport: &mut dyn Transport,
+    client: usize,
+) -> Result<ClientReport> {
+    let mut pending: Option<(u64, Tensor)> = None;
+    let mut steps = 0u64;
+    let mut last_loss = 0.0f32;
+    loop {
+        match transport.recv()? {
+            Msg::KeySeed { .. } => {
+                // keys already derived from the shared seed at construction
+            }
+            Msg::Features { step, tensor } => {
+                ensure!(
+                    pending.is_none(),
+                    "client {client}: Features while a step is pending"
+                );
+                pending = Some((step, tensor));
+            }
+            Msg::TrainLabels { step, .. } => {
+                let (fstep, s) = pending
+                    .take()
+                    .with_context(|| format!("client {client}: labels before features"))?;
+                ensure!(
+                    fstep == step,
+                    "client {client}: label step mismatch {step} != {fstep}"
+                );
+                let zhat = codec.decode(&s)?;
+                let loss = probe_loss(&zhat);
+                // gẑ = dL/dẑ = ẑ/N, compressed for the downlink like the
+                // real cloud compresses cut-layer gradients
+                let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
+                let gs = codec.encode(&gz)?;
+                last_loss = loss;
+                steps += 1;
+                transport.send(&Msg::Gradients { step, tensor: gs })?;
+                transport.send(&Msg::StepStats { step, loss, ncorrect: 0.0 })?;
+            }
+            Msg::EvalFeatures { step, tensor, labels } => {
+                let zhat = codec.decode(&tensor)?;
+                let loss = probe_loss(&zhat);
+                transport.send(&Msg::EvalStats {
+                    step,
+                    loss,
+                    ncorrect: labels.len() as f32,
+                })?;
+            }
+            Msg::Shutdown => break,
+            other => bail!("client {client}: unexpected message {other:?}"),
+        }
+    }
+    let stats = transport.stats();
+    Ok(ClientReport {
+        client,
+        steps,
+        tx_bytes: stats.tx(),
+        rx_bytes: stats.rx(),
+        tx_msgs: stats.tx_msgs.load(std::sync::atomic::Ordering::Relaxed),
+        rx_msgs: stats.rx_msgs.load(std::sync::atomic::Ordering::Relaxed),
+        last_loss,
+    })
+}
+
+/// Serve N edges concurrently, one OS thread per client.
+pub fn serve_clients<T: Transport>(codec: &RunCodec, transports: Vec<T>) -> Result<MultiStats> {
+    let mut reports = std::thread::scope(|sc| -> Result<Vec<ClientReport>> {
+        let handles: Vec<_> = transports
+            .into_iter()
+            .enumerate()
+            .map(|(ci, mut tp)| sc.spawn(move || serve_one(codec, &mut tp, ci)))
+            .collect();
+        let mut reports = Vec::with_capacity(handles.len());
+        for h in handles {
+            reports.push(
+                h.join()
+                    .map_err(|_| C3Error::msg("cloud client thread panicked"))??,
+            );
+        }
+        Ok(reports)
+    })?;
+    reports.sort_by_key(|r| r.client);
+    Ok(MultiStats { per_client: reports })
+}
+
+/// One synthetic edge: hold a (B, D) feature buffer, uplink `encode(z)`,
+/// apply the decoded downlink gradient with a toy SGD step, repeat.  The
+/// probe loss contracts geometrically when the codec round trip is faithful,
+/// which is exactly what the multi-edge tests assert.
+pub fn run_edge(
+    codec: &RunCodec,
+    transport: &mut dyn Transport,
+    steps: u64,
+    key_seed: u64,
+    data_seed: u64,
+    batch: usize,
+    d: usize,
+) -> Result<EdgeReport> {
+    ensure!(steps >= 1, "edge needs at least one step");
+    let mut rng = Rng::new(data_seed);
+    let mut zdata = vec![0.0f32; batch * d];
+    rng.fill_normal(&mut zdata, 0.0, 1.0);
+    let mut z = Tensor::from_vec(&[batch, d], zdata);
+
+    // Key agreement: announce the seed the codec keys derive from (the keys
+    // never cross the wire).  This is the codec-construction seed, NOT the
+    // per-edge data seed — a cloud that honors the handshake must arrive at
+    // the same KeySet this edge encodes with.
+    transport.send(&Msg::KeySeed { seed: key_seed })?;
+
+    // Effective update: z ← (I − c·A²)z with A = D∘E.  decode = encodeᵀ
+    // makes A PSD, but its top eigenvalue is max_f Σ_i |K̂_i(f)|² (well above
+    // 1 for random keys), so c must be small for every mode to contract:
+    // c·μ_max² < 2.  c = 0.005 leaves a wide margin at the R/D used here
+    // while still shrinking the probe loss measurably over a few steps.
+    let lr = 0.005f32 * (batch * d) as f32;
+    let (mut first_loss, mut last_loss) = (0.0f32, 0.0f32);
+    for step in 0..steps {
+        let s = codec.encode(&z)?;
+        transport.send(&Msg::Features { step, tensor: s })?;
+        transport.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })?;
+
+        let gs = match transport.recv()? {
+            Msg::Gradients { step: gstep, tensor } => {
+                ensure!(gstep == step, "gradient step mismatch: {gstep} != {step}");
+                tensor
+            }
+            other => bail!("edge expected Gradients, got {other:?}"),
+        };
+        let loss = match transport.recv()? {
+            Msg::StepStats { loss, .. } => loss,
+            other => bail!("edge expected StepStats, got {other:?}"),
+        };
+
+        let gz = codec.decode(&gs)?;
+        ensure!(
+            gz.shape() == z.shape(),
+            "gradient shape {:?} vs features {:?}",
+            gz.shape(),
+            z.shape()
+        );
+        z = z.sub(&gz.scale(lr));
+
+        if step == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+    }
+    transport.send(&Msg::Shutdown)?;
+    let stats = transport.stats();
+    Ok(EdgeReport {
+        steps,
+        first_loss,
+        last_loss,
+        tx_bytes: stats.tx(),
+        rx_bytes: stats.rx(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::inproc_pair;
+
+    #[test]
+    fn single_client_roundtrip_decreases_probe_loss() {
+        let (mut etp, ctp) = inproc_pair();
+        let cloud_codec = RunCodec::host(7, 2, 128, 1);
+        let edge_codec = RunCodec::host(7, 2, 128, 1);
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(&cloud_codec, &mut tp, 0)
+            });
+            let edge = run_edge(&edge_codec, &mut etp, 8, 7, 3, 4, 128).unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        assert_eq!(cloud.steps, 8);
+        assert_eq!(edge.steps, 8);
+        assert!(
+            edge.last_loss < edge.first_loss,
+            "probe loss did not decrease: {} -> {}",
+            edge.first_loss,
+            edge.last_loss
+        );
+        // the two halves of the link must agree byte-for-byte
+        assert_eq!(cloud.rx_bytes, edge.tx_bytes);
+        assert_eq!(cloud.tx_bytes, edge.rx_bytes);
+    }
+
+    #[test]
+    fn serve_clients_reports_per_client() {
+        let (mut e1, c1) = inproc_pair();
+        let (mut e2, c2) = inproc_pair();
+        let cloud_codec = RunCodec::host(9, 2, 64, 1);
+        let edge_codec = RunCodec::host(9, 2, 64, 1);
+        let stats = std::thread::scope(|sc| {
+            let cloud = sc.spawn(|| serve_clients(&cloud_codec, vec![c1, c2]));
+            let a = run_edge(&edge_codec, &mut e1, 3, 9, 1, 4, 64).unwrap();
+            let b = run_edge(&edge_codec, &mut e2, 4, 9, 2, 4, 64).unwrap();
+            let stats = cloud.join().unwrap().unwrap();
+            assert_eq!(stats.total_rx(), a.tx_bytes + b.tx_bytes);
+            stats
+        });
+        assert_eq!(stats.per_client.len(), 2);
+        assert_eq!(stats.per_client[0].client, 0);
+        assert_eq!(stats.per_client[1].client, 1);
+        assert_eq!(stats.total_steps(), 3 + 4);
+    }
+}

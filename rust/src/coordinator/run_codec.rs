@@ -8,12 +8,11 @@
 //! Host and Artifact venues must agree numerically when fed the same keys;
 //! rust/tests/integration.rs checks exactly that.
 
-use anyhow::Result;
-
 use crate::compress::{C3Codec, Codec};
 use crate::hdc::{Backend, KeySet};
 use crate::runtime::{CodecRuntime, Engine};
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 pub enum RunCodec {
@@ -23,10 +22,15 @@ pub enum RunCodec {
 }
 
 impl RunCodec {
-    /// Host venue: keys from the (deterministic) rust PRNG at `seed`.
-    pub fn host(seed: u64, r: usize, d: usize) -> Self {
+    /// Host venue: keys from the (deterministic) rust PRNG at `seed`,
+    /// group-parallel across `workers` threads (1 = serial).
+    pub fn host(seed: u64, r: usize, d: usize, workers: usize) -> Self {
         let mut rng = Rng::new(seed);
-        RunCodec::Host(C3Codec::new(KeySet::generate(&mut rng, r, d), Backend::Auto))
+        RunCodec::Host(C3Codec::with_workers(
+            KeySet::generate(&mut rng, r, d),
+            Backend::Auto,
+            workers,
+        ))
     }
 
     /// Artifact venue: keys from the gen_keys artifact at `seed`.

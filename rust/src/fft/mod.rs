@@ -42,23 +42,50 @@ impl C64 {
 }
 
 /// Twiddle-factor table for a given power-of-two length, reused across calls.
+///
+/// Two kernels share the tables:
+/// * [`forward`](FftPlan::forward) / [`inverse`](FftPlan::inverse) — the seed
+///   reference transform, kept verbatim as the numerics oracle and the
+///   allocating-path baseline in `benches/codec_hotpath.rs`.
+/// * [`forward_into`](FftPlan::forward_into) /
+///   [`inverse_into`](FftPlan::inverse_into) — the scratch kernel: same
+///   butterfly schedule and twiddle values (so it is **bit-identical** to the
+///   reference), but with a precomputed bit-reversal table, a separate
+///   exact-conjugate inverse twiddle table (no per-butterfly branch), and
+///   iterator-driven inner loops (no bounds checks).
 #[derive(Clone, Debug)]
 pub struct FftPlan {
     pub n: usize,
     /// twiddles[k] = exp(-2πi k / n) for k < n/2
     twiddles: Vec<C64>,
+    /// conj(twiddles) — exact sign flips, so the scratch kernel's inverse
+    /// matches the reference's per-butterfly `w.conj()` bit for bit.
+    itwiddles: Vec<C64>,
+    /// Precomputed bit-reversal permutation for the scratch kernel.
+    bitrev: Vec<u32>,
 }
 
 impl FftPlan {
     pub fn new(n: usize) -> Self {
         assert!(n.is_power_of_two(), "FftPlan requires power-of-two n, got {n}");
-        let twiddles = (0..n / 2)
+        let twiddles: Vec<C64> = (0..n / 2)
             .map(|k| {
                 let ang = -2.0 * PI * k as f64 / n as f64;
                 C64::new(ang.cos(), ang.sin())
             })
             .collect();
-        FftPlan { n, twiddles }
+        let itwiddles = twiddles.iter().map(|w| w.conj()).collect();
+        let bits = n.trailing_zeros();
+        let bitrev = (0..n)
+            .map(|i| {
+                if bits == 0 {
+                    0
+                } else {
+                    (i.reverse_bits() >> (usize::BITS - bits)) as u32
+                }
+            })
+            .collect();
+        FftPlan { n, twiddles, itwiddles, bitrev }
     }
 
     /// In-place forward FFT (decimation in time, bit-reversal permutation).
@@ -107,6 +134,52 @@ impl FftPlan {
             len <<= 1;
         }
     }
+
+    /// In-place forward FFT through the scratch kernel.  Bit-identical to
+    /// [`FftPlan::forward`]; no allocation, no per-butterfly branches, no
+    /// bounds checks in the butterfly loop.
+    pub fn forward_into(&self, buf: &mut [C64]) {
+        self.transform_into(buf, &self.twiddles);
+    }
+
+    /// In-place inverse FFT (with the 1/n normalization) through the scratch
+    /// kernel.  Bit-identical to [`FftPlan::inverse`].
+    pub fn inverse_into(&self, buf: &mut [C64]) {
+        self.transform_into(buf, &self.itwiddles);
+        let inv = 1.0 / self.n as f64;
+        for c in buf.iter_mut() {
+            c.re *= inv;
+            c.im *= inv;
+        }
+    }
+
+    fn transform_into(&self, buf: &mut [C64], twiddles: &[C64]) {
+        let n = self.n;
+        assert_eq!(buf.len(), n);
+        for (i, &j) in self.bitrev.iter().enumerate() {
+            let j = j as usize;
+            if j > i {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            for chunk in buf.chunks_exact_mut(len) {
+                let (lo, hi) = chunk.split_at_mut(half);
+                for ((a, b), &w) in
+                    lo.iter_mut().zip(hi.iter_mut()).zip(twiddles.iter().step_by(step))
+                {
+                    let t = b.mul(w);
+                    let u = *a;
+                    *a = u.add(t);
+                    *b = u.sub(t);
+                }
+            }
+            len <<= 1;
+        }
+    }
 }
 
 /// Forward FFT of a real f32 signal → full complex spectrum.
@@ -121,6 +194,28 @@ pub fn rfft(plan: &FftPlan, x: &[f32]) -> Vec<C64> {
 pub fn irfft(plan: &FftPlan, mut spec: Vec<C64>) -> Vec<f32> {
     plan.inverse(&mut spec);
     spec.iter().map(|c| c.re as f32).collect()
+}
+
+/// Forward FFT of a real signal into caller-owned scratch — the
+/// zero-allocation twin of [`rfft`] (bit-identical output).
+pub fn rfft_into(plan: &FftPlan, x: &[f32], out: &mut [C64]) {
+    assert_eq!(x.len(), plan.n);
+    assert_eq!(out.len(), plan.n);
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = C64::new(v as f64, 0.0);
+    }
+    plan.forward_into(out);
+}
+
+/// Inverse FFT of `spec` (consumed in place) writing the real part into
+/// `out` — the zero-allocation twin of [`irfft`] (bit-identical output).
+pub fn irfft_into(plan: &FftPlan, spec: &mut [C64], out: &mut [f32]) {
+    assert_eq!(spec.len(), plan.n);
+    assert_eq!(out.len(), plan.n);
+    plan.inverse_into(spec);
+    for (o, c) in out.iter_mut().zip(spec.iter()) {
+        *o = c.re as f32;
+    }
 }
 
 /// Circular convolution via the convolution theorem (power-of-two n).
@@ -252,6 +347,77 @@ mod tests {
     #[should_panic(expected = "power-of-two")]
     fn non_pow2_rejected() {
         FftPlan::new(12);
+    }
+
+    #[test]
+    fn scratch_kernel_bit_identical_to_reference() {
+        // The whole point of the scratch kernel: same floats, fewer cycles.
+        Prop::new("forward_into == forward (bits)", 20).run(|g| {
+            let n = g.pow2_in(1, 11);
+            let plan = FftPlan::new(n);
+            let x: Vec<C64> = g
+                .vec_normal(2 * n, 0.0, 1.0)
+                .chunks_exact(2)
+                .map(|p| C64::new(p[0] as f64, p[1] as f64))
+                .collect();
+            let mut a = x.clone();
+            let mut b = x.clone();
+            plan.forward(&mut a);
+            plan.forward_into(&mut b);
+            for (u, v) in a.iter().zip(&b) {
+                assert_eq!(u.re.to_bits(), v.re.to_bits());
+                assert_eq!(u.im.to_bits(), v.im.to_bits());
+            }
+            let mut a = x.clone();
+            let mut b = x;
+            plan.inverse(&mut a);
+            plan.inverse_into(&mut b);
+            for (u, v) in a.iter().zip(&b) {
+                assert_eq!(u.re.to_bits(), v.re.to_bits());
+                assert_eq!(u.im.to_bits(), v.im.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn rfft_into_matches_rfft_bitwise() {
+        Prop::new("rfft_into == rfft (bits)", 20).run(|g| {
+            let n = g.pow2_in(1, 10);
+            let plan = FftPlan::new(n);
+            let x = g.vec_normal(n, 0.0, 1.0);
+            let want = rfft(&plan, &x);
+            let mut spec = vec![C64::new(0.0, 0.0); n];
+            rfft_into(&plan, &x, &mut spec);
+            for (u, v) in want.iter().zip(&spec) {
+                assert_eq!(u.re.to_bits(), v.re.to_bits());
+                assert_eq!(u.im.to_bits(), v.im.to_bits());
+            }
+            let back_want = irfft(&plan, want);
+            let mut back = vec![0.0f32; n];
+            irfft_into(&plan, &mut spec, &mut back);
+            for (u, v) in back_want.iter().zip(&back) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_buffers_are_reusable() {
+        // Steady state: the same scratch buffer across many transforms must
+        // not leak state between calls.
+        let n = 64;
+        let plan = FftPlan::new(n);
+        let mut rng = Rng::new(17);
+        let mut spec = vec![C64::new(0.0, 0.0); n];
+        let mut out = vec![0.0f32; n];
+        for _ in 0..5 {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            rfft_into(&plan, &x, &mut spec);
+            irfft_into(&plan, &mut spec, &mut out);
+            for (a, b) in x.iter().zip(&out) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

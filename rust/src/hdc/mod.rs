@@ -11,7 +11,9 @@
 //!   encode  S^g = Σ_i K_i ⊛ Z_i^g            decode  Ẑ_i^g = K_i ⋆ S^g
 //!   keys    K_i ~ N(0, 1/D), unit-normalized.
 
-use crate::fft::{circular_convolve_fft, circular_correlate_fft, FftPlan};
+use crate::fft::{
+    circular_convolve_fft, circular_correlate_fft, irfft_into, rfft_into, C64, FftPlan,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -119,6 +121,28 @@ pub enum Backend {
     Auto,
 }
 
+/// Caller-owned scratch for the zero-allocation C3 engine.  One instance per
+/// worker thread; steady-state [`C3::encode_into`] / [`C3::decode_into`]
+/// perform zero heap allocations.
+pub struct C3Scratch {
+    /// rfft buffer for one feature / carrier row.
+    a: Vec<C64>,
+    /// Frequency-domain accumulator (encode) / product buffer (decode).
+    b: Vec<C64>,
+    /// Time-domain buffer for the direct backend's bind accumulation.
+    bound: Vec<f32>,
+}
+
+impl C3Scratch {
+    pub fn new(d: usize) -> Self {
+        C3Scratch {
+            a: vec![C64::new(0.0, 0.0); d],
+            b: vec![C64::new(0.0, 0.0); d],
+            bound: vec![0.0; d],
+        }
+    }
+}
+
 /// Host-side C3 encoder/decoder over a fixed KeySet.
 ///
 /// Perf (§Perf in EXPERIMENTS.md): with the FFT backend the key spectra are
@@ -126,16 +150,35 @@ pub enum Backend {
 /// frequency domain — one inverse FFT per *group* instead of one per bound
 /// feature, cutting FFT work from R·(2 fwd + 1 inv) to (R fwd + 1 inv) per
 /// group on encode (and symmetrically on decode).
+///
+/// Two engines expose that math:
+/// * [`encode_ref`](C3::encode_ref)/[`decode_ref`](C3::decode_ref) — the
+///   seed's allocating implementation, kept verbatim as the numerics oracle
+///   and the `host/fft` bench baseline;
+/// * [`encode_into`](C3::encode_into)/[`decode_into`](C3::decode_into) — the
+///   zero-allocation scratch engine (bit-identical to the reference; the
+///   property tests below check `to_bits` equality), with optional
+///   group-parallel fan-out across `workers` scoped threads (groups are
+///   embarrassingly parallel).  [`encode`](C3::encode)/[`decode`](C3::decode)
+///   route through this engine.
 pub struct C3 {
     pub keys: KeySet,
     plan: Option<FftPlan>,
     /// rfft of each key row (FFT backend only).
-    key_spectra: Vec<Vec<crate::fft::C64>>,
+    key_spectra: Vec<Vec<C64>>,
     backend: Backend,
+    /// Worker threads for group-parallel encode/decode (1 = serial).
+    workers: usize,
 }
 
 impl C3 {
     pub fn new(keys: KeySet, backend: Backend) -> Self {
+        Self::with_workers(keys, backend, 1)
+    }
+
+    /// Like [`C3::new`] with a group-parallel worker count (config:
+    /// `scheme.workers`).
+    pub fn with_workers(keys: KeySet, backend: Backend, workers: usize) -> Self {
         let use_fft = match backend {
             Backend::Direct => false,
             Backend::Fft => {
@@ -149,11 +192,19 @@ impl C3 {
             Some(p) => (0..keys.r).map(|i| crate::fft::rfft(p, keys.key(i))).collect(),
             None => Vec::new(),
         };
-        C3 { keys, plan, key_spectra, backend }
+        C3 { keys, plan, key_spectra, backend, workers: workers.max(1) }
     }
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
     }
 
     fn bind(&self, i: usize, z: &[f32], out: &mut [f32]) {
@@ -176,29 +227,206 @@ impl C3 {
         }
     }
 
-    /// Encode a batch (B, D) → (B/R, D).  Groups are consecutive rows,
-    /// matching python/compile/split.py's make_c3_encode.
-    pub fn encode(&self, z: &Tensor) -> Tensor {
+    /// Validate an encode input (B, D) and return the group count B/R.
+    fn encode_groups(&self, z: &Tensor) -> usize {
         let (r, d) = (self.keys.r, self.keys.d);
         assert_eq!(z.ndim(), 2);
         assert_eq!(z.shape()[1], d, "feature dim mismatch");
         let b = z.shape()[0];
         assert_eq!(b % r, 0, "batch {b} not divisible by R={r}");
-        let g = b / r;
-        let mut out = vec![0.0f32; g * d];
+        b / r
+    }
+
+    /// Validate a decode input (G, D) and return the group count G.
+    fn decode_groups(&self, s: &Tensor) -> usize {
+        assert_eq!(s.ndim(), 2);
+        assert_eq!(s.shape()[1], self.keys.d);
+        s.shape()[0]
+    }
+
+    /// Encode one group of R consecutive rows (`zrows`, len R·D) into the
+    /// carrier `out` (len D).  Zero allocations.
+    fn encode_group(&self, zrows: &[f32], out: &mut [f32], scratch: &mut C3Scratch) {
+        let (r, d) = (self.keys.r, self.keys.d);
+        debug_assert_eq!(zrows.len(), r * d);
+        debug_assert_eq!(out.len(), d);
         match &self.plan {
             Some(plan) => {
                 // frequency-domain superposition: Σ_i K̂_i ⊙ ẑ_i, ONE irfft
-                let mut acc = vec![crate::fft::C64::new(0.0, 0.0); d];
+                for acc in scratch.b.iter_mut() {
+                    *acc = C64::new(0.0, 0.0);
+                }
+                for i in 0..r {
+                    rfft_into(plan, &zrows[i * d..(i + 1) * d], &mut scratch.a);
+                    for ((acc, k), zv) in
+                        scratch.b.iter_mut().zip(&self.key_spectra[i]).zip(scratch.a.iter())
+                    {
+                        *acc = acc.add(k.mul(*zv));
+                    }
+                }
+                irfft_into(plan, &mut scratch.b, out);
+            }
+            None => {
+                out.fill(0.0);
+                for i in 0..r {
+                    bind_direct(self.keys.key(i), &zrows[i * d..(i + 1) * d], &mut scratch.bound);
+                    for (o, v) in out.iter_mut().zip(&scratch.bound) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode one carrier row (`srow`, len D) into R feature rows (`out`,
+    /// len R·D).  Zero allocations.
+    fn decode_group(&self, srow: &[f32], out: &mut [f32], scratch: &mut C3Scratch) {
+        let (r, d) = (self.keys.r, self.keys.d);
+        debug_assert_eq!(srow.len(), d);
+        debug_assert_eq!(out.len(), r * d);
+        match &self.plan {
+            Some(plan) => {
+                // ONE forward FFT per group, reused for all R unbinds
+                rfft_into(plan, srow, &mut scratch.a);
+                for i in 0..r {
+                    for ((p, k), sv) in
+                        scratch.b.iter_mut().zip(&self.key_spectra[i]).zip(scratch.a.iter())
+                    {
+                        *p = k.conj().mul(*sv);
+                    }
+                    irfft_into(plan, &mut scratch.b, &mut out[i * d..(i + 1) * d]);
+                }
+            }
+            None => {
+                for i in 0..r {
+                    unbind_direct(self.keys.key(i), srow, &mut out[i * d..(i + 1) * d]);
+                }
+            }
+        }
+    }
+
+    /// Zero-allocation encode: (B, D) rows → `out` (len B/R·D) using
+    /// caller-owned scratch.  Bit-identical to [`C3::encode_ref`].
+    pub fn encode_into(&self, z: &Tensor, out: &mut [f32], scratch: &mut C3Scratch) {
+        let (r, d) = (self.keys.r, self.keys.d);
+        let g = self.encode_groups(z);
+        assert_eq!(out.len(), g * d, "encode output buffer length");
+        let zdata = z.data();
+        for (gi, orow) in out.chunks_exact_mut(d).enumerate() {
+            self.encode_group(&zdata[gi * r * d..(gi + 1) * r * d], orow, scratch);
+        }
+    }
+
+    /// Zero-allocation decode: (G, D) carriers → `out` (len G·R·D) using
+    /// caller-owned scratch.  Bit-identical to [`C3::decode_ref`].
+    pub fn decode_into(&self, s: &Tensor, out: &mut [f32], scratch: &mut C3Scratch) {
+        let (r, d) = (self.keys.r, self.keys.d);
+        let g = self.decode_groups(s);
+        assert_eq!(out.len(), g * r * d, "decode output buffer length");
+        for (gi, orows) in out.chunks_exact_mut(r * d).enumerate() {
+            self.decode_group(s.row(gi), orows, scratch);
+        }
+    }
+
+    /// Group-parallel encode across scoped worker threads.  Groups are
+    /// embarrassingly parallel and each worker owns its scratch, so the
+    /// result is bit-identical to the serial engine for any worker count.
+    pub fn par_encode_into(&self, z: &Tensor, out: &mut [f32], workers: usize) {
+        let (r, d) = (self.keys.r, self.keys.d);
+        let g = self.encode_groups(z);
+        assert_eq!(out.len(), g * d, "encode output buffer length");
+        let w = workers.max(1).min(g.max(1));
+        if w <= 1 {
+            let mut scratch = C3Scratch::new(d);
+            return self.encode_into(z, out, &mut scratch);
+        }
+        let per = (g + w - 1) / w;
+        let zdata = z.data();
+        std::thread::scope(|sc| {
+            for (ci, chunk) in out.chunks_mut(per * d).enumerate() {
+                let g0 = ci * per;
+                sc.spawn(move || {
+                    let mut scratch = C3Scratch::new(d);
+                    for (k, orow) in chunk.chunks_exact_mut(d).enumerate() {
+                        let gi = g0 + k;
+                        self.encode_group(&zdata[gi * r * d..(gi + 1) * r * d], orow, &mut scratch);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Group-parallel decode; see [`C3::par_encode_into`].
+    pub fn par_decode_into(&self, s: &Tensor, out: &mut [f32], workers: usize) {
+        let (r, d) = (self.keys.r, self.keys.d);
+        let g = self.decode_groups(s);
+        assert_eq!(out.len(), g * r * d, "decode output buffer length");
+        let w = workers.max(1).min(g.max(1));
+        if w <= 1 {
+            let mut scratch = C3Scratch::new(d);
+            return self.decode_into(s, out, &mut scratch);
+        }
+        let per = (g + w - 1) / w;
+        std::thread::scope(|sc| {
+            for (ci, chunk) in out.chunks_mut(per * r * d).enumerate() {
+                let g0 = ci * per;
+                sc.spawn(move || {
+                    let mut scratch = C3Scratch::new(d);
+                    for (k, orows) in chunk.chunks_exact_mut(r * d).enumerate() {
+                        self.decode_group(s.row(g0 + k), orows, &mut scratch);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Encode a batch (B, D) → (B/R, D).  Groups are consecutive rows,
+    /// matching python/compile/split.py's make_c3_encode.  Routes through
+    /// the scratch engine (parallel when `workers > 1`).
+    pub fn encode(&self, z: &Tensor) -> Tensor {
+        let d = self.keys.d;
+        let g = self.encode_groups(z);
+        let mut out = vec![0.0f32; g * d];
+        if self.workers > 1 {
+            self.par_encode_into(z, &mut out, self.workers);
+        } else {
+            let mut scratch = C3Scratch::new(d);
+            self.encode_into(z, &mut out, &mut scratch);
+        }
+        Tensor::from_vec(&[g, d], out)
+    }
+
+    /// Decode (B/R, D) → (B, D).  Routes through the scratch engine.
+    pub fn decode(&self, s: &Tensor) -> Tensor {
+        let (r, d) = (self.keys.r, self.keys.d);
+        let g = self.decode_groups(s);
+        let mut out = vec![0.0f32; g * r * d];
+        if self.workers > 1 {
+            self.par_decode_into(s, &mut out, self.workers);
+        } else {
+            let mut scratch = C3Scratch::new(d);
+            self.decode_into(s, &mut out, &mut scratch);
+        }
+        Tensor::from_vec(&[g * r, d], out)
+    }
+
+    /// The seed's allocating encode, kept verbatim: the numerics oracle the
+    /// engine must match bit for bit, and the `host/fft` (allocating) bench
+    /// baseline in `benches/codec_hotpath.rs`.
+    pub fn encode_ref(&self, z: &Tensor) -> Tensor {
+        let (r, d) = (self.keys.r, self.keys.d);
+        let g = self.encode_groups(z);
+        let mut out = vec![0.0f32; g * d];
+        match &self.plan {
+            Some(plan) => {
+                let mut acc = vec![C64::new(0.0, 0.0); d];
                 for gi in 0..g {
                     for a in acc.iter_mut() {
-                        *a = crate::fft::C64::new(0.0, 0.0);
+                        *a = C64::new(0.0, 0.0);
                     }
                     for i in 0..r {
                         let zs = crate::fft::rfft(plan, z.row(gi * r + i));
-                        for ((a, k), zv) in
-                            acc.iter_mut().zip(&self.key_spectra[i]).zip(&zs)
-                        {
+                        for ((a, k), zv) in acc.iter_mut().zip(&self.key_spectra[i]).zip(&zs) {
                             *a = a.add(k.mul(*zv));
                         }
                     }
@@ -222,21 +450,18 @@ impl C3 {
         Tensor::from_vec(&[g, d], out)
     }
 
-    /// Decode (B/R, D) → (B, D).
-    pub fn decode(&self, s: &Tensor) -> Tensor {
+    /// The seed's allocating decode; see [`C3::encode_ref`].
+    pub fn decode_ref(&self, s: &Tensor) -> Tensor {
         let (r, d) = (self.keys.r, self.keys.d);
-        assert_eq!(s.ndim(), 2);
-        assert_eq!(s.shape()[1], d);
-        let g = s.shape()[0];
+        let g = self.decode_groups(s);
         let b = g * r;
         let mut out = vec![0.0f32; b * d];
         match &self.plan {
             Some(plan) => {
-                // ONE forward FFT per group, reused for all R unbinds
                 for gi in 0..g {
                     let ss = crate::fft::rfft(plan, s.row(gi));
                     for i in 0..r {
-                        let spec: Vec<crate::fft::C64> = self.key_spectra[i]
+                        let spec: Vec<C64> = self.key_spectra[i]
                             .iter()
                             .zip(&ss)
                             .map(|(k, sv)| k.conj().mul(*sv))
@@ -456,6 +681,95 @@ mod tests {
         let rep = crosstalk_report(&c3, &z);
         assert!(rep.mean_cos > 0.2, "{rep:?}");
         assert!(rep.rel_crosstalk > 0.0);
+    }
+
+    fn assert_bits_eq(a: &Tensor, b: &Tensor, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what}: shape");
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn encode_into_bit_identical_to_allocating_encode() {
+        // The scratch engine must match the seed's allocating path bit for
+        // bit, on both backends — the contract that makes the perf work a
+        // pure refactor.
+        Prop::new("encode_into == encode_ref (bits)", 12).run(|g| {
+            let d = g.pow2_in(4, 9);
+            let r = *g.choose(&[1usize, 2, 4]);
+            let gcount = g.usize_in(1, 4);
+            let backend = *g.choose(&[Backend::Direct, Backend::Fft]);
+            let mut rng = Rng::new(101);
+            let ks = KeySet::generate(&mut rng, r, d);
+            let c3 = C3::new(ks, backend);
+            let z = Tensor::from_vec(&[gcount * r, d], g.vec_normal(gcount * r * d, 0.0, 1.0));
+
+            let want = c3.encode_ref(&z);
+            let mut out = vec![0.0f32; gcount * d];
+            let mut scratch = C3Scratch::new(d);
+            c3.encode_into(&z, &mut out, &mut scratch);
+            assert_bits_eq(&want, &Tensor::from_vec(&[gcount, d], out), "encode");
+            // the public encode routes through the same engine
+            assert_bits_eq(&want, &c3.encode(&z), "encode public");
+        });
+    }
+
+    #[test]
+    fn decode_into_bit_identical_to_allocating_decode() {
+        Prop::new("decode_into == decode_ref (bits)", 12).run(|g| {
+            let d = g.pow2_in(4, 9);
+            let r = *g.choose(&[1usize, 2, 4]);
+            let gcount = g.usize_in(1, 4);
+            let backend = *g.choose(&[Backend::Direct, Backend::Fft]);
+            let mut rng = Rng::new(103);
+            let ks = KeySet::generate(&mut rng, r, d);
+            let c3 = C3::new(ks, backend);
+            let s = Tensor::from_vec(&[gcount, d], g.vec_normal(gcount * d, 0.0, 1.0));
+
+            let want = c3.decode_ref(&s);
+            let mut out = vec![0.0f32; gcount * r * d];
+            let mut scratch = C3Scratch::new(d);
+            c3.decode_into(&s, &mut out, &mut scratch);
+            assert_bits_eq(&want, &Tensor::from_vec(&[gcount * r, d], out), "decode");
+            assert_bits_eq(&want, &c3.decode(&s), "decode public");
+        });
+    }
+
+    #[test]
+    fn parallel_engine_matches_serial_bitwise() {
+        // Groups are independent, so any worker count must give the exact
+        // same bytes.
+        let (r, d, gcount) = (4usize, 256usize, 8usize);
+        let mut rng = Rng::new(77);
+        let ks = KeySet::generate(&mut rng, r, d);
+        let z = rand_tensor(&mut rng, &[gcount * r, d]);
+        let serial = C3::new(ks.clone(), Backend::Fft);
+        let want_e = serial.encode(&z);
+        let want_d = serial.decode(&want_e);
+        for workers in [2usize, 3, 5, 16] {
+            let par = C3::with_workers(ks.clone(), Backend::Fft, workers);
+            assert_eq!(par.workers(), workers);
+            assert_bits_eq(&want_e, &par.encode(&z), "par encode");
+            assert_bits_eq(&want_d, &par.decode(&want_e), "par decode");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // One scratch across many calls: no state may leak between calls.
+        let (r, d) = (2usize, 128usize);
+        let mut rng = Rng::new(21);
+        let ks = KeySet::generate(&mut rng, r, d);
+        let c3 = C3::new(ks, Backend::Fft);
+        let mut scratch = C3Scratch::new(d);
+        let mut out = vec![0.0f32; d];
+        for _ in 0..4 {
+            let z = rand_tensor(&mut rng, &[r, d]);
+            let want = c3.encode_ref(&z);
+            c3.encode_into(&z, &mut out, &mut scratch);
+            assert_bits_eq(&want, &Tensor::from_vec(&[1, d], out.clone()), "reuse");
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //!   train      in-proc edge+cloud training run (one process, two actors)
 //!   edge       edge worker over TCP (connects to a cloud)
 //!   cloud      cloud worker over TCP (listens for an edge)
+//!   multi      N concurrent edges against one multi-client cloud (host codec)
 //!   flops      print the paper's Table 1/Table 2 params & FLOPs analysis
 //!   comm       print the communication-cost report (bytes + link times)
 //!   crosstalk  Eq. (4) crosstalk/SNR analysis over (R, D)
@@ -14,11 +15,10 @@
 //!   c3sl cloud --config configs/tiny_tcp.toml   # terminal 1
 //!   c3sl edge  --config configs/tiny_tcp.toml   # terminal 2
 
-use anyhow::{bail, Context, Result};
-
+use c3sl::bail;
 use c3sl::config::cli::Args;
 use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
-use c3sl::coordinator::{run_experiment, CloudWorker, EdgeWorker};
+use c3sl::coordinator::{run_experiment, run_multi_edge, CloudWorker, EdgeWorker, MultiEdgeSpec};
 use c3sl::data::open_dataset;
 use c3sl::flops::{bottlenetpp_cost, bottlenetpp_cost_published, c3sl_cost, CutSpec};
 use c3sl::hdc::{crosstalk_report, Backend, KeySet, C3};
@@ -27,6 +27,7 @@ use c3sl::sim::comm_report;
 use c3sl::tensor::Tensor;
 use c3sl::transport::tcp::Tcp;
 use c3sl::transport::Transport;
+use c3sl::util::error::{Context, Result};
 use c3sl::util::rng::Rng;
 
 fn main() {
@@ -44,7 +45,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "c3sl {} — C3-SL split-learning coordinator\n\
-         usage: c3sl <train|edge|cloud|flops|comm|crosstalk> [--flags]\n\
+         usage: c3sl <train|edge|cloud|multi|flops|comm|crosstalk> [--flags]\n\
          see README.md for the full flag reference",
         c3sl::version()
     );
@@ -56,6 +57,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "edge" => cmd_edge(&args),
         "cloud" => cmd_cloud(&args),
+        "multi" => cmd_multi(&args),
         "flops" => cmd_flops(),
         "comm" => cmd_comm(&args),
         "crosstalk" => cmd_crosstalk(&args),
@@ -109,6 +111,12 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(addr) = args.get("addr") {
         cfg.tcp_addr = addr.into();
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.codec_workers = w;
+    }
+    if let Some(n) = args.get_usize("edges")? {
+        cfg.num_edges = n;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -165,11 +173,73 @@ fn cmd_cloud(args: &Args) -> Result<()> {
     let engine = Engine::cpu()?;
     let mut cloud = CloudWorker::new(&engine, &cfg)?;
     println!("[cloud] listening on {}", cfg.tcp_addr);
-    let mut tp: Box<dyn Transport> = Box::new(Tcp::listen(&cfg.tcp_addr)?);
-    cloud.run(tp.as_mut())?;
+    // Serve `transport.edges` edge sessions back to back, reusing the model
+    // state (continual training).  Concurrent clients are the codec-venue
+    // `c3sl multi` scenario (coordinator::multi).
+    let listener = Tcp::bind(&cfg.tcp_addr)?;
+    for session in 0..cfg.num_edges {
+        let mut tp: Box<dyn Transport> = Box::new(Tcp::accept(&listener)?);
+        println!("[cloud] serving edge session {}/{}", session + 1, cfg.num_edges);
+        cloud.run(tp.as_mut())?;
+    }
     println!(
         "[cloud] served; mean step latency {:.4}s",
         cloud.step_latency.mean()
+    );
+    Ok(())
+}
+
+/// Multi-edge codec scenario: N concurrent edges against one cloud
+/// (thread-per-client), host codec venue — runs without AOT artifacts.
+/// `--config` seeds the defaults (transport.edges, scheme.r/workers,
+/// train.steps/seed, transport kind/addr, link model); flags override.
+fn cmd_multi(args: &Args) -> Result<()> {
+    let base = match args.get("config") {
+        Some(path) => Some(
+            ExperimentConfig::load(path).with_context(|| format!("loading config {path}"))?,
+        ),
+        None => None,
+    };
+    let b = base.as_ref();
+    let def = MultiEdgeSpec::default();
+    let spec = MultiEdgeSpec {
+        edges: args.get_usize("edges")?.or(b.map(|c| c.num_edges)).unwrap_or(def.edges),
+        steps: args.get_u64("steps")?.or(b.map(|c| c.steps as u64)).unwrap_or(def.steps),
+        r: args.get_usize("r")?.or(b.map(|c| c.scheme.ratio())).unwrap_or(def.r),
+        d: args.get_usize("d")?.unwrap_or(def.d),
+        batch: args.get_usize("batch")?.unwrap_or(def.batch),
+        seed: args.get_u64("seed")?.or(b.map(|c| c.seed)).unwrap_or(def.seed),
+        workers: args.get_usize("workers")?.or(b.map(|c| c.codec_workers)).unwrap_or(def.workers),
+        transport: if args.has("tcp") {
+            TransportKind::Tcp
+        } else {
+            b.map(|c| c.transport).unwrap_or(def.transport)
+        },
+        tcp_addr: args
+            .get("addr")
+            .map(Into::into)
+            .or_else(|| b.map(|c| c.tcp_addr.clone()))
+            .unwrap_or(def.tcp_addr),
+        link: b.and_then(|c| c.link),
+    };
+    println!(
+        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} transport={:?}",
+        spec.edges, spec.steps, spec.r, spec.d, spec.batch, spec.workers, spec.transport
+    );
+    let out = run_multi_edge(&spec)?;
+    println!("{:>7} {:>7} {:>12} {:>12} {:>12}", "client", "steps", "rx bytes", "tx bytes", "last loss");
+    for c in &out.cloud.per_client {
+        println!(
+            "{:>7} {:>7} {:>12} {:>12} {:>12.5}",
+            c.client, c.steps, c.rx_bytes, c.tx_bytes, c.last_loss
+        );
+    }
+    println!(
+        "[c3sl] aggregate: steps={} rx={}B tx={}B wall={:.2}s",
+        out.cloud.total_steps(),
+        out.cloud.total_rx(),
+        out.cloud.total_tx(),
+        out.wall_seconds
     );
     Ok(())
 }

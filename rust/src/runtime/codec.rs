@@ -3,7 +3,9 @@
 
 use std::path::PathBuf;
 
-use anyhow::{ensure, Context, Result};
+use crate::ensure;
+use crate::runtime::xla_stub as xla;
+use crate::util::error::{Context, Result};
 
 use super::convert::{literal_to_tensor, seed_literal, tensor_to_literal};
 use super::engine::{Engine, Executable};

@@ -1,8 +1,8 @@
 //! Tensor / Literal conversions.
 
-use anyhow::{anyhow, Result};
-
+use crate::runtime::xla_stub as xla;
 use crate::tensor::{Labels, Tensor};
+use crate::util::error::{C3Error, Result};
 
 /// f32 Tensor → XLA literal.
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
@@ -61,7 +61,7 @@ pub fn scalar_literal(x: f32) -> Result<xla::Literal> {
 /// Scalar f32 out of a literal (rank 0 or single element).
 pub fn literal_scalar(l: &xla::Literal) -> Result<f32> {
     let v = l.to_vec::<f32>()?;
-    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+    v.first().copied().ok_or_else(|| C3Error::msg("empty literal"))
 }
 
 #[cfg(test)]

@@ -4,7 +4,8 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use crate::runtime::xla_stub as xla;
+use crate::util::error::{Context, Result};
 
 /// Shared PJRT CPU client; cheap to clone (the underlying client is
 /// reference-counted by the xla crate).

@@ -4,7 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{C3Error, Context, Result};
 
 use crate::util::json::{self, Json};
 
@@ -23,14 +23,14 @@ impl TensorSpec {
         let shape = j
             .get("shape")
             .and_then(|s| s.as_arr())
-            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .ok_or_else(|| C3Error::msg("spec missing shape"))?
             .iter()
-            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .map(|v| v.as_usize().ok_or_else(|| C3Error::msg("bad dim")))
             .collect::<Result<Vec<_>>>()?;
         let dtype = j
             .get("dtype")
             .and_then(|d| d.as_str())
-            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .ok_or_else(|| C3Error::msg("spec missing dtype"))?
             .to_string();
         Ok(TensorSpec { shape, dtype })
     }
@@ -47,13 +47,13 @@ fn parse_artifacts(j: &Json) -> Result<BTreeMap<String, ArtifactSpec>> {
     let obj = j
         .get("artifacts")
         .and_then(|a| a.as_obj())
-        .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        .ok_or_else(|| C3Error::msg("manifest missing artifacts"))?;
     let mut out = BTreeMap::new();
     for (name, spec) in obj {
         let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
             spec.get(key)
                 .and_then(|a| a.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                .ok_or_else(|| C3Error::msg(format!("artifact {name} missing {key}")))?
                 .iter()
                 .map(TensorSpec::from_json)
                 .collect()
@@ -64,7 +64,7 @@ fn parse_artifacts(j: &Json) -> Result<BTreeMap<String, ArtifactSpec>> {
                 file: spec
                     .get("file")
                     .and_then(|f| f.as_str())
-                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .ok_or_else(|| C3Error::msg(format!("artifact {name} missing file")))?
                     .to_string(),
                 args: parse_list("args")?,
                 outputs: parse_list("outputs")?,
@@ -99,12 +99,12 @@ impl ModelManifest {
         let field = |k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(|v| v.as_usize())
-                .ok_or_else(|| anyhow!("manifest missing {k}"))
+                .ok_or_else(|| C3Error::msg(format!("manifest missing {k}")))
         };
         let spec_list = |k: &str| -> Result<Vec<TensorSpec>> {
             j.get(k)
                 .and_then(|a| a.as_arr())
-                .ok_or_else(|| anyhow!("manifest missing {k}"))?
+                .ok_or_else(|| C3Error::msg(format!("manifest missing {k}")))?
                 .iter()
                 .map(TensorSpec::from_json)
                 .collect()
@@ -127,7 +127,7 @@ impl ModelManifest {
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("model {} has no artifact {name}", self.key))
+            .ok_or_else(|| C3Error::msg(format!("model {} has no artifact {name}", self.key)))
     }
 
     pub fn edge_param_count(&self) -> usize {
@@ -159,7 +159,7 @@ impl CodecManifest {
         let field = |k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(|v| v.as_usize())
-                .ok_or_else(|| anyhow!("codec manifest missing {k}"))
+                .ok_or_else(|| C3Error::msg(format!("codec manifest missing {k}")))
         };
         Ok(CodecManifest {
             r: field("r")?,
@@ -174,7 +174,7 @@ impl CodecManifest {
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("codec has no artifact {name}"))
+            .ok_or_else(|| C3Error::msg(format!("codec has no artifact {name}")))
     }
 }
 

@@ -6,7 +6,9 @@
 
 use std::path::PathBuf;
 
-use anyhow::{ensure, Context, Result};
+use crate::ensure;
+use crate::runtime::xla_stub as xla;
+use crate::util::error::{Context, Result};
 
 use super::convert::{
     labels_to_literal, literal_scalar, literal_to_tensor, scalar_literal, seed_literal,

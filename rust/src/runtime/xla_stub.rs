@@ -1,0 +1,246 @@
+//! Host-side stand-in for the `xla` PJRT bindings.
+//!
+//! This environment builds fully offline: the real `xla` crate (PJRT C API
+//! bindings) cannot be fetched, so the runtime layer compiles against this
+//! stub (each consuming module aliases it with
+//! `use crate::runtime::xla_stub as xla;` — swapping the real crate back in
+//! is a one-line change per module).
+//!
+//! `Literal` is a *real* host container — the Tensor↔Literal conversion
+//! layer and its unit tests run unchanged.  Everything that would touch a
+//! PJRT device (client construction, HLO parsing, compilation, execution)
+//! returns [`XlaError`], so the engine fails loudly at `Engine::cpu()` and
+//! every artifact-dependent test/example skips or reports cleanly.
+
+use std::fmt;
+
+/// Error for unavailable PJRT functionality (and literal misuse).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+impl From<XlaError> for crate::util::error::C3Error {
+    fn from(e: XlaError) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what} needs the PJRT runtime (the `xla` crate), which is not part of this offline build"
+    ))
+}
+
+/// Literal element types used by the conversion layer (all 4-byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Element types that can be read back out of a literal.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        u32::from_le_bytes(bytes)
+    }
+}
+
+/// Host-side literal: dtype + dims + raw little-endian bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * ty.byte_size() {
+            return Err(XlaError(format!(
+                "literal data is {} bytes but shape {dims:?} needs {}",
+                data.len(),
+                elems * ty.byte_size()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        if self.ty != T::TY {
+            return Err(XlaError(format!(
+                "literal holds {:?}, read as {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable("decomposing tuple literals"))
+    }
+}
+
+/// Array shape with i64 dims, mirroring the xla crate's accessor.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client stub: construction always fails (no device plugin offline).
+#[derive(Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("compiling an XlaComputation"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("executing a loaded executable"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("executing a loaded executable"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("fetching a device buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_bytes() {
+        let vals = [1.5f32, -2.0, 0.25, 8.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+            .unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vals);
+        assert!(l.to_vec::<i32>().is_err(), "dtype mismatch must be caught");
+    }
+
+    #[test]
+    fn literal_rejects_shape_data_mismatch() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &[0u8; 8]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn device_paths_error_cleanly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("offline"), "{e}");
+    }
+}

@@ -10,11 +10,13 @@ pub mod sim;
 pub mod tcp;
 pub mod wire;
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::tensor::{Labels, Tensor};
+use crate::util::error::C3Error;
 use wire::WireError;
 
 /// Protocol messages between edge and cloud.
@@ -57,14 +59,57 @@ impl LinkStats {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TransportError {
-    #[error("wire: {0}")]
-    Wire(#[from] WireError),
-    #[error("channel closed")]
+    Wire(WireError),
     Closed,
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+    /// A peer announced a frame larger than [`wire::MAX_FRAME_BYTES`];
+    /// rejected before any allocation happens.
+    FrameTooLarge(usize),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Wire(e) => write!(f, "wire: {e}"),
+            TransportError::Closed => write!(f, "channel closed"),
+            TransportError::Io(e) => write!(f, "io: {e}"),
+            TransportError::FrameTooLarge(n) => write!(
+                f,
+                "frame of {n} bytes exceeds MAX_FRAME_BYTES ({})",
+                wire::MAX_FRAME_BYTES
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Wire(e) => Some(e),
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> Self {
+        TransportError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+impl From<TransportError> for C3Error {
+    fn from(e: TransportError) -> Self {
+        C3Error::msg(format!("transport: {e}"))
+    }
 }
 
 /// A bidirectional message endpoint with byte accounting.

@@ -18,12 +18,61 @@ pub struct Tcp {
 }
 
 impl Tcp {
-    /// Listen on `addr` and accept one peer (cloud side).
-    pub fn listen(addr: &str) -> std::io::Result<Self> {
-        let listener = TcpListener::bind(addr)?;
-        let (stream, _peer) = listener.accept()?;
+    /// Wrap an already-connected stream (enables multi-client accept loops).
+    pub fn from_stream(stream: TcpStream) -> std::io::Result<Self> {
         stream.set_nodelay(true)?;
         Ok(Tcp { stream, stats: Arc::new(LinkStats::default()) })
+    }
+
+    /// Bind without accepting — the multi-client cloud holds the listener
+    /// and calls [`Tcp::accept`] once per edge.
+    pub fn bind(addr: &str) -> std::io::Result<TcpListener> {
+        TcpListener::bind(addr)
+    }
+
+    /// Accept the next edge on an existing listener.
+    pub fn accept(listener: &TcpListener) -> std::io::Result<Self> {
+        let (stream, _peer) = listener.accept()?;
+        Tcp::from_stream(stream)
+    }
+
+    /// Accept exactly `n` edges, polling against a deadline so a client that
+    /// never connects cannot hang the cloud's accept loop forever.  Leaves
+    /// the listener in nonblocking mode; accepted streams are blocking.
+    pub fn accept_n(
+        listener: &TcpListener,
+        n: usize,
+        timeout: std::time::Duration,
+    ) -> std::io::Result<Vec<Self>> {
+        listener.set_nonblocking(true)?;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // accepted sockets must not inherit nonblocking mode
+                    stream.set_nonblocking(false)?;
+                    out.push(Tcp::from_stream(stream)?);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            format!("accepted {} of {n} edges before timeout", out.len()),
+                        ));
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Listen on `addr` and accept one peer (single-edge cloud).
+    pub fn listen(addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Tcp::accept(&listener)
     }
 
     /// Connect to a listening peer (edge side), retrying briefly while the
@@ -63,6 +112,11 @@ impl Transport for Tcp {
         let mut lenb = [0u8; 4];
         self.stream.read_exact(&mut lenb)?;
         let len = u32::from_le_bytes(lenb) as usize;
+        // Validate the peer-controlled length BEFORE allocating: a corrupt
+        // or malicious prefix must not force a ~4 GiB allocation.
+        if len > wire::MAX_FRAME_BYTES {
+            return Err(TransportError::FrameTooLarge(len));
+        }
         let mut frame = vec![0u8; len];
         self.stream.read_exact(&mut frame)?;
         self.stats
@@ -101,5 +155,86 @@ mod tests {
         c.send(&Msg::Shutdown).unwrap();
         assert_eq!(server.join().unwrap(), Msg::Shutdown);
         assert!(c.stats().tx() > 0 && c.stats().rx() > 0);
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        let addr = "127.0.0.1:39382";
+        let listener = TcpListener::bind(addr).unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // malicious length prefix: ~4 GiB
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            // hold the socket open until the client has judged the frame
+            let mut buf = [0u8; 1];
+            let _ = s.read(&mut buf);
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        match c.recv() {
+            Err(TransportError::FrameTooLarge(n)) => assert_eq!(n, u32::MAX as usize),
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn frame_cap_admits_legitimate_tensors() {
+        // MAX_FRAME_BYTES must sit above the largest frame wire can decode:
+        // an EvalFeatures message holds a MAX_ELEMS tensor AND MAX_ELEMS
+        // labels, 4 bytes each.
+        assert!(wire::MAX_FRAME_BYTES as u64 >= 8 * wire::MAX_ELEMS);
+        // and a real multi-MB tensor survives the capped path
+        let addr = "127.0.0.1:39383";
+        let server = std::thread::spawn(move || {
+            let mut t = Tcp::listen(addr).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap();
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        let m = Msg::Features {
+            step: 0,
+            tensor: Tensor::zeros(&[64, 4096]),
+        };
+        c.send(&m).unwrap();
+        assert_eq!(c.recv().unwrap(), m);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn accept_n_times_out_instead_of_hanging() {
+        let addr = "127.0.0.1:39385";
+        let listener = Tcp::bind(addr).unwrap();
+        let client = std::thread::spawn(move || Tcp::connect(addr).unwrap());
+        // only 1 of 2 expected edges ever connects → bounded TimedOut error
+        let err = Tcp::accept_n(&listener, 2, std::time::Duration::from_millis(300))
+            .err()
+            .expect("must not hang waiting for the missing client");
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(err.to_string().contains("1 of 2"), "{err}");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn bind_accept_serves_multiple_clients() {
+        let addr = "127.0.0.1:39384";
+        let listener = Tcp::bind(addr).unwrap();
+        let server = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            for _ in 0..2 {
+                let mut t = Tcp::accept(&listener).unwrap();
+                match t.recv().unwrap() {
+                    Msg::KeySeed { seed } => seen.push(seed),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            seen.sort_unstable();
+            seen
+        });
+        let mut a = Tcp::connect(addr).unwrap();
+        a.send(&Msg::KeySeed { seed: 1 }).unwrap();
+        let mut b = Tcp::connect(addr).unwrap();
+        b.send(&Msg::KeySeed { seed: 2 }).unwrap();
+        assert_eq!(server.join().unwrap(), vec![1, 2]);
     }
 }

@@ -8,18 +8,29 @@
 //! Decoding is fully checked (no panics on malformed input) — fuzzed in the
 //! tests below.
 
+use std::fmt;
+
 use crate::tensor::{Labels, Tensor};
 use crate::transport::Msg;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("truncated frame at byte {0}")]
     Truncated(usize),
-    #[error("unknown tag {0}")]
     UnknownTag(u8),
-    #[error("tensor too large: {0} elements")]
     TooLarge(u64),
 }
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated(pos) => write!(f, "truncated frame at byte {pos}"),
+            WireError::UnknownTag(tag) => write!(f, "unknown tag {tag}"),
+            WireError::TooLarge(n) => write!(f, "tensor too large: {n} elements"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 const TAG_FEATURES: u8 = 1;
 const TAG_TRAIN_LABELS: u8 = 2;
@@ -31,7 +42,16 @@ const TAG_KEY_SEED: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
 
 /// Hard cap on decoded element counts (guards fuzz/corruption OOM).
-const MAX_ELEMS: u64 = 1 << 28;
+pub const MAX_ELEMS: u64 = 1 << 28;
+
+/// Hard cap on a single wire frame, consistent with [`MAX_ELEMS`]: the
+/// largest frame `decode` can accept is `EvalFeatures` carrying a
+/// MAX_ELEMS-element tensor *and* a MAX_ELEMS-entry labels vector (the
+/// decoder caps each independently), 4 bytes per element on both, plus
+/// header slack.  Transports must reject any length prefix above this
+/// *before* allocating — a corrupt or malicious peer must not be able to
+/// force an unbounded allocation.
+pub const MAX_FRAME_BYTES: usize = 8 * MAX_ELEMS as usize + 4096;
 
 // ---------------------------------------------------------------------------
 // Encoding

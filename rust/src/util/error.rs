@@ -1,0 +1,140 @@
+//! Crate-local error substrate (no anyhow/thiserror — offline builds must
+//! work with zero external crates).
+//!
+//! `C3Error` is a message-chain error: [`Context::context`] /
+//! [`Context::with_context`] prepend a layer exactly like anyhow's, and the
+//! [`ensure!`](crate::ensure) / [`bail!`](crate::bail) macros keep call
+//! sites terse.  Module-specific errors (`WireError`, `TransportError`,
+//! `ConfigError`, ...) implement `Display`/`Error` by hand and convert into
+//! `C3Error` so `?` flows through the coordinator and runtime layers.
+
+use std::fmt;
+
+/// The crate-wide error: a rendered message chain.
+#[derive(Debug)]
+pub struct C3Error {
+    msg: String,
+}
+
+impl C3Error {
+    /// Build an error from any message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        C3Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for C3Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for C3Error {}
+
+impl From<std::io::Error> for C3Error {
+    fn from(e: std::io::Error) -> Self {
+        C3Error::msg(format!("io: {e}"))
+    }
+}
+
+/// Crate-wide result alias; the error type defaults to [`C3Error`].
+pub type Result<T, E = C3Error> = std::result::Result<T, E>;
+
+/// anyhow-style context: prepend a message layer when propagating errors
+/// (or turning an `Option` into an error).
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| C3Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| C3Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| C3Error::msg(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| C3Error::msg(f().to_string()))
+    }
+}
+
+/// Early-return with a formatted [`C3Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::C3Error::msg(format!($($arg)*)))
+    };
+}
+
+/// anyhow-style ensure: bail with a formatted message (or the stringified
+/// condition) unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        "nope".parse::<u32>().context("parsing the answer")
+    }
+
+    #[test]
+    fn context_prepends_layers() {
+        let e = fails().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.starts_with("parsing the answer: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context_converts() {
+        let v: Option<u32> = None;
+        let e = Context::context(v, "missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Context::context(Some(7u32), "ok").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 3);
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(11).unwrap_err().to_string().contains("x too big"));
+        assert!(f(3).unwrap_err().to_string().contains("x != 3"));
+        assert!(f(5).unwrap_err().to_string().contains("five"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(f().unwrap_err().to_string().starts_with("io: "));
+    }
+}

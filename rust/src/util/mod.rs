@@ -1,6 +1,8 @@
-//! Utility substrates: PRNG, JSON, timing, property-testing harness, CSV.
+//! Utility substrates: errors, PRNG, JSON, timing, property-testing
+//! harness, CSV.
 
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

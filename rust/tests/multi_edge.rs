@@ -1,0 +1,121 @@
+//! Integration tests for the multi-client coordinator: N concurrent edges
+//! training end to end against one cloud over the in-proc (+SimLink) and TCP
+//! transports, with per-client and aggregate byte accounting.  No AOT
+//! artifacts needed (host codec venue).
+
+use c3sl::config::TransportKind;
+use c3sl::coordinator::{run_multi_edge, MultiEdgeSpec, MultiRunOutput};
+use c3sl::transport::sim::LinkModel;
+
+fn spec(edges: usize, transport: TransportKind, addr: &str) -> MultiEdgeSpec {
+    MultiEdgeSpec {
+        edges,
+        steps: 6,
+        r: 2,
+        d: 256,
+        batch: 8,
+        seed: 5,
+        workers: 2,
+        transport,
+        tcp_addr: addr.into(),
+        link: None,
+    }
+}
+
+fn check_accounting(out: &MultiRunOutput, edges: usize) {
+    assert_eq!(out.cloud.per_client.len(), edges);
+    assert_eq!(out.edges.len(), edges);
+    for c in &out.cloud.per_client {
+        assert_eq!(c.steps, 6, "client {} steps", c.client);
+        assert!(c.rx_bytes > 0 && c.tx_bytes > 0);
+        // per step: Features + TrainLabels up, Gradients + StepStats down,
+        // plus the KeySeed handshake and Shutdown
+        assert_eq!(c.rx_msgs, 6 * 2 + 2, "client {} rx msgs", c.client);
+        assert_eq!(c.tx_msgs, 6 * 2, "client {} tx msgs", c.client);
+    }
+    // the aggregate must be exactly the sum of the per-client halves
+    let edge_tx: u64 = out.edges.iter().map(|e| e.tx_bytes).sum();
+    let edge_rx: u64 = out.edges.iter().map(|e| e.rx_bytes).sum();
+    assert_eq!(out.cloud.total_rx(), edge_tx, "cloud rx == sum of edge uplinks");
+    assert_eq!(out.cloud.total_tx(), edge_rx, "cloud tx == sum of edge downlinks");
+    assert_eq!(out.cloud.total_steps(), 6 * edges as u64);
+    // and training must make progress through the lossy codec on every edge
+    for (i, e) in out.edges.iter().enumerate() {
+        assert!(
+            e.last_loss < e.first_loss,
+            "edge {i}: probe loss did not decrease ({} -> {})",
+            e.first_loss,
+            e.last_loss
+        );
+        assert!(e.first_loss.is_finite() && e.last_loss.is_finite());
+    }
+}
+
+#[test]
+fn two_inproc_edges_train_concurrently() {
+    let out = run_multi_edge(&spec(2, TransportKind::InProc, "")).unwrap();
+    check_accounting(&out, 2);
+    // identical edges (different seeds) see byte-identical frame sizes:
+    // same geometry → same serialized bytes per client
+    let tx0 = out.cloud.per_client[0].rx_bytes;
+    for c in &out.cloud.per_client {
+        assert_eq!(c.rx_bytes, tx0, "uniform geometry → uniform per-client bytes");
+    }
+}
+
+#[test]
+fn four_inproc_edges_with_link_model() {
+    let mut s = spec(4, TransportKind::InProc, "");
+    s.link = Some(LinkModel::wifi());
+    let out = run_multi_edge(&s).unwrap();
+    check_accounting(&out, 4);
+}
+
+#[test]
+fn two_tcp_edges_train_concurrently() {
+    let out = run_multi_edge(&spec(2, TransportKind::Tcp, "127.0.0.1:39413")).unwrap();
+    check_accounting(&out, 2);
+}
+
+#[test]
+fn three_tcp_edges_aggregate_accounting() {
+    let out = run_multi_edge(&spec(3, TransportKind::Tcp, "127.0.0.1:39414")).unwrap();
+    check_accounting(&out, 3);
+}
+
+#[test]
+fn single_edge_multi_path_still_works() {
+    // edges=1 must behave exactly like a 1-client pool
+    let out = run_multi_edge(&spec(1, TransportKind::InProc, "")).unwrap();
+    check_accounting(&out, 1);
+}
+
+#[test]
+fn rejects_bad_geometry() {
+    let mut s = spec(2, TransportKind::InProc, "");
+    s.batch = 7; // not divisible by r=2
+    assert!(run_multi_edge(&s).is_err());
+    let mut s = spec(2, TransportKind::InProc, "");
+    s.edges = 0;
+    assert!(run_multi_edge(&s).is_err());
+}
+
+#[test]
+fn compression_shows_on_the_wire() {
+    // R=4 halves-of-halves the uplink feature bytes vs R=1-equivalent:
+    // features are (B/R, D) instead of (B, D).
+    let mut s4 = spec(2, TransportKind::InProc, "");
+    s4.r = 4;
+    s4.batch = 8;
+    let out4 = run_multi_edge(&s4).unwrap();
+    let mut s1 = spec(2, TransportKind::InProc, "");
+    s1.r = 1;
+    s1.batch = 8;
+    let out1 = run_multi_edge(&s1).unwrap();
+    let up4 = out4.cloud.total_rx() as f64;
+    let up1 = out1.cloud.total_rx() as f64;
+    assert!(
+        up1 / up4 > 3.0,
+        "R=4 should cut uplink ~4x: {up1} vs {up4}"
+    );
+}
