@@ -1,8 +1,10 @@
-//! Multi-edge split learning: N concurrent edges against one cloud
-//! (thread-per-client), end to end through the C3 codec in both directions,
-//! with per-client and aggregate LinkStats.  Runs twice — over in-proc links
-//! under a WiFi cost model, then over real localhost TCP sockets — and needs
-//! no AOT artifacts (host codec venue; the model halves are PJRT-gated).
+//! Multi-edge split learning: N concurrent edges against one cloud, end to
+//! end through the C3 codec in both directions, with per-client and
+//! aggregate LinkStats.  Runs three times — over in-proc links under a WiFi
+//! cost model, over real localhost TCP sockets (both thread-per-client), and
+//! once more over TCP served by the nonblocking reactor (one I/O thread +
+//! codec worker pool) — and needs no AOT artifacts (host codec venue; the
+//! model halves are PJRT-gated).
 //!
 //!   cargo run --release --example train_multi_edge
 //!   C3SL_EDGES=8 cargo run --release --example train_multi_edge
@@ -64,11 +66,19 @@ fn main() -> Result<()> {
     let tcp = run_multi_edge(&MultiEdgeSpec {
         transport: TransportKind::Tcp,
         tcp_addr: "127.0.0.1:39719".into(),
-        ..base
+        ..base.clone()
     })?;
     report("localhost tcp", &tcp);
 
-    for (label, out) in [("inproc", &inproc), ("tcp", &tcp)] {
+    let reactor = run_multi_edge(&MultiEdgeSpec {
+        transport: TransportKind::Tcp,
+        tcp_addr: "127.0.0.1:39720".into(),
+        reactor: true,
+        ..base
+    })?;
+    report("localhost tcp, reactor cloud (1 I/O thread)", &reactor);
+
+    for (label, out) in [("inproc", &inproc), ("tcp", &tcp), ("reactor", &reactor)] {
         for e in &out.edges {
             assert!(
                 e.last_loss < e.first_loss,

@@ -1,0 +1,80 @@
+//! Bench: multi-edge serving scale — thread-per-client vs the nonblocking
+//! reactor, the ROADMAP's "dozens → thousands of edges" axis.
+//!
+//!   cargo bench --bench reactor_scale
+//!   C3SL_BENCH_QUICK=1 cargo bench --bench reactor_scale   # CI smoke
+//!
+//! For each N ∈ {8, 64, 256} (quick: {8, 32}) the full multi-edge scenario
+//! runs end to end over localhost TCP — N in-process edge threads each
+//! training `steps` probe steps through the C3 codec in both directions —
+//! once against the thread-per-client cloud (N serving threads) and once
+//! against the reactor cloud (1 I/O thread + a codec worker pool).  Reported:
+//! wall time, edges/s (concurrent sessions brought to completion per second)
+//! and steps/s.  The same run also cross-checks byte accounting between the
+//! two serving styles: identical geometry must produce identical aggregate
+//! traffic no matter how the cloud is scheduled.
+
+use c3sl::config::TransportKind;
+use c3sl::coordinator::{run_multi_edge, MultiEdgeSpec};
+
+fn main() {
+    let quick = std::env::var("C3SL_BENCH_QUICK").is_ok();
+    let ns: &[usize] = if quick { &[8, 32] } else { &[8, 64, 256] };
+    let steps: u64 = if quick { 2 } else { 4 };
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(2, 8);
+    println!(
+        "# reactor scale: N edges x {steps} steps over localhost TCP \
+         (R=2, D=256, B=8, {workers} codec workers)\n"
+    );
+    println!(
+        "{:>6} {:<18} {:>10} {:>10} {:>10} {:>14}",
+        "edges", "cloud", "wall s", "edges/s", "steps/s", "agg bytes"
+    );
+
+    let mut port = 40510u16;
+    for &n in ns {
+        let mut agg = [0u64; 2];
+        for (mi, (label, reactor)) in
+            [("thread-per-client", false), ("reactor", true)].into_iter().enumerate()
+        {
+            let spec = MultiEdgeSpec {
+                edges: n,
+                steps,
+                r: 2,
+                d: 256,
+                batch: 8,
+                seed: 1,
+                workers,
+                transport: TransportKind::Tcp,
+                tcp_addr: format!("127.0.0.1:{port}"),
+                ..MultiEdgeSpec::default()
+            };
+            let spec = MultiEdgeSpec { reactor, ..spec };
+            port += 1;
+            let out = run_multi_edge(&spec).unwrap_or_else(|e| {
+                panic!("{label} run with {n} edges failed: {e}");
+            });
+            assert_eq!(out.cloud.total_steps(), steps * n as u64, "{label}: steps served");
+            agg[mi] = out.cloud.total_rx() + out.cloud.total_tx();
+            let wall = out.wall_seconds.max(1e-9);
+            println!(
+                "{:>6} {:<18} {:>10.3} {:>10.1} {:>10.1} {:>14}",
+                n,
+                label,
+                wall,
+                n as f64 / wall,
+                (steps * n as u64) as f64 / wall,
+                agg[mi],
+            );
+        }
+        assert_eq!(
+            agg[0], agg[1],
+            "serving style must not change the bytes on the wire at N={n}"
+        );
+        println!();
+    }
+    println!("reactor_scale OK — identical traffic, one I/O thread instead of N");
+}

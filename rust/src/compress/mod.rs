@@ -64,16 +64,26 @@ impl C3Codec {
         C3Codec { c3: C3::with_workers(keys, backend, workers) }
     }
 
+    /// Compression ratio R (features folded per carrier).
     pub fn r(&self) -> usize {
         self.c3.keys.r
     }
 
+    /// Feature dimensionality D.
     pub fn d(&self) -> usize {
         self.c3.keys.d
     }
 
+    /// Group-parallel worker count of the underlying engine.
     pub fn workers(&self) -> usize {
         self.c3.workers()
+    }
+
+    /// The underlying host engine, for callers that manage their own
+    /// scratch/threading (e.g. the reactor cloud's codec worker pool, which
+    /// drives `encode_into`/`decode_into` with one `C3Scratch` per worker).
+    pub fn engine(&self) -> &C3 {
+        &self.c3
     }
 }
 

@@ -67,6 +67,13 @@ pub struct ExperimentConfig {
     pub tcp_addr: String,
     /// Concurrent edge clients the cloud accepts (multi-edge scenarios).
     pub num_edges: usize,
+    /// Serve multi-edge clients from the nonblocking reactor (one I/O
+    /// thread + a codec worker pool) instead of thread-per-client.
+    pub reactor: bool,
+    /// Reactor idle poll backoff in microseconds.
+    pub reactor_poll_us: u64,
+    /// Reactor per-client outbox bound in frames (read backpressure).
+    pub reactor_outbox: usize,
     pub link: Option<LinkModel>,
 
     // training
@@ -98,6 +105,9 @@ impl Default for ExperimentConfig {
             transport: TransportKind::InProc,
             tcp_addr: "127.0.0.1:7070".into(),
             num_edges: 1,
+            reactor: false,
+            reactor_poll_us: 100,
+            reactor_outbox: 8,
             link: None,
             steps: 200,
             lr: 1e-4, // paper §4.1
@@ -217,6 +227,23 @@ impl ExperimentConfig {
         if let Some(v) = get(&doc, "transport", "addr") {
             cfg.tcp_addr = v.as_str().ok_or_else(|| inv("transport.addr".into()))?.into();
         }
+        if let Some(v) = get(&doc, "transport", "reactor") {
+            cfg.reactor = v.as_bool().ok_or_else(|| inv("transport.reactor".into()))?;
+        }
+        if let Some(v) = get(&doc, "transport", "poll_us") {
+            let us = v.as_i64().ok_or_else(|| inv("transport.poll_us".into()))?;
+            if us < 0 {
+                return Err(inv(format!("transport.poll_us must be >= 0, got {us}")));
+            }
+            cfg.reactor_poll_us = us as u64;
+        }
+        if let Some(v) = get(&doc, "transport", "outbox_frames") {
+            let fr = v.as_i64().ok_or_else(|| inv("transport.outbox_frames".into()))?;
+            if fr < 1 {
+                return Err(inv(format!("transport.outbox_frames must be >= 1, got {fr}")));
+            }
+            cfg.reactor_outbox = fr as usize;
+        }
         if let (Some(lat), Some(bw)) = (
             get(&doc, "link", "latency_ms").and_then(|v| v.as_f64()),
             get(&doc, "link", "bandwidth_mbps").and_then(|v| v.as_f64()),
@@ -279,6 +306,11 @@ impl ExperimentConfig {
         }
         if self.num_edges == 0 {
             return Err(ConfigError::Invalid("transport.edges must be >= 1".into()));
+        }
+        if self.reactor_outbox == 0 {
+            return Err(ConfigError::Invalid(
+                "transport.outbox_frames must be >= 1".into(),
+            ));
         }
         if matches!(self.scheme, SchemeKind::BottleNetPP { .. })
             && self.codec_venue == CodecVenue::Host
@@ -384,6 +416,24 @@ mod tests {
         // negative values must not wrap through the i64 → usize cast
         assert!(ExperimentConfig::from_toml_str("[scheme]\nworkers = -1\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[transport]\nedges = -3\n").is_err());
+    }
+
+    #[test]
+    fn parses_reactor_knobs() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[transport]\nreactor = true\npoll_us = 250\noutbox_frames = 16\n",
+        )
+        .unwrap();
+        assert!(cfg.reactor);
+        assert_eq!(cfg.reactor_poll_us, 250);
+        assert_eq!(cfg.reactor_outbox, 16);
+        // defaults: thread-per-client serving
+        let d = ExperimentConfig::default();
+        assert!(!d.reactor);
+        assert_eq!(d.reactor_outbox, 8);
+        // bounds
+        assert!(ExperimentConfig::from_toml_str("[transport]\noutbox_frames = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[transport]\npoll_us = -5\n").is_err());
     }
 
     #[test]

@@ -15,6 +15,8 @@ use crate::transport::{Msg, Transport};
 use crate::util::error::{Context, Result};
 use crate::util::timer::Timer;
 
+/// The cloud actor: f_psi, its optimizer state, and the cloud half of the
+/// codec.
 pub struct CloudWorker {
     model: ModelRuntime,
     codec: RunCodec,
@@ -26,6 +28,7 @@ pub struct CloudWorker {
 }
 
 impl CloudWorker {
+    /// Build the cloud side: engine, artifacts, params, codec.
     pub fn new(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
         let model = ModelRuntime::load(engine, cfg.model_dir())
             .context("loading cloud model artifacts")?;

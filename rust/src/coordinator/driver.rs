@@ -14,19 +14,23 @@ use crate::data::open_dataset;
 use crate::ensure;
 use crate::metrics::RunRecorder;
 use crate::runtime::Engine;
+use crate::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
 use crate::transport::sim::{LinkModel, SimLink};
 use crate::transport::tcp::Tcp;
-use crate::transport::{inproc_pair, Transport};
+use crate::transport::{inproc_pair, inproc_reactor_pair, Transport};
 use crate::util::error::{C3Error, Context, Result};
 
 /// Everything a finished run reports.
 pub struct RunOutput {
+    /// Loss/accuracy curves and run metadata.
     pub recorder: RunRecorder,
-    /// Total bytes on the wire (uplink+downlink, serialized frames).
+    /// Serialized bytes the edge sent (uplink frames).
     pub wire_tx: u64,
+    /// Serialized bytes the edge received (downlink frames).
     pub wire_rx: u64,
     /// Virtual link time if a LinkModel was configured.
     pub virtual_link_seconds: Option<f64>,
+    /// Wall-clock duration of the run.
     pub wall_seconds: f64,
 }
 
@@ -108,18 +112,28 @@ pub struct MultiEdgeSpec {
     pub edges: usize,
     /// Training steps per edge.
     pub steps: u64,
-    /// Per-edge batch size B (must be divisible by `r`).
+    /// Compression ratio R (features folded per carrier).
     pub r: usize,
+    /// Feature dimensionality D.
     pub d: usize,
+    /// Per-edge batch size B (must be divisible by `r`).
     pub batch: usize,
+    /// Base seed: key seed derives from it, per-edge data seeds offset it.
     pub seed: u64,
-    /// Group-parallel codec workers per endpoint.
+    /// Group-parallel codec workers per endpoint.  In reactor mode this is
+    /// the codec worker-pool size on the cloud.
     pub workers: usize,
+    /// Which link substrate connects edges and cloud.
     pub transport: TransportKind,
     /// Listen/connect address for the TCP venue.
     pub tcp_addr: String,
     /// Optional virtual-link cost model on the edge side (in-proc venue).
     pub link: Option<LinkModel>,
+    /// Serve from the nonblocking reactor (one I/O thread + codec pool)
+    /// instead of thread-per-client.
+    pub reactor: bool,
+    /// Reactor tunables (poll backoff, outbox/job-queue bounds).
+    pub poll: ReactorConfig,
 }
 
 impl Default for MultiEdgeSpec {
@@ -135,6 +149,8 @@ impl Default for MultiEdgeSpec {
             transport: TransportKind::InProc,
             tcp_addr: "127.0.0.1:7071".into(),
             link: None,
+            reactor: false,
+            poll: ReactorConfig::default(),
         }
     }
 }
@@ -146,12 +162,38 @@ pub struct MultiRunOutput {
     pub cloud: MultiStats,
     /// Edge-side reports, in spawn order.
     pub edges: Vec<EdgeReport>,
+    /// Wall-clock duration of the whole scenario.
     pub wall_seconds: f64,
 }
 
+/// How the cloud thread obtains and serves its client connections.  Built up
+/// front so one cloud spawn covers every venue × serving-style combination.
+enum CloudPlan {
+    /// Pre-built blocking transports (in-proc venue, thread-per-client).
+    Blocking(Vec<Box<dyn Transport>>),
+    /// Pre-built nonblocking connections (in-proc venue, reactor).
+    Reactor(Vec<Box<dyn ReactorConn>>),
+    /// Accept `n` TCP edges, then serve in the chosen style.
+    TcpAccept {
+        listener: std::net::TcpListener,
+        n: usize,
+        reactor: bool,
+    },
+}
+
+/// How the edge threads obtain their transports.
+enum EdgePlan {
+    /// Pre-built endpoints (in-proc venue), spawn order = client order.
+    Ready(Vec<Box<dyn Transport>>),
+    /// Each edge dials the cloud itself (TCP venue).
+    Connect,
+}
+
 /// Run N concurrent edges against one multi-client cloud, end to end, over
-/// the in-proc (optionally SimLink-wrapped) or TCP transport.  Both sides
-/// derive their codec from the shared key seed — keys never cross the wire.
+/// the in-proc (optionally SimLink-wrapped) or TCP transport, served either
+/// thread-per-client or from the nonblocking reactor (`spec.reactor`).  Both
+/// sides derive their codec from the shared key seed — keys never cross the
+/// wire.
 pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     ensure!(spec.edges >= 1, "need at least one edge");
     ensure!(spec.steps >= 1, "need at least one step");
@@ -163,29 +205,99 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
         spec.batch,
         spec.r
     );
+    // zero reactor bounds are normalized (ReactorConfig::clamped), not errors
     let t0 = std::time::Instant::now();
     let key_seed = spec.seed ^ 0xC3_C3_C3_C3u64;
     let cloud_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
     let edge_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
 
-    let (cloud, edges) = match spec.transport {
+    // 1) build both sides of every link up front
+    let (cloud_plan, edge_plan) = match spec.transport {
         TransportKind::InProc => {
-            let mut cloud_tps = Vec::with_capacity(spec.edges);
+            let mut blocking: Vec<Box<dyn Transport>> = Vec::new();
+            let mut nonblocking: Vec<Box<dyn ReactorConn>> = Vec::new();
             let mut edge_tps: Vec<Box<dyn Transport>> = Vec::with_capacity(spec.edges);
             for _ in 0..spec.edges {
-                let (e, c) = inproc_pair();
-                cloud_tps.push(c);
+                // only the cloud half differs between serving styles; the
+                // edge half is the same blocking endpoint either way
+                let e = if spec.reactor {
+                    let (e, c) = inproc_reactor_pair();
+                    nonblocking.push(Box::new(c));
+                    e
+                } else {
+                    let (e, c) = inproc_pair();
+                    blocking.push(Box::new(c));
+                    e
+                };
                 edge_tps.push(match spec.link {
                     Some(link) => Box::new(SimLink::new(e, link)),
                     None => Box::new(e),
                 });
             }
-            std::thread::scope(|sc| -> Result<(MultiStats, Vec<EdgeReport>)> {
-                let cloud_handle = sc.spawn(|| multi::serve_clients(&cloud_codec, cloud_tps));
-                let mut edge_handles = Vec::with_capacity(spec.edges);
-                for (i, mut tp) in edge_tps.into_iter().enumerate() {
+            let plan = if spec.reactor {
+                CloudPlan::Reactor(nonblocking)
+            } else {
+                CloudPlan::Blocking(blocking)
+            };
+            (plan, EdgePlan::Ready(edge_tps))
+        }
+        TransportKind::Tcp => {
+            // Bind before spawning edges so connects never race the listener.
+            let listener = Tcp::bind(&spec.tcp_addr)
+                .with_context(|| format!("binding {}", spec.tcp_addr))?;
+            (
+                CloudPlan::TcpAccept { listener, n: spec.edges, reactor: spec.reactor },
+                EdgePlan::Connect,
+            )
+        }
+    };
+
+    // 2) the cloud on its own (non-scoped) thread: it owns its codec and
+    //    connections; joined unconditionally below
+    let workers = spec.workers;
+    let poll = spec.poll;
+    let cloud_handle = std::thread::Builder::new()
+        .name("multi-cloud".into())
+        .spawn(move || -> Result<MultiStats> {
+            match cloud_plan {
+                CloudPlan::Blocking(tps) => multi::serve_clients(&cloud_codec, tps),
+                CloudPlan::Reactor(conns) => {
+                    multi::serve_clients_reactor(&cloud_codec, conns, workers, poll)
+                }
+                CloudPlan::TcpAccept { listener, n, reactor } => {
+                    // Deadline-bounded accept: a client that never connects
+                    // must not hang the cloud forever.
+                    let streams =
+                        Tcp::accept_streams(&listener, n, std::time::Duration::from_secs(30))
+                            .context("accepting edges")?;
+                    if reactor {
+                        let mut conns: Vec<Box<dyn ReactorConn>> = Vec::with_capacity(n);
+                        for s in streams {
+                            conns.push(Box::new(
+                                NbTcp::from_stream(s).context("nonblocking accept")?,
+                            ));
+                        }
+                        multi::serve_clients_reactor(&cloud_codec, conns, workers, poll)
+                    } else {
+                        let mut tps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+                        for s in streams {
+                            tps.push(Box::new(Tcp::from_stream(s).context("blocking accept")?));
+                        }
+                        multi::serve_clients(&cloud_codec, tps)
+                    }
+                }
+            }
+        })
+        .context("spawning multi-cloud thread")?;
+
+    // 3) the edges on scoped threads, borrowing the shared edge codec
+    let edges = std::thread::scope(|sc| -> Result<Vec<EdgeReport>> {
+        let mut handles = Vec::with_capacity(spec.edges);
+        match edge_plan {
+            EdgePlan::Ready(tps) => {
+                for (i, mut tp) in tps.into_iter().enumerate() {
                     let codec = &edge_codec;
-                    edge_handles.push(sc.spawn(move || {
+                    handles.push(sc.spawn(move || {
                         multi::run_edge(
                             codec,
                             tp.as_mut(),
@@ -197,38 +309,12 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                         )
                     }));
                 }
-                let mut edges = Vec::with_capacity(spec.edges);
-                for h in edge_handles {
-                    edges.push(
-                        h.join()
-                            .map_err(|_| C3Error::msg("edge thread panicked"))??,
-                    );
-                }
-                let cloud = cloud_handle
-                    .join()
-                    .map_err(|_| C3Error::msg("cloud thread panicked"))??;
-                Ok((cloud, edges))
-            })?
-        }
-        TransportKind::Tcp => {
-            // Bind before spawning edges so connects never race the listener.
-            let listener = Tcp::bind(&spec.tcp_addr)
-                .with_context(|| format!("binding {}", spec.tcp_addr))?;
-            std::thread::scope(|sc| -> Result<(MultiStats, Vec<EdgeReport>)> {
-                let n = spec.edges;
-                let cloud_handle = sc.spawn(move || -> Result<MultiStats> {
-                    // Deadline-bounded accept: a client that never connects
-                    // must not hang the scope join forever.
-                    let tps =
-                        Tcp::accept_n(&listener, n, std::time::Duration::from_secs(30))
-                            .context("accepting edges")?;
-                    multi::serve_clients(&cloud_codec, tps)
-                });
-                let mut edge_handles = Vec::with_capacity(spec.edges);
+            }
+            EdgePlan::Connect => {
                 for i in 0..spec.edges {
                     let codec = &edge_codec;
                     let addr = spec.tcp_addr.clone();
-                    edge_handles.push(sc.spawn(move || -> Result<EdgeReport> {
+                    handles.push(sc.spawn(move || -> Result<EdgeReport> {
                         let mut tp =
                             Tcp::connect(&addr).with_context(|| format!("connecting {addr}"))?;
                         multi::run_edge(
@@ -242,20 +328,26 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                         )
                     }));
                 }
-                let mut edges = Vec::with_capacity(spec.edges);
-                for h in edge_handles {
-                    edges.push(
-                        h.join()
-                            .map_err(|_| C3Error::msg("edge thread panicked"))??,
-                    );
-                }
-                let cloud = cloud_handle
-                    .join()
-                    .map_err(|_| C3Error::msg("cloud thread panicked"))??;
-                Ok((cloud, edges))
-            })?
+            }
         }
-    };
+        let mut edges = Vec::with_capacity(spec.edges);
+        for h in handles {
+            edges.push(h.join().map_err(|_| C3Error::msg("edge thread panicked"))??);
+        }
+        Ok(edges)
+    });
+
+    // Join the cloud even when an edge failed: the scope above has already
+    // dropped/closed every edge endpoint, so the cloud unblocks promptly
+    // (or hits its accept deadline) — and joining releases its listener
+    // port and surfaces cloud-side errors instead of leaking the thread.
+    let cloud = cloud_handle
+        .join()
+        .map_err(|_| C3Error::msg("cloud thread panicked"))
+        .and_then(|r| r);
+
+    let edges = edges?;
+    let cloud = cloud?;
 
     Ok(MultiRunOutput { cloud, edges, wall_seconds: t0.elapsed().as_secs_f64() })
 }

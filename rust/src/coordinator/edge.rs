@@ -13,6 +13,8 @@ use crate::transport::{Msg, Transport};
 use crate::util::error::{Context, Result};
 use crate::util::timer::Timer;
 
+/// The edge actor: f_theta, its optimizer state, the training data loader's
+/// geometry, and the edge half of the codec.
 pub struct EdgeWorker {
     model: ModelRuntime,
     codec: RunCodec,
@@ -32,10 +34,12 @@ impl EdgeWorker {
         Ok(EdgeWorker { model, codec, params, adam, lr: cfg.lr })
     }
 
+    /// Batch size B the model artifacts were lowered for.
     pub fn batch_size(&self) -> usize {
         self.model.manifest.batch
     }
 
+    /// Flattened cut-layer feature dimensionality D.
     pub fn d_tx(&self) -> usize {
         self.model.manifest.d_tx
     }

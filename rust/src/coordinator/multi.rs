@@ -1,5 +1,15 @@
-//! Multi-client coordinator: one cloud serving N concurrent edges,
-//! thread-per-client, with per-client and aggregate `LinkStats`.
+//! Multi-client coordinator: one cloud serving N concurrent edges, with
+//! per-client and aggregate `LinkStats`, in either of two serving styles:
+//!
+//! * **thread-per-client** ([`serve_clients`]) — one OS thread per edge,
+//!   blocking transports; simple, but thread stacks and context switches cap
+//!   concurrency at the dozens;
+//! * **reactor** ([`serve_clients_reactor`]) — one I/O thread multiplexes
+//!   every edge over nonblocking connections ([`crate::transport::reactor`])
+//!   and feeds decode/step/encode jobs to a pool of `scheme.workers` codec
+//!   threads, each owning a `C3Scratch`; per-client outbox bounds and a
+//!   parsed-job bound give slow or pipelining clients genuine backpressure
+//!   without stalling anyone else.  This is the thousand-edge path.
 //!
 //! The PJRT model halves are artifact-gated (runtime::xla_stub), so this
 //! scenario exercises the full *codec + transport + accounting* stack
@@ -17,6 +27,7 @@
 
 use super::run_codec::RunCodec;
 use crate::tensor::{Labels, Tensor};
+use crate::transport::reactor::{Event, Reactor, ReactorConfig, ReactorConn};
 use crate::transport::{Msg, Transport};
 use crate::util::error::{C3Error, Context, Result};
 use crate::util::rng::Rng;
@@ -27,29 +38,39 @@ use crate::{bail, ensure};
 pub struct ClientReport {
     /// Accept-order client index.
     pub client: usize,
+    /// Training steps served for this client.
     pub steps: u64,
+    /// Bytes the cloud sent to this client (downlink).
     pub tx_bytes: u64,
+    /// Bytes the cloud received from this client (uplink).
     pub rx_bytes: u64,
+    /// Messages sent to this client.
     pub tx_msgs: u64,
+    /// Messages received from this client.
     pub rx_msgs: u64,
+    /// Probe loss at the client's final served step.
     pub last_loss: f32,
 }
 
 /// Aggregated multi-client stats.
 #[derive(Clone, Debug, Default)]
 pub struct MultiStats {
+    /// One report per client, in accept order.
     pub per_client: Vec<ClientReport>,
 }
 
 impl MultiStats {
+    /// Total downlink bytes across clients.
     pub fn total_tx(&self) -> u64 {
         self.per_client.iter().map(|c| c.tx_bytes).sum()
     }
 
+    /// Total uplink bytes across clients.
     pub fn total_rx(&self) -> u64 {
         self.per_client.iter().map(|c| c.rx_bytes).sum()
     }
 
+    /// Total training steps served across clients.
     pub fn total_steps(&self) -> u64 {
         self.per_client.iter().map(|c| c.steps).sum()
     }
@@ -58,16 +79,27 @@ impl MultiStats {
 /// Per-edge report (the edge's half of the link).
 #[derive(Clone, Debug)]
 pub struct EdgeReport {
+    /// Training steps this edge ran.
     pub steps: u64,
+    /// Probe loss reported by the cloud at the first step.
     pub first_loss: f32,
+    /// Probe loss reported by the cloud at the final step.
     pub last_loss: f32,
+    /// Bytes this edge sent (uplink).
     pub tx_bytes: u64,
+    /// Bytes this edge received (downlink).
     pub rx_bytes: u64,
 }
 
+/// The probe objective L = ½·mean(ẑ²) on a raw slice (the codec workers
+/// operate on `decode_into` output buffers, no Tensor in the loop).
+fn probe_loss_slice(z: &[f32]) -> f32 {
+    let n = z.len().max(1) as f32;
+    0.5 * z.iter().map(|v| v * v).sum::<f32>() / n
+}
+
 fn probe_loss(zhat: &Tensor) -> f32 {
-    let n = zhat.len().max(1) as f32;
-    0.5 * zhat.data().iter().map(|v| v * v).sum::<f32>() / n
+    probe_loss_slice(zhat.data())
 }
 
 /// Serve one edge until it sends Shutdown: decode uplink features, evaluate
@@ -157,6 +189,469 @@ pub fn serve_clients<T: Transport>(codec: &RunCodec, transports: Vec<T>) -> Resu
     Ok(MultiStats { per_client: reports })
 }
 
+// ---------------------------------------------------------------------------
+// Reactor serving: one I/O thread, a codec worker pool, N edges.
+// ---------------------------------------------------------------------------
+
+/// A unit of codec compute parsed from one client's protocol stream.
+struct Job {
+    client: usize,
+    step: u64,
+    kind: JobKind,
+}
+
+enum JobKind {
+    /// Features + labels arrived: decode, evaluate, encode the gradient.
+    Train(Tensor),
+    /// Eval request: decode and evaluate only (`usize` = label count).
+    Eval(Tensor, usize),
+}
+
+/// What a codec worker hands back to the reactor thread.
+struct Done {
+    client: usize,
+    result: Result<DoneOk>,
+}
+
+struct DoneOk {
+    is_train: bool,
+    loss: f32,
+    /// Ready-to-queue wire frames (workers serialize replies too, keeping
+    /// the reactor thread to pure I/O).
+    frames: Vec<Vec<u8>>,
+}
+
+/// Per-client protocol state machine driven by reactor events.
+#[derive(Default)]
+struct ClientSm {
+    /// Features awaiting their TrainLabels companion.
+    pending: Option<(u64, Tensor)>,
+    /// Parsed jobs not yet dispatched to the worker pool.
+    jobs: std::collections::VecDeque<Job>,
+    /// A job for this client is on the worker pool.
+    inflight: bool,
+    steps: u64,
+    last_loss: f32,
+    /// Shutdown received; close once compute and outbox drain.
+    finishing: bool,
+    /// Connection observed closed by the peer.
+    peer_gone: bool,
+    closed: bool,
+    /// Why this client was failed, if it was.  One broken client never
+    /// takes the pool down (matching thread-per-client, where a failing
+    /// `serve_one` only errors its own thread); the aggregate error
+    /// surfaces after every healthy client finishes.
+    failed: Option<String>,
+}
+
+/// Fail one client without disturbing the rest: close its connection, drop
+/// its queued work, and record the reason for the final aggregate error.
+fn fail_client(
+    st: &mut [ClientSm],
+    reactor: &mut Reactor,
+    open: &mut usize,
+    client: usize,
+    why: String,
+) {
+    let c = &mut st[client];
+    if c.closed {
+        return;
+    }
+    c.failed = Some(why);
+    c.jobs.clear();
+    c.pending = None;
+    c.closed = true;
+    reactor.close(client);
+    *open -= 1;
+}
+
+/// One codec worker: pull jobs, run decode → probe step → encode with a
+/// thread-local `C3Scratch` (zero codec allocations in steady state on the
+/// host venue), serialize the reply frames, hand them back.
+fn codec_worker(
+    codec: &RunCodec,
+    jobs: &std::sync::Mutex<std::sync::mpsc::Receiver<Job>>,
+    done: std::sync::mpsc::Sender<Done>,
+) {
+    let engine = codec.host_engine();
+    let mut scratch = engine.map(|c3| crate::hdc::C3Scratch::new(c3.keys.d));
+    let mut zbuf: Vec<f32> = Vec::new();
+    let mut sbuf: Vec<f32> = Vec::new();
+    loop {
+        let job = jobs.lock().expect("job queue lock").recv();
+        let Ok(job) = job else { break };
+        let client = job.client;
+        let result = run_job(codec, engine, scratch.as_mut(), &mut zbuf, &mut sbuf, job);
+        if done.send(Done { client, result }).is_err() {
+            break;
+        }
+    }
+}
+
+/// Decode → probe objective → (for training) gradient encode, on either the
+/// zero-allocation host engine or the generic [`RunCodec`] fallback.
+fn run_job(
+    codec: &RunCodec,
+    engine: Option<&crate::hdc::C3>,
+    scratch: Option<&mut crate::hdc::C3Scratch>,
+    zbuf: &mut Vec<f32>,
+    sbuf: &mut Vec<f32>,
+    job: Job,
+) -> Result<DoneOk> {
+    use crate::transport::wire;
+    match job.kind {
+        JobKind::Train(s) => {
+            let (loss, gs) = match (engine, scratch) {
+                (Some(c3), Some(scr)) => {
+                    let (r, d) = (c3.keys.r, c3.keys.d);
+                    let g = s.shape()[0];
+                    zbuf.resize(g * r * d, 0.0);
+                    c3.decode_into(&s, zbuf, scr);
+                    let loss = probe_loss_slice(zbuf);
+                    // gẑ = dL/dẑ = ẑ/N, compressed for the downlink like the
+                    // real cloud compresses cut-layer gradients
+                    let inv = 1.0 / zbuf.len().max(1) as f32;
+                    for v in zbuf.iter_mut() {
+                        *v *= inv;
+                    }
+                    let gz = Tensor::from_vec(&[g * r, d], std::mem::take(zbuf));
+                    sbuf.resize(g * d, 0.0);
+                    c3.encode_into(&gz, sbuf, scr);
+                    *zbuf = gz.into_vec(); // reclaim the buffer for the next job
+                    (loss, Tensor::from_vec(&[g, d], std::mem::take(sbuf)))
+                }
+                _ => {
+                    let zhat = codec.decode(&s)?;
+                    let loss = probe_loss(&zhat);
+                    let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
+                    (loss, codec.encode(&gz)?)
+                }
+            };
+            let gmsg = Msg::Gradients { step: job.step, tensor: gs };
+            let frames = vec![
+                wire::encode(&gmsg),
+                wire::encode(&Msg::StepStats { step: job.step, loss, ncorrect: 0.0 }),
+            ];
+            if engine.is_some() {
+                // reclaim the encode buffer too: with both buffers recycled
+                // the worker's steady state really is allocation-free on the
+                // codec side (only the reply frames are fresh)
+                let Msg::Gradients { tensor, .. } = gmsg else { unreachable!() };
+                *sbuf = tensor.into_vec();
+            }
+            Ok(DoneOk { is_train: true, loss, frames })
+        }
+        JobKind::Eval(s, nlabels) => {
+            let loss = match (engine, scratch) {
+                (Some(c3), Some(scr)) => {
+                    let (r, d) = (c3.keys.r, c3.keys.d);
+                    let g = s.shape()[0];
+                    zbuf.resize(g * r * d, 0.0);
+                    c3.decode_into(&s, zbuf, scr);
+                    probe_loss_slice(zbuf)
+                }
+                _ => probe_loss(&codec.decode(&s)?),
+            };
+            let frames = vec![wire::encode(&Msg::EvalStats {
+                step: job.step,
+                loss,
+                ncorrect: nlabels as f32,
+            })];
+            Ok(DoneOk { is_train: false, loss, frames })
+        }
+    }
+}
+
+/// Reject wrong-geometry uplinks before they reach the worker pool (the host
+/// engine's `decode_into` asserts on shape — one malicious client must not
+/// take the shared pool down).
+fn check_uplink_geometry(codec: &RunCodec, t: &Tensor, client: usize) -> Result<()> {
+    if let Some(c3) = codec.host_engine() {
+        ensure!(
+            t.ndim() == 2 && t.shape()[1] == c3.keys.d,
+            "client {client}: carrier shape {:?} does not match (G, {})",
+            t.shape(),
+            c3.keys.d
+        );
+    }
+    Ok(())
+}
+
+/// Parse one client message into protocol state / compute jobs.  An `Err`
+/// is a *per-client* protocol violation — the caller fails that client only.
+fn handle_client_msg(
+    codec: &RunCodec,
+    c: &mut ClientSm,
+    reactor: &mut Reactor,
+    client: usize,
+    msg: Msg,
+) -> Result<()> {
+    ensure!(!c.finishing, "client {client}: message after Shutdown");
+    match msg {
+        Msg::KeySeed { .. } => {
+            // keys already derived from the shared seed at construction
+        }
+        Msg::Features { step, tensor } => {
+            ensure!(
+                c.pending.is_none(),
+                "client {client}: Features while a step is pending"
+            );
+            check_uplink_geometry(codec, &tensor, client)?;
+            c.pending = Some((step, tensor));
+        }
+        Msg::TrainLabels { step, .. } => {
+            let (fstep, s) = c
+                .pending
+                .take()
+                .with_context(|| format!("client {client}: labels before features"))?;
+            ensure!(
+                fstep == step,
+                "client {client}: label step mismatch {step} != {fstep}"
+            );
+            c.jobs.push_back(Job { client, step, kind: JobKind::Train(s) });
+        }
+        Msg::EvalFeatures { step, tensor, labels } => {
+            check_uplink_geometry(codec, &tensor, client)?;
+            c.jobs.push_back(Job { client, step, kind: JobKind::Eval(tensor, labels.len()) });
+        }
+        Msg::Shutdown => {
+            c.finishing = true;
+            reactor.set_hold(client, true);
+        }
+        other => bail!("client {client}: unexpected message {other:?}"),
+    }
+    Ok(())
+}
+
+/// Apply one finished compute result: queue its reply frames and update the
+/// client state machine.  A worker-side error fails that client only.
+fn apply_done(
+    done: Done,
+    st: &mut [ClientSm],
+    reactor: &mut Reactor,
+    open: &mut usize,
+    inflight_total: &mut usize,
+) {
+    let Done { client, result } = done;
+    st[client].inflight = false;
+    *inflight_total -= 1;
+    match result {
+        Ok(ok) => {
+            let c = &mut st[client];
+            if c.closed {
+                return; // late result for an already-failed client
+            }
+            if ok.is_train {
+                c.steps += 1;
+                c.last_loss = ok.loss;
+            }
+            for frame in ok.frames {
+                reactor.queue_frame(client, frame);
+            }
+        }
+        Err(e) => {
+            fail_client(st, reactor, open, client, format!("codec worker: {e}"));
+        }
+    }
+}
+
+/// Serve N edges from ONE I/O thread plus `workers` codec threads: the
+/// reactor pumps frames, per-client state machines parse the protocol, a
+/// shared job queue feeds the codec pool, and replies flow back through
+/// bounded per-client outboxes.  Reports the same per-client accounting as
+/// [`serve_clients`] — the two serving styles are interchangeable to the
+/// edges and to the byte-accounting tests.
+pub fn serve_clients_reactor(
+    codec: &RunCodec,
+    conns: Vec<Box<dyn ReactorConn>>,
+    workers: usize,
+    cfg: ReactorConfig,
+) -> Result<MultiStats> {
+    if conns.is_empty() {
+        return Ok(MultiStats::default());
+    }
+    let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<Done>();
+    let job_rx = std::sync::Mutex::new(job_rx);
+    std::thread::scope(|sc| {
+        for _ in 0..workers.max(1) {
+            let done_tx = done_tx.clone();
+            let job_rx = &job_rx;
+            sc.spawn(move || codec_worker(codec, job_rx, done_tx));
+        }
+        // only the workers hold Done senders now, so a dead pool is
+        // observable as a disconnected done_rx
+        drop(done_tx);
+        // job_tx moves into the loop and drops on return, which is what
+        // releases the workers (and lets this scope join them)
+        reactor_serve_loop(codec, conns, cfg, job_tx, &done_rx)
+    })
+}
+
+fn reactor_serve_loop(
+    codec: &RunCodec,
+    conns: Vec<Box<dyn ReactorConn>>,
+    cfg: ReactorConfig,
+    job_tx: std::sync::mpsc::Sender<Job>,
+    done_rx: &std::sync::mpsc::Receiver<Done>,
+) -> Result<MultiStats> {
+    use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+    let n = conns.len();
+    // this loop reads cfg bounds directly (step 3's hold), so normalize the
+    // same way Reactor::new does
+    let cfg = cfg.clamped();
+    let mut reactor = Reactor::new(conns, cfg);
+    let mut st: Vec<ClientSm> = (0..n).map(|_| ClientSm::default()).collect();
+    let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
+    let mut events: Vec<Event> = Vec::new();
+    let mut open = n;
+    let mut inflight_total = 0usize;
+
+    while open > 0 {
+        // 1) one fair I/O sweep; per-client failures (protocol violations,
+        //    transport errors, mid-protocol hangups) close that client only
+        let mut worked = reactor.poll(&mut events);
+        for ev in events.drain(..) {
+            match ev {
+                Event::Msg { client, msg } => {
+                    if st[client].closed {
+                        continue;
+                    }
+                    if let Err(e) =
+                        handle_client_msg(codec, &mut st[client], &mut reactor, client, msg)
+                    {
+                        fail_client(&mut st, &mut reactor, &mut open, client, e.to_string());
+                    }
+                }
+                Event::Closed { client } => {
+                    if st[client].finishing || st[client].closed {
+                        st[client].peer_gone = true;
+                    } else {
+                        fail_client(
+                            &mut st,
+                            &mut reactor,
+                            &mut open,
+                            client,
+                            "connection closed mid-protocol".into(),
+                        );
+                    }
+                }
+                Event::Error { client, error } => {
+                    fail_client(&mut st, &mut reactor, &mut open, client, error.to_string());
+                }
+            }
+        }
+
+        // 2) collect finished compute without blocking
+        loop {
+            match done_rx.try_recv() {
+                Ok(done) => {
+                    worked = true;
+                    apply_done(done, &mut st, &mut reactor, &mut open, &mut inflight_total);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    ensure!(
+                        inflight_total == 0,
+                        "codec worker pool died with {inflight_total} jobs in flight"
+                    );
+                    break;
+                }
+            }
+        }
+
+        // 3) dispatch ready jobs (one in flight per client keeps replies in
+        //    step order) and refresh job-queue backpressure holds
+        for ci in 0..n {
+            let c = &mut st[ci];
+            if c.closed {
+                continue;
+            }
+            if !c.inflight {
+                if let Some(job) = c.jobs.pop_front() {
+                    job_tx
+                        .send(job)
+                        .map_err(|_| C3Error::msg("codec worker pool unavailable"))?;
+                    c.inflight = true;
+                    inflight_total += 1;
+                    worked = true;
+                }
+            }
+            if !c.finishing {
+                let hold = c.jobs.len() >= cfg.max_pending_jobs;
+                reactor.set_hold(ci, hold);
+            }
+        }
+
+        // 4) retire clients whose protocol, compute and outbox all drained
+        for ci in 0..n {
+            let c = &mut st[ci];
+            if !c.closed
+                && c.finishing
+                && !c.inflight
+                && c.jobs.is_empty()
+                && (c.peer_gone || reactor.outbox_len(ci) == 0)
+            {
+                let stats = reactor.stats(ci);
+                reports[ci] = Some(ClientReport {
+                    client: ci,
+                    steps: c.steps,
+                    tx_bytes: stats.tx(),
+                    rx_bytes: stats.rx(),
+                    tx_msgs: stats.tx_msgs.load(std::sync::atomic::Ordering::Relaxed),
+                    rx_msgs: stats.rx_msgs.load(std::sync::atomic::Ordering::Relaxed),
+                    last_loss: c.last_loss,
+                });
+                reactor.close(ci);
+                c.closed = true;
+                open -= 1;
+                worked = true;
+            }
+        }
+
+        // 5) idle: park briefly, but wake immediately on finished compute
+        if !worked && open > 0 {
+            match done_rx
+                .recv_timeout(std::time::Duration::from_micros(cfg.poll_sleep_us.max(1)))
+            {
+                Ok(done) => {
+                    apply_done(done, &mut st, &mut reactor, &mut open, &mut inflight_total)
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    ensure!(
+                        inflight_total == 0,
+                        "codec worker pool died with {inflight_total} jobs in flight"
+                    );
+                    reactor.idle_sleep();
+                }
+            }
+        }
+    }
+
+    // every healthy client has fully retired; only now surface failures,
+    // matching serve_clients (whose per-client threads all finish before
+    // the aggregate join reports the first error)
+    let failures: Vec<String> = st
+        .iter()
+        .enumerate()
+        .filter_map(|(ci, c)| c.failed.as_ref().map(|why| format!("client {ci}: {why}")))
+        .collect();
+    ensure!(
+        failures.is_empty(),
+        "reactor serve: {} client(s) failed: {}",
+        failures.len(),
+        failures.join("; ")
+    );
+
+    Ok(MultiStats {
+        per_client: reports
+            .into_iter()
+            .map(|r| r.expect("every retired client leaves a report"))
+            .collect(),
+    })
+}
+
 /// One synthetic edge: hold a (B, D) feature buffer, uplink `encode(z)`,
 /// apply the decoded downlink gradient with a toy SGD step, repeat.  The
 /// probe loss contracts geometrically when the codec round trip is faithful,
@@ -234,7 +729,7 @@ pub fn run_edge(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transport::inproc_pair;
+    use crate::transport::{inproc_pair, inproc_reactor_pair};
 
     #[test]
     fn single_client_roundtrip_decreases_probe_loss() {
@@ -260,6 +755,80 @@ mod tests {
         // the two halves of the link must agree byte-for-byte
         assert_eq!(cloud.rx_bytes, edge.tx_bytes);
         assert_eq!(cloud.tx_bytes, edge.rx_bytes);
+    }
+
+    #[test]
+    fn reactor_single_client_matches_thread_per_client_contract() {
+        let (mut etp, cloud_conn) = inproc_reactor_pair();
+        let cloud_codec = RunCodec::host(7, 2, 128, 1);
+        let edge_codec = RunCodec::host(7, 2, 128, 1);
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let cloud = sc.spawn(move || {
+                let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(cloud_conn)];
+                serve_clients_reactor(&cloud_codec, conns, 2, ReactorConfig::default())
+            });
+            let edge = run_edge(&edge_codec, &mut etp, 8, 7, 3, 4, 128).unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        assert_eq!(cloud.per_client.len(), 1);
+        let c = &cloud.per_client[0];
+        assert_eq!(c.steps, 8);
+        assert!(
+            edge.last_loss < edge.first_loss,
+            "probe loss did not decrease: {} -> {}",
+            edge.first_loss,
+            edge.last_loss
+        );
+        // both halves of the link agree byte-for-byte, like serve_one
+        assert_eq!(c.rx_bytes, edge.tx_bytes);
+        assert_eq!(c.tx_bytes, edge.rx_bytes);
+        assert_eq!(c.rx_msgs, 8 * 2 + 2);
+        assert_eq!(c.tx_msgs, 8 * 2);
+    }
+
+    #[test]
+    fn reactor_rejects_bad_geometry_uplink() {
+        let (mut etp, cloud_conn) = inproc_reactor_pair();
+        let cloud_codec = RunCodec::host(1, 2, 64, 1);
+        let err = std::thread::scope(|sc| {
+            let cloud = sc.spawn(move || {
+                let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(cloud_conn)];
+                serve_clients_reactor(&cloud_codec, conns, 1, ReactorConfig::default())
+            });
+            // wrong feature dim (32 != 64) must fail the serve, not panic a
+            // shared worker
+            etp.send(&Msg::Features { step: 0, tensor: Tensor::zeros(&[2, 32]) }).unwrap();
+            cloud.join().unwrap()
+        });
+        assert!(err.is_err(), "bad geometry must surface as an error");
+    }
+
+    #[test]
+    fn reactor_isolates_one_broken_client() {
+        // One client vanishing mid-protocol must not take the pool down:
+        // the healthy edges train to completion, and the failure surfaces
+        // only in the aggregate result afterwards (same contract as the
+        // thread-per-client pool, where serve_one fails its own thread).
+        let (mut e1, c1) = inproc_reactor_pair();
+        let (mut e2, c2) = inproc_reactor_pair();
+        let (e3, c3) = inproc_reactor_pair();
+        let cloud_codec = RunCodec::host(3, 2, 64, 1);
+        let edge_codec = RunCodec::host(3, 2, 64, 1);
+        let (serve_result, a, b) = std::thread::scope(|sc| {
+            let cloud = sc.spawn(move || {
+                let conns: Vec<Box<dyn ReactorConn>> =
+                    vec![Box::new(c1), Box::new(c2), Box::new(c3)];
+                serve_clients_reactor(&cloud_codec, conns, 2, ReactorConfig::default())
+            });
+            drop(e3); // client 2 hangs up without ever speaking
+            let a = run_edge(&edge_codec, &mut e1, 5, 3, 1, 4, 64).unwrap();
+            let b = run_edge(&edge_codec, &mut e2, 5, 3, 2, 4, 64).unwrap();
+            (cloud.join().unwrap(), a, b)
+        });
+        assert!(a.last_loss < a.first_loss, "edge 0 must finish training");
+        assert!(b.last_loss < b.first_loss, "edge 1 must finish training");
+        let err = serve_result.expect_err("broken client must surface as an error");
+        assert!(err.to_string().contains("client 2"), "{err}");
     }
 
     #[test]

@@ -15,9 +15,13 @@ use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
+/// The codec venue a run compresses through (both directions).
 pub enum RunCodec {
+    /// Identity: vanilla SL and BottleNet++ (codec inside the model).
     None,
+    /// rust-native hdc implementation (FFT or direct).
     Host(C3Codec),
+    /// AOT-lowered Pallas kernels through PJRT.
     Artifact(CodecRuntime),
 }
 
@@ -40,6 +44,18 @@ impl RunCodec {
         Ok(RunCodec::Artifact(rt))
     }
 
+    /// The host C3 engine, when this codec runs in the host venue.  Lets the
+    /// reactor cloud's worker pool drive the zero-allocation
+    /// `encode_into`/`decode_into` path with per-worker scratch instead of
+    /// the allocating [`RunCodec::encode`]/[`RunCodec::decode`] wrappers.
+    pub fn host_engine(&self) -> Option<&crate::hdc::C3> {
+        match self {
+            RunCodec::Host(c) => Some(c.engine()),
+            _ => None,
+        }
+    }
+
+    /// Human-readable venue/scheme label for logs and reports.
     pub fn name(&self) -> String {
         match self {
             RunCodec::None => "none".into(),
@@ -50,6 +66,7 @@ impl RunCodec {
         }
     }
 
+    /// Nominal compression ratio R (1 for the identity venue).
     pub fn ratio(&self) -> usize {
         match self {
             RunCodec::None => 1,
@@ -58,6 +75,7 @@ impl RunCodec {
         }
     }
 
+    /// Compress a (B, D) feature/gradient batch to its wire form.
     pub fn encode(&self, z: &Tensor) -> Result<Tensor> {
         match self {
             RunCodec::None => Ok(z.clone()),
@@ -66,6 +84,7 @@ impl RunCodec {
         }
     }
 
+    /// Reconstruct a (B, D) batch from its compressed wire form.
     pub fn decode(&self, s: &Tensor) -> Result<Tensor> {
         match self {
             RunCodec::None => Ok(s.clone()),

@@ -14,6 +14,7 @@
 //!   c3sl train --config configs/tiny_c3_r4.toml
 //!   c3sl cloud --config configs/tiny_tcp.toml   # terminal 1
 //!   c3sl edge  --config configs/tiny_tcp.toml   # terminal 2
+//!   c3sl multi --edges 256 --reactor --tcp      # thousand-edge serving path
 
 use c3sl::bail;
 use c3sl::config::cli::Args;
@@ -25,6 +26,7 @@ use c3sl::hdc::{crosstalk_report, Backend, KeySet, C3};
 use c3sl::runtime::Engine;
 use c3sl::sim::comm_report;
 use c3sl::tensor::Tensor;
+use c3sl::transport::reactor::ReactorConfig;
 use c3sl::transport::tcp::Tcp;
 use c3sl::transport::Transport;
 use c3sl::util::error::{Context, Result};
@@ -189,9 +191,11 @@ fn cmd_cloud(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-edge codec scenario: N concurrent edges against one cloud
-/// (thread-per-client), host codec venue — runs without AOT artifacts.
-/// `--config` seeds the defaults (transport.edges, scheme.r/workers,
+/// Multi-edge codec scenario: N concurrent edges against one cloud, host
+/// codec venue — runs without AOT artifacts.  `--reactor` serves every edge
+/// from one nonblocking I/O thread plus a codec worker pool (the
+/// thousand-edge path) instead of thread-per-client.  `--config` seeds the
+/// defaults (transport.edges/reactor/poll_us/outbox_frames, scheme.r/workers,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
     let base = match args.get("config") {
@@ -221,10 +225,29 @@ fn cmd_multi(args: &Args) -> Result<()> {
             .or_else(|| b.map(|c| c.tcp_addr.clone()))
             .unwrap_or(def.tcp_addr),
         link: b.and_then(|c| c.link),
+        reactor: args.has("reactor") || b.map(|c| c.reactor).unwrap_or(false),
+        poll: ReactorConfig {
+            poll_sleep_us: args
+                .get_u64("poll-us")?
+                .or(b.map(|c| c.reactor_poll_us))
+                .unwrap_or(def.poll.poll_sleep_us),
+            max_outbox_frames: args
+                .get_usize("outbox-frames")?
+                .or(b.map(|c| c.reactor_outbox))
+                .unwrap_or(def.poll.max_outbox_frames),
+            ..def.poll
+        },
     };
     println!(
-        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} transport={:?}",
-        spec.edges, spec.steps, spec.r, spec.d, spec.batch, spec.workers, spec.transport
+        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} transport={:?} serve={}",
+        spec.edges,
+        spec.steps,
+        spec.r,
+        spec.d,
+        spec.batch,
+        spec.workers,
+        spec.transport,
+        if spec.reactor { "reactor" } else { "thread-per-client" }
     );
     let out = run_multi_edge(&spec)?;
     println!("{:>7} {:>7} {:>12} {:>12} {:>12}", "client", "steps", "rx bytes", "tx bytes", "last loss");

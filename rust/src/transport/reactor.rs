@@ -1,0 +1,707 @@
+//! Nonblocking reactor transport: one thread multiplexes N edge connections.
+//!
+//! The thread-per-client cloud ([`crate::coordinator::multi::serve_clients`])
+//! burns one OS thread (stack, scheduler slot, context switches) per edge,
+//! which caps concurrent edges at the dozens.  This module provides the
+//! substrate for a reactor-driven cloud that scales to thousands of edges:
+//!
+//! * [`ReactorConn`] — a connection that can be *polled*: pull at most one
+//!   complete length-prefixed wire frame without blocking, and push queued
+//!   reply frames as far as the peer will accept them without blocking.
+//! * [`NbTcp`] — a nonblocking TCP connection with explicit partial-read /
+//!   partial-write state machines for the `[len u32 LE][frame]` framing
+//!   (`std`-only: `TcpStream::set_nonblocking` + a poll list, no mio/epoll
+//!   binding needed, so the same code runs on every std platform).
+//! * [`NbInProc`] — the in-process equivalent over mpsc channels (frames
+//!   arrive whole, so the state machine degenerates to `try_recv`), used by
+//!   tests and the in-proc multi-edge venue.
+//! * [`Reactor`] — the event pump: a fair round-robin sweep over all open
+//!   connections that flushes outboxes, pulls newly completed frames, decodes
+//!   them to [`Msg`] events, and applies backpressure by *not reading* from a
+//!   client whose outbox is backed up past [`ReactorConfig::max_outbox_frames`].
+//!
+//! The reactor owns I/O only.  Compute (codec decode/step/encode) belongs on
+//! a worker pool — see `coordinator::multi::serve_clients_reactor`, which
+//! feeds jobs from the reactor's ready events to `scheme.workers` codec
+//! threads and queues the resulting reply frames back through [`Reactor`].
+//!
+//! Byte accounting matches the blocking transports exactly: [`NbTcp`] counts
+//! the 4-byte length prefix like [`super::tcp::Tcp`]; [`NbInProc`] counts raw
+//! frame bytes like [`super::InProc`] — so a reactor cloud and its blocking
+//! edges agree byte-for-byte in the multi-edge accounting tests.
+
+use std::collections::VecDeque;
+use std::io::{IoSlice, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use super::{check_frame_len, LinkStats, Msg, TransportError};
+use crate::transport::wire;
+
+/// Outcome of one nonblocking receive attempt on a [`ReactorConn`].
+#[derive(Debug)]
+pub enum PollIn {
+    /// A complete wire frame arrived.
+    Frame(Vec<u8>),
+    /// No complete frame is available right now (reading would block).
+    Idle,
+    /// The peer closed the connection cleanly (EOF at a frame boundary).
+    Closed,
+}
+
+/// A connection a [`Reactor`] can multiplex: nonblocking frame I/O with an
+/// internal outbox for partially written replies.
+pub trait ReactorConn: Send {
+    /// Try to pull one complete wire frame without blocking.  Partial reads
+    /// are buffered internally; the peer-announced length prefix is validated
+    /// with [`check_frame_len`] *before* any allocation.
+    fn poll_recv(&mut self) -> Result<PollIn, TransportError>;
+
+    /// Queue a wire frame (as produced by [`wire::encode`]) for transmission.
+    /// Never blocks; bytes move on the next [`ReactorConn::poll_send`].
+    fn queue_frame(&mut self, frame: Vec<u8>);
+
+    /// Push queued bytes toward the peer without blocking.  Returns `true`
+    /// when the outbox fully drained, `false` if the peer would block.
+    fn poll_send(&mut self) -> Result<bool, TransportError>;
+
+    /// Frames queued but not yet fully handed to the peer.
+    fn pending_out(&self) -> usize;
+
+    /// Shared byte counters for this connection (this endpoint's half).
+    fn stats(&self) -> Arc<LinkStats>;
+}
+
+// ---------------------------------------------------------------------------
+// Nonblocking TCP connection
+// ---------------------------------------------------------------------------
+
+/// Read-side state machine position for [`NbTcp`].
+enum ReadState {
+    /// Accumulating the 4-byte length prefix.
+    Len,
+    /// Accumulating the frame body (length already validated).
+    Body,
+}
+
+/// One queued reply: the 4-byte length prefix kept separate from the frame
+/// so queueing never copies the frame body (the workers hand over owned
+/// frames; the I/O thread only writes them, gather-style).
+struct OutFrame {
+    prefix: [u8; 4],
+    frame: Vec<u8>,
+}
+
+impl OutFrame {
+    fn total(&self) -> usize {
+        4 + self.frame.len()
+    }
+}
+
+/// A nonblocking TCP connection speaking the `[len u32 LE][frame]` framing,
+/// resumable at any byte boundary: partial prefixes, partial bodies and
+/// partial writes all park state and return to the reactor instead of
+/// blocking the thread.
+pub struct NbTcp {
+    stream: TcpStream,
+    stats: Arc<LinkStats>,
+    rstate: ReadState,
+    lenbuf: [u8; 4],
+    len_have: usize,
+    body: Vec<u8>,
+    body_have: usize,
+    outbox: VecDeque<OutFrame>,
+    /// Bytes of `outbox.front()` (prefix + frame) already written.
+    out_off: usize,
+}
+
+impl NbTcp {
+    /// Wrap an accepted stream in nonblocking mode (the reactor's accept path
+    /// hands over raw streams from [`super::tcp::Tcp::accept_streams`]).
+    pub fn from_stream(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_nodelay(true)?;
+        stream.set_nonblocking(true)?;
+        Ok(NbTcp {
+            stream,
+            stats: Arc::new(LinkStats::default()),
+            rstate: ReadState::Len,
+            lenbuf: [0; 4],
+            len_have: 0,
+            body: Vec::new(),
+            body_have: 0,
+            outbox: VecDeque::new(),
+            out_off: 0,
+        })
+    }
+}
+
+impl ReactorConn for NbTcp {
+    fn poll_recv(&mut self) -> Result<PollIn, TransportError> {
+        loop {
+            match self.rstate {
+                ReadState::Len => {
+                    while self.len_have < 4 {
+                        match self.stream.read(&mut self.lenbuf[self.len_have..]) {
+                            Ok(0) => {
+                                if self.len_have == 0 {
+                                    return Ok(PollIn::Closed);
+                                }
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::UnexpectedEof,
+                                    "EOF inside a length prefix",
+                                )
+                                .into());
+                            }
+                            Ok(n) => self.len_have += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                return Ok(PollIn::Idle)
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    let len = u32::from_le_bytes(self.lenbuf) as usize;
+                    // Validate the peer-controlled length BEFORE allocating.
+                    check_frame_len(len)?;
+                    self.body = vec![0u8; len];
+                    self.body_have = 0;
+                    self.rstate = ReadState::Body;
+                }
+                ReadState::Body => {
+                    while self.body_have < self.body.len() {
+                        match self.stream.read(&mut self.body[self.body_have..]) {
+                            Ok(0) => {
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::UnexpectedEof,
+                                    "EOF inside a frame body",
+                                )
+                                .into())
+                            }
+                            Ok(n) => self.body_have += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                return Ok(PollIn::Idle)
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    let frame = std::mem::take(&mut self.body);
+                    self.rstate = ReadState::Len;
+                    self.len_have = 0;
+                    self.stats
+                        .rx_bytes
+                        .fetch_add(4 + frame.len() as u64, Ordering::Relaxed);
+                    self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
+                    return Ok(PollIn::Frame(frame));
+                }
+            }
+        }
+    }
+
+    fn queue_frame(&mut self, frame: Vec<u8>) {
+        // zero-copy queueing: the frame Vec moves in untouched, the prefix
+        // rides alongside and both are written gather-style in poll_send
+        self.outbox.push_back(OutFrame {
+            prefix: (frame.len() as u32).to_le_bytes(),
+            frame,
+        });
+    }
+
+    fn poll_send(&mut self) -> Result<bool, TransportError> {
+        loop {
+            let Some(front) = self.outbox.front() else {
+                return Ok(true);
+            };
+            // one writev over the unwritten tail of [prefix][frame]
+            let wrote = if self.out_off < 4 {
+                self.stream.write_vectored(&[
+                    IoSlice::new(&front.prefix[self.out_off..]),
+                    IoSlice::new(&front.frame),
+                ])
+            } else {
+                self.stream.write(&front.frame[self.out_off - 4..])
+            };
+            match wrote {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "peer accepted zero bytes",
+                    )
+                    .into())
+                }
+                Ok(n) => {
+                    self.out_off += n;
+                    if self.out_off == front.total() {
+                        let done = self.outbox.pop_front().expect("front checked above");
+                        self.out_off = 0;
+                        // prefix + frame bytes, matching Tcp::send accounting
+                        self.stats
+                            .tx_bytes
+                            .fetch_add(done.total() as u64, Ordering::Relaxed);
+                        self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn pending_out(&self) -> usize {
+        self.outbox.len()
+    }
+
+    fn stats(&self) -> Arc<LinkStats> {
+        self.stats.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Nonblocking in-process connection
+// ---------------------------------------------------------------------------
+
+/// In-process [`ReactorConn`] over mpsc channels, pairing with a blocking
+/// [`super::InProc`] edge endpoint (see [`super::inproc_reactor_pair`]).
+/// Frames arrive whole, so `poll_recv` is a `try_recv`; sends never block
+/// (the channel is unbounded), so backpressure shows up only as outbox depth.
+pub struct NbInProc {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    stats: Arc<LinkStats>,
+    outbox: VecDeque<Vec<u8>>,
+}
+
+impl NbInProc {
+    /// Build from raw channel halves (used by [`super::inproc_reactor_pair`]).
+    pub fn new(tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>>) -> Self {
+        NbInProc { tx, rx, stats: Arc::new(LinkStats::default()), outbox: VecDeque::new() }
+    }
+}
+
+impl ReactorConn for NbInProc {
+    fn poll_recv(&mut self) -> Result<PollIn, TransportError> {
+        match self.rx.try_recv() {
+            Ok(frame) => {
+                check_frame_len(frame.len())?;
+                self.stats.rx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+                self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
+                Ok(PollIn::Frame(frame))
+            }
+            Err(TryRecvError::Empty) => Ok(PollIn::Idle),
+            Err(TryRecvError::Disconnected) => Ok(PollIn::Closed),
+        }
+    }
+
+    fn queue_frame(&mut self, frame: Vec<u8>) {
+        self.outbox.push_back(frame);
+    }
+
+    fn poll_send(&mut self) -> Result<bool, TransportError> {
+        while let Some(frame) = self.outbox.pop_front() {
+            let n = frame.len() as u64;
+            if self.tx.send(frame).is_err() {
+                return Err(TransportError::Closed);
+            }
+            self.stats.tx_bytes.fetch_add(n, Ordering::Relaxed);
+            self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(true)
+    }
+
+    fn pending_out(&self) -> usize {
+        self.outbox.len()
+    }
+
+    fn stats(&self) -> Arc<LinkStats> {
+        self.stats.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The reactor: fair event pump over N connections
+// ---------------------------------------------------------------------------
+
+/// Tunables for the reactor loop (config: `[transport] reactor/poll_us/...`).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorConfig {
+    /// Idle backoff sleep in microseconds when a full sweep makes no
+    /// progress (the portable poll-list equivalent of an epoll timeout).
+    pub poll_sleep_us: u64,
+    /// Per-client outbox bound, in frames: once a client's outbox reaches
+    /// this depth the reactor stops *reading* from it until replies drain —
+    /// a slow consumer stalls only itself, never the pump.
+    pub max_outbox_frames: usize,
+    /// Fairness cap: at most this many frames are pulled from one client per
+    /// sweep, so one chatty edge cannot starve the round-robin.
+    pub max_frames_per_sweep: usize,
+    /// Per-client bound on parsed-but-undispatched compute jobs; above it
+    /// the serving loop holds reads from that client (pipelined clients get
+    /// genuine TCP backpressure instead of unbounded queueing).
+    pub max_pending_jobs: usize,
+}
+
+impl ReactorConfig {
+    /// Copy with every count bound clamped to ≥ 1.  A zero bound would
+    /// silently stop all reads (or permanently hold every client) and hang
+    /// whatever drives the pump, so every consumer normalizes through this
+    /// one place.
+    pub fn clamped(self) -> Self {
+        ReactorConfig {
+            poll_sleep_us: self.poll_sleep_us,
+            max_outbox_frames: self.max_outbox_frames.max(1),
+            max_frames_per_sweep: self.max_frames_per_sweep.max(1),
+            max_pending_jobs: self.max_pending_jobs.max(1),
+        }
+    }
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            poll_sleep_us: 100,
+            max_outbox_frames: 8,
+            max_frames_per_sweep: 4,
+            max_pending_jobs: 4,
+        }
+    }
+}
+
+/// What one reactor sweep observed on one client.
+#[derive(Debug)]
+pub enum Event {
+    /// A decoded protocol message arrived from `client`.
+    Msg {
+        /// Connection index (accept order).
+        client: usize,
+        /// The decoded message.
+        msg: Msg,
+    },
+    /// `client` closed its connection cleanly (EOF at a frame boundary).
+    Closed {
+        /// Connection index (accept order).
+        client: usize,
+    },
+    /// `client`'s connection failed; the reactor has already closed it.
+    Error {
+        /// Connection index (accept order).
+        client: usize,
+        /// The transport-level failure.
+        error: TransportError,
+    },
+}
+
+struct Slot {
+    link: Option<Box<dyn ReactorConn>>,
+    stats: Arc<LinkStats>,
+    hold: bool,
+}
+
+/// The event pump: owns all client connections and multiplexes them from a
+/// single thread.  Each [`Reactor::poll`] performs one fair round-robin
+/// sweep; callers interleave sweeps with their own work (dispatching compute,
+/// collecting results) and call [`Reactor::idle_sleep`] when neither side
+/// made progress.
+pub struct Reactor {
+    conns: Vec<Slot>,
+    cfg: ReactorConfig,
+    rr: usize,
+}
+
+impl Reactor {
+    /// Take ownership of `links` (index = client id, accept order).  The
+    /// count bounds are normalized via [`ReactorConfig::clamped`].
+    pub fn new(links: Vec<Box<dyn ReactorConn>>, cfg: ReactorConfig) -> Self {
+        let cfg = cfg.clamped();
+        let conns = links
+            .into_iter()
+            .map(|link| Slot { stats: link.stats(), link: Some(link), hold: false })
+            .collect();
+        Reactor { conns, cfg, rr: 0 }
+    }
+
+    /// Tunables this reactor runs with.
+    pub fn config(&self) -> ReactorConfig {
+        self.cfg
+    }
+
+    /// One fair sweep over every open connection: flush outboxes, then pull
+    /// up to [`ReactorConfig::max_frames_per_sweep`] frames per client
+    /// (skipping held or backlogged clients), decoding each into an
+    /// [`Event`].  Connection failures surface as [`Event::Error`] and close
+    /// the connection; they never abort the sweep for other clients.
+    /// Returns `true` if any byte moved or any event was produced.
+    pub fn poll(&mut self, events: &mut Vec<Event>) -> bool {
+        let n = self.conns.len();
+        let mut progress = false;
+        let start = self.rr;
+        self.rr = (self.rr + 1) % n.max(1);
+        for off in 0..n {
+            let ci = (start + off) % n;
+            let slot = &mut self.conns[ci];
+            let Some(link) = slot.link.as_mut() else { continue };
+
+            // 1) writes first: draining replies is what unblocks everyone
+            if link.pending_out() > 0 {
+                match link.poll_send() {
+                    Ok(true) => progress = true,
+                    Ok(false) => {}
+                    Err(error) => {
+                        progress = true;
+                        slot.link = None;
+                        events.push(Event::Error { client: ci, error });
+                        continue;
+                    }
+                }
+            }
+
+            // 2) reads, gated by backpressure: a client whose outbox is
+            //    backed up (or that the caller put on hold) is not read.
+            if slot.hold || link.pending_out() >= self.cfg.max_outbox_frames {
+                continue;
+            }
+            for _ in 0..self.cfg.max_frames_per_sweep {
+                match link.poll_recv() {
+                    Ok(PollIn::Frame(frame)) => {
+                        progress = true;
+                        match wire::decode(&frame) {
+                            Ok(msg) => events.push(Event::Msg { client: ci, msg }),
+                            Err(e) => {
+                                slot.link = None;
+                                events.push(Event::Error { client: ci, error: e.into() });
+                                break;
+                            }
+                        }
+                    }
+                    Ok(PollIn::Idle) => break,
+                    Ok(PollIn::Closed) => {
+                        progress = true;
+                        slot.link = None;
+                        events.push(Event::Closed { client: ci });
+                        break;
+                    }
+                    Err(error) => {
+                        progress = true;
+                        slot.link = None;
+                        events.push(Event::Error { client: ci, error });
+                        break;
+                    }
+                }
+            }
+        }
+        progress
+    }
+
+    /// Queue a wire frame for `client` (dropped silently if already closed —
+    /// the caller learns about closure via [`Event::Closed`]/[`Event::Error`]).
+    pub fn queue_frame(&mut self, client: usize, frame: Vec<u8>) {
+        if let Some(link) = self.conns[client].link.as_mut() {
+            link.queue_frame(frame);
+        }
+    }
+
+    /// Pause (`true`) or resume (`false`) reading from `client` — the
+    /// serving loop's lever for job-queue backpressure.
+    pub fn set_hold(&mut self, client: usize, hold: bool) {
+        self.conns[client].hold = hold;
+    }
+
+    /// Frames queued to `client` that have not fully reached the peer.
+    pub fn outbox_len(&self, client: usize) -> usize {
+        self.conns[client].link.as_ref().map_or(0, |l| l.pending_out())
+    }
+
+    /// Whether `client`'s connection is still open.
+    pub fn is_open(&self, client: usize) -> bool {
+        self.conns[client].link.is_some()
+    }
+
+    /// Open connection count.
+    pub fn open_count(&self) -> usize {
+        self.conns.iter().filter(|s| s.link.is_some()).count()
+    }
+
+    /// Byte counters for `client` (valid after close too).
+    pub fn stats(&self, client: usize) -> Arc<LinkStats> {
+        self.conns[client].stats.clone()
+    }
+
+    /// Close `client`'s connection (drops the socket / channel halves).
+    pub fn close(&mut self, client: usize) {
+        self.conns[client].link = None;
+    }
+
+    /// Park the thread briefly after a no-progress sweep.  This is the
+    /// portable stand-in for blocking in `epoll_wait`: with work in flight
+    /// the loop never gets here, so the sleep only bounds idle CPU burn.
+    pub fn idle_sleep(&self) {
+        std::thread::sleep(std::time::Duration::from_micros(self.cfg.poll_sleep_us.max(1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::transport::{inproc_reactor_pair, Transport};
+    use std::net::TcpListener;
+
+    fn feat(step: u64, n: usize) -> Msg {
+        Msg::Features { step, tensor: Tensor::from_vec(&[n], (0..n).map(|i| i as f32).collect()) }
+    }
+
+    #[test]
+    fn inproc_reactor_roundtrip() {
+        let (mut edge, cloud) = inproc_reactor_pair();
+        let mut reactor = Reactor::new(vec![Box::new(cloud)], ReactorConfig::default());
+        edge.send(&feat(1, 8)).unwrap();
+        let mut events = Vec::new();
+        assert!(reactor.poll(&mut events));
+        match events.as_slice() {
+            [Event::Msg { client: 0, msg }] => assert_eq!(msg, &feat(1, 8)),
+            other => panic!("unexpected events {other:?}"),
+        }
+        // reply path: queue + flush, edge receives
+        reactor.queue_frame(0, wire::encode(&Msg::KeySeed { seed: 7 }));
+        events.clear();
+        reactor.poll(&mut events);
+        assert_eq!(reactor.outbox_len(0), 0);
+        assert_eq!(edge.recv().unwrap(), Msg::KeySeed { seed: 7 });
+        // accounting: both halves agree
+        assert_eq!(edge.stats().tx(), reactor.stats(0).rx());
+        assert_eq!(edge.stats().rx(), reactor.stats(0).tx());
+    }
+
+    #[test]
+    fn closed_peer_surfaces_as_event() {
+        let (edge, cloud) = inproc_reactor_pair();
+        let mut reactor = Reactor::new(vec![Box::new(cloud)], ReactorConfig::default());
+        drop(edge);
+        let mut events = Vec::new();
+        reactor.poll(&mut events);
+        assert!(matches!(events.as_slice(), [Event::Closed { client: 0 }]));
+        assert!(!reactor.is_open(0));
+        assert_eq!(reactor.open_count(), 0);
+    }
+
+    #[test]
+    fn backpressure_pauses_reads_until_outbox_drains() {
+        let (mut edge, cloud) = inproc_reactor_pair();
+        let cfg = ReactorConfig { max_outbox_frames: 2, ..ReactorConfig::default() };
+        let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg);
+        // NbInProc::poll_send always drains (channel sends never block), so
+        // force a backlog via hold=false but pending frames: queue 3 replies
+        // without polling, then confirm the read gate sees the depth.
+        for s in 0..3u64 {
+            reactor.queue_frame(0, wire::encode(&Msg::KeySeed { seed: s }));
+        }
+        assert_eq!(reactor.outbox_len(0), 3);
+        edge.send(&feat(0, 4)).unwrap();
+        let mut events = Vec::new();
+        // Sweep: writes flush first (in-proc never blocks), after which the
+        // read gate reopens and the frame arrives — the TCP case where the
+        // flush stalls is exercised end-to-end in tests/multi_edge.rs.
+        reactor.poll(&mut events);
+        assert_eq!(reactor.outbox_len(0), 0);
+        assert!(events.iter().any(|e| matches!(e, Event::Msg { .. })));
+        for _ in 0..3 {
+            edge.recv().unwrap();
+        }
+    }
+
+    #[test]
+    fn hold_gates_reads() {
+        let (mut edge, cloud) = inproc_reactor_pair();
+        let mut reactor = Reactor::new(vec![Box::new(cloud)], ReactorConfig::default());
+        edge.send(&feat(0, 4)).unwrap();
+        reactor.set_hold(0, true);
+        let mut events = Vec::new();
+        reactor.poll(&mut events);
+        assert!(events.is_empty(), "held client must not be read");
+        reactor.set_hold(0, false);
+        reactor.poll(&mut events);
+        assert_eq!(events.len(), 1);
+    }
+
+    #[test]
+    fn nbtcp_reassembles_partial_frames() {
+        // Feed a frame through the socket one byte at a time: the reactor
+        // side must park partial state between polls and still deliver one
+        // intact frame (plus correct byte accounting with the prefix).
+        let addr = "127.0.0.1:39391";
+        let listener = TcpListener::bind(addr).unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = NbTcp::from_stream(stream).unwrap();
+
+        let msg = feat(3, 16);
+        let frame = wire::encode(&msg);
+        let mut on_wire = Vec::new();
+        on_wire.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        on_wire.extend_from_slice(&frame);
+
+        let mut got = None;
+        for (i, byte) in on_wire.iter().enumerate() {
+            client.write_all(std::slice::from_ref(byte)).unwrap();
+            client.flush().unwrap();
+            // give the kernel a moment to make the byte readable
+            for _ in 0..200 {
+                match conn.poll_recv().unwrap() {
+                    PollIn::Frame(f) => {
+                        got = Some(f);
+                        break;
+                    }
+                    PollIn::Idle => {
+                        if i + 1 < on_wire.len() {
+                            break; // more bytes still to send
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    PollIn::Closed => panic!("unexpected close"),
+                }
+            }
+        }
+        let got = got.expect("frame must complete after the last byte");
+        assert_eq!(wire::decode(&got).unwrap(), msg);
+        assert_eq!(conn.stats().rx(), on_wire.len() as u64);
+    }
+
+    #[test]
+    fn nbtcp_rejects_zero_and_oversized_prefixes() {
+        let addr = "127.0.0.1:39392";
+        let listener = TcpListener::bind(addr).unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = NbTcp::from_stream(stream).unwrap();
+
+        client.write_all(&0u32.to_le_bytes()).unwrap();
+        client.flush().unwrap();
+        let err = loop {
+            match conn.poll_recv() {
+                Ok(PollIn::Idle) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                Ok(other) => panic!("expected error, got {other:?}"),
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, TransportError::EmptyFrame), "{err:?}");
+
+        // oversized prefix on a fresh pair
+        let addr = "127.0.0.1:39393";
+        let listener = TcpListener::bind(addr).unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = NbTcp::from_stream(stream).unwrap();
+        client.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        client.flush().unwrap();
+        let err = loop {
+            match conn.poll_recv() {
+                Ok(PollIn::Idle) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                Ok(other) => panic!("expected error, got {other:?}"),
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, TransportError::FrameTooLarge(_)), "{err:?}");
+    }
+}

@@ -22,6 +22,7 @@ pub struct LinkModel {
 }
 
 impl LinkModel {
+    /// Build a model from one-way latency (s) and bandwidth (bytes/s).
     pub fn new(latency_s: f64, bandwidth_bps: f64) -> Self {
         assert!(bandwidth_bps > 0.0);
         LinkModel { latency_s, bandwidth_bps }
@@ -33,23 +34,29 @@ impl LinkModel {
     }
 
     // Named profiles used by the benches (nominal, order-of-magnitude).
+
+    /// WiFi-class link: 50 Mbit/s, 2 ms.
     pub fn wifi() -> Self {
-        Self::new(2e-3, 50e6 / 8.0) // 50 Mbit/s, 2 ms
+        Self::new(2e-3, 50e6 / 8.0)
     }
 
+    /// LTE-class link: 10 Mbit/s, 30 ms.
     pub fn lte() -> Self {
-        Self::new(30e-3, 10e6 / 8.0) // 10 Mbit/s, 30 ms
+        Self::new(30e-3, 10e6 / 8.0)
     }
 
+    /// NB-IoT-class link: 100 kbit/s, 100 ms.
     pub fn nbiot() -> Self {
-        Self::new(100e-3, 100e3 / 8.0) // 100 kbit/s, 100 ms
+        Self::new(100e-3, 100e3 / 8.0)
     }
 }
 
 /// Virtual clock accumulating transfer time per direction.
 #[derive(Debug, Default, Clone)]
 pub struct VirtualClock {
+    /// Virtual seconds spent sending.
     pub tx_seconds: f64,
+    /// Virtual seconds spent receiving.
     pub rx_seconds: f64,
 }
 
@@ -57,18 +64,22 @@ pub struct VirtualClock {
 pub struct SimLink<T: Transport> {
     inner: T,
     model: LinkModel,
+    /// Accumulated virtual time on this endpoint.
     pub clock: VirtualClock,
 }
 
 impl<T: Transport> SimLink<T> {
+    /// Wrap `inner` under the given cost model.
     pub fn new(inner: T, model: LinkModel) -> Self {
         SimLink { inner, model, clock: VirtualClock::default() }
     }
 
+    /// The cost model this link charges.
     pub fn model(&self) -> LinkModel {
         self.model
     }
 
+    /// Total virtual seconds across both directions.
     pub fn total_virtual_seconds(&self) -> f64 {
         self.clock.tx_seconds + self.clock.rx_seconds
     }

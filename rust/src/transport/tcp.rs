@@ -2,16 +2,20 @@
 //! cloud can run as separate OS processes (or separate machines).
 //!
 //! Frame on the socket: [len u32 LE][frame bytes] where the inner frame is
-//! wire::encode's output.
+//! wire::encode's output.  The length prefix is peer-controlled input and is
+//! validated with [`super::check_frame_len`] before any allocation: zero
+//! (no valid message encodes to zero bytes) and anything above
+//! `wire::MAX_FRAME_BYTES` are rejected as protocol violations.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use super::{LinkStats, Msg, Transport, TransportError};
+use super::{check_frame_len, LinkStats, Msg, Transport, TransportError};
 use crate::transport::wire;
 
+/// Blocking TCP endpoint speaking length-prefixed wire frames.
 pub struct Tcp {
     stream: TcpStream,
     stats: Arc<LinkStats>,
@@ -36,14 +40,17 @@ impl Tcp {
         Tcp::from_stream(stream)
     }
 
-    /// Accept exactly `n` edges, polling against a deadline so a client that
-    /// never connects cannot hang the cloud's accept loop forever.  Leaves
-    /// the listener in nonblocking mode; accepted streams are blocking.
-    pub fn accept_n(
+    /// Accept exactly `n` raw streams, polling against a deadline so a client
+    /// that never connects cannot hang the cloud's accept loop forever.
+    /// Leaves the listener in nonblocking mode; the returned streams are
+    /// normalized to blocking — the caller picks the serving style (wrap in
+    /// blocking [`Tcp`] via [`Tcp::accept_n`], or hand them to the reactor as
+    /// [`super::reactor::NbTcp`] connections).
+    pub fn accept_streams(
         listener: &TcpListener,
         n: usize,
         timeout: std::time::Duration,
-    ) -> std::io::Result<Vec<Self>> {
+    ) -> std::io::Result<Vec<TcpStream>> {
         listener.set_nonblocking(true)?;
         let deadline = std::time::Instant::now() + timeout;
         let mut out = Vec::with_capacity(n);
@@ -52,7 +59,7 @@ impl Tcp {
                 Ok((stream, _peer)) => {
                     // accepted sockets must not inherit nonblocking mode
                     stream.set_nonblocking(false)?;
-                    out.push(Tcp::from_stream(stream)?);
+                    out.push(stream);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if std::time::Instant::now() >= deadline {
@@ -67,6 +74,19 @@ impl Tcp {
             }
         }
         Ok(out)
+    }
+
+    /// Accept exactly `n` edges as blocking [`Tcp`] endpoints (the
+    /// thread-per-client cloud); see [`Tcp::accept_streams`].
+    pub fn accept_n(
+        listener: &TcpListener,
+        n: usize,
+        timeout: std::time::Duration,
+    ) -> std::io::Result<Vec<Self>> {
+        Tcp::accept_streams(listener, n, timeout)?
+            .into_iter()
+            .map(Tcp::from_stream)
+            .collect()
     }
 
     /// Listen on `addr` and accept one peer (single-edge cloud).
@@ -113,10 +133,10 @@ impl Transport for Tcp {
         self.stream.read_exact(&mut lenb)?;
         let len = u32::from_le_bytes(lenb) as usize;
         // Validate the peer-controlled length BEFORE allocating: a corrupt
-        // or malicious prefix must not force a ~4 GiB allocation.
-        if len > wire::MAX_FRAME_BYTES {
-            return Err(TransportError::FrameTooLarge(len));
-        }
+        // or malicious prefix must not force a ~4 GiB allocation, and a
+        // zero-length prefix is rejected here as a protocol violation
+        // instead of passing an empty frame through to the decoder.
+        check_frame_len(len)?;
         let mut frame = vec![0u8; len];
         self.stream.read_exact(&mut frame)?;
         self.stats
@@ -175,6 +195,45 @@ mod tests {
             other => panic!("expected FrameTooLarge, got {other:?}"),
         }
         drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn zero_length_prefix_rejected() {
+        // Contract: a zero-length frame is a protocol violation (every Msg
+        // carries at least its tag byte) — recv must fail with EmptyFrame,
+        // not hand an empty frame to the decoder.
+        let addr = "127.0.0.1:39386";
+        let listener = TcpListener::bind(addr).unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&0u32.to_le_bytes()).unwrap();
+            let mut buf = [0u8; 1];
+            let _ = s.read(&mut buf);
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        match c.recv() {
+            Err(TransportError::EmptyFrame) => {}
+            other => panic!("expected EmptyFrame, got {other:?}"),
+        }
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn one_byte_frame_roundtrips() {
+        // The smallest legitimate frame (Shutdown, 1 byte) must pass the
+        // length gate and round-trip.
+        assert_eq!(wire::encode(&Msg::Shutdown).len(), 1);
+        let addr = "127.0.0.1:39387";
+        let server = std::thread::spawn(move || {
+            let mut t = Tcp::listen(addr).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap();
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        c.send(&Msg::Shutdown).unwrap();
+        assert_eq!(c.recv().unwrap(), Msg::Shutdown);
         server.join().unwrap();
     }
 

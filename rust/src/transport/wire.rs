@@ -13,10 +13,14 @@ use std::fmt;
 use crate::tensor::{Labels, Tensor};
 use crate::transport::Msg;
 
+/// Decode failure on a single wire frame.
 #[derive(Debug)]
 pub enum WireError {
+    /// Frame ended at this byte offset before the message was complete.
     Truncated(usize),
+    /// Unknown message tag byte.
     UnknownTag(u8),
+    /// Announced element count exceeds [`MAX_ELEMS`] or contradicts shape.
     TooLarge(u64),
 }
 
@@ -51,12 +55,18 @@ pub const MAX_ELEMS: u64 = 1 << 28;
 /// header slack.  Transports must reject any length prefix above this
 /// *before* allocating — a corrupt or malicious peer must not be able to
 /// force an unbounded allocation.
+///
+/// The admissible frame-size range is `1 ..= MAX_FRAME_BYTES`: the smallest
+/// message (`Shutdown`) encodes to exactly one tag byte, so a zero-length
+/// frame can never be produced by `encode` and transports reject a zero
+/// length prefix outright (`transport::check_frame_len`).
 pub const MAX_FRAME_BYTES: usize = 8 * MAX_ELEMS as usize + 4096;
 
 // ---------------------------------------------------------------------------
 // Encoding
 // ---------------------------------------------------------------------------
 
+/// Serialize one message to its wire frame (always ≥ 1 byte: the tag).
 pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
     match msg {
@@ -204,6 +214,7 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Decode one wire frame; fully checked, never panics on malformed input.
 pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
     let mut r = Reader { b: frame, pos: 0 };
     let tag = r.u8()?;
@@ -290,6 +301,19 @@ mod tests {
         // dims start at byte 1+8+1 = 10; set dim to 5 while len stays 4
         f[10] = 5;
         assert!(decode(&f).is_err());
+    }
+
+    #[test]
+    fn frame_size_boundaries() {
+        // empty frame: never produced by encode, always rejected by decode
+        assert!(decode(&[]).is_err());
+        // 1 byte is the smallest frame and round-trips
+        let f = encode(&Msg::Shutdown);
+        assert_eq!(f.len(), 1);
+        assert_eq!(decode(&f).unwrap(), Msg::Shutdown);
+        // the cap sits above the largest decodable message (tensor + labels
+        // at MAX_ELEMS each, 4 bytes per element) with header slack
+        assert!(MAX_FRAME_BYTES as u64 >= 8 * MAX_ELEMS);
     }
 
     #[test]

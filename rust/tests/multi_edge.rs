@@ -1,11 +1,17 @@
 //! Integration tests for the multi-client coordinator: N concurrent edges
 //! training end to end against one cloud over the in-proc (+SimLink) and TCP
-//! transports, with per-client and aggregate byte accounting.  No AOT
-//! artifacts needed (host codec venue).
+//! transports, with per-client and aggregate byte accounting.  Every
+//! byte-accounting scenario runs through BOTH serving styles — the
+//! thread-per-client pool and the nonblocking reactor — which must be
+//! indistinguishable to the edges.  No AOT artifacts needed (host codec
+//! venue).
 
 use c3sl::config::TransportKind;
 use c3sl::coordinator::{run_multi_edge, MultiEdgeSpec, MultiRunOutput};
+use c3sl::tensor::{Labels, Tensor};
 use c3sl::transport::sim::LinkModel;
+use c3sl::transport::tcp::Tcp;
+use c3sl::transport::{Msg, Transport};
 
 fn spec(edges: usize, transport: TransportKind, addr: &str) -> MultiEdgeSpec {
     MultiEdgeSpec {
@@ -18,27 +24,31 @@ fn spec(edges: usize, transport: TransportKind, addr: &str) -> MultiEdgeSpec {
         workers: 2,
         transport,
         tcp_addr: addr.into(),
-        link: None,
+        ..MultiEdgeSpec::default()
     }
 }
 
-fn check_accounting(out: &MultiRunOutput, edges: usize) {
+fn reactor_spec(edges: usize, transport: TransportKind, addr: &str) -> MultiEdgeSpec {
+    MultiEdgeSpec { reactor: true, ..spec(edges, transport, addr) }
+}
+
+fn check_accounting_steps(out: &MultiRunOutput, edges: usize, steps: u64) {
     assert_eq!(out.cloud.per_client.len(), edges);
     assert_eq!(out.edges.len(), edges);
     for c in &out.cloud.per_client {
-        assert_eq!(c.steps, 6, "client {} steps", c.client);
+        assert_eq!(c.steps, steps, "client {} steps", c.client);
         assert!(c.rx_bytes > 0 && c.tx_bytes > 0);
         // per step: Features + TrainLabels up, Gradients + StepStats down,
         // plus the KeySeed handshake and Shutdown
-        assert_eq!(c.rx_msgs, 6 * 2 + 2, "client {} rx msgs", c.client);
-        assert_eq!(c.tx_msgs, 6 * 2, "client {} tx msgs", c.client);
+        assert_eq!(c.rx_msgs, steps * 2 + 2, "client {} rx msgs", c.client);
+        assert_eq!(c.tx_msgs, steps * 2, "client {} tx msgs", c.client);
     }
     // the aggregate must be exactly the sum of the per-client halves
     let edge_tx: u64 = out.edges.iter().map(|e| e.tx_bytes).sum();
     let edge_rx: u64 = out.edges.iter().map(|e| e.rx_bytes).sum();
     assert_eq!(out.cloud.total_rx(), edge_tx, "cloud rx == sum of edge uplinks");
     assert_eq!(out.cloud.total_tx(), edge_rx, "cloud tx == sum of edge downlinks");
-    assert_eq!(out.cloud.total_steps(), 6 * edges as u64);
+    assert_eq!(out.cloud.total_steps(), steps * edges as u64);
     // and training must make progress through the lossy codec on every edge
     for (i, e) in out.edges.iter().enumerate() {
         assert!(
@@ -49,6 +59,10 @@ fn check_accounting(out: &MultiRunOutput, edges: usize) {
         );
         assert!(e.first_loss.is_finite() && e.last_loss.is_finite());
     }
+}
+
+fn check_accounting(out: &MultiRunOutput, edges: usize) {
+    check_accounting_steps(out, edges, 6);
 }
 
 #[test]
@@ -98,6 +112,179 @@ fn rejects_bad_geometry() {
     let mut s = spec(2, TransportKind::InProc, "");
     s.edges = 0;
     assert!(run_multi_edge(&s).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Reactor serving path: the same contract through one I/O thread
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reactor_inproc_edges_train_concurrently() {
+    let out = run_multi_edge(&reactor_spec(4, TransportKind::InProc, "")).unwrap();
+    check_accounting(&out, 4);
+}
+
+#[test]
+fn reactor_tcp_edges_train_concurrently() {
+    let out = run_multi_edge(&reactor_spec(3, TransportKind::Tcp, "127.0.0.1:39415")).unwrap();
+    check_accounting(&out, 3);
+}
+
+#[test]
+fn reactor_matches_thread_per_client_traffic() {
+    // Identical geometry through both serving styles must put identical
+    // bytes on the wire — scheduling is not allowed to change the protocol.
+    let threads = run_multi_edge(&spec(2, TransportKind::InProc, "")).unwrap();
+    let reactor = run_multi_edge(&reactor_spec(2, TransportKind::InProc, "")).unwrap();
+    assert_eq!(threads.cloud.total_rx(), reactor.cloud.total_rx());
+    assert_eq!(threads.cloud.total_tx(), reactor.cloud.total_tx());
+    assert_eq!(threads.cloud.total_steps(), reactor.cloud.total_steps());
+}
+
+#[test]
+fn reactor_scales_to_256_inproc_edges() {
+    // The ROADMAP scale axis: 256 concurrent edges against ONE reactor I/O
+    // thread (+4 codec workers), with exact per-client byte accounting and a
+    // decreasing probe objective on every edge.  Small geometry keeps this
+    // inside the smoke budget.
+    let out = run_multi_edge(&MultiEdgeSpec {
+        edges: 256,
+        steps: 2,
+        r: 2,
+        d: 64,
+        batch: 4,
+        seed: 11,
+        workers: 4,
+        transport: TransportKind::InProc,
+        reactor: true,
+        ..MultiEdgeSpec::default()
+    })
+    .unwrap();
+    check_accounting_steps(&out, 256, 2);
+}
+
+#[test]
+fn reactor_survives_slow_and_pipelining_client() {
+    // One misbehaving client exercises the backpressure machinery: it
+    // pipelines several steps up-front without reading a single reply, then
+    // stalls, then drains.  Its parsed-job queue exceeds max_pending_jobs
+    // (hold kicks in) and its replies pile into the bounded outbox.  The
+    // well-behaved lockstep edges must train to completion regardless, and
+    // every byte must still be accounted for exactly.
+    let addr = "127.0.0.1:39416";
+    let steps = 4u64;
+    let mut s = reactor_spec(3, TransportKind::Tcp, addr);
+    s.steps = steps;
+    s.poll.max_outbox_frames = 2; // small bound → backpressure actually engages
+    s.poll.max_pending_jobs = 2;
+
+    // The driver runs the 3 normal edges; the rogue client speaks the wire
+    // protocol by hand on its own connection.  It runs MORE steps than the
+    // lockstep edges so its byte counts are unique — the report-matching
+    // assertion below identifies it unambiguously.
+    let rogue_steps = steps + 2;
+    let key_seed = s.seed ^ 0xC3_C3_C3_C3u64;
+    let rogue = std::thread::spawn(move || {
+        let mut tp = Tcp::connect(addr).unwrap();
+        tp.send(&Msg::KeySeed { seed: key_seed }).unwrap();
+        // pipeline all steps without reading anything back
+        for step in 0..rogue_steps {
+            let z = Tensor::zeros(&[4, 256]); // (G=4, D) carriers, R=2 → B=8
+            tp.send(&Msg::Features { step, tensor: z }).unwrap();
+            tp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; 8]) }).unwrap();
+        }
+        // stall: replies must wait in the cloud's bounded outbox
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        for step in 0..rogue_steps {
+            match tp.recv().unwrap() {
+                Msg::Gradients { step: gstep, .. } => assert_eq!(gstep, step),
+                other => panic!("rogue expected Gradients, got {other:?}"),
+            }
+            match tp.recv().unwrap() {
+                Msg::StepStats { step: sstep, .. } => assert_eq!(sstep, step),
+                other => panic!("rogue expected StepStats, got {other:?}"),
+            }
+        }
+        tp.send(&Msg::Shutdown).unwrap();
+        tp.stats()
+    });
+
+    // serve 4 connections (3 lockstep edges + the rogue) on one reactor
+    let (cloud, edges) = run_multi_edge_with_extra(&s, addr, steps);
+    let rogue_stats = rogue.join().unwrap();
+
+    // normal edges all trained to completion
+    assert_eq!(edges.len(), 3);
+    for (i, e) in edges.iter().enumerate() {
+        assert_eq!(e.steps, steps);
+        assert!(
+            e.last_loss < e.first_loss,
+            "edge {i}: loss did not decrease under a stalling neighbour"
+        );
+    }
+    // the rogue was served every step, and its bytes balance exactly; its
+    // distinct step count makes the byte-count match unique among clients
+    let matches: Vec<_> = cloud
+        .per_client
+        .iter()
+        .filter(|c| c.rx_bytes == rogue_stats.tx() && c.tx_bytes == rogue_stats.rx())
+        .collect();
+    assert_eq!(matches.len(), 1, "exactly one report mirrors the rogue's accounting");
+    assert_eq!(matches[0].steps, rogue_steps);
+    // aggregate: cloud rx == all uplinks (3 drivers + rogue)
+    let edge_tx: u64 = edges.iter().map(|e| e.tx_bytes).sum::<u64>() + rogue_stats.tx();
+    assert_eq!(cloud.total_rx(), edge_tx);
+}
+
+/// Drive a reactor cloud expecting `spec.edges + 1` connections while this
+/// function spawns only `spec.edges` lockstep edges — the extra slot is for
+/// the test's hand-rolled client racing on the same listener.
+fn run_multi_edge_with_extra(
+    spec: &MultiEdgeSpec,
+    addr: &str,
+    steps: u64,
+) -> (c3sl::coordinator::MultiStats, Vec<c3sl::coordinator::EdgeReport>) {
+    use c3sl::coordinator::multi;
+    use c3sl::coordinator::RunCodec;
+    use c3sl::transport::reactor::{NbTcp, ReactorConn};
+
+    let key_seed = spec.seed ^ 0xC3_C3_C3_C3u64;
+    let cloud_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
+    let edge_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
+    let n = spec.edges + 1;
+    let listener = Tcp::bind(addr).unwrap();
+    let poll = spec.poll;
+    let workers = spec.workers;
+    std::thread::scope(|sc| {
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(&listener, n, std::time::Duration::from_secs(30)).unwrap();
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| Box::new(NbTcp::from_stream(s).unwrap()) as Box<dyn ReactorConn>)
+                .collect();
+            multi::serve_clients_reactor(&cloud_codec, conns, workers, poll).unwrap()
+        });
+        let mut handles = Vec::new();
+        for i in 0..spec.edges {
+            let codec = &edge_codec;
+            handles.push(sc.spawn(move || {
+                let mut tp = Tcp::connect(addr).unwrap();
+                multi::run_edge(
+                    codec,
+                    &mut tp,
+                    steps,
+                    key_seed,
+                    spec.seed.wrapping_add(i as u64),
+                    spec.batch,
+                    spec.d,
+                )
+                .unwrap()
+            }));
+        }
+        let edges: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (cloud.join().unwrap(), edges)
+    })
 }
 
 #[test]
