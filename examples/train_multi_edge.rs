@@ -1,10 +1,11 @@
 //! Multi-edge split learning: N concurrent edges against one cloud, end to
 //! end through the C3 codec in both directions, with per-client and
-//! aggregate LinkStats.  Runs three times — over in-proc links under a WiFi
-//! cost model, over real localhost TCP sockets (both thread-per-client), and
-//! once more over TCP served by the nonblocking reactor (one I/O thread +
-//! codec worker pool) — and needs no AOT artifacts (host codec venue; the
-//! model halves are PJRT-gated).
+//! aggregate LinkStats.  Runs four times — over in-proc links under a WiFi
+//! cost model, over real localhost TCP sockets (both thread-per-client),
+//! over TCP served by the nonblocking reactor (one I/O thread + codec
+//! worker pool), and once more with per-client key shards (`Msg::KeyShard`
+//! handshake) rotating to a fresh key epoch mid-run — and needs no AOT
+//! artifacts (host codec venue; the model halves are PJRT-gated).
 //!
 //!   cargo run --release --example train_multi_edge
 //!   C3SL_EDGES=8 cargo run --release --example train_multi_edge
@@ -74,9 +75,20 @@ fn main() -> Result<()> {
         transport: TransportKind::Tcp,
         tcp_addr: "127.0.0.1:39720".into(),
         reactor: true,
-        ..base
+        ..base.clone()
     })?;
     report("localhost tcp, reactor cloud (1 I/O thread)", &reactor);
+
+    // per-client key shards (Msg::KeyShard handshake), rotating to a fresh
+    // key epoch halfway through the run — one compromised edge cannot
+    // decode any other edge's uplink, and nobody loses a step
+    let sharded = run_multi_edge(&MultiEdgeSpec {
+        reactor: true,
+        key_sharding: true,
+        rotation_steps: base.steps / 2,
+        ..base
+    })?;
+    report("in-proc, reactor cloud, sharded keys + rotation", &sharded);
 
     for (label, out) in [("inproc", &inproc), ("tcp", &tcp), ("reactor", &reactor)] {
         for e in &out.edges {
@@ -85,6 +97,14 @@ fn main() -> Result<()> {
                 "{label}: probe loss did not decrease"
             );
         }
+    }
+    // rotation changes the key draw between first and last measurement, so
+    // the robust check for the sharded run is the fleet aggregate
+    let first: f64 = sharded.edges.iter().map(|e| e.first_loss as f64).sum();
+    let last: f64 = sharded.edges.iter().map(|e| e.last_loss as f64).sum();
+    assert!(last < first, "sharded: aggregate probe loss did not decrease");
+    for c in &sharded.cloud.per_client {
+        assert!(c.shard.is_some(), "sharded run reports each claimed shard");
     }
     println!("train_multi_edge OK — {edges} concurrent clients, compressed both ways");
     Ok(())

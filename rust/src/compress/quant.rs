@@ -4,6 +4,10 @@
 //! dimension-wise (precision) and batch-wise (C3) compression.  The fp16
 //! conversion is implemented from scratch (round-to-nearest-even), since no
 //! half crate is available.
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use super::Codec;
 use crate::tensor::Tensor;

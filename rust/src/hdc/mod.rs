@@ -11,16 +11,22 @@
 //!   encode  S^g = Σ_i K_i ⊛ Z_i^g            decode  Ẑ_i^g = K_i ⋆ S^g
 //!   keys    K_i ~ N(0, 1/D), unit-normalized.
 
+pub mod keyring;
+
 use crate::fft::{
     circular_convolve_fft, circular_correlate_fft, irfft_into, rfft_into, C64, FftPlan,
 };
 use crate::tensor::Tensor;
+use crate::ensure;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// Fixed random key set for one compression ratio R at dimension D.
 #[derive(Clone, Debug)]
 pub struct KeySet {
+    /// Compression ratio R: how many feature rows fold into one carrier.
     pub r: usize,
+    /// Feature dimensionality D (the circular-convolution length).
     pub d: usize,
     /// Row-major (R, D).
     keys: Vec<f32>,
@@ -44,15 +50,30 @@ impl KeySet {
         KeySet { r, d, keys }
     }
 
-    pub fn from_tensor(t: &Tensor) -> Self {
-        assert_eq!(t.ndim(), 2);
-        KeySet { r: t.shape()[0], d: t.shape()[1], keys: t.data().to_vec() }
+    /// Adopt an externally produced (R, D) key matrix (e.g. the gen_keys
+    /// artifact's output).  The tensor must be rank-2 with non-zero dims —
+    /// a malformed key matrix is reported as an error, never a panic, so a
+    /// corrupt artifact or wire payload cannot take the process down.
+    pub fn from_tensor(t: &Tensor) -> Result<Self> {
+        ensure!(
+            t.ndim() == 2,
+            "key matrix must be rank-2 (R, D), got shape {:?}",
+            t.shape()
+        );
+        let (r, d) = (t.shape()[0], t.shape()[1]);
+        ensure!(
+            r >= 1 && d >= 1,
+            "key matrix dims must be non-zero, got ({r}, {d})"
+        );
+        Ok(KeySet { r, d, keys: t.data().to_vec() })
     }
 
+    /// Key row `i` (length D).
     pub fn key(&self, i: usize) -> &[f32] {
         &self.keys[i * self.d..(i + 1) * self.d]
     }
 
+    /// The (R, D) key matrix as a tensor (copies).
     pub fn as_tensor(&self) -> Tensor {
         Tensor::from_vec(&[self.r, self.d], self.keys.clone())
     }
@@ -134,6 +155,7 @@ pub struct C3Scratch {
 }
 
 impl C3Scratch {
+    /// Scratch for dimension D (any backend; sized once, reused forever).
     pub fn new(d: usize) -> Self {
         C3Scratch {
             a: vec![C64::new(0.0, 0.0); d],
@@ -162,6 +184,7 @@ impl C3Scratch {
 ///   embarrassingly parallel).  [`encode`](C3::encode)/[`decode`](C3::decode)
 ///   route through this engine.
 pub struct C3 {
+    /// The fixed (R, D) key set this engine binds/unbinds with.
     pub keys: KeySet,
     plan: Option<FftPlan>,
     /// rfft of each key row (FFT backend only).
@@ -172,6 +195,8 @@ pub struct C3 {
 }
 
 impl C3 {
+    /// Serial engine over a fixed key set (precomputes key spectra on the
+    /// FFT backend).
     pub fn new(keys: KeySet, backend: Backend) -> Self {
         Self::with_workers(keys, backend, 1)
     }
@@ -195,14 +220,40 @@ impl C3 {
         C3 { keys, plan, key_spectra, backend, workers: workers.max(1) }
     }
 
+    /// Swap in a new key set of identical (R, D) geometry, rebuilding the
+    /// precomputed key spectra **in place**: the spectra buffers, the FFT
+    /// plan and every caller-owned [`C3Scratch`] are reused untouched, so an
+    /// epoch rotation ([`keyring`]) costs R forward FFTs and zero heap
+    /// allocations in steady state.
+    pub fn rekey(&mut self, keys: KeySet) -> Result<()> {
+        ensure!(
+            keys.r == self.keys.r && keys.d == self.keys.d,
+            "rekey geometry mismatch: ({}, {}) -> ({}, {})",
+            self.keys.r,
+            self.keys.d,
+            keys.r,
+            keys.d
+        );
+        self.keys = keys;
+        if let Some(plan) = &self.plan {
+            for (i, spec) in self.key_spectra.iter_mut().enumerate() {
+                rfft_into(plan, self.keys.key(i), spec);
+            }
+        }
+        Ok(())
+    }
+
+    /// The codec backend this engine runs (Direct, Fft, or the Auto pick).
     pub fn backend(&self) -> Backend {
         self.backend
     }
 
+    /// Group-parallel worker count used by [`C3::encode`]/[`C3::decode`].
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// Set the group-parallel worker count (clamped to >= 1).
     pub fn set_workers(&mut self, workers: usize) {
         self.workers = workers.max(1);
     }
@@ -493,7 +544,9 @@ impl C3 {
 /// the self-unbinding term and the crosstalk term; report energies.
 #[derive(Clone, Debug)]
 pub struct CrosstalkReport {
+    /// Compression ratio R of the analysed group.
     pub r: usize,
+    /// Feature dimensionality D.
     pub d: usize,
     /// ‖ẑ − z‖ / ‖z‖ over the whole group.
     pub rel_recon_err: f32,
@@ -503,6 +556,7 @@ pub struct CrosstalkReport {
     pub mean_cos: f32,
 }
 
+/// Run the Eq. (4) decomposition for one (R, D) feature group through `c3`.
 pub fn crosstalk_report(c3: &C3, z_group: &Tensor) -> CrosstalkReport {
     let (r, d) = (c3.keys.r, c3.keys.d);
     assert_eq!(z_group.shape(), &[r, d]);
@@ -599,7 +653,7 @@ mod tests {
         let d = 64;
         let mut keys = vec![0.0f32; d];
         keys[0] = 1.0;
-        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, d], keys));
+        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, d], keys)).unwrap();
         let c3 = C3::new(ks, Backend::Direct);
         let mut rng = Rng::new(3);
         let z = rand_tensor(&mut rng, &[1, d]);
@@ -615,7 +669,7 @@ mod tests {
         let p = 5;
         let mut key = vec![0.0f32; d];
         key[p] = 1.0;
-        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, d], key));
+        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, d], key)).unwrap();
         let c3 = C3::new(ks, Backend::Direct);
         let mut rng = Rng::new(4);
         let z = rand_tensor(&mut rng, &[1, d]);
@@ -770,6 +824,50 @@ mod tests {
             c3.encode_into(&z, &mut out, &mut scratch);
             assert_bits_eq(&want, &Tensor::from_vec(&[1, d], out.clone()), "reuse");
         }
+    }
+
+    #[test]
+    fn from_tensor_validates_shape() {
+        // regression: a malformed key matrix must surface as an error, not
+        // an assert panic (the tensor may come from an artifact or the wire)
+        let rank1 = Tensor::from_vec(&[8], vec![0.0; 8]);
+        let err = KeySet::from_tensor(&rank1).unwrap_err();
+        assert!(err.to_string().contains("rank-2"), "{err}");
+        let rank3 = Tensor::from_vec(&[2, 2, 2], vec![0.0; 8]);
+        assert!(KeySet::from_tensor(&rank3).is_err());
+        let zero_rows = Tensor::from_vec(&[0, 4], vec![]);
+        let err = KeySet::from_tensor(&zero_rows).unwrap_err();
+        assert!(err.to_string().contains("non-zero"), "{err}");
+        let zero_cols = Tensor::from_vec(&[4, 0], vec![]);
+        assert!(KeySet::from_tensor(&zero_cols).is_err());
+        // and a well-formed matrix still round-trips
+        let ok = KeySet::from_tensor(&Tensor::from_vec(&[2, 4], vec![1.0; 8])).unwrap();
+        assert_eq!((ok.r, ok.d), (2, 4));
+    }
+
+    #[test]
+    fn rekey_matches_fresh_engine_bitwise() {
+        // rotating keys in place must be indistinguishable from building a
+        // new engine over the new key set, on both backends
+        let (r, d) = (4usize, 256usize);
+        let mut rng = Rng::new(31);
+        let ks_a = KeySet::generate(&mut rng, r, d);
+        let ks_b = KeySet::generate(&mut rng, r, d);
+        let z = rand_tensor(&mut rng, &[2 * r, d]);
+        for backend in [Backend::Fft, Backend::Direct] {
+            let mut rotated = C3::new(ks_a.clone(), backend);
+            rotated.rekey(ks_b.clone()).unwrap();
+            let fresh = C3::new(ks_b.clone(), backend);
+            assert_bits_eq(&fresh.encode(&z), &rotated.encode(&z), "rekey encode");
+            let s = fresh.encode(&z);
+            assert_bits_eq(&fresh.decode(&s), &rotated.decode(&s), "rekey decode");
+        }
+        // geometry changes are rejected
+        let mut c3 = C3::new(ks_a, Backend::Fft);
+        let smaller = KeySet::generate(&mut rng, r, d / 2);
+        assert!(c3.rekey(smaller).is_err());
+        let fewer = KeySet::generate(&mut rng, r - 1, d);
+        assert!(c3.rekey(fewer).is_err());
     }
 
     #[test]

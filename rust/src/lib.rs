@@ -16,9 +16,11 @@
 //! rust.  See DESIGN.md for the system inventory and experiment index, and
 //! docs/ARCHITECTURE.md for the layer map and serving architecture.
 
-// Public API documentation is enforced progressively: `transport` and
-// `coordinator` are fully documented; remaining modules surface as warnings
-// until their own doc passes land (tracked in ROADMAP.md).
+// Public API documentation is enforced progressively: `transport`,
+// `coordinator` and `hdc` are fully documented and the CI doc job denies
+// warnings; each remaining module carries an explicit
+// `#![allow(missing_docs)]` doc-debt marker until its pass lands (tracked
+// in ROADMAP.md).
 #![warn(missing_docs)]
 
 pub mod compress;

@@ -15,6 +15,7 @@
 //!   c3sl cloud --config configs/tiny_tcp.toml   # terminal 1
 //!   c3sl edge  --config configs/tiny_tcp.toml   # terminal 2
 //!   c3sl multi --edges 256 --reactor --tcp      # thousand-edge serving path
+//!   c3sl multi --edges 64 --reactor --key-sharding --rotate-every 20
 
 use c3sl::bail;
 use c3sl::config::cli::Args;
@@ -121,6 +122,15 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.num_edges = n;
     }
     cfg.validate()?;
+    // A security toggle must never silently no-op: only the multi-edge
+    // coordinator implements per-client shards today (single-edge sharding
+    // is a ROADMAP follow-up), so reject rather than ignore it here.
+    if cfg.key_sharding {
+        bail!(
+            "scheme.key_sharding is only supported by `c3sl multi` — the \
+             single-edge train/edge/cloud commands would silently ignore it"
+        );
+    }
     Ok(cfg)
 }
 
@@ -194,8 +204,11 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// Multi-edge codec scenario: N concurrent edges against one cloud, host
 /// codec venue — runs without AOT artifacts.  `--reactor` serves every edge
 /// from one nonblocking I/O thread plus a codec worker pool (the
-/// thousand-edge path) instead of thread-per-client.  `--config` seeds the
-/// defaults (transport.edges/reactor/poll_us/outbox_frames, scheme.r/workers,
+/// thousand-edge path) instead of thread-per-client.  `--key-sharding`
+/// derives a per-client key shard for every edge (`Msg::KeyShard` handshake)
+/// and `--rotate-every N` rotates each shard to a fresh key epoch every N
+/// steps.  `--config` seeds the defaults (transport.edges/reactor/poll_us/
+/// outbox_frames, scheme.r/workers/key_sharding/rotation_steps,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
     let base = match args.get("config") {
@@ -226,6 +239,11 @@ fn cmd_multi(args: &Args) -> Result<()> {
             .unwrap_or(def.tcp_addr),
         link: b.and_then(|c| c.link),
         reactor: args.has("reactor") || b.map(|c| c.reactor).unwrap_or(false),
+        key_sharding: args.has("key-sharding") || b.map(|c| c.key_sharding).unwrap_or(false),
+        rotation_steps: args
+            .get_u64("rotate-every")?
+            .or(b.map(|c| c.rotation_steps))
+            .unwrap_or(def.rotation_steps),
         poll: ReactorConfig {
             poll_sleep_us: args
                 .get_u64("poll-us")?
@@ -239,7 +257,7 @@ fn cmd_multi(args: &Args) -> Result<()> {
         },
     };
     println!(
-        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} transport={:?} serve={}",
+        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} transport={:?} serve={} keys={}",
         spec.edges,
         spec.steps,
         spec.r,
@@ -247,14 +265,29 @@ fn cmd_multi(args: &Args) -> Result<()> {
         spec.batch,
         spec.workers,
         spec.transport,
-        if spec.reactor { "reactor" } else { "thread-per-client" }
+        if spec.reactor { "reactor" } else { "thread-per-client" },
+        if !spec.key_sharding {
+            "shared".into()
+        } else if spec.rotation_steps == 0 {
+            "sharded".into()
+        } else {
+            format!("sharded/rotate-{}", spec.rotation_steps)
+        }
     );
     let out = run_multi_edge(&spec)?;
-    println!("{:>7} {:>7} {:>12} {:>12} {:>12}", "client", "steps", "rx bytes", "tx bytes", "last loss");
+    println!(
+        "{:>7} {:>7} {:>7} {:>12} {:>12} {:>12}",
+        "client", "shard", "steps", "rx bytes", "tx bytes", "last loss"
+    );
     for c in &out.cloud.per_client {
         println!(
-            "{:>7} {:>7} {:>12} {:>12} {:>12.5}",
-            c.client, c.steps, c.rx_bytes, c.tx_bytes, c.last_loss
+            "{:>7} {:>7} {:>7} {:>12} {:>12} {:>12.5}",
+            c.client,
+            c.shard.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            c.steps,
+            c.rx_bytes,
+            c.tx_bytes,
+            c.last_loss
         );
     }
     println!(

@@ -1,4 +1,8 @@
 //! PJRT engine: client + compiled-executable cache.
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,5 +1,9 @@
 //! Manifest parsing: the JSON descriptions aot.py writes next to each
 //! artifact set (argument/result shapes, parameter leaf counts, geometry).
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::path::Path;

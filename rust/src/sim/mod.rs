@@ -11,12 +11,19 @@ use crate::tensor::Tensor;
 /// One row of the communication report.
 #[derive(Clone, Debug)]
 pub struct CommRow {
+    /// Compression scheme label.
     pub scheme: &'static str,
+    /// Compression ratio R.
     pub r: usize,
+    /// Link-model label (e.g. "wifi", "lte").
     pub link: &'static str,
+    /// Serialized uplink bytes per training step.
     pub uplink_bytes_per_step: u64,
+    /// Serialized downlink bytes per training step.
     pub downlink_bytes_per_step: u64,
+    /// Virtual link time for one epoch under the link model.
     pub epoch_seconds: f64,
+    /// Per-epoch byte reduction factor vs vanilla SL.
     pub reduction_vs_vanilla: f64,
 }
 

@@ -3,6 +3,10 @@
 //! Deliberately small: the heavy math runs inside AOT-compiled XLA
 //! executables; this type exists for host-side plumbing (datasets, codecs,
 //! oracles for tests, metrics) and for the rust-native C3 hot path.
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::fmt;
 

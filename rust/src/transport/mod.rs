@@ -30,19 +30,72 @@ use wire::WireError;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Uplink: (possibly compressed) cut-layer features for step `step`.
-    Features { step: u64, tensor: Tensor },
+    Features {
+        /// Training step this uplink belongs to.
+        step: u64,
+        /// The (possibly compressed) feature batch.
+        tensor: Tensor,
+    },
     /// Uplink: labels for step `step` (paper: labels travel with features).
-    TrainLabels { step: u64, labels: Labels },
+    TrainLabels {
+        /// Training step these labels belong to.
+        step: u64,
+        /// The batch labels.
+        labels: Labels,
+    },
     /// Downlink: (possibly compressed) cut-layer gradients.
-    Gradients { step: u64, tensor: Tensor },
+    Gradients {
+        /// Training step these gradients answer.
+        step: u64,
+        /// The (possibly compressed) gradient batch.
+        tensor: Tensor,
+    },
     /// Downlink: per-step metrics from the cloud (loss, ncorrect).
-    StepStats { step: u64, loss: f32, ncorrect: f32 },
+    StepStats {
+        /// Training step the stats describe.
+        step: u64,
+        /// Loss at this step.
+        loss: f32,
+        /// Correct predictions in the batch.
+        ncorrect: f32,
+    },
     /// Uplink: request evaluation on features (no gradient round trip).
-    EvalFeatures { step: u64, tensor: Tensor, labels: Labels },
+    EvalFeatures {
+        /// Evaluation step index.
+        step: u64,
+        /// The (possibly compressed) feature batch.
+        tensor: Tensor,
+        /// Ground-truth labels for the batch.
+        labels: Labels,
+    },
     /// Downlink: evaluation result.
-    EvalStats { step: u64, loss: f32, ncorrect: f32 },
+    EvalStats {
+        /// Evaluation step index.
+        step: u64,
+        /// Evaluation loss.
+        loss: f32,
+        /// Correct predictions in the batch.
+        ncorrect: f32,
+    },
     /// Leader → both: key seed for C3 key generation (keys are never sent!).
-    KeySeed { seed: u64 },
+    KeySeed {
+        /// The codec-construction seed both endpoints derive keys from.
+        seed: u64,
+    },
+    /// Edge → cloud, first message when key sharding is enabled: claim the
+    /// per-client key shard `client_id` at `epoch`, announcing a one-way
+    /// possession proof (`hdc::keyring` — a PRF keyed by the shard's secret
+    /// sub-seed over the public claim) that the cloud re-derives and
+    /// compares.  Unlike [`Msg::KeySeed`], not even a seed crosses the
+    /// wire: an observer of this frame can regenerate no key material.
+    KeyShard {
+        /// The shard (client) id being claimed.
+        client_id: u64,
+        /// The key epoch the edge starts at (must match the cloud's).
+        epoch: u64,
+        /// `KeyRing::shard_proof(client_id, epoch)` — verified, not trusted.
+        proof: u64,
+    },
     /// Orderly shutdown.
     Shutdown,
 }
@@ -253,6 +306,7 @@ mod tests {
             Msg::EvalFeatures { step: 5, tensor: t(&[1, 2]), labels: Labels(vec![0]) },
             Msg::EvalStats { step: 5, loss: 0.5, ncorrect: 1.0 },
             Msg::KeySeed { seed: 0xDEAD_BEEF },
+            Msg::KeyShard { client_id: 4, epoch: 1, proof: 0xC0DE },
             Msg::Shutdown,
         ];
         for m in &msgs {

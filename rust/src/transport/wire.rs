@@ -44,6 +44,7 @@ const TAG_EVAL_FEATURES: u8 = 5;
 const TAG_EVAL_STATS: u8 = 6;
 const TAG_KEY_SEED: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
+const TAG_KEY_SHARD: u8 = 9;
 
 /// Hard cap on decoded element counts (guards fuzz/corruption OOM).
 pub const MAX_ELEMS: u64 = 1 << 28;
@@ -106,6 +107,12 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
         Msg::KeySeed { seed } => {
             out.push(TAG_KEY_SEED);
             put_u64(&mut out, *seed);
+        }
+        Msg::KeyShard { client_id, epoch, proof } => {
+            out.push(TAG_KEY_SHARD);
+            put_u64(&mut out, *client_id);
+            put_u64(&mut out, *epoch);
+            put_u64(&mut out, *proof);
         }
         Msg::Shutdown => out.push(TAG_SHUTDOWN),
     }
@@ -238,6 +245,11 @@ pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
             ncorrect: r.f32()?,
         },
         TAG_KEY_SEED => Msg::KeySeed { seed: r.u64()? },
+        TAG_KEY_SHARD => Msg::KeyShard {
+            client_id: r.u64()?,
+            epoch: r.u64()?,
+            proof: r.u64()?,
+        },
         TAG_SHUTDOWN => Msg::Shutdown,
         t => return Err(WireError::UnknownTag(t)),
     };
@@ -314,6 +326,22 @@ mod tests {
         // the cap sits above the largest decodable message (tensor + labels
         // at MAX_ELEMS each, 4 bytes per element) with header slack
         assert!(MAX_FRAME_BYTES as u64 >= 8 * MAX_ELEMS);
+    }
+
+    #[test]
+    fn key_shard_roundtrip_and_truncation() {
+        let m = Msg::KeyShard {
+            client_id: 17,
+            epoch: 3,
+            proof: 0xDEAD_BEEF_CAFE_F00D,
+        };
+        let f = encode(&m);
+        // tag + three u64 fields, nothing more
+        assert_eq!(f.len(), 1 + 8 * 3);
+        assert_eq!(decode(&f).unwrap(), m);
+        for cut in 1..f.len() {
+            assert!(decode(&f[..cut]).is_err(), "cut={cut} should fail");
+        }
     }
 
     #[test]

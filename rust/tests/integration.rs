@@ -93,7 +93,7 @@ fn artifact_codec_matches_host_codec_on_same_keys() {
     let mut codec = CodecRuntime::load(&engine, CODEC_DIR).unwrap();
     codec.init_keys(42).unwrap();
     let keys = codec.keys_tensor().unwrap().clone();
-    let host = C3::new(KeySet::from_tensor(&keys), Backend::Fft);
+    let host = C3::new(KeySet::from_tensor(&keys).unwrap(), Backend::Fft);
 
     let mut rng = Rng::new(5);
     let z = rand_tensor(&mut rng, &[codec.manifest.batch, codec.manifest.d]);

@@ -3,11 +3,15 @@
 //! transports, with per-client and aggregate byte accounting.  Every
 //! byte-accounting scenario runs through BOTH serving styles — the
 //! thread-per-client pool and the nonblocking reactor — which must be
-//! indistinguishable to the edges.  No AOT artifacts needed (host codec
-//! venue).
+//! indistinguishable to the edges.  The sharded scenarios additionally pin
+//! the per-client key-shard contract: `Msg::KeyShard` handshake, epoch
+//! rotation continuity, cross-path byte/loss parity, and rejection of rogue
+//! announcements without disturbing healthy edges.  No AOT artifacts needed
+//! (host codec venue).
 
 use c3sl::config::TransportKind;
 use c3sl::coordinator::{run_multi_edge, MultiEdgeSpec, MultiRunOutput};
+use c3sl::hdc::keyring::KeyRing;
 use c3sl::tensor::{Labels, Tensor};
 use c3sl::transport::sim::LinkModel;
 use c3sl::transport::tcp::Tcp;
@@ -245,7 +249,7 @@ fn run_multi_edge_with_extra(
     steps: u64,
 ) -> (c3sl::coordinator::MultiStats, Vec<c3sl::coordinator::EdgeReport>) {
     use c3sl::coordinator::multi;
-    use c3sl::coordinator::RunCodec;
+    use c3sl::coordinator::{CloudCodec, EdgeCodec, RunCodec};
     use c3sl::transport::reactor::{NbTcp, ReactorConn};
 
     let key_seed = spec.seed ^ 0xC3_C3_C3_C3u64;
@@ -256,6 +260,7 @@ fn run_multi_edge_with_extra(
     let poll = spec.poll;
     let workers = spec.workers;
     std::thread::scope(|sc| {
+        let cloud_codec = &cloud_codec;
         let cloud = sc.spawn(move || {
             let streams =
                 Tcp::accept_streams(&listener, n, std::time::Duration::from_secs(30)).unwrap();
@@ -263,7 +268,8 @@ fn run_multi_edge_with_extra(
                 .into_iter()
                 .map(|s| Box::new(NbTcp::from_stream(s).unwrap()) as Box<dyn ReactorConn>)
                 .collect();
-            multi::serve_clients_reactor(&cloud_codec, conns, workers, poll).unwrap()
+            multi::serve_clients_reactor(CloudCodec::Shared(cloud_codec), conns, workers, poll)
+                .unwrap()
         });
         let mut handles = Vec::new();
         for i in 0..spec.edges {
@@ -271,10 +277,9 @@ fn run_multi_edge_with_extra(
             handles.push(sc.spawn(move || {
                 let mut tp = Tcp::connect(addr).unwrap();
                 multi::run_edge(
-                    codec,
+                    EdgeCodec::Shared { codec, key_seed },
                     &mut tp,
                     steps,
-                    key_seed,
                     spec.seed.wrapping_add(i as u64),
                     spec.batch,
                     spec.d,
@@ -285,6 +290,247 @@ fn run_multi_edge_with_extra(
         let edges: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         (cloud.join().unwrap(), edges)
     })
+}
+
+// ---------------------------------------------------------------------------
+// Per-client key sharding: Msg::KeyShard handshake, rotation, conformance
+// ---------------------------------------------------------------------------
+
+fn sharded_spec(edges: usize, transport: TransportKind, addr: &str) -> MultiEdgeSpec {
+    MultiEdgeSpec { key_sharding: true, ..spec(edges, transport, addr) }
+}
+
+#[test]
+fn sharded_inproc_edges_train_both_styles() {
+    // No rotation → per-client keys are fixed for the run, so the standard
+    // accounting checks (incl. per-edge loss decrease) hold exactly.
+    let threads = run_multi_edge(&sharded_spec(3, TransportKind::InProc, "")).unwrap();
+    check_accounting(&threads, 3);
+    let mut rspec = sharded_spec(3, TransportKind::InProc, "");
+    rspec.reactor = true;
+    let reactor = run_multi_edge(&rspec).unwrap();
+    check_accounting(&reactor, 3);
+    // in-proc client order is spawn order, so shard ids line up exactly
+    for out in [&threads, &reactor] {
+        for (i, c) in out.cloud.per_client.iter().enumerate() {
+            assert_eq!(c.shard, Some(i as u64), "client {i} shard id");
+        }
+    }
+    // per-client shards carry different key material but identical frame
+    // *sizes* (same geometry), so per-client bytes stay uniform
+    let rx0 = threads.cloud.per_client[0].rx_bytes;
+    for c in &threads.cloud.per_client {
+        assert_eq!(c.rx_bytes, rx0, "uniform geometry → uniform per-client bytes");
+    }
+}
+
+#[test]
+fn sharded_tcp_edges_train() {
+    let out = run_multi_edge(&sharded_spec(2, TransportKind::Tcp, "127.0.0.1:39419")).unwrap();
+    check_accounting(&out, 2);
+    // accept order is arbitrary over TCP: shard ids form a set, not a
+    // sequence — each edge claimed exactly one distinct shard
+    let mut shards: Vec<u64> =
+        out.cloud.per_client.iter().map(|c| c.shard.unwrap()).collect();
+    shards.sort_unstable();
+    assert_eq!(shards, vec![0, 1]);
+}
+
+#[test]
+fn sharded_reactor_matches_thread_per_client_bytes_and_losses() {
+    // Same seeds through both serve paths, WITH rotation active, must put
+    // byte-identical LinkStats and reply frames on every link — scheduling
+    // is not allowed to change which keys any step is served with.
+    let mut threads = sharded_spec(3, TransportKind::InProc, "");
+    threads.rotation_steps = 2;
+    let mut reactor = threads.clone();
+    reactor.reactor = true;
+    let a = run_multi_edge(&threads).unwrap();
+    let b = run_multi_edge(&reactor).unwrap();
+    assert_eq!(a.cloud.total_steps(), b.cloud.total_steps());
+    assert_eq!(a.cloud.total_rx(), b.cloud.total_rx());
+    assert_eq!(a.cloud.total_tx(), b.cloud.total_tx());
+    for (ca, cb) in a.cloud.per_client.iter().zip(&b.cloud.per_client) {
+        assert_eq!(ca.client, cb.client);
+        assert_eq!(ca.shard, cb.shard);
+        assert_eq!(ca.steps, cb.steps);
+        assert_eq!(ca.rx_bytes, cb.rx_bytes, "client {} uplink bytes", ca.client);
+        assert_eq!(ca.tx_bytes, cb.tx_bytes, "client {} downlink bytes", ca.client);
+        assert_eq!(ca.rx_msgs, cb.rx_msgs);
+        assert_eq!(ca.tx_msgs, cb.tx_msgs);
+        assert_eq!(
+            ca.last_loss.to_bits(),
+            cb.last_loss.to_bits(),
+            "client {} loss must be bit-identical across serve paths",
+            ca.client
+        );
+    }
+    for (i, (ea, eb)) in a.edges.iter().zip(&b.edges).enumerate() {
+        assert_eq!(ea.tx_bytes, eb.tx_bytes, "edge {i} uplink");
+        assert_eq!(ea.rx_bytes, eb.rx_bytes, "edge {i} downlink");
+        assert_eq!(ea.first_loss.to_bits(), eb.first_loss.to_bits(), "edge {i}");
+        assert_eq!(ea.last_loss.to_bits(), eb.last_loss.to_bits(), "edge {i}");
+    }
+}
+
+/// Drive a sharded reactor cloud serving 3 healthy edges plus one rogue
+/// connection whose `Msg::KeyShard` announcement is invalid.  The rogue must
+/// be rejected and closed; every healthy edge must train to completion; the
+/// rejection surfaces only in the aggregate serve error afterwards (the
+/// fault-isolation contract from the broken-client test, extended to the
+/// handshake).
+fn sharded_rogue_case(addr: &'static str, make_rogue: fn(KeyRing) -> Msg, expect: &str) {
+    use c3sl::coordinator::multi;
+    use c3sl::coordinator::{CloudCodec, EdgeCodec, ShardGate};
+    use c3sl::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
+
+    let edges = 3usize;
+    let steps = 4u64;
+    let ring = KeyRing::new(0x51AD, 2, 128, 0);
+    let n = edges + 1;
+    let gate = ShardGate::new(ring, n);
+    let listener = Tcp::bind(addr).unwrap();
+    let (serve_result, reports) = std::thread::scope(|sc| {
+        let gate = &gate;
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(&listener, n, std::time::Duration::from_secs(30)).unwrap();
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| Box::new(NbTcp::from_stream(s).unwrap()) as Box<dyn ReactorConn>)
+                .collect();
+            multi::serve_clients_reactor(
+                CloudCodec::Sharded(gate),
+                conns,
+                2,
+                ReactorConfig::default(),
+            )
+        });
+        let rogue = sc.spawn(move || {
+            let mut tp = Tcp::connect(addr).unwrap();
+            tp.send(&make_rogue(ring)).unwrap();
+            // rejected AND closed: the next read observes the hangup
+            assert!(
+                tp.recv().is_err(),
+                "rogue connection should be closed by the cloud"
+            );
+        });
+        let mut handles = Vec::new();
+        for i in 0..edges {
+            handles.push(sc.spawn(move || {
+                let mut tp = Tcp::connect(addr).unwrap();
+                multi::run_edge(
+                    EdgeCodec::Sharded { shard: ring.edge_shard(i as u64), workers: 1 },
+                    &mut tp,
+                    steps,
+                    i as u64,
+                    8,
+                    128,
+                )
+                .unwrap()
+            }));
+        }
+        let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        rogue.join().unwrap();
+        (cloud.join().unwrap(), reports)
+    });
+    let err = serve_result.expect_err("rogue handshake must surface in the aggregate error");
+    assert!(err.to_string().contains(expect), "{err}");
+    // every healthy edge trained to completion, undisturbed (fixed keys →
+    // deterministic per-step loss decrease)
+    assert_eq!(reports.len(), edges);
+    for (i, e) in reports.iter().enumerate() {
+        assert_eq!(e.steps, steps, "edge {i} lost steps to the rogue");
+        assert!(
+            e.last_loss < e.first_loss,
+            "edge {i}: probe loss did not decrease next to a rejected rogue"
+        );
+    }
+}
+
+#[test]
+fn sharded_reactor_rejects_wrong_shard_id_without_disturbing_edges() {
+    sharded_rogue_case(
+        "127.0.0.1:39417",
+        |ring| Msg::KeyShard { client_id: 99, epoch: 0, proof: ring.shard_proof(99, 0) },
+        "out of range",
+    );
+}
+
+#[test]
+fn sharded_reactor_rejects_stale_epoch_without_disturbing_edges() {
+    sharded_rogue_case(
+        "127.0.0.1:39418",
+        |ring| Msg::KeyShard { client_id: 3, epoch: 7, proof: ring.shard_proof(3, 7) },
+        "stale key epoch",
+    );
+}
+
+#[test]
+fn key_shard_smoke_64_edge_reactor_rotation() {
+    // The ISSUE acceptance scenario (and the CI `key-shard-smoke` job): 64
+    // sharded edges against one reactor cloud, rotating keys every 4 steps
+    // of an 8-step run — the epoch boundary must lose no training step.
+    let steps = 8u64;
+    let edges = 64usize;
+    let out = run_multi_edge(&MultiEdgeSpec {
+        edges,
+        steps,
+        r: 2,
+        d: 256,
+        batch: 8,
+        seed: 17,
+        workers: 4,
+        transport: TransportKind::InProc,
+        reactor: true,
+        key_sharding: true,
+        rotation_steps: 4,
+        ..MultiEdgeSpec::default()
+    })
+    .unwrap();
+    assert_eq!(out.cloud.per_client.len(), edges);
+    assert_eq!(out.edges.len(), edges);
+    // rotation continuity: every client served every step, every message
+    // accounted for, both halves of every link byte-balanced
+    for c in &out.cloud.per_client {
+        assert_eq!(
+            c.steps, steps,
+            "client {} lost a step across the epoch boundary",
+            c.client
+        );
+        assert_eq!(c.rx_msgs, steps * 2 + 2, "client {} rx msgs", c.client);
+        assert_eq!(c.tx_msgs, steps * 2, "client {} tx msgs", c.client);
+    }
+    let edge_tx: u64 = out.edges.iter().map(|e| e.tx_bytes).sum();
+    let edge_rx: u64 = out.edges.iter().map(|e| e.rx_bytes).sum();
+    assert_eq!(out.cloud.total_rx(), edge_tx);
+    assert_eq!(out.cloud.total_tx(), edge_rx);
+    assert_eq!(out.cloud.total_steps(), steps * edges as u64);
+    // every edge claimed its own shard, exactly once
+    let mut shards: Vec<u64> = out
+        .cloud
+        .per_client
+        .iter()
+        .map(|c| c.shard.expect("sharded run reports shard ids"))
+        .collect();
+    shards.sort_unstable();
+    assert_eq!(shards, (0..edges as u64).collect::<Vec<_>>());
+    // training stays healthy through the rotation: every loss finite, and
+    // the fleet-average probe loss decreases.  (first/last are measured
+    // under *different* key draws per edge, so the robust cross-epoch
+    // signal is the aggregate, not each individual edge.)
+    let (mut first_sum, mut last_sum) = (0f64, 0f64);
+    for (i, e) in out.edges.iter().enumerate() {
+        assert_eq!(e.steps, steps);
+        assert!(e.first_loss.is_finite() && e.last_loss.is_finite(), "edge {i}");
+        first_sum += e.first_loss as f64;
+        last_sum += e.last_loss as f64;
+    }
+    assert!(
+        last_sum < first_sum,
+        "aggregate probe loss did not decrease across the rotation: \
+         {first_sum} -> {last_sum}"
+    );
 }
 
 #[test]
