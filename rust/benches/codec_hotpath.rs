@@ -1,6 +1,10 @@
-//! Bench: codec hot-path microbenchmarks — the perf-pass instrument.
+//! Bench: codec hot-path microbenchmarks — the perf-pass instrument AND the
+//! CI benchmark-regression gate.
 //!
-//!   cargo bench --bench codec_hotpath
+//!   cargo bench --bench codec_hotpath                       # report only
+//!   cargo bench --bench codec_hotpath -- \
+//!       --json BENCH_codec_hotpath.json \
+//!       --gate BENCH_baseline.json                          # CI bench-gate
 //!
 //! Sweeps the codec venues:
 //!   host/direct       — paper-faithful O(D²) loops (seed allocating path)
@@ -9,18 +13,54 @@
 //!   host/fft-scratch  — the zero-allocation engine: caller-owned C3Scratch,
 //!                       table-driven branchless FFT kernel (bit-identical to
 //!                       host/fft — the property tests prove it)
+//!   host/fft-packed   — the packed half-spectrum engine: real transforms
+//!                       through one N/2-point FFT each, half-size key
+//!                       spectra, decode inverses paired two-rows-per-
+//!                       transform (tolerance-equal to the reference — see
+//!                       the hdc packed parity tests)
 //!   host/fft-parallel — the scratch engine fanned out group-parallel across
 //!                       scoped worker threads
 //!   artifact          — AOT Pallas kernels through PJRT (includes runtime
 //!                       dispatch + literal marshalling), when artifacts exist
 //! across D ∈ {512..4096} at B=32, and reports per-batch time + effective
 //! throughput.  Results and the optimization log live in EXPERIMENTS.md §Perf.
+//!
+//! `--json PATH` writes the machine-readable result (venue × D → encode/
+//! decode rows-per-second + bytes per step) for the repo-root
+//! `BENCH_codec_hotpath.json` trajectory.  `--gate BASELINE` compares the
+//! fresh numbers against a committed baseline and exits non-zero when any
+//! venue regresses more than the tolerance (default 15%, env
+//! `C3SL_BENCH_GATE_TOL`), or when the packed engine fails its acceptance
+//! floor: ≥ 1.3x decode rows/s over host/fft-scratch at D = 2048.  Baseline
+//! entries whose value is 0 (or a baseline with `"calibrated": false`) skip
+//! the absolute comparison, and an uncalibrated baseline also downgrades
+//! the packed floor to a loud warning — no threshold blocks merges before
+//! it has been measured once on the runner class (committing a calibrated
+//! baseline arms everything).  Quick mode (`C3SL_BENCH_QUICK=1`) trims
+//! iteration counts for
+//! CI; rows/s are taken from each measurement's fastest iteration to damp
+//! scheduler noise.
 
-use c3sl::hdc::{Backend, C3Scratch, KeySet, C3};
+use std::collections::BTreeMap;
+
+use c3sl::hdc::{Backend, C3Scratch, FftBackend, KeySet, C3};
 use c3sl::runtime::{CodecRuntime, Engine};
 use c3sl::tensor::Tensor;
+use c3sl::util::json::Json;
 use c3sl::util::rng::Rng;
 use c3sl::util::timer::{bench, fmt_secs, BenchStats};
+
+/// One venue × D measurement destined for the JSON artifact.
+struct Sample {
+    venue: &'static str,
+    d: usize,
+    /// Feature rows encoded per second (B / fastest encode pass).
+    encode_rows_per_s: f64,
+    /// Feature rows decoded per second (B / fastest decode pass).
+    decode_rows_per_s: f64,
+    /// Uncompressed feature bytes moved through the codec per step (B·D·4).
+    bytes_per_step: usize,
+}
 
 fn row(venue: &str, d: usize, enc: &BenchStats, dec: &BenchStats, bytes: f64) {
     println!(
@@ -33,9 +73,127 @@ fn row(venue: &str, d: usize, enc: &BenchStats, dec: &BenchStats, bytes: f64) {
     );
 }
 
+fn record(
+    samples: &mut Vec<Sample>,
+    venue: &'static str,
+    d: usize,
+    b: usize,
+    enc: &BenchStats,
+    dec: &BenchStats,
+) {
+    row(venue, d, enc, dec, (b * d * 4) as f64);
+    samples.push(Sample {
+        venue,
+        d,
+        encode_rows_per_s: b as f64 / enc.min_s.max(1e-12),
+        decode_rows_per_s: b as f64 / dec.min_s.max(1e-12),
+        bytes_per_step: b * d * 4,
+    });
+}
+
+fn sample<'a>(samples: &'a [Sample], venue: &str, d: usize) -> Option<&'a Sample> {
+    samples.iter().find(|s| s.venue == venue && s.d == d)
+}
+
+fn samples_to_json(samples: &[Sample], b: usize, r: usize, quick: bool) -> Json {
+    let mut venues: BTreeMap<String, Json> = BTreeMap::new();
+    for s in samples {
+        let entry = venues
+            .entry(s.venue.to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if let Json::Obj(m) = entry {
+            m.insert(
+                s.d.to_string(),
+                Json::obj(vec![
+                    ("encode_rows_per_s", Json::num(s.encode_rows_per_s)),
+                    ("decode_rows_per_s", Json::num(s.decode_rows_per_s)),
+                    ("bytes_per_step", Json::num(s.bytes_per_step as f64)),
+                ]),
+            );
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::str("codec_hotpath")),
+        ("b", Json::num(b as f64)),
+        ("r", Json::num(r as f64)),
+        ("quick", Json::Bool(quick)),
+        // "usable as an armed baseline" — deliberately NEVER emitted true:
+        // copying a fresh result over BENCH_baseline.json must not silently
+        // arm the 15% absolute gates on one runner's quick-mode numbers;
+        // flipping this to true is the maintainer's explicit, reviewed call
+        // (see the note inside BENCH_baseline.json)
+        ("calibrated", Json::Bool(false)),
+        ("venues", Json::Obj(venues)),
+    ])
+}
+
+/// Compare fresh samples against a committed baseline.  Returns the list of
+/// human-readable gate failures (empty = pass).
+fn gate_failures(samples: &[Sample], baseline: &Json, tol: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let calibrated = baseline
+        .get("calibrated")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(true);
+    if !calibrated {
+        println!(
+            "(gate: baseline is uncalibrated — absolute throughput checks skipped; \
+             refresh it from a fresh BENCH_codec_hotpath.json)"
+        );
+    }
+    let Some(venues) = baseline.get("venues").and_then(|v| v.as_obj()) else {
+        failures.push("baseline has no \"venues\" object".into());
+        return failures;
+    };
+    for (venue, per_d) in venues {
+        let Some(per_d) = per_d.as_obj() else { continue };
+        for (dstr, entry) in per_d {
+            let Ok(d) = dstr.parse::<usize>() else { continue };
+            let Some(fresh) = sample(samples, venue, d) else {
+                failures.push(format!("baseline venue {venue} D={d} was not measured"));
+                continue;
+            };
+            for (key, fresh_v) in [
+                ("encode_rows_per_s", fresh.encode_rows_per_s),
+                ("decode_rows_per_s", fresh.decode_rows_per_s),
+            ] {
+                let old = entry.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                if !calibrated || old <= 0.0 {
+                    continue; // no recorded trajectory for this cell yet
+                }
+                let floor = old * (1.0 - tol);
+                if fresh_v < floor {
+                    failures.push(format!(
+                        "{venue} D={d} {key} regressed {:.1}%: {fresh_v:.0} rows/s vs \
+                         baseline {old:.0} (floor {floor:.0} at {:.0}% tolerance)",
+                        100.0 * (1.0 - fresh_v / old),
+                        tol * 100.0,
+                    ));
+                }
+            }
+        }
+    }
+    failures
+}
+
 fn main() {
+    // argv after `--`: [--json PATH] [--gate BASELINE]
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1))
+            .cloned()
+    };
+    let json_path = flag("--json");
+    let gate_path = flag("--gate");
+    let gate_tol = std::env::var("C3SL_BENCH_GATE_TOL")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.15);
+
     let quick = std::env::var("C3SL_BENCH_QUICK").is_ok();
-    let iters = if quick { 3 } else { 10 };
+    let iters = if quick { 5 } else { 10 };
     let b = 32usize;
     let r = 4usize;
     let par_workers = std::thread::available_parallelism()
@@ -51,16 +209,12 @@ fn main() {
         "venue", "D", "encode", "decode", "batch MB/s"
     );
 
-    // (alloc_total_s, scratch_total_s, parallel_total_s) at D=2048 for the
-    // acceptance summary printed at the end.
-    let mut at2048 = (0.0f64, 0.0f64, 0.0f64);
-
+    let mut samples: Vec<Sample> = Vec::new();
     let mut rng = Rng::new(9);
     for d in [512usize, 1024, 2048, 4096] {
         let mut zdata = vec![0.0f32; b * d];
         rng.fill_normal(&mut zdata, 0.0, 1.0);
         let z = Tensor::from_vec(&[b, d], zdata);
-        let bytes = (b * d * 4) as f64;
         let g = b / r;
 
         for backend in [Backend::Direct, Backend::Fft] {
@@ -70,11 +224,8 @@ fn main() {
             let enc = bench(1, it, || c3.encode_ref(&z));
             let s = c3.encode_ref(&z);
             let dec = bench(1, it, || c3.decode_ref(&s));
-            let venue = format!("host/{backend:?}").to_lowercase();
-            row(&venue, d, &enc, &dec, bytes);
-            if backend == Backend::Fft && d == 2048 {
-                at2048.0 = enc.mean_s + dec.mean_s;
-            }
+            let venue = if backend == Backend::Direct { "host/direct" } else { "host/fft" };
+            record(&mut samples, venue, d, b, &enc, &dec);
         }
 
         // scratch venue: zero allocations in steady state
@@ -86,19 +237,20 @@ fn main() {
         let enc = bench(1, iters, || c3.encode_into(&z, &mut out_e, &mut scratch));
         let s = c3.encode(&z);
         let dec = bench(1, iters, || c3.decode_into(&s, &mut out_d, &mut scratch));
-        row("host/fft-scratch", d, &enc, &dec, bytes);
-        if d == 2048 {
-            at2048.1 = enc.mean_s + dec.mean_s;
-        }
+        record(&mut samples, "host/fft-scratch", d, b, &enc, &dec);
+
+        // packed venue: half-spectrum kernels on the same scratch engine
+        let c3p = C3::with_backends(keys.clone(), Backend::Fft, FftBackend::Packed, 1);
+        let enc = bench(1, iters, || c3p.encode_into(&z, &mut out_e, &mut scratch));
+        let sp = c3p.encode(&z);
+        let dec = bench(1, iters, || c3p.decode_into(&sp, &mut out_d, &mut scratch));
+        record(&mut samples, "host/fft-packed", d, b, &enc, &dec);
 
         // parallel venue: groups fanned out across scoped worker threads
-        let c3p = C3::with_workers(keys, Backend::Fft, par_workers);
-        let enc = bench(1, iters, || c3p.par_encode_into(&z, &mut out_e, par_workers));
-        let dec = bench(1, iters, || c3p.par_decode_into(&s, &mut out_d, par_workers));
-        row("host/fft-parallel", d, &enc, &dec, bytes);
-        if d == 2048 {
-            at2048.2 = enc.mean_s + dec.mean_s;
-        }
+        let c3w = C3::with_workers(keys, Backend::Fft, par_workers);
+        let enc = bench(1, iters, || c3w.par_encode_into(&z, &mut out_e, par_workers));
+        let dec = bench(1, iters, || c3w.par_decode_into(&s, &mut out_d, par_workers));
+        record(&mut samples, "host/fft-parallel", d, b, &enc, &dec);
     }
 
     // Artifact venue at the tiny model's real geometry (D=1024, B=32, R=4).
@@ -123,17 +275,67 @@ fn main() {
         println!("(artifact venue skipped — run `make artifacts`)");
     }
 
-    if at2048.1 > 0.0 {
-        println!(
-            "\nspeedup @D=2048: fft-scratch {:.2}x over allocating fft, \
-             fft-parallel {:.2}x (x{par_workers} workers)",
-            at2048.0 / at2048.1,
-            at2048.0 / at2048.2,
-        );
-    }
+    // Acceptance summary: the packed engine must beat the scratch engine on
+    // decode rows/s at the paper's D=2048 geometry by ≥ 1.3x.
+    let packed_ok = match (
+        sample(&samples, "host/fft-packed", 2048),
+        sample(&samples, "host/fft-scratch", 2048),
+    ) {
+        (Some(p), Some(s)) => {
+            let dec_x = p.decode_rows_per_s / s.decode_rows_per_s.max(1e-12);
+            let enc_x = p.encode_rows_per_s / s.encode_rows_per_s.max(1e-12);
+            println!(
+                "\nspeedup @D=2048: fft-packed {dec_x:.2}x decode rows/s, {enc_x:.2}x \
+                 encode rows/s over fft-scratch (floor: 1.30x decode)"
+            );
+            dec_x >= 1.3
+        }
+        _ => false,
+    };
+
     println!("\nreading: fft wins past D≈512; the scratch engine removes every per-group");
-    println!("allocation AND swaps in the table-driven branchless FFT kernel (bit-identical");
-    println!("outputs — see the to_bits property tests in hdc).  The artifact venue pays");
-    println!("PJRT dispatch + interpret-mode Pallas gather cost — acceptable off the edge");
-    println!("hot path, hence the coordinator defaults the HOST venue for gradient decode.");
+    println!("allocation (bit-identical to host/fft), and the packed engine halves the");
+    println!("butterfly work per row — N/2-point forward transforms, half-size key");
+    println!("spectra, decode inverses paired two-rows-per-transform (tolerance-equal;");
+    println!("see the packed parity tests in hdc).  The artifact venue pays PJRT");
+    println!("dispatch + interpret-mode Pallas gather cost — acceptable off the edge");
+    println!("hot path, hence the coordinator defaults the HOST venue for decode.");
+
+    if let Some(path) = &json_path {
+        let json = samples_to_json(&samples, b, r, quick);
+        std::fs::write(path, json.to_string() + "\n").expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+
+    if let Some(path) = &gate_path {
+        let text = std::fs::read_to_string(path).expect("reading bench baseline");
+        let baseline = c3sl::util::json::parse(&text).expect("parsing bench baseline");
+        let calibrated = baseline
+            .get("calibrated")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(true);
+        let mut failures = gate_failures(&samples, &baseline, gate_tol);
+        if !packed_ok {
+            let msg = "host/fft-packed decode rows/s below the 1.3x floor over \
+                       host/fft-scratch at D=2048";
+            if calibrated {
+                failures.push(msg.into());
+            } else {
+                // a threshold that has never been measured on this hardware
+                // class must not block unrelated work: warn loudly until a
+                // calibrated baseline (which arms all throughput checks,
+                // this floor included) is committed
+                println!("bench-gate WARNING (uncalibrated baseline, not fatal): {msg}");
+            }
+        }
+        if failures.is_empty() {
+            println!("bench-gate: PASS ({} venue cells checked)", samples.len());
+        } else {
+            eprintln!("bench-gate: FAIL");
+            for f in &failures {
+                eprintln!("  - {f}");
+            }
+            std::process::exit(1);
+        }
+    }
 }

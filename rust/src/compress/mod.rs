@@ -9,22 +9,21 @@
 //! Extension codecs (fp16 / int8 quantization) implement the "combine
 //! dimension-wise and batch-wise compression" future-work note in the
 //! paper's §5: they stack with C3 by quantizing the compressed feature.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 pub mod quant;
 
-use crate::hdc::{Backend, KeySet, C3};
+use crate::hdc::{Backend, FftBackend, KeySet, C3};
 use crate::tensor::Tensor;
 
 /// A (possibly lossy) batch codec.  encode: (B, D) → smaller; decode: inverse.
 pub trait Codec: Send {
+    /// Human-readable scheme label for logs and reports (e.g. `"c3-r4"`).
     fn name(&self) -> String;
     /// Nominal compression ratio on payload bytes.
     fn ratio(&self) -> f64;
+    /// Compress a (B, D) batch to its wire form.
     fn encode(&self, z: &Tensor) -> Tensor;
+    /// Reconstruct a (B, D) batch from its compressed wire form.
     fn decode(&self, s: &Tensor) -> Tensor;
     /// Payload bytes actually transmitted for an encoded tensor.
     fn tx_bytes(&self, encoded: &Tensor) -> usize {
@@ -59,6 +58,7 @@ pub struct C3Codec {
 }
 
 impl C3Codec {
+    /// Serial codec over a fixed key set on the given backend.
     pub fn new(keys: KeySet, backend: Backend) -> Self {
         C3Codec { c3: C3::new(keys, backend) }
     }
@@ -66,6 +66,17 @@ impl C3Codec {
     /// C3 codec with group-parallel encode/decode across `workers` threads.
     pub fn with_workers(keys: KeySet, backend: Backend, workers: usize) -> Self {
         C3Codec { c3: C3::with_workers(keys, backend, workers) }
+    }
+
+    /// Fully explicit construction: codec backend, FFT kernel family
+    /// (`scheme.fft_backend`) and worker count — see [`C3::with_backends`].
+    pub fn with_backends(
+        keys: KeySet,
+        backend: Backend,
+        fft: FftBackend,
+        workers: usize,
+    ) -> Self {
+        C3Codec { c3: C3::with_backends(keys, backend, fft, workers) }
     }
 
     /// Compression ratio R (features folded per carrier).
@@ -112,7 +123,9 @@ impl Codec for C3Codec {
 /// Stack two codecs: `outer` runs on the already-compressed tensor.
 /// (paper §5 future work: dimension-wise + batch-wise combined.)
 pub struct Stacked<A: Codec, B: Codec> {
+    /// The batch-wise stage (runs first on encode, last on decode).
     pub inner: A,
+    /// The dimension-wise stage over the already-compressed tensor.
     pub outer: B,
 }
 

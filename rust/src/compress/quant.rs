@@ -4,10 +4,6 @@
 //! dimension-wise (precision) and batch-wise (C3) compression.  The fp16
 //! conversion is implemented from scratch (round-to-nearest-even), since no
 //! half crate is available.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use super::Codec;
 use crate::tensor::Tensor;
@@ -82,7 +78,9 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 /// Quantization mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
+    /// IEEE 754 binary16: 2 bytes per element, ~3 decimal digits.
     F16,
+    /// Per-row absmax-scaled int8: 1 byte per element + one f32 scale/row.
     Int8,
 }
 
@@ -94,10 +92,12 @@ pub struct QuantCodec {
 }
 
 impl QuantCodec {
+    /// fp16 precision codec (2x payload reduction).
     pub fn f16() -> Self {
         QuantCodec { mode: Mode::F16 }
     }
 
+    /// Per-row absmax int8 codec (4x payload reduction).
     pub fn int8() -> Self {
         QuantCodec { mode: Mode::Int8 }
     }

@@ -12,6 +12,7 @@
 pub mod cli;
 pub mod toml;
 
+use crate::hdc::FftBackend;
 use crate::transport::sim::LinkModel;
 use toml::{Doc, Value};
 
@@ -67,6 +68,10 @@ pub struct ExperimentConfig {
     pub codec_venue: CodecVenue,
     /// Worker threads for group-parallel host codec encode/decode.
     pub codec_workers: usize,
+    /// FFT kernel family for the host codec: `"reference"` (full-spectrum,
+    /// bit-identical to the seed kernels) or `"packed"` (half-spectrum real
+    /// transforms — faster, tolerance-equal).
+    pub fft_backend: FftBackend,
     /// Derive a per-client key shard for every edge (multi-edge scenarios)
     /// instead of one global key set, so a compromised edge cannot decode
     /// any other edge's uplink.
@@ -113,6 +118,7 @@ impl Default for ExperimentConfig {
             scheme: SchemeKind::C3 { r: 4 },
             codec_venue: CodecVenue::Artifact,
             codec_workers: 1,
+            fft_backend: FftBackend::Reference,
             key_sharding: false,
             rotation_steps: 0,
             transport: TransportKind::InProc,
@@ -222,6 +228,14 @@ impl ExperimentConfig {
                 return Err(inv(format!("scheme.workers must be >= 1, got {w}")));
             }
             cfg.codec_workers = w as usize;
+        }
+        if let Some(v) = get(&doc, "scheme", "fft_backend") {
+            let s = v.as_str().ok_or_else(|| inv("scheme.fft_backend".into()))?;
+            cfg.fft_backend = FftBackend::parse(s).ok_or_else(|| {
+                inv(format!(
+                    "scheme.fft_backend must be \"packed\" or \"reference\", got {s:?}"
+                ))
+            })?;
         }
         if let Some(v) = get(&doc, "scheme", "key_sharding") {
             cfg.key_sharding = v.as_bool().ok_or_else(|| inv("scheme.key_sharding".into()))?;
@@ -490,6 +504,25 @@ mod tests {
     #[test]
     fn rejects_bad_scheme() {
         assert!(ExperimentConfig::from_toml_str("[scheme]\nkind = \"magic\"\n").is_err());
+    }
+
+    #[test]
+    fn parses_fft_backend_knob() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[scheme]\nkind = \"c3\"\nfft_backend = \"packed\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fft_backend, FftBackend::Packed);
+        let cfg =
+            ExperimentConfig::from_toml_str("[scheme]\nfft_backend = \"reference\"\n").unwrap();
+        assert_eq!(cfg.fft_backend, FftBackend::Reference);
+        // default: the seed's reference kernels
+        assert_eq!(ExperimentConfig::default().fft_backend, FftBackend::Reference);
+        // unknown values are rejected loudly, never silently defaulted
+        assert!(
+            ExperimentConfig::from_toml_str("[scheme]\nfft_backend = \"magic\"\n").is_err()
+        );
+        assert!(ExperimentConfig::from_toml_str("[scheme]\nfft_backend = 3\n").is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::config::{ExperimentConfig, TransportKind};
 use crate::data::open_dataset;
 use crate::ensure;
 use crate::hdc::keyring::KeyRing;
+use crate::hdc::FftBackend;
 use crate::metrics::RunRecorder;
 use crate::runtime::Engine;
 use crate::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
@@ -124,6 +125,10 @@ pub struct MultiEdgeSpec {
     /// Group-parallel codec workers per endpoint.  In reactor mode this is
     /// the codec worker-pool size on the cloud.
     pub workers: usize,
+    /// FFT kernel family for every host codec in the run
+    /// (`scheme.fft_backend`): reference full-spectrum kernels, or packed
+    /// half-spectrum kernels on power-of-two D.
+    pub fft_backend: FftBackend,
     /// Which link substrate connects edges and cloud.
     pub transport: TransportKind,
     /// Listen/connect address for the TCP venue.
@@ -154,6 +159,7 @@ impl Default for MultiEdgeSpec {
             batch: 16,
             seed: 0,
             workers: 1,
+            fft_backend: FftBackend::default(),
             transport: TransportKind::InProc,
             tcp_addr: "127.0.0.1:7071".into(),
             link: None,
@@ -231,10 +237,12 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     let ring = spec
         .key_sharding
         .then(|| KeyRing::new(key_seed, spec.r, spec.d, spec.rotation_steps));
-    let cloud_codec =
-        (!spec.key_sharding).then(|| RunCodec::host(key_seed, spec.r, spec.d, spec.workers));
-    let edge_codec =
-        (!spec.key_sharding).then(|| RunCodec::host(key_seed, spec.r, spec.d, spec.workers));
+    let cloud_codec = (!spec.key_sharding).then(|| {
+        RunCodec::host_with(key_seed, spec.r, spec.d, spec.workers, spec.fft_backend)
+    });
+    let edge_codec = (!spec.key_sharding).then(|| {
+        RunCodec::host_with(key_seed, spec.r, spec.d, spec.workers, spec.fft_backend)
+    });
 
     // 1) build both sides of every link up front
     let (cloud_plan, edge_plan) = match spec.transport {
@@ -280,6 +288,7 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     // 2) the cloud on its own (non-scoped) thread: it owns its codec and
     //    connections; joined unconditionally below
     let workers = spec.workers;
+    let fft_backend = spec.fft_backend;
     let poll = spec.poll;
     let n_edges = spec.edges;
     let cloud_handle = std::thread::Builder::new()
@@ -287,7 +296,11 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
         .spawn(move || -> Result<MultiStats> {
             // the cloud's key source lives on this thread for the whole
             // serve: either the shared codec or the shard gate
-            let gate = ring.map(|ring| ShardGate::new(ring, n_edges).with_workers(workers));
+            let gate = ring.map(|ring| {
+                ShardGate::new(ring, n_edges)
+                    .with_workers(workers)
+                    .with_fft_backend(fft_backend)
+            });
             let codec = match (&cloud_codec, &gate) {
                 (Some(rc), _) => CloudCodec::Shared(rc),
                 (None, Some(g)) => CloudCodec::Sharded(g),
@@ -334,6 +347,7 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
             (None, Some(ring)) => EdgeCodec::Sharded {
                 shard: ring.edge_shard(i as u64),
                 workers: spec.workers,
+                fft: spec.fft_backend,
             },
             (None, None) => unreachable!("shared codec or ring is always built"),
         })

@@ -165,7 +165,13 @@ pub(crate) fn build_codec(engine: &Engine, cfg: &ExperimentConfig, role: &str) -
             CodecVenue::Host => {
                 // d_tx comes from the model manifest; read it cheaply.
                 let manifest = crate::runtime::ModelManifest::load(cfg.model_dir())?;
-                RunCodec::host(key_seed(cfg), r, manifest.d_tx, cfg.codec_workers)
+                RunCodec::host_with(
+                    key_seed(cfg),
+                    r,
+                    manifest.d_tx,
+                    cfg.codec_workers,
+                    cfg.fft_backend,
+                )
             }
         },
     })

@@ -28,24 +28,30 @@
 //! * **Shared** ([`CloudCodec::Shared`] / [`EdgeCodec::Shared`]): every
 //!   endpoint builds its `RunCodec` from one shared key seed, announced by
 //!   `Msg::KeySeed` — the original single-key-set contract.
-//! * **Sharded** ([`CloudCodec::Sharded`] / [`EdgeCodec::Sharded`]): each
-//!   edge holds only its *per-client sub-master* ([`EdgeShard`], derived
-//!   one-way from the ring master by the trusted coordinator — see
-//!   [`crate::hdc::keyring`]) and claims its shard with
-//!   `Msg::KeyShard { client_id, epoch, proof }` as its first message,
-//!   where `proof` is a one-way possession proof — not even a seed is
-//!   announced.  The cloud's [`ShardGate`] verifies the claim — id in
-//!   range, not already claimed, epoch current, proof matching its own
-//!   derivation — and rejects the client otherwise (without disturbing
-//!   healthy edges).  A compromised edge therefore holds nothing that
-//!   derives a sibling's keys, and a wire observer of the handshake can
-//!   regenerate no key material.  Keys then *rotate*: every
-//!   `rotation_steps` training steps both endpoints re-derive the shard at
-//!   the next epoch, in lockstep, purely from the step number.
+//! * **Sharded** ([`CloudCodec::Sharded`] / [`EdgeCodec::Sharded`]): the
+//!   edge opens with `Msg::ShardHello` (the edge speaks first in every
+//!   mode, so a mis-paired deployment fails loudly instead of deadlocking),
+//!   the cloud answers with a **fresh challenge**
+//!   (`Msg::ShardChallenge { nonce }`); each edge holds only its
+//!   *per-client sub-master* ([`EdgeShard`], derived one-way from the ring
+//!   master by the trusted coordinator — see [`crate::hdc::keyring`]) and
+//!   completes with `Msg::KeyShard { client_id, epoch, proof }`, where
+//!   `proof` is a one-way possession proof binding the claim AND the nonce
+//!   — not even a seed is announced, and a recorded proof is single-use
+//!   (replaying it against a later session's challenge fails, so an
+//!   observer can no longer squat a shard id across sessions).  The cloud's
+//!   [`ShardGate`] verifies the claim — id in range, not already claimed,
+//!   epoch current, proof answering this connection's own challenge — and
+//!   rejects the client otherwise (without disturbing healthy edges).  A
+//!   compromised edge therefore holds nothing that derives a sibling's
+//!   keys, and a wire observer of the handshake can regenerate no key
+//!   material.  Keys then *rotate*: every `rotation_steps` training steps
+//!   both endpoints re-derive the shard at the next epoch, in lockstep,
+//!   purely from the step number.
 
 use super::run_codec::RunCodec;
 use crate::hdc::keyring::{ClientCodec, EdgeShard, KeyRing};
-use crate::hdc::{C3Scratch, C3};
+use crate::hdc::{C3Scratch, FftBackend, C3};
 use crate::tensor::{Labels, Tensor};
 use crate::transport::reactor::{Event, Reactor, ReactorConfig, ReactorConn};
 use crate::transport::{Msg, Transport};
@@ -119,21 +125,69 @@ pub struct EdgeReport {
 // Key plumbing: shared key set vs per-client shards.
 // ---------------------------------------------------------------------------
 
+/// Process-global salt folded into every gate's nonce-stream seed, so two
+/// gates created in the same clock tick still issue disjoint challenges.
+static NONCE_SALT: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+/// Entropy for a gate's challenge stream: wall-clock nanoseconds XOR a
+/// process-global counter.  Challenges guard against *replay* (a DoS, not a
+/// key-disclosure risk — see `hdc::keyring`), so clock+counter freshness is
+/// the right weight: no OS randomness dependency, never the same stream
+/// twice within or across processes.
+fn nonce_seed() -> u64 {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let salt = NONCE_SALT
+        .fetch_add(0x9E37_79B9_7F4A_7C15, std::sync::atomic::Ordering::Relaxed);
+    t ^ salt.rotate_left(17)
+}
+
+/// Mutable handshake state behind the gate's one lock.
+struct GateState {
+    /// Which shard ids have been claimed (indexed by shard id; each id may
+    /// be claimed by exactly one connection).
+    claimed: Vec<bool>,
+    /// The challenge nonce issued to each accept slot (indexed by
+    /// connection slot, NOT shard id — a proof must answer the challenge
+    /// that went down its own connection).  Grown on demand: accept slots
+    /// are not capped by the shard count, so a cloud accepting more
+    /// connections than it serves shards (reconnects, rogues) still
+    /// challenges every one of them and rejects at the claim, not here.
+    nonces: Vec<Option<u64>>,
+    /// The fresh-challenge stream.
+    rng: Rng,
+}
+
 /// Shared handshake state for one sharded serving session: the key ring the
-/// shards derive from, plus which shard ids have been claimed (each id may
-/// be claimed by exactly one connection).
+/// shards derive from, which shard ids have been claimed, and the fresh
+/// challenge nonce issued to every connection ([`ShardGate::issue_nonce`])
+/// that its `Msg::KeyShard` possession proof must bind.
 pub struct ShardGate {
     ring: KeyRing,
     /// Group-parallel workers for per-client codecs on the *blocking* serve
     /// path (the reactor parallelizes across clients instead).
     workers: usize,
-    claimed: Mutex<Vec<bool>>,
+    /// FFT kernel family for every per-client codec this gate admits.
+    fft: FftBackend,
+    state: Mutex<GateState>,
 }
 
 impl ShardGate {
     /// A gate deriving from `ring` and serving shard ids `0..clients`.
     pub fn new(ring: KeyRing, clients: usize) -> Self {
-        ShardGate { ring, workers: 1, claimed: Mutex::new(vec![false; clients]) }
+        ShardGate {
+            ring,
+            workers: 1,
+            fft: FftBackend::default(),
+            state: Mutex::new(GateState {
+                claimed: vec![false; clients],
+                nonces: vec![None; clients],
+                rng: Rng::new(nonce_seed()),
+            }),
+        }
     }
 
     /// Group-parallel worker count for per-client codecs built by the
@@ -145,11 +199,41 @@ impl ShardGate {
         self
     }
 
+    /// FFT kernel family (`scheme.fft_backend`) for every per-client codec
+    /// admitted through this gate.
+    pub fn with_fft_backend(mut self, fft: FftBackend) -> Self {
+        self.fft = fft;
+        self
+    }
+
+    /// The FFT kernel family this gate configures admitted codecs with.
+    pub fn fft_backend(&self) -> FftBackend {
+        self.fft
+    }
+
     /// Carrier dimensionality D of every shard this gate derives (geometry
     /// only — the ring itself, which holds the master seed, never leaves
     /// the gate).
     pub fn d(&self) -> usize {
         self.ring.d()
+    }
+
+    /// Issue the fresh challenge for accept-slot `client` — the value the
+    /// cloud sends as `Msg::ShardChallenge` and the slot's `Msg::KeyShard`
+    /// proof must bind.  Accept slots are unbounded (unlike shard ids): a
+    /// connection beyond the shard count still gets its challenge and is
+    /// rejected later at the claim, where the error names the real problem.
+    pub fn issue_nonce(&self, client: usize) -> Result<u64> {
+        let mut st = self
+            .state
+            .lock()
+            .map_err(|_| C3Error::msg("shard gate lock poisoned"))?;
+        if client >= st.nonces.len() {
+            st.nonces.resize(client + 1, None);
+        }
+        let nonce = st.rng.next_u64();
+        st.nonces[client] = Some(nonce);
+        Ok(nonce)
     }
 
     /// Validate one `Msg::KeyShard` announcement from accept-slot `client`
@@ -163,29 +247,44 @@ impl ShardGate {
         epoch: u64,
         proof: u64,
     ) -> Result<EdgeShard> {
+        // Admission today always happens at session start, so the expected
+        // claim epoch is epoch_of(step 0) — identically 0 for every
+        // rotation cadence.  The wire field (and this derivation, rather
+        // than a literal 0) exists for the ROADMAP mid-session re-claim
+        // follow-up, where a reconnecting edge would join at the CURRENT
+        // epoch instead.
         let want_epoch = self.ring.epoch_of_step(0);
         ensure!(
             epoch == want_epoch,
             "client {client}: stale key epoch {epoch} (expected {want_epoch})"
         );
-        let want_proof = self.ring.shard_proof(client_id, epoch);
-        let mut claimed = self
-            .claimed
+        let mut st = self
+            .state
             .lock()
             .map_err(|_| C3Error::msg("shard gate lock poisoned"))?;
-        let n = claimed.len();
+        let n = st.claimed.len();
         ensure!(
             client_id < n as u64,
             "client {client}: shard id {client_id} out of range (serving {n} shards)"
         );
-        // NB: never echo `want_proof` — it is a replayable credential for
-        // this shard, and rejection messages reach logs and aggregate errors
+        // a missing nonce is the CLIENT's protocol violation (KeyShard as
+        // the first message, skipping ShardHello), not a server invariant
+        let nonce = st.nonces.get(client).copied().flatten().with_context(|| {
+            format!(
+                "client {client}: KeyShard before ShardHello — no challenge \
+                 issued for this connection"
+            )
+        })?;
+        // NB: never echo `want_proof` — it is the valid credential for this
+        // challenge, and rejection messages reach logs and aggregate errors
+        let want_proof = self.ring.shard_proof(client_id, epoch, nonce);
         ensure!(
             proof == want_proof,
             "client {client}: shard proof mismatch for shard {client_id} \
-             (announced {proof:#x} — wrong or mismatched master seed?)"
+             (announced {proof:#x} — wrong master seed, or a replayed/stale \
+             proof that does not answer this connection's challenge?)"
         );
-        let slot = &mut claimed[client_id as usize];
+        let slot = &mut st.claimed[client_id as usize];
         ensure!(
             !*slot,
             "client {client}: shard id {client_id} already claimed"
@@ -230,17 +329,20 @@ pub enum EdgeCodec<'a> {
         /// The codec-construction seed announced in the handshake.
         key_seed: u64,
     },
-    /// This edge's own key shard, claimed via `Msg::KeyShard` as the edge's
-    /// first message and rotated on the shard's epoch schedule.  Carries
-    /// only the per-client sub-master ([`EdgeShard`]) — never the ring
-    /// master — so even a fully compromised edge cannot derive any sibling
-    /// shard's keys.
+    /// This edge's own key shard, claimed via `Msg::KeyShard` in answer to
+    /// the cloud's `Msg::ShardChallenge` and rotated on the shard's epoch
+    /// schedule.  Carries only the per-client sub-master ([`EdgeShard`]) —
+    /// never the ring master — so even a fully compromised edge cannot
+    /// derive any sibling shard's keys.
     Sharded {
         /// The edge-side shard handle (sub-master + geometry + cadence).
         shard: EdgeShard,
         /// Group-parallel codec workers for this edge's engine
         /// (`scheme.workers`; 1 = serial).
         workers: usize,
+        /// FFT kernel family for this edge's engine
+        /// (`scheme.fft_backend`).
+        fft: FftBackend,
     },
 }
 
@@ -295,12 +397,15 @@ fn check_uplink_geometry(d: Option<usize>, t: &Tensor, client: usize) -> Result<
 
 /// Serve one edge until it sends Shutdown: decode uplink features, evaluate
 /// the probe objective, encode the gradients back.  In sharded mode the
-/// edge's first message must be its `Msg::KeyShard` claim.
+/// edge opens with `Msg::ShardHello`, the cloud answers with its fresh
+/// `Msg::ShardChallenge`, and the edge's next message must be the
+/// `Msg::KeyShard` claim answering it.
 pub fn serve_one(
     codec: CloudCodec<'_>,
     transport: &mut dyn Transport,
     client: usize,
 ) -> Result<ClientReport> {
+    let mut challenged = false;
     let mut shard: Option<ClientCodec> = None;
     let mut pending: Option<(u64, Tensor)> = None;
     let mut steps = 0u64;
@@ -312,8 +417,20 @@ pub fn serve_one(
                 ensure!(
                     !codec.is_sharded(),
                     "client {client}: KeySeed handshake while key sharding is \
-                     enabled (expected KeyShard)"
+                     enabled (expected ShardHello)"
                 );
+            }
+            Msg::ShardHello => {
+                let CloudCodec::Sharded(gate) = codec else {
+                    bail!(
+                        "client {client}: ShardHello but key sharding is not \
+                         enabled on this cloud"
+                    );
+                };
+                ensure!(!challenged, "client {client}: duplicate ShardHello");
+                challenged = true;
+                let nonce = gate.issue_nonce(client)?;
+                transport.send(&Msg::ShardChallenge { nonce })?;
             }
             Msg::KeyShard { client_id, epoch, proof } => {
                 let CloudCodec::Sharded(gate) = codec else {
@@ -326,10 +443,14 @@ pub fn serve_one(
                     shard.is_none(),
                     "client {client}: duplicate KeyShard handshake"
                 );
-                // keygen runs here on this client's own serving thread —
-                // concurrent admissions never serialize behind it
-                let mut cc = gate.admit(client, client_id, epoch, proof)?.client_codec();
+                // construction is lazy so the backend/worker knobs apply
+                // before the first keygen, which then runs on this client's
+                // own serving thread at its first codec call — concurrent
+                // admissions never serialize behind it
+                let mut cc =
+                    gate.admit(client, client_id, epoch, proof)?.client_codec_lazy();
                 cc.set_workers(gate.workers);
+                cc.set_fft_backend(gate.fft_backend());
                 shard = Some(cc);
             }
             Msg::Features { step, tensor } => {
@@ -477,6 +598,9 @@ struct DoneOk {
 /// Per-client protocol state machine driven by reactor events.
 #[derive(Default)]
 struct ClientSm {
+    /// A `ShardHello` arrived and the challenge went out (sharded serving
+    /// only; rejects duplicate hellos).
+    challenged: bool,
     /// The rotating per-client codec admitted by the KeyShard handshake
     /// (sharded serving only).
     shard: Option<Arc<Mutex<ClientCodec>>>,
@@ -691,7 +815,24 @@ fn handle_client_msg(
             ensure!(
                 !codec.is_sharded(),
                 "client {client}: KeySeed handshake while key sharding is \
-                 enabled (expected KeyShard)"
+                 enabled (expected ShardHello)"
+            );
+        }
+        Msg::ShardHello => {
+            let CloudCodec::Sharded(gate) = codec else {
+                bail!(
+                    "client {client}: ShardHello but key sharding is not \
+                     enabled on this cloud"
+                );
+            };
+            ensure!(!c.challenged, "client {client}: duplicate ShardHello");
+            c.challenged = true;
+            // issuing a nonce is cheap (one PRNG draw under the gate lock);
+            // the challenge reply rides the normal outbox
+            let nonce = gate.issue_nonce(client)?;
+            reactor.queue_frame(
+                client,
+                crate::transport::wire::encode(&Msg::ShardChallenge { nonce }),
             );
         }
         Msg::KeyShard { client_id, epoch, proof } => {
@@ -705,11 +846,14 @@ fn handle_client_msg(
                 c.shard.is_none(),
                 "client {client}: duplicate KeyShard handshake"
             );
-            // admission validates the claim only; keygen is deferred to the
-            // codec worker pool (first job) so a handshake storm never
-            // stalls this single I/O thread
+            // admission validates the claim (against this slot's own
+            // challenge) only; keygen is deferred to the codec worker pool
+            // (first job) so a handshake storm never stalls this single
+            // I/O thread
             let sh = gate.admit(client, client_id, epoch, proof)?;
-            c.shard = Some(Arc::new(Mutex::new(sh.client_codec_lazy())));
+            let mut cc = sh.client_codec_lazy();
+            cc.set_fft_backend(gate.fft_backend());
+            c.shard = Some(Arc::new(Mutex::new(cc)));
             c.shard_id = Some(client_id);
         }
         Msg::Features { step, tensor } => {
@@ -1000,10 +1144,13 @@ fn reactor_serve_loop(
 /// probe loss contracts geometrically when the codec round trip is faithful,
 /// which is exactly what the multi-edge tests assert.
 ///
-/// Key agreement happens first ([`EdgeCodec`]): `Msg::KeySeed` announces the
-/// shared construction seed, or `Msg::KeyShard` claims this edge's key shard
-/// — either way the keys themselves never cross the wire, and a cloud that
-/// honors the handshake arrives at the same KeySet this edge encodes with.
+/// Key agreement happens first ([`EdgeCodec`]), and the edge speaks first
+/// in every mode: `Msg::KeySeed` announces the shared construction seed, or
+/// — sharded — the edge opens with `Msg::ShardHello`, receives the cloud's
+/// fresh `Msg::ShardChallenge`, and answers with the `Msg::KeyShard` claim
+/// whose proof binds the nonce.  Either way the keys themselves never cross
+/// the wire, and a cloud that honors the handshake arrives at the same
+/// KeySet this edge encodes with.
 pub fn run_edge(
     keys: EdgeCodec<'_>,
     transport: &mut dyn Transport,
@@ -1023,15 +1170,21 @@ pub fn run_edge(
             transport.send(&Msg::KeySeed { seed: key_seed })?;
             EdgeEngine::Shared(codec)
         }
-        EdgeCodec::Sharded { shard, workers } => {
+        EdgeCodec::Sharded { shard, workers, fft } => {
+            transport.send(&Msg::ShardHello)?;
+            let nonce = match transport.recv()? {
+                Msg::ShardChallenge { nonce } => nonce,
+                other => bail!("edge expected ShardChallenge, got {other:?}"),
+            };
             let epoch = shard.epoch_of_step(0);
             transport.send(&Msg::KeyShard {
                 client_id: shard.client_id(),
                 epoch,
-                proof: shard.proof(epoch),
+                proof: shard.proof(epoch, nonce),
             })?;
-            let mut cc = shard.client_codec();
+            let mut cc = shard.client_codec_lazy();
             cc.set_workers(workers);
+            cc.set_fft_backend(fft);
             EdgeEngine::Sharded(cc)
         }
     };
@@ -1145,7 +1298,11 @@ mod tests {
                 serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
             });
             let edge = run_edge(
-                EdgeCodec::Sharded { shard: ring.edge_shard(0), workers: 1 },
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(0),
+                    workers: 1,
+                    fft: FftBackend::default(),
+                },
                 &mut etp,
                 12,
                 3,
@@ -1169,29 +1326,118 @@ mod tests {
     }
 
     #[test]
+    fn sharded_roundtrip_with_packed_backend() {
+        // The sharded contract with the PACKED FFT kernels on both endpoints
+        // (gate side via with_fft_backend, edge side via EdgeCodec::Sharded
+        // { fft }): challenge handshake, rotation mid-run, no step lost, and
+        // the probe objective still contracts through the packed codec.
+        let (mut etp, ctp) = inproc_pair();
+        let ring = KeyRing::new(0x9ACC, 2, 512, 6);
+        let gate = ShardGate::new(ring, 1).with_fft_backend(FftBackend::Packed);
+        assert_eq!(gate.fft_backend(), FftBackend::Packed);
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            let edge = run_edge(
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(0),
+                    workers: 1,
+                    fft: FftBackend::Packed,
+                },
+                &mut etp,
+                12,
+                3,
+                4,
+                512,
+            )
+            .unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        assert_eq!(cloud.steps, 12);
+        assert_eq!(cloud.shard, Some(0));
+        assert!(
+            edge.last_loss < edge.first_loss,
+            "probe loss did not decrease on the packed backend: {} -> {}",
+            edge.first_loss,
+            edge.last_loss
+        );
+        assert_eq!(cloud.rx_bytes, edge.tx_bytes);
+        assert_eq!(cloud.tx_bytes, edge.rx_bytes);
+    }
+
+    #[test]
     fn shard_gate_rejects_bad_announcements() {
         let ring = KeyRing::new(1, 2, 64, 0);
         let gate = ShardGate::new(ring, 2);
+        let n0 = gate.issue_nonce(0).unwrap();
+        let n1 = gate.issue_nonce(1).unwrap();
+        assert_ne!(n0, n1, "each slot gets its own challenge");
         // wrong (out-of-range) shard id
-        let err = gate.admit(0, 5, 0, ring.shard_proof(5, 0)).unwrap_err();
+        let err = gate.admit(0, 5, 0, ring.shard_proof(5, 0, n0)).unwrap_err();
         assert!(err.to_string().contains("out of range"), "{err}");
         // stale epoch
-        let err = gate.admit(0, 0, 3, ring.shard_proof(0, 3)).unwrap_err();
+        let err = gate.admit(0, 0, 3, ring.shard_proof(0, 3, n0)).unwrap_err();
         assert!(err.to_string().contains("stale key epoch"), "{err}");
         // proof derived from a different master
         let other = KeyRing::new(2, 2, 64, 0);
-        let err = gate.admit(0, 0, 0, other.shard_proof(0, 0)).unwrap_err();
+        let err = gate.admit(0, 0, 0, other.shard_proof(0, 0, n0)).unwrap_err();
         assert!(err.to_string().contains("proof mismatch"), "{err}");
         // announcing the raw sub-seed (the pre-proof secret) must also fail:
         // the wire value is a PRF of the seed, never the seed itself
         let err = gate.admit(0, 0, 0, ring.subseed(0, 0)).unwrap_err();
         assert!(err.to_string().contains("proof mismatch"), "{err}");
+        // a correct proof answering the OTHER slot's challenge must fail —
+        // each proof is bound to its own connection's nonce
+        let err = gate.admit(0, 0, 0, ring.shard_proof(0, 0, n1)).unwrap_err();
+        assert!(err.to_string().contains("proof mismatch"), "{err}");
         // a valid claim succeeds, its duplicate is rejected...
-        assert!(gate.admit(0, 0, 0, ring.shard_proof(0, 0)).is_ok());
-        let err = gate.admit(1, 0, 0, ring.shard_proof(0, 0)).unwrap_err();
+        assert!(gate.admit(0, 0, 0, ring.shard_proof(0, 0, n0)).is_ok());
+        let err = gate.admit(1, 0, 0, ring.shard_proof(0, 0, n1)).unwrap_err();
         assert!(err.to_string().contains("already claimed"), "{err}");
         // ...and none of the rejections burned the other shard
-        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0)).is_ok());
+        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0, n1)).is_ok());
+        // accept slots are NOT capped by the shard count: a connection
+        // beyond the served shards still gets its challenge, and rejection
+        // happens at the claim with the real reason
+        let n5 = gate.issue_nonce(5).unwrap();
+        let err = gate.admit(5, 5, 0, ring.shard_proof(5, 0, n5)).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn replayed_proof_rejected_in_a_later_session() {
+        // The adversarial replay the challenge leg closes: an observer
+        // records a valid KeyShard proof in session 1, then replays it in a
+        // later session that reuses the same master.  The new session's
+        // gate issues a different challenge, so the recorded proof no
+        // longer verifies and the shard id cannot be squatted.
+        let ring = KeyRing::new(0xABAD_5EED, 2, 64, 0);
+        let shard = ring.edge_shard(0);
+
+        // session 1: the honest edge answers the challenge and is admitted
+        let session1 = ShardGate::new(ring, 1);
+        let n1 = session1.issue_nonce(0).unwrap();
+        let recorded_proof = shard.proof(0, n1);
+        assert!(session1.admit(0, 0, 0, recorded_proof).is_ok());
+
+        // session 2, same master: the replayed proof answers the WRONG
+        // challenge and is rejected — the slot stays claimable
+        let session2 = ShardGate::new(ring, 1);
+        let n2 = session2.issue_nonce(0).unwrap();
+        assert_ne!(n1, n2, "fresh session must issue a fresh challenge");
+        let err = session2.admit(0, 0, 0, recorded_proof).unwrap_err();
+        assert!(err.to_string().contains("proof mismatch"), "{err}");
+        // ...and the honest edge still gets in afterwards
+        assert!(session2.admit(0, 0, 0, shard.proof(0, n2)).is_ok());
+
+        // a claim sent before any challenge was issued is an internal error,
+        // not a panic
+        let session3 = ShardGate::new(ring, 1);
+        let err = session3.admit(0, 0, 0, recorded_proof).unwrap_err();
+        assert!(err.to_string().contains("no challenge issued"), "{err}");
     }
 
     #[test]
@@ -1210,7 +1456,7 @@ mod tests {
             cloud.join().unwrap()
         });
         let err = res.expect_err("KeySeed must be rejected under sharding");
-        assert!(err.to_string().contains("expected KeyShard"), "{err}");
+        assert!(err.to_string().contains("expected ShardHello"), "{err}");
 
         // KeyShard while sharding is NOT enabled → rejected
         let (mut etp, ctp) = inproc_pair();
@@ -1226,6 +1472,40 @@ mod tests {
         });
         let err = res.expect_err("KeyShard must be rejected without sharding");
         assert!(err.to_string().contains("not enabled"), "{err}");
+
+        // ShardHello while sharding is NOT enabled → rejected LOUDLY: this
+        // is what a sharded edge mis-paired with a shared cloud sends first,
+        // and it must surface as an error, never a silent two-sided hang
+        let (mut etp, ctp) = inproc_pair();
+        let codec = RunCodec::host(1, 2, 64, 1);
+        let res = std::thread::scope(|sc| {
+            let codec = &codec;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Shared(codec), &mut tp, 0)
+            });
+            etp.send(&Msg::ShardHello).unwrap();
+            cloud.join().unwrap()
+        });
+        let err = res.expect_err("ShardHello must be rejected without sharding");
+        assert!(err.to_string().contains("not enabled"), "{err}");
+
+        // duplicate ShardHello → rejected
+        let (mut etp, ctp) = inproc_pair();
+        let gate = ShardGate::new(ring, 1);
+        let res = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            etp.send(&Msg::ShardHello).unwrap();
+            etp.send(&Msg::ShardHello).unwrap();
+            let _challenge = etp.recv().unwrap();
+            cloud.join().unwrap()
+        });
+        let err = res.expect_err("duplicate ShardHello must be rejected");
+        assert!(err.to_string().contains("duplicate ShardHello"), "{err}");
 
         // Features before the KeyShard handshake → rejected
         let (mut etp, ctp) = inproc_pair();
@@ -1305,7 +1585,11 @@ mod tests {
                 )
             });
             let edge = run_edge(
-                EdgeCodec::Sharded { shard: ring.edge_shard(0), workers: 1 },
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(0),
+                    workers: 1,
+                    fft: FftBackend::default(),
+                },
                 &mut etp,
                 12,
                 3,
@@ -1320,10 +1604,10 @@ mod tests {
         assert_eq!(c.shard, Some(0));
         assert_eq!(c.rx_bytes, edge.tx_bytes);
         assert_eq!(c.tx_bytes, edge.rx_bytes);
-        // KeyShard + per-step Features/TrainLabels up, Gradients/StepStats
-        // down, plus Shutdown — identical message counts to the shared mode
-        assert_eq!(c.rx_msgs, 12 * 2 + 2);
-        assert_eq!(c.tx_msgs, 12 * 2);
+        // ShardHello + KeyShard + per-step Features/TrainLabels up,
+        // ShardChallenge + Gradients/StepStats down, plus Shutdown
+        assert_eq!(c.rx_msgs, 12 * 2 + 3);
+        assert_eq!(c.tx_msgs, 12 * 2 + 1);
         assert!(
             edge.last_loss < edge.first_loss,
             "probe loss did not decrease across rotations"

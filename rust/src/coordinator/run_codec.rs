@@ -9,7 +9,7 @@
 //! rust/tests/integration.rs checks exactly that.
 
 use crate::compress::{C3Codec, Codec};
-use crate::hdc::{Backend, KeySet};
+use crate::hdc::{Backend, FftBackend, KeySet};
 use crate::runtime::{CodecRuntime, Engine};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -27,12 +27,21 @@ pub enum RunCodec {
 
 impl RunCodec {
     /// Host venue: keys from the (deterministic) rust PRNG at `seed`,
-    /// group-parallel across `workers` threads (1 = serial).
+    /// group-parallel across `workers` threads (1 = serial), on the
+    /// reference FFT kernels.
     pub fn host(seed: u64, r: usize, d: usize, workers: usize) -> Self {
+        Self::host_with(seed, r, d, workers, FftBackend::default())
+    }
+
+    /// [`RunCodec::host`] with an explicit FFT kernel family
+    /// (`scheme.fft_backend`): `FftBackend::Packed` runs the half-spectrum
+    /// kernels on power-of-two D.
+    pub fn host_with(seed: u64, r: usize, d: usize, workers: usize, fft: FftBackend) -> Self {
         let mut rng = Rng::new(seed);
-        RunCodec::Host(C3Codec::with_workers(
+        RunCodec::Host(C3Codec::with_backends(
             KeySet::generate(&mut rng, r, d),
             Backend::Auto,
+            fft,
             workers,
         ))
     }

@@ -2,46 +2,74 @@
 //! interleaved complex buffers, plus real-input convolution helpers used by
 //! the rust-native C3 codec hot path.
 //!
+//! Three kernel families live here:
+//!
+//! * [`FftPlan`] — the general complex transform, in two flavors: the seed
+//!   reference kernel (`forward`/`inverse`, kept verbatim as the numerics
+//!   oracle) and the zero-allocation scratch kernel
+//!   (`forward_into`/`inverse_into`, bit-identical to the reference);
+//! * [`RfftPlan`] — **packed real transforms**: a real signal of length N is
+//!   Hermitian-symmetric in the frequency domain, so its spectrum is fully
+//!   described by N/2+1 complex bins and can be computed with one N/2-point
+//!   complex FFT (the pack/split trick), roughly halving the butterfly work
+//!   per row.  A batch inverse ([`RfftPlan::irfft2_into`]) recovers **two**
+//!   real rows from one full-size complex inverse — the decode-side win the
+//!   `hdc` packed backend is built on.  Packed kernels are *not* bit-
+//!   identical to the reference (different operation order); the property
+//!   tests pin them to the reference within tight rel+abs tolerances
+//!   ([`crate::util::testing`]).
+//! * free helpers ([`rfft`], [`irfft`], [`circular_convolve_fft`], …) — the
+//!   allocating reference paths used by oracles, analysis and tests.
+//!
 //! Only power-of-two lengths go through the FFT; the `hdc` module falls back
 //! to the direct O(D²) path otherwise (real workloads here have D = 2^k).
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::f64::consts::PI;
 
 /// Complex number as (re, im) over f64 for accumulation accuracy.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct C64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
 impl C64 {
+    /// Construct from real and imaginary parts.
     #[inline]
     pub fn new(re: f64, im: f64) -> Self {
         C64 { re, im }
     }
 
+    /// Complex product `self · o`.
     #[inline]
     pub fn mul(self, o: C64) -> C64 {
         C64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
     }
 
+    /// Complex conjugate.
     #[inline]
     pub fn conj(self) -> C64 {
         C64::new(self.re, -self.im)
     }
 
+    /// Complex sum `self + o`.
     #[inline]
     pub fn add(self, o: C64) -> C64 {
         C64::new(self.re + o.re, self.im + o.im)
     }
 
+    /// Complex difference `self − o`.
     #[inline]
     pub fn sub(self, o: C64) -> C64 {
         C64::new(self.re - o.re, self.im - o.im)
+    }
+
+    /// Scale both parts by a real factor.
+    #[inline]
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
     }
 }
 
@@ -59,6 +87,7 @@ impl C64 {
 ///   iterator-driven inner loops (no bounds checks).
 #[derive(Clone, Debug)]
 pub struct FftPlan {
+    /// Transform length (power of two).
     pub n: usize,
     /// twiddles[k] = exp(-2πi k / n) for k < n/2
     twiddles: Vec<C64>,
@@ -70,6 +99,8 @@ pub struct FftPlan {
 }
 
 impl FftPlan {
+    /// Precompute twiddle and bit-reversal tables for length `n` (must be a
+    /// power of two; panics otherwise).
     pub fn new(n: usize) -> Self {
         assert!(n.is_power_of_two(), "FftPlan requires power-of-two n, got {n}");
         let twiddles: Vec<C64> = (0..n / 2)
@@ -236,6 +267,169 @@ pub fn circular_correlate_fft(plan: &FftPlan, a: &[f32], b: &[f32]) -> Vec<f32> 
     let fb = rfft(plan, b);
     let prod: Vec<C64> = fa.iter().zip(&fb).map(|(x, y)| x.conj().mul(*y)).collect();
     irfft(plan, prod)
+}
+
+// ---------------------------------------------------------------------------
+// Packed real transforms: half-spectrum kernels over N/2-point complex FFTs.
+// ---------------------------------------------------------------------------
+
+/// Packed real-FFT plan for power-of-two length `n >= 2`.
+///
+/// A real signal's spectrum is Hermitian-symmetric (`X[n−k] = conj(X[k])`),
+/// so the `n/2 + 1` bins `X[0..=n/2]` carry the whole transform — the
+/// **half spectrum**.  This plan computes it with the pack/split trick:
+///
+/// ```text
+///   pack    z[k] = x[2k] + i·x[2k+1]          n real → n/2 complex
+///   fft     Z    = FFT_{n/2}(z)               one half-size transform
+///   split   X[k] = Xe[k] + w^k·Xo[k]          O(n) recombination,
+///           Xe[k] = (Z[k] + conj(Z[h−k]))/2   w = exp(−2πi/n), h = n/2
+///           Xo[k] = (Z[k] − conj(Z[h−k]))/2i
+/// ```
+///
+/// versus the reference path's full `n`-point complex FFT per real row —
+/// about half the butterfly work and half the spectrum memory.  The inverse
+/// ([`RfftPlan::irfft_into`]) runs the merge/pack steps backwards through
+/// one `n/2`-point inverse.  For batch decode, [`RfftPlan::irfft2_into`]
+/// reconstructs **two** real rows from one full-size complex inverse by
+/// synthesizing `S = A~ + i·B~` from two half spectra (`~` = Hermitian
+/// extension): the real part of `IFFT(S)` is row a, the imaginary part row b.
+///
+/// Unlike the [`FftPlan`] scratch kernels, packed outputs are NOT bit-
+/// identical to the reference transforms (the operation order differs);
+/// `hdc`'s packed-backend property tests pin them to the reference within
+/// rel+abs tolerance instead ([`crate::util::testing::assert_close_slice`]).
+#[derive(Clone, Debug)]
+pub struct RfftPlan {
+    /// Real transform length (power of two, >= 2).
+    n: usize,
+    /// The n/2-point complex plan behind the pack/split kernels.
+    half: FftPlan,
+    /// The full n-point plan: drives the two-rows-per-inverse batch decode
+    /// and doubles as the reference plan for oracle paths.
+    full: FftPlan,
+    /// Split/merge twiddles w[k] = exp(−2πi k / n) for k <= n/2.
+    w: Vec<C64>,
+}
+
+impl RfftPlan {
+    /// Precompute the packed-transform tables for real length `n` (must be a
+    /// power of two `>= 2`; panics otherwise — length 1 has no half plan, so
+    /// callers fall back to the reference kernels there).
+    pub fn new(n: usize) -> Self {
+        assert!(
+            n.is_power_of_two() && n >= 2,
+            "RfftPlan requires power-of-two n >= 2, got {n}"
+        );
+        let w = (0..=n / 2)
+            .map(|k| {
+                let ang = -2.0 * PI * k as f64 / n as f64;
+                C64::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        RfftPlan { n, half: FftPlan::new(n / 2), full: FftPlan::new(n), w }
+    }
+
+    /// Real transform length N.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Half-spectrum length N/2 + 1 (bins `0..=N/2`).
+    pub fn spectrum_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// The embedded full-length complex plan — the reference-kernel plan for
+    /// oracle paths ([`rfft`], [`circular_convolve_fft`], …) so a packed
+    /// engine never builds a second set of full-size tables.
+    pub fn full(&self) -> &FftPlan {
+        &self.full
+    }
+
+    /// Packed forward transform: real `x` (len N) → half spectrum `out`
+    /// (len N/2+1), using `work` (len N/2) as the pack buffer.  Zero
+    /// allocations.
+    pub fn rfft_into(&self, x: &[f32], out: &mut [C64], work: &mut [C64]) {
+        let h = self.n / 2;
+        assert_eq!(x.len(), self.n);
+        assert_eq!(out.len(), h + 1);
+        assert_eq!(work.len(), h);
+        for (wk, p) in work.iter_mut().zip(x.chunks_exact(2)) {
+            *wk = C64::new(p[0] as f64, p[1] as f64);
+        }
+        self.half.forward_into(work);
+        for (k, o) in out.iter_mut().enumerate() {
+            let zk = work[if k == h { 0 } else { k }];
+            let zc = work[(h - k) % h].conj();
+            let xe = zk.add(zc).scale(0.5);
+            let u = zk.sub(zc);
+            // u / 2i = (u.im/2, −u.re/2)
+            let xo = C64::new(0.5 * u.im, -0.5 * u.re);
+            *o = xe.add(self.w[k].mul(xo));
+        }
+    }
+
+    /// Packed inverse transform: half spectrum `spec` (len N/2+1, read-only)
+    /// → real `out` (len N), using `work` (len N/2) as the merge buffer.
+    /// Zero allocations; includes the 1/N normalization.
+    pub fn irfft_into(&self, spec: &[C64], out: &mut [f32], work: &mut [C64]) {
+        let h = self.n / 2;
+        assert_eq!(spec.len(), h + 1);
+        assert_eq!(out.len(), self.n);
+        assert_eq!(work.len(), h);
+        for (k, wk) in work.iter_mut().enumerate() {
+            let xk = spec[k];
+            let xc = spec[h - k].conj();
+            let xe = xk.add(xc).scale(0.5);
+            // (xk − xc)/2 = w^k·Xo[k]; undo the twiddle to recover Xo
+            let xo = xk.sub(xc).scale(0.5).mul(self.w[k].conj());
+            // z[k] = Xe[k] + i·Xo[k]
+            *wk = C64::new(xe.re - xo.im, xe.im + xo.re);
+        }
+        self.half.inverse_into(work);
+        for (p, wk) in out.chunks_exact_mut(2).zip(work.iter()) {
+            p[0] = wk.re as f32;
+            p[1] = wk.im as f32;
+        }
+    }
+
+    /// Batch inverse — **two real outputs per complex inverse**: reconstruct
+    /// rows `a` and `b` from their half spectra `sa`/`sb` with ONE full-size
+    /// inverse FFT, by synthesizing `S = A~ + i·B~` (Hermitian extensions)
+    /// in `work` (len N) and splitting real/imaginary parts of `IFFT(S)`.
+    /// The decode hot path pairs its R per-key inverses through this, so R
+    /// unbinds cost ⌈R/2⌉ inverse transforms instead of R.
+    pub fn irfft2_into(
+        &self,
+        sa: &[C64],
+        sb: &[C64],
+        out_a: &mut [f32],
+        out_b: &mut [f32],
+        work: &mut [C64],
+    ) {
+        let (n, h) = (self.n, self.n / 2);
+        assert_eq!(sa.len(), h + 1);
+        assert_eq!(sb.len(), h + 1);
+        assert_eq!(out_a.len(), n);
+        assert_eq!(out_b.len(), n);
+        assert_eq!(work.len(), n);
+        for (j, wk) in work.iter_mut().take(h + 1).enumerate() {
+            // S[j] = A[j] + i·B[j]
+            *wk = C64::new(sa[j].re - sb[j].im, sa[j].im + sb[j].re);
+        }
+        for j in (h + 1)..n {
+            // Hermitian extension: A~[j] = conj(A[n−j]), same for B
+            let a = sa[n - j].conj();
+            let b = sb[n - j].conj();
+            work[j] = C64::new(a.re - b.im, a.im + b.re);
+        }
+        self.full.inverse_into(work);
+        for ((oa, ob), wv) in out_a.iter_mut().zip(out_b.iter_mut()).zip(work.iter()) {
+            *oa = wv.re as f32;
+            *ob = wv.im as f32;
+        }
+    }
 }
 
 /// Naive O(n²) DFT — test oracle for the FFT itself.
@@ -422,6 +616,128 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "{a} vs {b}");
             }
         }
+    }
+
+    // --- packed real-transform kernels ------------------------------------
+
+    use crate::util::testing::{assert_close_slice, DEFAULT_ABS, DEFAULT_REL};
+
+    /// Half spectrum via the packed kernel, allocating scratch (tests only).
+    fn packed_rfft(rp: &RfftPlan, x: &[f32]) -> Vec<C64> {
+        let mut out = vec![C64::new(0.0, 0.0); rp.spectrum_len()];
+        let mut work = vec![C64::new(0.0, 0.0); rp.n() / 2];
+        rp.rfft_into(x, &mut out, &mut work);
+        out
+    }
+
+    #[test]
+    fn packed_forward_matches_reference_half_spectrum() {
+        // The packed forward must reproduce the reference transform's first
+        // N/2+1 bins within tolerance (not bits — different op order).
+        Prop::new("packed rfft == reference bins", 25).run(|g| {
+            let n = g.pow2_in(1, 11); // 2..=2048
+            let rp = RfftPlan::new(n);
+            let x = g.vec_normal(n, 0.0, 1.0);
+            let want = rfft(rp.full(), &x);
+            let got = packed_rfft(&rp, &x);
+            assert_eq!(got.len(), n / 2 + 1);
+            for (k, (gk, wk)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    crate::util::testing::close(gk.re, wk.re, 1e-9, 1e-9)
+                        && crate::util::testing::close(gk.im, wk.im, 1e-9, 1e-9),
+                    "n={n} bin {k}: ({}, {}) vs ({}, {})",
+                    gk.re,
+                    gk.im,
+                    wk.re,
+                    wk.im
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn packed_inverse_roundtrips() {
+        Prop::new("packed irfft(rfft(x)) == x", 25).run(|g| {
+            let n = g.pow2_in(1, 11);
+            let rp = RfftPlan::new(n);
+            let x = g.vec_normal(n, 0.0, 1.0);
+            let spec = packed_rfft(&rp, &x);
+            let mut back = vec![0.0f32; n];
+            let mut work = vec![C64::new(0.0, 0.0); n / 2];
+            rp.irfft_into(&spec, &mut back, &mut work);
+            assert_close_slice(&x, &back, DEFAULT_REL, DEFAULT_ABS, "packed roundtrip");
+        });
+    }
+
+    #[test]
+    fn packed_pair_inverse_recovers_both_rows() {
+        // irfft2: ONE full-size inverse must reconstruct two independent
+        // real rows from their half spectra.
+        Prop::new("irfft2 recovers (a, b)", 25).run(|g| {
+            let n = g.pow2_in(1, 10);
+            let rp = RfftPlan::new(n);
+            let a = g.vec_normal(n, 0.0, 1.0);
+            let b = g.vec_normal(n, 0.0, 1.0);
+            let sa = packed_rfft(&rp, &a);
+            let sb = packed_rfft(&rp, &b);
+            let mut out_a = vec![0.0f32; n];
+            let mut out_b = vec![0.0f32; n];
+            let mut work = vec![C64::new(0.0, 0.0); n];
+            rp.irfft2_into(&sa, &sb, &mut out_a, &mut out_b, &mut work);
+            assert_close_slice(&a, &out_a, DEFAULT_REL, DEFAULT_ABS, "irfft2 row a");
+            assert_close_slice(&b, &out_b, DEFAULT_REL, DEFAULT_ABS, "irfft2 row b");
+        });
+    }
+
+    #[test]
+    fn packed_kernels_at_n2_are_exact() {
+        // Smallest supported size, checked against the closed form:
+        // X = [x0+x1, x0−x1].
+        let rp = RfftPlan::new(2);
+        assert_eq!(rp.spectrum_len(), 2);
+        let x = [3.0f32, -1.25];
+        let spec = packed_rfft(&rp, &x);
+        assert!((spec[0].re - 1.75).abs() < 1e-12 && spec[0].im.abs() < 1e-12);
+        assert!((spec[1].re - 4.25).abs() < 1e-12 && spec[1].im.abs() < 1e-12);
+        let mut back = [0.0f32; 2];
+        let mut work = [C64::new(0.0, 0.0); 1];
+        rp.irfft_into(&spec, &mut back, &mut work);
+        assert_close_slice(&x, &back, 0.0, 1e-6, "n=2 roundtrip");
+    }
+
+    #[test]
+    fn packed_scratch_buffers_are_reusable() {
+        // Same steady-state contract as the complex scratch kernels: one set
+        // of buffers across many transforms, no state leakage.
+        let n = 128;
+        let rp = RfftPlan::new(n);
+        let mut rng = Rng::new(23);
+        let mut spec = vec![C64::new(0.0, 0.0); rp.spectrum_len()];
+        let mut work = vec![C64::new(0.0, 0.0); n / 2];
+        let mut full_work = vec![C64::new(0.0, 0.0); n];
+        let mut out = vec![0.0f32; n];
+        let mut out_b = vec![0.0f32; n];
+        for _ in 0..5 {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            rp.rfft_into(&x, &mut spec, &mut work);
+            rp.irfft_into(&spec, &mut out, &mut work);
+            assert_close_slice(&x, &out, DEFAULT_REL, DEFAULT_ABS, "reuse roundtrip");
+            rp.irfft2_into(&spec, &spec, &mut out, &mut out_b, &mut full_work);
+            assert_close_slice(&x, &out, DEFAULT_REL, DEFAULT_ABS, "reuse irfft2 a");
+            assert_close_slice(&x, &out_b, DEFAULT_REL, DEFAULT_ABS, "reuse irfft2 b");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two n >= 2")]
+    fn packed_rejects_length_one() {
+        RfftPlan::new(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two n >= 2")]
+    fn packed_rejects_non_pow2() {
+        RfftPlan::new(12);
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! one-way functions** (SipHash-2-4, keyed by the secret at each level):
 //!
 //! ```text
-//!   client_master = PRF_master(client_id)          held by: cloud + edge i
-//!   subseed       = PRF_client_master(epoch)       re-derived per rotation
-//!   proof         = PRF_subseed(client_id, epoch)  the ONLY value on the wire
+//!   client_master = PRF_master(client_id)              held by: cloud + edge i
+//!   subseed       = PRF_client_master(epoch)           re-derived per rotation
+//!   proof         = PRF_subseed(client_id, epoch,      the ONLY value on the
+//!                               nonce)                 wire; answers the
+//!                                                      cloud's fresh nonce
 //! ```
 //!
 //! The trusted coordinator holds the **master** ([`KeyRing`]); each edge is
@@ -16,11 +18,16 @@
 //! (a) neither keys *nor seeds* ever cross the wire — the `Msg::KeyShard`
 //! announcement carries a one-way possession `proof` that the cloud
 //! re-derives and compares, so a passive observer of the handshake learns
-//! nothing that regenerates any key set; (b) a compromised edge cannot
-//! decode any other edge's uplink: sibling sub-masters require the master,
-//! and a keyed PRF output reveals neither its key nor sibling outputs (the
-//! shards are also pairwise independent key draws, tested below against the
-//! quasi-orthogonality crosstalk bound); and (c) keys **rotate**: every
+//! nothing that regenerates any key set; (b) the proof answers a **fresh
+//! challenge nonce** (`Msg::ShardChallenge`, the cloud's reply to the
+//! edge's opening `Msg::ShardHello`), so a recorded proof is single-use:
+//! replaying it in a later session that reuses the same master fails the
+//! comparison instead of squatting the shard id; (c) a compromised edge
+//! cannot decode any
+//! other edge's uplink: sibling sub-masters require the master, and a keyed
+//! PRF output reveals neither its key nor sibling outputs (the shards are
+//! also pairwise independent key draws, tested below against the
+//! quasi-orthogonality crosstalk bound); and (d) keys **rotate**: every
 //! `rotation_steps` training steps the epoch increments and both sides
 //! re-derive, bounding how long a leaked shard stays useful.
 //!
@@ -31,7 +38,7 @@
 //! endpoints rotate in lockstep without any extra wire traffic and no step
 //! is lost across a boundary.
 
-use super::{Backend, KeySet, C3};
+use super::{Backend, FftBackend, KeySet, C3};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -66,26 +73,31 @@ fn sipround(v: &mut [u64; 4]) {
     v[2] = v[2].rotate_left(32);
 }
 
-/// SipHash-2-4 of a fixed two-word (16-byte) message under key `(k0, k1)`
-/// — the keyed one-way function of the derivation chain.  Unlike an unkeyed
-/// mixer (whose finalizer is a publicly invertible bijection), a SipHash
-/// output reveals neither its key nor any sibling output, which is the
-/// property the sharding threat model rests on.
-fn siphash24(k0: u64, k1: u64, m0: u64, m1: u64) -> u64 {
+/// SipHash-2-4 of a whole-word message under key `(k0, k1)` — the keyed
+/// one-way function of the derivation chain.  Unlike an unkeyed mixer
+/// (whose finalizer is a publicly invertible bijection), a SipHash output
+/// reveals neither its key nor any sibling output, which is the property
+/// the sharding threat model rests on.
+///
+/// The message length is folded into the finalization block (standard
+/// SipHash), so the two-word derivations and the three-word nonce-bound
+/// proof live in disjoint input domains: no (claim, nonce) triple can
+/// collide with a (claim) pair.
+fn siphash24(k0: u64, k1: u64, msg: &[u64]) -> u64 {
     let mut v = [
         k0 ^ 0x736f_6d65_7073_6575, // "somepseu"
         k1 ^ 0x646f_7261_6e64_6f6d, // "dorandom"
         k0 ^ 0x6c79_6765_6e65_7261, // "lygenera"
         k1 ^ 0x7465_6462_7974_6573, // "tedbytes"
     ];
-    for m in [m0, m1] {
+    for &m in msg {
         v[3] ^= m;
         sipround(&mut v);
         sipround(&mut v);
         v[0] ^= m;
     }
-    // finalization block: message length (16 bytes) in the top byte, no tail
-    let b = 16u64 << 56;
+    // finalization block: message length in bytes in the top byte, no tail
+    let b = (8 * msg.len() as u64) << 56;
     v[3] ^= b;
     sipround(&mut v);
     sipround(&mut v);
@@ -102,7 +114,7 @@ fn siphash24(k0: u64, k1: u64, m0: u64, m1: u64) -> u64 {
 /// sibling sub-masters cannot be computed, and the master is not
 /// recoverable from any number of sub-masters.
 pub fn client_master(master: u64, client_id: u64) -> u64 {
-    siphash24(master ^ TWEAK_CLIENT.0, master ^ TWEAK_CLIENT.1, DOMAIN, client_id)
+    siphash24(master ^ TWEAK_CLIENT.0, master ^ TWEAK_CLIENT.1, &[DOMAIN, client_id])
 }
 
 /// Derive the epoch sub-seed from a per-client sub-master (the second link
@@ -111,26 +123,29 @@ fn epoch_subseed(client_master: u64, epoch: u64) -> u64 {
     siphash24(
         client_master ^ TWEAK_EPOCH.0,
         client_master ^ TWEAK_EPOCH.1,
-        DOMAIN,
-        epoch,
+        &[DOMAIN, epoch],
     )
 }
 
 /// The possession proof announced in `Msg::KeyShard`: a PRF keyed by the
-/// (secret) sub-seed over the public claim `(client_id, epoch)`.  The cloud
-/// derives the same sub-seed and compares; a wire observer holding the
-/// proof can regenerate nothing — in particular not the sub-seed, which is
-/// the RNG seed of the epoch's key set and therefore must never itself be
-/// announced.
+/// (secret) sub-seed over the public claim `(client_id, epoch)` **and the
+/// coordinator's fresh challenge `nonce`** (`Msg::ShardChallenge`, the
+/// cloud's reply to the edge's opening hello).  The cloud derives the
+/// same sub-seed and compares; a wire observer holding the proof can
+/// regenerate nothing — in particular not the sub-seed, which is the RNG
+/// seed of the epoch's key set and therefore must never itself be announced.
 ///
-/// Known limit: the proof is deterministic in `(master, client_id, epoch)`,
-/// so an observer can *replay* it in a LATER serving session that reuses
-/// the same master, squatting the shard id before the real edge connects
-/// (denial of service only — no key material leaks).  Use a fresh master
-/// per serving session; a challenge/nonce leg in the handshake is the
-/// ROADMAP follow-up that closes this within a session-reusing deployment.
-fn shard_proof_of(subseed: u64, client_id: u64, epoch: u64) -> u64 {
-    siphash24(subseed ^ TWEAK_PROOF.0, subseed ^ TWEAK_PROOF.1, client_id, epoch)
+/// Binding the nonce is what makes the proof **single-use**: a recorded
+/// proof answers exactly one challenge, so replaying it in a later serving
+/// session (or even a later connection of the same session) that reuses the
+/// same master fails the comparison — the shard-squatting replay the
+/// deterministic pre-nonce proof permitted is closed.
+fn shard_proof_of(subseed: u64, client_id: u64, epoch: u64, nonce: u64) -> u64 {
+    siphash24(
+        subseed ^ TWEAK_PROOF.0,
+        subseed ^ TWEAK_PROOF.1,
+        &[client_id, epoch, nonce],
+    )
 }
 
 /// The epoch a training step belongs to under a rotation cadence:
@@ -215,10 +230,12 @@ impl KeyRing {
         derive_subseed(self.master, client_id, epoch)
     }
 
-    /// The wire-safe possession proof for one `(client_id, epoch)` claim —
-    /// what `Msg::KeyShard` carries and what the gate compares against.
-    pub fn shard_proof(&self, client_id: u64, epoch: u64) -> u64 {
-        shard_proof_of(self.subseed(client_id, epoch), client_id, epoch)
+    /// The wire-safe possession proof for one `(client_id, epoch)` claim
+    /// answering the coordinator's challenge `nonce` — what `Msg::KeyShard`
+    /// carries and what the gate compares against.  Nonce-bound, so a
+    /// recorded proof cannot be replayed against a later challenge.
+    pub fn shard_proof(&self, client_id: u64, epoch: u64, nonce: u64) -> u64 {
+        shard_proof_of(self.subseed(client_id, epoch), client_id, epoch, nonce)
     }
 
     /// Derive the key set for one `(client_id, epoch)` shard.
@@ -295,10 +312,11 @@ impl EdgeShard {
         epoch_subseed(self.client_master, epoch)
     }
 
-    /// The wire-safe possession proof for this shard at `epoch` — equal to
-    /// the ring's [`KeyRing::shard_proof`] by construction.
-    pub fn proof(&self, epoch: u64) -> u64 {
-        shard_proof_of(self.subseed(epoch), self.client_id, epoch)
+    /// The wire-safe possession proof for this shard at `epoch`, answering
+    /// the coordinator's challenge `nonce` — equal to the ring's
+    /// [`KeyRing::shard_proof`] by construction.
+    pub fn proof(&self, epoch: u64, nonce: u64) -> u64 {
+        shard_proof_of(self.subseed(epoch), self.client_id, epoch, nonce)
     }
 
     /// Derive this shard's key set at `epoch`.
@@ -325,6 +343,7 @@ impl EdgeShard {
             epoch: self.epoch_of_step(0),
             rotations: 0,
             workers: 1,
+            fft: FftBackend::default(),
             c3: None,
             shard: self,
         }
@@ -344,6 +363,8 @@ pub struct ClientCodec {
     rotations: u64,
     /// Group-parallel workers for the engine (applied to rebuilds too).
     workers: usize,
+    /// FFT kernel family for the engine (applied to rebuilds too).
+    fft: FftBackend,
     /// `None` until the first `for_step` of a lazily constructed codec.
     c3: Option<C3>,
 }
@@ -375,6 +396,25 @@ impl ClientCodec {
         }
     }
 
+    /// Select the FFT kernel family (`scheme.fft_backend`) for the engine —
+    /// applied to every epoch rebuild, and to the current engine by
+    /// rebuilding it in place (one extra keygen; callers set this right
+    /// after construction, before the first codec call).
+    pub fn set_fft_backend(&mut self, fft: FftBackend) {
+        if self.fft == fft {
+            return;
+        }
+        self.fft = fft;
+        if self.c3.is_some() {
+            self.c3 = Some(C3::with_backends(
+                self.shard.keyset(self.epoch),
+                Backend::Auto,
+                fft,
+                self.workers,
+            ));
+        }
+    }
+
     /// The underlying engine at its current epoch, if it has been built
     /// (always `Some` after construction via [`EdgeShard::client_codec`] or
     /// the first [`ClientCodec::for_step`]).
@@ -390,9 +430,10 @@ impl ClientCodec {
     pub fn for_step(&mut self, step: u64) -> Result<&C3> {
         let epoch = self.shard.epoch_of_step(step);
         if self.c3.is_none() {
-            self.c3 = Some(C3::with_workers(
+            self.c3 = Some(C3::with_backends(
                 self.shard.keyset(epoch),
                 Backend::Auto,
+                self.fft,
                 self.workers,
             ));
             self.epoch = epoch;
@@ -445,39 +486,66 @@ mod tests {
 
     #[test]
     fn proof_is_consistent_and_not_the_seed() {
-        let ring = KeyRing::new(0xDEC0_DE, 2, 64, 4);
+        let ring = KeyRing::new(0xDEC0DE, 2, 64, 4);
+        let nonce = 0x4E4F_4E43_4531u64;
         for client in 0..4u64 {
             let shard = ring.edge_shard(client);
             for epoch in 0..3u64 {
-                // both endpoints derive the same proof...
-                assert_eq!(shard.proof(epoch), ring.shard_proof(client, epoch));
+                // both endpoints derive the same proof for the same nonce...
+                assert_eq!(
+                    shard.proof(epoch, nonce),
+                    ring.shard_proof(client, epoch, nonce)
+                );
                 // ...and the announced value is NOT the key-generating
                 // sub-seed (the wire must never carry key material)
-                assert_ne!(shard.proof(epoch), shard.subseed(epoch));
-                assert_ne!(shard.proof(epoch), ring.subseed(client, epoch));
+                assert_ne!(shard.proof(epoch, nonce), shard.subseed(epoch));
+                assert_ne!(shard.proof(epoch, nonce), ring.subseed(client, epoch));
             }
         }
-        // proofs bind the claim: same seed, different claimed identity or
-        // epoch → different proof
+        // proofs bind the claim: same seed, different claimed identity,
+        // epoch or challenge nonce → different proof
         let s = ring.subseed(0, 0);
-        assert_ne!(shard_proof_of(s, 0, 0), shard_proof_of(s, 1, 0));
-        assert_ne!(shard_proof_of(s, 0, 0), shard_proof_of(s, 0, 1));
+        assert_ne!(shard_proof_of(s, 0, 0, nonce), shard_proof_of(s, 1, 0, nonce));
+        assert_ne!(shard_proof_of(s, 0, 0, nonce), shard_proof_of(s, 0, 1, nonce));
+        assert_ne!(shard_proof_of(s, 0, 0, nonce), shard_proof_of(s, 0, 0, nonce ^ 1));
+    }
+
+    #[test]
+    fn proof_is_nonce_bound_single_use() {
+        // The replay-closure property: a proof computed for one challenge
+        // answers no other challenge, and flipping any single nonce bit
+        // invalidates it.
+        let ring = KeyRing::new(0x5E5510, 2, 64, 0);
+        let shard = ring.edge_shard(0);
+        let recorded = shard.proof(0, 1111);
+        assert_eq!(recorded, ring.shard_proof(0, 0, 1111));
+        assert_ne!(recorded, ring.shard_proof(0, 0, 2222));
+        for bit in [0u32, 13, 63] {
+            assert_ne!(recorded, ring.shard_proof(0, 0, 1111 ^ (1u64 << bit)), "bit {bit}");
+        }
+        // the three-word proof message also cannot collide with any
+        // two-word derivation of the same key (length is finalized in)
+        assert_ne!(
+            siphash24(1, 2, &[3, 4, 0]),
+            siphash24(1, 2, &[3, 4]),
+            "message length must separate the PRF domains"
+        );
     }
 
     #[test]
     fn siphash_is_keyed_and_sensitive() {
         // the chain's one-way function must be key- and message-sensitive:
         // flipping any single input changes the output
-        let base = siphash24(1, 2, 3, 4);
-        assert_ne!(base, siphash24(9, 2, 3, 4));
-        assert_ne!(base, siphash24(1, 9, 3, 4));
-        assert_ne!(base, siphash24(1, 2, 9, 4));
-        assert_ne!(base, siphash24(1, 2, 3, 9));
+        let base = siphash24(1, 2, &[3, 4]);
+        assert_ne!(base, siphash24(9, 2, &[3, 4]));
+        assert_ne!(base, siphash24(1, 9, &[3, 4]));
+        assert_ne!(base, siphash24(1, 2, &[9, 4]));
+        assert_ne!(base, siphash24(1, 2, &[3, 9]));
         // and deterministic
-        assert_eq!(base, siphash24(1, 2, 3, 4));
+        assert_eq!(base, siphash24(1, 2, &[3, 4]));
         // single-bit flips in the key propagate
         for bit in [0u32, 17, 63] {
-            assert_ne!(base, siphash24(1 ^ (1u64 << bit), 2, 3, 4), "bit {bit}");
+            assert_ne!(base, siphash24(1 ^ (1u64 << bit), 2, &[3, 4]), "bit {bit}");
         }
     }
 
@@ -656,6 +724,45 @@ mod tests {
             for (a, b) in got.data().iter().zip(want.data()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "first_step {first_step}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_client_codec_rotates_like_fresh_packed_engines() {
+        // The fft_backend knob must survive both lazy construction and
+        // every epoch rebuild: a packed ClientCodec walked across epoch
+        // boundaries lands bit-for-bit on a cold packed engine at each epoch.
+        let ring = KeyRing::new(0xFACADE, 2, 128, 3);
+        let mut cc = ring.edge_shard(1).client_codec_lazy();
+        cc.set_fft_backend(FftBackend::Packed);
+        let mut rng = Rng::new(8);
+        let mut z = vec![0.0f32; 2 * 128];
+        rng.fill_normal(&mut z, 0.0, 1.0);
+        let z = Tensor::from_vec(&[2, 128], z);
+        for step in [0u64, 2, 3, 7] {
+            let got = cc.for_step(step).unwrap();
+            assert!(got.is_packed());
+            let got = got.encode(&z);
+            let epoch = ring.epoch_of_step(step);
+            let fresh = C3::with_backends(
+                ring.keyset(1, epoch),
+                Backend::Auto,
+                FftBackend::Packed,
+                1,
+            );
+            let want = fresh.encode(&z);
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step}");
+            }
+        }
+        // and switching an EAGER codec to packed rebuilds its engine
+        let mut eager = ring.client_codec(0);
+        eager.set_fft_backend(FftBackend::Packed);
+        let got = eager.for_step(0).unwrap().encode(&z);
+        let want = C3::with_backends(ring.keyset(0, 0), Backend::Auto, FftBackend::Packed, 1)
+            .encode(&z);
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -15,6 +15,7 @@ pub mod keyring;
 
 use crate::fft::{
     circular_convolve_fft, circular_correlate_fft, irfft_into, rfft_into, C64, FftPlan,
+    RfftPlan,
 };
 use crate::tensor::Tensor;
 use crate::ensure;
@@ -142,25 +143,79 @@ pub enum Backend {
     Auto,
 }
 
+/// Which FFT kernel family the host codec's hot path runs on (applies only
+/// when the [`Backend`] selection lands on the convolution-theorem path —
+/// the direct O(D²) backend has no spectra to pack).
+///
+/// Config knob: `[scheme] fft_backend = "packed" | "reference"`; CLI:
+/// `c3sl multi --fft-backend packed`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FftBackend {
+    /// Full-spectrum complex transforms — the seed kernels.  The scratch
+    /// engine stays **bit-identical** to the allocating reference path.
+    #[default]
+    Reference,
+    /// Packed half-spectrum real transforms ([`RfftPlan`]): roughly half
+    /// the butterfly work per row, half the key-spectra memory, and decode
+    /// inverses paired two-rows-per-transform.  Numerically equal to the
+    /// reference within the [`crate::util::testing`] tolerances, NOT
+    /// bit-identical (different operation order).  D = 1 and non-power-of-
+    /// two D fall back to the reference/direct kernels respectively.
+    Packed,
+}
+
+impl FftBackend {
+    /// Stable lowercase name, as written in configs and bench venue labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            FftBackend::Reference => "reference",
+            FftBackend::Packed => "packed",
+        }
+    }
+
+    /// Parse a config/CLI value (`"reference"` or `"packed"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reference" => Some(FftBackend::Reference),
+            "packed" => Some(FftBackend::Packed),
+            _ => None,
+        }
+    }
+}
+
 /// Caller-owned scratch for the zero-allocation C3 engine.  One instance per
 /// worker thread; steady-state [`C3::encode_into`] / [`C3::decode_into`]
 /// perform zero heap allocations.
 pub struct C3Scratch {
-    /// rfft buffer for one feature / carrier row.
+    /// rfft buffer for one feature / carrier row (reference kernels); the
+    /// packed kernels reuse it as their pack/merge work buffer (`[..d/2]`
+    /// for the half-size transforms, the whole buffer for the paired
+    /// full-size inverse).
     a: Vec<C64>,
-    /// Frequency-domain accumulator (encode) / product buffer (decode).
+    /// Frequency-domain accumulator (encode) / product buffer (decode) for
+    /// the reference kernels.
     b: Vec<C64>,
     /// Time-domain buffer for the direct backend's bind accumulation.
     bound: Vec<f32>,
+    /// Packed half-spectrum of the current row/carrier (len D/2+1).
+    ha: Vec<C64>,
+    /// Packed half-spectrum accumulator (encode) / even-row product (decode).
+    hb: Vec<C64>,
+    /// Packed odd-row product for the paired decode inverse.
+    hc: Vec<C64>,
 }
 
 impl C3Scratch {
     /// Scratch for dimension D (any backend; sized once, reused forever).
     pub fn new(d: usize) -> Self {
+        let hs = d / 2 + 1;
         C3Scratch {
             a: vec![C64::new(0.0, 0.0); d],
             b: vec![C64::new(0.0, 0.0); d],
             bound: vec![0.0; d],
+            ha: vec![C64::new(0.0, 0.0); hs],
+            hb: vec![C64::new(0.0, 0.0); hs],
+            hc: vec![C64::new(0.0, 0.0); hs],
         }
     }
 }
@@ -178,18 +233,38 @@ impl C3Scratch {
 ///   seed's allocating implementation, kept verbatim as the numerics oracle
 ///   and the `host/fft` bench baseline;
 /// * [`encode_into`](C3::encode_into)/[`decode_into`](C3::decode_into) — the
-///   zero-allocation scratch engine (bit-identical to the reference; the
-///   property tests below check `to_bits` equality), with optional
-///   group-parallel fan-out across `workers` scoped threads (groups are
-///   embarrassingly parallel).  [`encode`](C3::encode)/[`decode`](C3::decode)
-///   route through this engine.
+///   zero-allocation scratch engine, with optional group-parallel fan-out
+///   across `workers` scoped threads (groups are embarrassingly parallel).
+///   [`encode`](C3::encode)/[`decode`](C3::decode) route through this
+///   engine.
+///
+/// The scratch engine's FFT kernels come in two families ([`FftBackend`]):
+/// the **reference** full-spectrum kernels (bit-identical to the oracle; the
+/// property tests below check `to_bits` equality) and the **packed**
+/// half-spectrum kernels ([`RfftPlan`]) — key spectra stored at D/2+1 bins,
+/// forward transforms through one half-size FFT each, and decode inverses
+/// paired two-rows-per-transform.  Packed output is numerically equal to the
+/// reference within the [`crate::util::testing`] tolerances but not
+/// bit-identical, which is exactly what the tolerance-based parity tests
+/// below pin.
 pub struct C3 {
     /// The fixed (R, D) key set this engine binds/unbinds with.
     pub keys: KeySet,
+    /// Reference-kernel plan (FFT path with [`FftBackend::Reference`], and
+    /// the D = 1 packed fallback).  `None` when packed or direct.
     plan: Option<FftPlan>,
-    /// rfft of each key row (FFT backend only).
+    /// Packed-kernel plan ([`FftBackend::Packed`] at power-of-two D >= 2).
+    rplan: Option<RfftPlan>,
+    /// rfft of each key row (FFT paths only): **full** spectra (len D) on
+    /// the reference backend, **half** spectra (len D/2+1) on the packed
+    /// backend — halving both the spectra memory and every per-row
+    /// pointwise multiply in the hot path.
     key_spectra: Vec<Vec<C64>>,
+    /// Pack-buffer for rebuilding packed key spectra in place on
+    /// [`C3::rekey`] (len D/2; empty on non-packed engines).
+    spectra_work: Vec<C64>,
     backend: Backend,
+    fft_backend: FftBackend,
     /// Worker threads for group-parallel encode/decode (1 = serial).
     workers: usize,
 }
@@ -202,8 +277,24 @@ impl C3 {
     }
 
     /// Like [`C3::new`] with a group-parallel worker count (config:
-    /// `scheme.workers`).
+    /// `scheme.workers`), on the reference FFT kernels.
     pub fn with_workers(keys: KeySet, backend: Backend, workers: usize) -> Self {
+        Self::with_backends(keys, backend, FftBackend::default(), workers)
+    }
+
+    /// Fully explicit construction: codec backend, FFT kernel family
+    /// (config: `scheme.fft_backend`) and group-parallel worker count.
+    ///
+    /// The packed kernels need a half-size plan, so D = 1 (a power of two
+    /// with no half) stays on the reference kernels, and non-power-of-two D
+    /// falls back to the direct path exactly as with [`Backend::Auto`] —
+    /// requesting [`FftBackend::Packed`] is always safe.
+    pub fn with_backends(
+        keys: KeySet,
+        backend: Backend,
+        fft_backend: FftBackend,
+        workers: usize,
+    ) -> Self {
         let use_fft = match backend {
             Backend::Direct => false,
             Backend::Fft => {
@@ -212,19 +303,44 @@ impl C3 {
             }
             Backend::Auto => keys.d.is_power_of_two(),
         };
-        let plan = use_fft.then(|| FftPlan::new(keys.d));
-        let key_spectra = match &plan {
-            Some(p) => (0..keys.r).map(|i| crate::fft::rfft(p, keys.key(i))).collect(),
-            None => Vec::new(),
+        let use_packed = use_fft && fft_backend == FftBackend::Packed && keys.d >= 2;
+        let plan = (use_fft && !use_packed).then(|| FftPlan::new(keys.d));
+        let rplan = use_packed.then(|| RfftPlan::new(keys.d));
+        let (key_spectra, spectra_work) = match (&plan, &rplan) {
+            (_, Some(rp)) => {
+                let mut work = vec![C64::new(0.0, 0.0); keys.d / 2];
+                let spectra = (0..keys.r)
+                    .map(|i| {
+                        let mut s = vec![C64::new(0.0, 0.0); rp.spectrum_len()];
+                        rp.rfft_into(keys.key(i), &mut s, &mut work);
+                        s
+                    })
+                    .collect();
+                (spectra, work)
+            }
+            (Some(p), None) => (
+                (0..keys.r).map(|i| crate::fft::rfft(p, keys.key(i))).collect(),
+                Vec::new(),
+            ),
+            (None, None) => (Vec::new(), Vec::new()),
         };
-        C3 { keys, plan, key_spectra, backend, workers: workers.max(1) }
+        C3 {
+            keys,
+            plan,
+            rplan,
+            key_spectra,
+            spectra_work,
+            backend,
+            fft_backend,
+            workers: workers.max(1),
+        }
     }
 
     /// Swap in a new key set of identical (R, D) geometry, rebuilding the
     /// precomputed key spectra **in place**: the spectra buffers, the FFT
     /// plan and every caller-owned [`C3Scratch`] are reused untouched, so an
-    /// epoch rotation ([`keyring`]) costs R forward FFTs and zero heap
-    /// allocations in steady state.
+    /// epoch rotation ([`keyring`]) costs R forward FFTs (half-size ones on
+    /// the packed backend) and zero heap allocations in steady state.
     pub fn rekey(&mut self, keys: KeySet) -> Result<()> {
         ensure!(
             keys.r == self.keys.r && keys.d == self.keys.d,
@@ -235,7 +351,11 @@ impl C3 {
             keys.d
         );
         self.keys = keys;
-        if let Some(plan) = &self.plan {
+        if let Some(rp) = &self.rplan {
+            for (i, spec) in self.key_spectra.iter_mut().enumerate() {
+                rp.rfft_into(self.keys.key(i), spec, &mut self.spectra_work);
+            }
+        } else if let Some(plan) = &self.plan {
             for (i, spec) in self.key_spectra.iter_mut().enumerate() {
                 rfft_into(plan, self.keys.key(i), spec);
             }
@@ -246,6 +366,37 @@ impl C3 {
     /// The codec backend this engine runs (Direct, Fft, or the Auto pick).
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The FFT kernel family this engine was asked for (the effective
+    /// choice may fall back — see [`C3::is_packed`]).
+    pub fn fft_backend(&self) -> FftBackend {
+        self.fft_backend
+    }
+
+    /// Whether the hot path actually runs the packed half-spectrum kernels
+    /// (false when D = 1 or non-power-of-two forced a fallback, or the
+    /// reference backend was selected).
+    pub fn is_packed(&self) -> bool {
+        self.rplan.is_some()
+    }
+
+    /// The full-length reference plan, whichever backend owns it (the
+    /// packed plan embeds one for the oracle paths).
+    fn ref_plan(&self) -> Option<&FftPlan> {
+        self.plan.as_ref().or_else(|| self.rplan.as_ref().map(|rp| rp.full()))
+    }
+
+    /// Full-spectrum key row for the allocating oracle paths
+    /// ([`C3::encode_ref`]/[`C3::decode_ref`]): borrowed from the
+    /// precomputed table on the reference backend, recomputed on the fly on
+    /// the packed backend (whose table holds half spectra).
+    fn full_key_spectrum(&self, plan: &FftPlan, i: usize) -> std::borrow::Cow<'_, [C64]> {
+        if self.rplan.is_some() {
+            std::borrow::Cow::Owned(crate::fft::rfft(plan, self.keys.key(i)))
+        } else {
+            std::borrow::Cow::Borrowed(&self.key_spectra[i][..])
+        }
     }
 
     /// Group-parallel worker count used by [`C3::encode`]/[`C3::decode`].
@@ -259,7 +410,7 @@ impl C3 {
     }
 
     fn bind(&self, i: usize, z: &[f32], out: &mut [f32]) {
-        match &self.plan {
+        match self.ref_plan() {
             Some(plan) => {
                 let v = circular_convolve_fft(plan, self.keys.key(i), z);
                 out.copy_from_slice(&v);
@@ -269,7 +420,7 @@ impl C3 {
     }
 
     fn unbind(&self, i: usize, s: &[f32], out: &mut [f32]) {
-        match &self.plan {
+        match self.ref_plan() {
             Some(plan) => {
                 let v = circular_correlate_fft(plan, self.keys.key(i), s);
                 out.copy_from_slice(&v);
@@ -301,6 +452,30 @@ impl C3 {
         let (r, d) = (self.keys.r, self.keys.d);
         debug_assert_eq!(zrows.len(), r * d);
         debug_assert_eq!(out.len(), d);
+        if let Some(rp) = &self.rplan {
+            // packed superposition: Σ_i K̂_i ⊙ ẑ_i accumulated over the HALF
+            // spectrum (D/2+1 bins), one packed inverse per group — half the
+            // butterfly work and half the pointwise multiplies of the
+            // reference path below
+            let h = d / 2;
+            for acc in scratch.hb.iter_mut() {
+                *acc = C64::new(0.0, 0.0);
+            }
+            for i in 0..r {
+                rp.rfft_into(
+                    &zrows[i * d..(i + 1) * d],
+                    &mut scratch.ha,
+                    &mut scratch.a[..h],
+                );
+                for ((acc, k), zv) in
+                    scratch.hb.iter_mut().zip(&self.key_spectra[i]).zip(scratch.ha.iter())
+                {
+                    *acc = acc.add(k.mul(*zv));
+                }
+            }
+            rp.irfft_into(&scratch.hb, out, &mut scratch.a[..h]);
+            return;
+        }
         match &self.plan {
             Some(plan) => {
                 // frequency-domain superposition: Σ_i K̂_i ⊙ ẑ_i, ONE irfft
@@ -335,6 +510,40 @@ impl C3 {
         let (r, d) = (self.keys.r, self.keys.d);
         debug_assert_eq!(srow.len(), d);
         debug_assert_eq!(out.len(), r * d);
+        if let Some(rp) = &self.rplan {
+            // ONE packed forward per group, then the R unbind inverses run
+            // PAIRED: two real rows per full-size complex inverse
+            // (`RfftPlan::irfft2_into`), so ⌈R/2⌉ inverse transforms replace
+            // the reference path's R
+            let h = d / 2;
+            rp.rfft_into(srow, &mut scratch.ha, &mut scratch.a[..h]);
+            let mut i = 0;
+            while i + 1 < r {
+                for ((p, k), sv) in
+                    scratch.hb.iter_mut().zip(&self.key_spectra[i]).zip(scratch.ha.iter())
+                {
+                    *p = k.conj().mul(*sv);
+                }
+                for ((p, k), sv) in
+                    scratch.hc.iter_mut().zip(&self.key_spectra[i + 1]).zip(scratch.ha.iter())
+                {
+                    *p = k.conj().mul(*sv);
+                }
+                let (oa, ob) = out[i * d..(i + 2) * d].split_at_mut(d);
+                rp.irfft2_into(&scratch.hb, &scratch.hc, oa, ob, &mut scratch.a);
+                i += 2;
+            }
+            if i < r {
+                // odd tail row: one packed (half-size) inverse
+                for ((p, k), sv) in
+                    scratch.hb.iter_mut().zip(&self.key_spectra[i]).zip(scratch.ha.iter())
+                {
+                    *p = k.conj().mul(*sv);
+                }
+                rp.irfft_into(&scratch.hb, &mut out[i * d..(i + 1) * d], &mut scratch.a[..h]);
+            }
+            return;
+        }
         match &self.plan {
             Some(plan) => {
                 // ONE forward FFT per group, reused for all R unbinds
@@ -357,7 +566,8 @@ impl C3 {
     }
 
     /// Zero-allocation encode: (B, D) rows → `out` (len B/R·D) using
-    /// caller-owned scratch.  Bit-identical to [`C3::encode_ref`].
+    /// caller-owned scratch.  Bit-identical to [`C3::encode_ref`] on the
+    /// reference backend; within tolerance on the packed backend.
     pub fn encode_into(&self, z: &Tensor, out: &mut [f32], scratch: &mut C3Scratch) {
         let (r, d) = (self.keys.r, self.keys.d);
         let g = self.encode_groups(z);
@@ -369,7 +579,8 @@ impl C3 {
     }
 
     /// Zero-allocation decode: (G, D) carriers → `out` (len G·R·D) using
-    /// caller-owned scratch.  Bit-identical to [`C3::decode_ref`].
+    /// caller-owned scratch.  Bit-identical to [`C3::decode_ref`] on the
+    /// reference backend; within tolerance on the packed backend.
     pub fn decode_into(&self, s: &Tensor, out: &mut [f32], scratch: &mut C3Scratch) {
         let (r, d) = (self.keys.r, self.keys.d);
         let g = self.decode_groups(s);
@@ -391,7 +602,7 @@ impl C3 {
             let mut scratch = C3Scratch::new(d);
             return self.encode_into(z, out, &mut scratch);
         }
-        let per = (g + w - 1) / w;
+        let per = g.div_ceil(w);
         let zdata = z.data();
         std::thread::scope(|sc| {
             for (ci, chunk) in out.chunks_mut(per * d).enumerate() {
@@ -417,7 +628,7 @@ impl C3 {
             let mut scratch = C3Scratch::new(d);
             return self.decode_into(s, out, &mut scratch);
         }
-        let per = (g + w - 1) / w;
+        let per = g.div_ceil(w);
         std::thread::scope(|sc| {
             for (ci, chunk) in out.chunks_mut(per * r * d).enumerate() {
                 let g0 = ci * per;
@@ -462,22 +673,28 @@ impl C3 {
     }
 
     /// The seed's allocating encode, kept verbatim: the numerics oracle the
-    /// engine must match bit for bit, and the `host/fft` (allocating) bench
-    /// baseline in `benches/codec_hotpath.rs`.
+    /// scratch engine must match bit for bit on the reference backend
+    /// (within [`crate::util::testing`] tolerance on the packed backend,
+    /// whose kernels reorder operations), and the `host/fft` (allocating)
+    /// bench baseline in `benches/codec_hotpath.rs`.
     pub fn encode_ref(&self, z: &Tensor) -> Tensor {
         let (r, d) = (self.keys.r, self.keys.d);
         let g = self.encode_groups(z);
         let mut out = vec![0.0f32; g * d];
-        match &self.plan {
+        match self.ref_plan() {
             Some(plan) => {
+                // hoisted once per call: borrowed on the reference backend,
+                // recomputed (R transforms, not G·R) on the packed backend
+                let key_specs: Vec<_> =
+                    (0..r).map(|i| self.full_key_spectrum(plan, i)).collect();
                 let mut acc = vec![C64::new(0.0, 0.0); d];
                 for gi in 0..g {
                     for a in acc.iter_mut() {
                         *a = C64::new(0.0, 0.0);
                     }
-                    for i in 0..r {
+                    for (i, ks) in key_specs.iter().enumerate() {
                         let zs = crate::fft::rfft(plan, z.row(gi * r + i));
-                        for ((a, k), zv) in acc.iter_mut().zip(&self.key_spectra[i]).zip(&zs) {
+                        for ((a, k), zv) in acc.iter_mut().zip(ks.iter()).zip(&zs) {
                             *a = a.add(k.mul(*zv));
                         }
                     }
@@ -507,12 +724,16 @@ impl C3 {
         let g = self.decode_groups(s);
         let b = g * r;
         let mut out = vec![0.0f32; b * d];
-        match &self.plan {
+        match self.ref_plan() {
             Some(plan) => {
+                // hoisted once per call: borrowed on the reference backend,
+                // recomputed (R transforms, not G·R) on the packed backend
+                let key_specs: Vec<_> =
+                    (0..r).map(|i| self.full_key_spectrum(plan, i)).collect();
                 for gi in 0..g {
                     let ss = crate::fft::rfft(plan, s.row(gi));
-                    for i in 0..r {
-                        let spec: Vec<C64> = self.key_spectra[i]
+                    for (i, ks) in key_specs.iter().enumerate() {
+                        let spec: Vec<C64> = ks
                             .iter()
                             .zip(&ss)
                             .map(|(k, sv)| k.conj().mul(*sv))
@@ -878,5 +1099,207 @@ mod tests {
         let c3 = C3::new(ks, Backend::Direct);
         let z = rand_tensor(&mut rng, &[6, 64]);
         c3.encode(&z);
+    }
+
+    // --- packed half-spectrum backend -------------------------------------
+
+    use crate::util::testing::{assert_close_slice, DEFAULT_ABS, DEFAULT_REL};
+
+    fn packed_engine(ks: KeySet) -> C3 {
+        C3::with_backends(ks, Backend::Auto, FftBackend::Packed, 1)
+    }
+
+    #[test]
+    fn packed_matches_reference_at_acceptance_dims() {
+        // The tolerance-based parity harness the packed swap rests on:
+        // packed encode/decode must match the reference oracle within 1e-5
+        // relative tolerance at D ∈ {256, 2048}, batch sizes up to 64, odd
+        // and even R (odd R exercises the unpaired decode tail).
+        Prop::new("packed == reference (tolerance)", 8).run(|g| {
+            let d = *g.choose(&[256usize, 2048]);
+            let r = *g.choose(&[1usize, 2, 3, 4, 8]);
+            let gcount = *g.choose(&[1usize, 2, 64 / r.max(1)]);
+            let b = gcount * r; // up to 64 rows
+            let mut rng = Rng::new(202);
+            let ks = KeySet::generate(&mut rng, r, d);
+            let packed = packed_engine(ks.clone());
+            assert!(packed.is_packed());
+            assert_eq!(packed.fft_backend(), FftBackend::Packed);
+            let reference = C3::new(ks, Backend::Fft);
+            let z = Tensor::from_vec(&[b, d], g.vec_normal(b * d, 0.0, 1.0));
+
+            let want_e = reference.encode_ref(&z);
+            let got_e = packed.encode(&z);
+            assert_eq!(got_e.shape(), want_e.shape());
+            assert_close_slice(
+                want_e.data(),
+                got_e.data(),
+                DEFAULT_REL,
+                DEFAULT_ABS,
+                "packed encode",
+            );
+            // and the packed engine's own oracle agrees with the reference
+            // engine's bit for bit (both run full-spectrum kernels)
+            assert_bits_eq(&want_e, &packed.encode_ref(&z), "packed encode_ref");
+
+            let want_d = reference.decode_ref(&want_e);
+            let got_d = packed.decode(&want_e);
+            assert_eq!(got_d.shape(), want_d.shape());
+            assert_close_slice(
+                want_d.data(),
+                got_d.data(),
+                DEFAULT_REL,
+                DEFAULT_ABS,
+                "packed decode",
+            );
+        });
+    }
+
+    #[test]
+    fn packed_roundtrip_reconstructs_like_reference() {
+        // End-to-end decode(encode(z)) through the packed engine must land
+        // within tolerance of the reference round trip — the quantity the
+        // serve paths actually consume.
+        let (r, d, gcount) = (4usize, 512usize, 4usize);
+        let mut rng = Rng::new(71);
+        let ks = KeySet::generate(&mut rng, r, d);
+        let z = rand_tensor(&mut rng, &[gcount * r, d]);
+        let reference = C3::new(ks.clone(), Backend::Fft);
+        let packed = packed_engine(ks);
+        let want = reference.decode(&reference.encode(&z));
+        let got = packed.decode(&packed.encode(&z));
+        assert_close_slice(
+            want.data(),
+            got.data(),
+            DEFAULT_REL,
+            DEFAULT_ABS,
+            "packed roundtrip",
+        );
+    }
+
+    #[test]
+    fn packed_boundary_d1_falls_back_to_reference() {
+        // D = 1 is a power of two with no half plan: requesting packed must
+        // quietly run the reference kernels and agree with direct exactly.
+        let ks = KeySet::from_tensor(&Tensor::from_vec(&[1, 1], vec![0.75])).unwrap();
+        let c3 = packed_engine(ks.clone());
+        assert!(!c3.is_packed(), "D=1 must fall back");
+        let direct = C3::new(ks, Backend::Direct);
+        let z = Tensor::from_vec(&[2, 1], vec![3.0, -2.0]);
+        let (s, sd) = (c3.encode(&z), direct.encode(&z));
+        assert_close_slice(sd.data(), s.data(), DEFAULT_REL, DEFAULT_ABS, "D=1 encode");
+        let (zh, zd) = (c3.decode(&s), direct.decode(&sd));
+        assert_close_slice(zd.data(), zh.data(), DEFAULT_REL, DEFAULT_ABS, "D=1 decode");
+    }
+
+    #[test]
+    fn packed_boundary_d2_smallest_packed_size() {
+        // D = 2 is the smallest size the packed kernels handle natively.
+        let mut rng = Rng::new(41);
+        let ks = KeySet::generate(&mut rng, 2, 2);
+        let c3 = packed_engine(ks.clone());
+        assert!(c3.is_packed());
+        let reference = C3::new(ks, Backend::Fft);
+        let z = rand_tensor(&mut rng, &[4, 2]);
+        let (s, sr) = (c3.encode(&z), reference.encode(&z));
+        assert_close_slice(sr.data(), s.data(), DEFAULT_REL, DEFAULT_ABS, "D=2 encode");
+        let (zh, zr) = (c3.decode(&s), reference.decode(&sr));
+        assert_close_slice(zr.data(), zh.data(), DEFAULT_REL, DEFAULT_ABS, "D=2 decode");
+    }
+
+    #[test]
+    fn packed_boundary_non_pow2_falls_back_to_direct() {
+        // Non-power-of-two D with Backend::Auto: the packed request must not
+        // change the fallback contract — the engine runs the direct path and
+        // matches a direct engine bitwise.
+        let mut rng = Rng::new(43);
+        let ks = KeySet::generate(&mut rng, 2, 96);
+        let c3 = packed_engine(ks.clone());
+        assert!(!c3.is_packed());
+        assert_eq!(c3.backend(), Backend::Auto);
+        let direct = C3::new(ks, Backend::Direct);
+        let z = rand_tensor(&mut rng, &[4, 96]);
+        assert_bits_eq(&direct.encode(&z), &c3.encode(&z), "non-pow2 encode");
+        let s = direct.encode(&z);
+        assert_bits_eq(&direct.decode(&s), &c3.decode(&s), "non-pow2 decode");
+    }
+
+    #[test]
+    fn packed_parallel_matches_packed_serial_bitwise() {
+        // Groups stay embarrassingly parallel on the packed backend: any
+        // worker count must reproduce the serial packed engine's exact bytes.
+        let (r, d, gcount) = (3usize, 256usize, 8usize);
+        let mut rng = Rng::new(79);
+        let ks = KeySet::generate(&mut rng, r, d);
+        let z = rand_tensor(&mut rng, &[gcount * r, d]);
+        let serial = packed_engine(ks.clone());
+        let want_e = serial.encode(&z);
+        let want_d = serial.decode(&want_e);
+        for workers in [2usize, 5, 16] {
+            let par = C3::with_backends(ks.clone(), Backend::Auto, FftBackend::Packed, workers);
+            assert_bits_eq(&want_e, &par.encode(&z), "packed par encode");
+            assert_bits_eq(&want_d, &par.decode(&want_e), "packed par decode");
+        }
+    }
+
+    #[test]
+    fn packed_rekey_matches_fresh_engine_bitwise() {
+        // In-place rotation must rebuild the HALF spectra exactly as a fresh
+        // packed engine would derive them.
+        let (r, d) = (4usize, 256usize);
+        let mut rng = Rng::new(53);
+        let ks_a = KeySet::generate(&mut rng, r, d);
+        let ks_b = KeySet::generate(&mut rng, r, d);
+        let z = rand_tensor(&mut rng, &[2 * r, d]);
+        let mut rotated = packed_engine(ks_a);
+        rotated.rekey(ks_b.clone()).unwrap();
+        let fresh = packed_engine(ks_b);
+        assert_bits_eq(&fresh.encode(&z), &rotated.encode(&z), "packed rekey encode");
+        let s = fresh.encode(&z);
+        assert_bits_eq(&fresh.decode(&s), &rotated.decode(&s), "packed rekey decode");
+    }
+
+    #[test]
+    fn packed_wrong_key_decode_stays_above_crosstalk_bound() {
+        // Property: packed decode of a payload bound with a DIFFERENT key
+        // set is uncorrelated noise — reconstruction error well above the
+        // matched-key crosstalk bound, cosine near zero — so the packed
+        // backend preserves the isolation story the key-sharding threat
+        // model rests on.
+        Prop::new("packed wrong-shard decode above crosstalk bound", 6).run(|g| {
+            let d = *g.choose(&[256usize, 2048]);
+            let r = 2usize;
+            let seed = g.usize_in(1, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let ks_right = KeySet::generate(&mut rng, r, d);
+            let ks_wrong = KeySet::generate(&mut rng, r, d);
+            let right = packed_engine(ks_right);
+            let wrong = packed_engine(ks_wrong);
+            let z = {
+                let mut data = vec![0.0f32; 2 * r * d];
+                rng.fill_normal(&mut data, 0.0, 1.0);
+                Tensor::from_vec(&[2 * r, d], data)
+            };
+            let s = right.encode(&z);
+            let zhat_right = right.decode(&s);
+            let zhat_wrong = wrong.decode(&s);
+            let cos = |x: &Tensor, y: &Tensor| x.dot(y) / (x.norm() * y.norm());
+            assert!(
+                cos(&zhat_right, &z) > 0.4,
+                "matched keys must reconstruct: cos={} (D={d})",
+                cos(&zhat_right, &z)
+            );
+            assert!(
+                cos(&zhat_wrong, &z).abs() < 0.2,
+                "wrong-key packed decode must not correlate: cos={} (D={d})",
+                cos(&zhat_wrong, &z)
+            );
+            let err_right = zhat_right.rel_err(&z);
+            let err_wrong = zhat_wrong.rel_err(&z);
+            assert!(
+                err_wrong > 0.9 && err_wrong > err_right,
+                "wrong-key error {err_wrong} must sit above matched-key {err_right} (D={d})"
+            );
+        });
     }
 }

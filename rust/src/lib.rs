@@ -17,8 +17,8 @@
 //! docs/ARCHITECTURE.md for the layer map and serving architecture.
 
 // Public API documentation is enforced progressively: `transport`,
-// `coordinator` and `hdc` are fully documented and the CI doc job denies
-// warnings; each remaining module carries an explicit
+// `coordinator`, `hdc`, `fft` and `compress` are fully documented and the
+// CI doc job denies warnings; each remaining module carries an explicit
 // `#![allow(missing_docs)]` doc-debt marker until its pass lands (tracked
 // in ROADMAP.md).
 #![warn(missing_docs)]

@@ -16,6 +16,7 @@
 //!   c3sl edge  --config configs/tiny_tcp.toml   # terminal 2
 //!   c3sl multi --edges 256 --reactor --tcp      # thousand-edge serving path
 //!   c3sl multi --edges 64 --reactor --key-sharding --rotate-every 20
+//!   c3sl multi --fft-backend packed             # half-spectrum codec kernels
 
 use c3sl::bail;
 use c3sl::config::cli::Args;
@@ -23,7 +24,7 @@ use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
 use c3sl::coordinator::{run_experiment, run_multi_edge, CloudWorker, EdgeWorker, MultiEdgeSpec};
 use c3sl::data::open_dataset;
 use c3sl::flops::{bottlenetpp_cost, bottlenetpp_cost_published, c3sl_cost, CutSpec};
-use c3sl::hdc::{crosstalk_report, Backend, KeySet, C3};
+use c3sl::hdc::{crosstalk_report, Backend, FftBackend, KeySet, C3};
 use c3sl::runtime::Engine;
 use c3sl::sim::comm_report;
 use c3sl::tensor::Tensor;
@@ -118,6 +119,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(w) = args.get_usize("workers")? {
         cfg.codec_workers = w;
     }
+    if let Some(s) = args.get("fft-backend") {
+        cfg.fft_backend = FftBackend::parse(s).with_context(|| {
+            format!("--fft-backend must be \"packed\" or \"reference\", got {s:?}")
+        })?;
+    }
     if let Some(n) = args.get_usize("edges")? {
         cfg.num_edges = n;
     }
@@ -205,10 +211,12 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// codec venue — runs without AOT artifacts.  `--reactor` serves every edge
 /// from one nonblocking I/O thread plus a codec worker pool (the
 /// thousand-edge path) instead of thread-per-client.  `--key-sharding`
-/// derives a per-client key shard for every edge (`Msg::KeyShard` handshake)
-/// and `--rotate-every N` rotates each shard to a fresh key epoch every N
-/// steps.  `--config` seeds the defaults (transport.edges/reactor/poll_us/
-/// outbox_frames, scheme.r/workers/key_sharding/rotation_steps,
+/// derives a per-client key shard for every edge (challenge/`Msg::KeyShard`
+/// handshake) and `--rotate-every N` rotates each shard to a fresh key epoch
+/// every N steps.  `--fft-backend packed|reference` selects the codec's FFT
+/// kernel family (packed = half-spectrum real transforms).  `--config` seeds
+/// the defaults (transport.edges/reactor/poll_us/outbox_frames,
+/// scheme.r/workers/fft_backend/key_sharding/rotation_steps,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
     let base = match args.get("config") {
@@ -227,6 +235,12 @@ fn cmd_multi(args: &Args) -> Result<()> {
         batch: args.get_usize("batch")?.unwrap_or(def.batch),
         seed: args.get_u64("seed")?.or(b.map(|c| c.seed)).unwrap_or(def.seed),
         workers: args.get_usize("workers")?.or(b.map(|c| c.codec_workers)).unwrap_or(def.workers),
+        fft_backend: match args.get("fft-backend") {
+            Some(s) => FftBackend::parse(s).with_context(|| {
+                format!("--fft-backend must be \"packed\" or \"reference\", got {s:?}")
+            })?,
+            None => b.map(|c| c.fft_backend).unwrap_or(def.fft_backend),
+        },
         transport: if args.has("tcp") {
             TransportKind::Tcp
         } else {
@@ -257,13 +271,15 @@ fn cmd_multi(args: &Args) -> Result<()> {
         },
     };
     println!(
-        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} transport={:?} serve={} keys={}",
+        "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} fft={} \
+         transport={:?} serve={} keys={}",
         spec.edges,
         spec.steps,
         spec.r,
         spec.d,
         spec.batch,
         spec.workers,
+        spec.fft_backend.name(),
         spec.transport,
         if spec.reactor { "reactor" } else { "thread-per-client" },
         if !spec.key_sharding {

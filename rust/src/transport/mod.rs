@@ -82,18 +82,35 @@ pub enum Msg {
         /// The codec-construction seed both endpoints derive keys from.
         seed: u64,
     },
-    /// Edge → cloud, first message when key sharding is enabled: claim the
-    /// per-client key shard `client_id` at `epoch`, announcing a one-way
-    /// possession proof (`hdc::keyring` — a PRF keyed by the shard's secret
-    /// sub-seed over the public claim) that the cloud re-derives and
-    /// compares.  Unlike [`Msg::KeySeed`], not even a seed crosses the
+    /// Edge → cloud, first message on a sharded connection: request a
+    /// challenge.  The edge speaks first in every mode (like
+    /// [`Msg::KeySeed`]), so a mis-paired deployment — a sharded edge
+    /// against a non-sharded cloud or vice versa — fails loudly at the
+    /// first message instead of deadlocking with both sides in `recv`.
+    ShardHello,
+    /// Cloud → edge, answering [`Msg::ShardHello`]: a fresh challenge
+    /// nonce the edge's `Msg::KeyShard` possession proof must bind.
+    /// Freshness is what makes proofs single-use — a recorded proof
+    /// answers exactly one challenge, so replaying it in a later serving
+    /// session that reuses the same master no longer squats the shard id.
+    ShardChallenge {
+        /// The fresh challenge value; never reused across connections.
+        nonce: u64,
+    },
+    /// Edge → cloud, completing the sharded handshake (after receiving
+    /// [`Msg::ShardChallenge`]): claim the per-client key shard
+    /// `client_id` at `epoch`, announcing a one-way possession proof
+    /// (`hdc::keyring` — a PRF keyed by the shard's secret sub-seed over
+    /// the public claim and the challenge nonce) that the cloud re-derives
+    /// and compares.  Unlike [`Msg::KeySeed`], not even a seed crosses the
     /// wire: an observer of this frame can regenerate no key material.
     KeyShard {
         /// The shard (client) id being claimed.
         client_id: u64,
         /// The key epoch the edge starts at (must match the cloud's).
         epoch: u64,
-        /// `KeyRing::shard_proof(client_id, epoch)` — verified, not trusted.
+        /// `KeyRing::shard_proof(client_id, epoch, nonce)` — verified
+        /// against this connection's challenge, never trusted.
         proof: u64,
     },
     /// Orderly shutdown.
@@ -306,6 +323,8 @@ mod tests {
             Msg::EvalFeatures { step: 5, tensor: t(&[1, 2]), labels: Labels(vec![0]) },
             Msg::EvalStats { step: 5, loss: 0.5, ncorrect: 1.0 },
             Msg::KeySeed { seed: 0xDEAD_BEEF },
+            Msg::ShardHello,
+            Msg::ShardChallenge { nonce: 0xFEED_5EED },
             Msg::KeyShard { client_id: 4, epoch: 1, proof: 0xC0DE },
             Msg::Shutdown,
         ];

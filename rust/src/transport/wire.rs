@@ -45,6 +45,8 @@ const TAG_EVAL_STATS: u8 = 6;
 const TAG_KEY_SEED: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
 const TAG_KEY_SHARD: u8 = 9;
+const TAG_SHARD_CHALLENGE: u8 = 10;
+const TAG_SHARD_HELLO: u8 = 11;
 
 /// Hard cap on decoded element counts (guards fuzz/corruption OOM).
 pub const MAX_ELEMS: u64 = 1 << 28;
@@ -107,6 +109,11 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
         Msg::KeySeed { seed } => {
             out.push(TAG_KEY_SEED);
             put_u64(&mut out, *seed);
+        }
+        Msg::ShardHello => out.push(TAG_SHARD_HELLO),
+        Msg::ShardChallenge { nonce } => {
+            out.push(TAG_SHARD_CHALLENGE);
+            put_u64(&mut out, *nonce);
         }
         Msg::KeyShard { client_id, epoch, proof } => {
             out.push(TAG_KEY_SHARD);
@@ -245,6 +252,8 @@ pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
             ncorrect: r.f32()?,
         },
         TAG_KEY_SEED => Msg::KeySeed { seed: r.u64()? },
+        TAG_SHARD_HELLO => Msg::ShardHello,
+        TAG_SHARD_CHALLENGE => Msg::ShardChallenge { nonce: r.u64()? },
         TAG_KEY_SHARD => Msg::KeyShard {
             client_id: r.u64()?,
             epoch: r.u64()?,
@@ -342,6 +351,22 @@ mod tests {
         for cut in 1..f.len() {
             assert!(decode(&f[..cut]).is_err(), "cut={cut} should fail");
         }
+    }
+
+    #[test]
+    fn shard_challenge_roundtrip_and_truncation() {
+        let m = Msg::ShardChallenge { nonce: 0x0123_4567_89AB_CDEF };
+        let f = encode(&m);
+        // tag + one u64 nonce, nothing more
+        assert_eq!(f.len(), 1 + 8);
+        assert_eq!(decode(&f).unwrap(), m);
+        for cut in 1..f.len() {
+            assert!(decode(&f[..cut]).is_err(), "cut={cut} should fail");
+        }
+        // the hello is a bare tag, like Shutdown
+        let f = encode(&Msg::ShardHello);
+        assert_eq!(f.len(), 1);
+        assert_eq!(decode(&f).unwrap(), Msg::ShardHello);
     }
 
     #[test]

@@ -97,13 +97,7 @@ impl Json {
         Json::Arr(v)
     }
 
-    // ---- serialization -----------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
+    // ---- serialization (stringify via Display / `.to_string()`) -----------
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -139,6 +133,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Stringification: `json.to_string()` (via the blanket `ToString`) and
+/// `format!("{json}")` both produce the compact wire form.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

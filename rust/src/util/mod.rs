@@ -1,9 +1,10 @@
 //! Utility substrates: errors, PRNG, JSON, timing, property-testing
-//! harness, CSV.
+//! harness, tolerance assertions, CSV.
 
 pub mod csv;
 pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod testing;
 pub mod timer;

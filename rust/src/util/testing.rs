@@ -1,0 +1,99 @@
+//! Shared tolerance-based assertion helpers for numeric tests.
+//!
+//! The packed real-FFT kernels ([`crate::fft::RfftPlan`]) are numerically
+//! equal but **not bit-identical** to the reference transforms, so the
+//! `to_bits` equality style the scratch-kernel tests use cannot pin them.
+//! This module is the one shared definition of "close enough": a combined
+//! relative + absolute bound
+//!
+//! ```text
+//!   |a − b| <= abs + rel · max(|a|, |b|)
+//! ```
+//!
+//! used by the fft/hdc property tests, the integration suite and the bench
+//! gate alike, so every parity claim in the tree means the same thing.
+
+/// Default relative tolerance for packed-vs-reference parity: the acceptance
+/// bound the packed backend is held to on encode/decode round-trips.
+pub const DEFAULT_REL: f64 = 1e-5;
+
+/// Default absolute floor, for values near zero where a relative bound is
+/// meaningless (f32 signals of unit scale).
+pub const DEFAULT_ABS: f64 = 1e-6;
+
+/// `|a − b| <= abs + rel · max(|a|, |b|)` — the shared closeness predicate.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    (a - b).abs() <= abs + rel * a.abs().max(b.abs())
+}
+
+/// Assert two scalars are close under the combined rel+abs bound; the
+/// failure message names `what` and both values.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rel: f64, abs: f64, what: &str) {
+    assert!(
+        close(a, b, rel, abs),
+        "{what}: {a} vs {b} (|Δ| = {}, rel tol {rel}, abs tol {abs})",
+        (a - b).abs()
+    );
+}
+
+/// Assert two f32 slices match element-wise under the combined rel+abs
+/// bound; the failure message names `what`, the first offending index and
+/// both values there.
+#[track_caller]
+pub fn assert_close_slice(a: &[f32], b: &[f32], rel: f64, abs: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            close(*x as f64, *y as f64, rel, abs),
+            "{what}: elem {i}: {x} vs {y} (|Δ| = {}, rel tol {rel}, abs tol {abs})",
+            (*x as f64 - *y as f64).abs()
+        );
+    }
+}
+
+/// [`assert_close_slice`] at the packed-parity defaults
+/// ([`DEFAULT_REL`], [`DEFAULT_ABS`]).
+#[track_caller]
+pub fn assert_close_default(a: &[f32], b: &[f32], what: &str) {
+    assert_close_slice(a, b, DEFAULT_REL, DEFAULT_ABS, what);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicate_boundaries() {
+        // pure relative: 1e6 vs 1e6·(1+5e-6) is inside 1e-5, outside 1e-7
+        assert!(close(1e6, 1e6 * (1.0 + 5e-6), 1e-5, 0.0));
+        assert!(!close(1e6, 1e6 * (1.0 + 5e-6), 1e-7, 0.0));
+        // pure absolute: near-zero values need the abs floor
+        assert!(close(0.0, 5e-7, 0.0, 1e-6));
+        assert!(!close(0.0, 5e-7, 1e-5, 0.0));
+        // symmetric in its arguments
+        assert!(close(5e-7, 0.0, 0.0, 1e-6));
+        // exact equality always passes, including at zero tolerance
+        assert!(close(3.25, 3.25, 0.0, 0.0));
+    }
+
+    #[test]
+    fn slice_assert_passes_on_close_data() {
+        let a = [1.0f32, -2.0, 0.0, 1e-7];
+        let b = [1.000001f32, -2.000002, 5e-7, 0.0];
+        assert_close_slice(&a, &b, 1e-5, 1e-6, "slices");
+        assert_close_default(&a, &b, "slices (defaults)");
+    }
+
+    #[test]
+    #[should_panic(expected = "elem 1")]
+    fn slice_assert_names_the_offender() {
+        assert_close_slice(&[1.0, 1.0], &[1.0, 1.1], 1e-5, 1e-6, "offender");
+    }
+
+    #[test]
+    #[should_panic(expected = "length")]
+    fn slice_assert_rejects_length_mismatch() {
+        assert_close_slice(&[1.0], &[1.0, 2.0], 1e-5, 1e-6, "len");
+    }
+}

@@ -43,9 +43,12 @@ fn check_accounting_steps(out: &MultiRunOutput, edges: usize, steps: u64) {
         assert_eq!(c.steps, steps, "client {} steps", c.client);
         assert!(c.rx_bytes > 0 && c.tx_bytes > 0);
         // per step: Features + TrainLabels up, Gradients + StepStats down,
-        // plus the KeySeed handshake and Shutdown
-        assert_eq!(c.rx_msgs, steps * 2 + 2, "client {} rx msgs", c.client);
-        assert_eq!(c.tx_msgs, steps * 2, "client {} tx msgs", c.client);
+        // plus the handshake and Shutdown; the sharded handshake is three
+        // messages (ShardHello up, ShardChallenge down, KeyShard up) where
+        // the shared one is a single KeySeed
+        let sharded = u64::from(c.shard.is_some());
+        assert_eq!(c.rx_msgs, steps * 2 + 2 + sharded, "client {} rx msgs", c.client);
+        assert_eq!(c.tx_msgs, steps * 2 + sharded, "client {} tx msgs", c.client);
     }
     // the aggregate must be exactly the sum of the per-client halves
     let edge_tx: u64 = out.edges.iter().map(|e| e.tx_bytes).sum();
@@ -373,15 +376,81 @@ fn sharded_reactor_matches_thread_per_client_bytes_and_losses() {
     }
 }
 
+#[test]
+fn packed_backend_serve_paths_agree_under_rotation() {
+    // The packed-kernel serve contract: with `fft_backend = packed` on every
+    // endpoint and key rotation active, BOTH serving styles must still put
+    // byte-identical traffic and bit-identical losses on every link (the
+    // packed kernels are deterministic — scheduling may not change which
+    // keys or kernels any step is served with).
+    let mut threads = sharded_spec(3, TransportKind::InProc, "");
+    threads.rotation_steps = 2;
+    threads.fft_backend = c3sl::hdc::FftBackend::Packed;
+    let mut reactor = threads.clone();
+    reactor.reactor = true;
+    let a = run_multi_edge(&threads).unwrap();
+    let b = run_multi_edge(&reactor).unwrap();
+    // NB: no per-edge loss-decrease assertion here — first/last losses sit
+    // in different key epochs (rotation), so the robust checks are exact
+    // accounting and cross-path equality, as in the reference-backend
+    // rotation parity test above
+    for out in [&a, &b] {
+        assert_eq!(out.cloud.per_client.len(), 3);
+        for c in &out.cloud.per_client {
+            assert_eq!(c.steps, 6, "client {} lost a step", c.client);
+            assert_eq!(c.rx_msgs, 6 * 2 + 3, "client {} rx msgs", c.client);
+            assert_eq!(c.tx_msgs, 6 * 2 + 1, "client {} tx msgs", c.client);
+        }
+        let edge_tx: u64 = out.edges.iter().map(|e| e.tx_bytes).sum();
+        assert_eq!(out.cloud.total_rx(), edge_tx);
+        for (i, e) in out.edges.iter().enumerate() {
+            assert!(e.first_loss.is_finite() && e.last_loss.is_finite(), "edge {i}");
+        }
+    }
+    assert_eq!(a.cloud.total_rx(), b.cloud.total_rx());
+    assert_eq!(a.cloud.total_tx(), b.cloud.total_tx());
+    for (ca, cb) in a.cloud.per_client.iter().zip(&b.cloud.per_client) {
+        assert_eq!(ca.client, cb.client);
+        assert_eq!(ca.shard, cb.shard);
+        assert_eq!(ca.rx_bytes, cb.rx_bytes, "client {} uplink bytes", ca.client);
+        assert_eq!(ca.tx_bytes, cb.tx_bytes, "client {} downlink bytes", ca.client);
+        assert_eq!(
+            ca.last_loss.to_bits(),
+            cb.last_loss.to_bits(),
+            "client {} packed loss must be bit-identical across serve paths",
+            ca.client
+        );
+    }
+    // and the packed run lands within tolerance of the reference run: the
+    // same scenario on the reference kernels reports ~equal (not
+    // bit-identical) probe losses — the tolerance-parity story end to end
+    // through the serve stack
+    let mut reference = threads.clone();
+    reference.fft_backend = c3sl::hdc::FftBackend::Reference;
+    let r = run_multi_edge(&reference).unwrap();
+    assert_eq!(r.cloud.total_rx(), a.cloud.total_rx(), "frame sizes must not change");
+    for (cp, cr) in a.cloud.per_client.iter().zip(&r.cloud.per_client) {
+        let (lp, lr) = (cp.last_loss as f64, cr.last_loss as f64);
+        assert!(
+            (lp - lr).abs() <= 1e-6 + 1e-4 * lp.abs().max(lr.abs()),
+            "client {}: packed loss {lp} drifted from reference {lr}",
+            cp.client
+        );
+    }
+}
+
 /// Drive a sharded reactor cloud serving 3 healthy edges plus one rogue
-/// connection whose `Msg::KeyShard` announcement is invalid.  The rogue must
-/// be rejected and closed; every healthy edge must train to completion; the
-/// rejection surfaces only in the aggregate serve error afterwards (the
+/// connection whose `Msg::KeyShard` announcement is invalid.  The rogue
+/// receives the cloud's challenge like everyone else and `make_rogue` builds
+/// its announcement from the (ring, nonce) pair.  The rogue must be rejected
+/// and closed; every healthy edge must train to completion; the rejection
+/// surfaces only in the aggregate serve error afterwards (the
 /// fault-isolation contract from the broken-client test, extended to the
 /// handshake).
-fn sharded_rogue_case(addr: &'static str, make_rogue: fn(KeyRing) -> Msg, expect: &str) {
+fn sharded_rogue_case(addr: &'static str, make_rogue: fn(KeyRing, u64) -> Msg, expect: &str) {
     use c3sl::coordinator::multi;
     use c3sl::coordinator::{CloudCodec, EdgeCodec, ShardGate};
+    use c3sl::hdc::FftBackend;
     use c3sl::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
 
     let edges = 3usize;
@@ -408,7 +477,14 @@ fn sharded_rogue_case(addr: &'static str, make_rogue: fn(KeyRing) -> Msg, expect
         });
         let rogue = sc.spawn(move || {
             let mut tp = Tcp::connect(addr).unwrap();
-            tp.send(&make_rogue(ring)).unwrap();
+            // hello first, like every sharded edge; the cloud answers with
+            // this connection's challenge
+            tp.send(&Msg::ShardHello).unwrap();
+            let nonce = match tp.recv().unwrap() {
+                Msg::ShardChallenge { nonce } => nonce,
+                other => panic!("rogue expected ShardChallenge, got {other:?}"),
+            };
+            tp.send(&make_rogue(ring, nonce)).unwrap();
             // rejected AND closed: the next read observes the hangup
             assert!(
                 tp.recv().is_err(),
@@ -420,7 +496,11 @@ fn sharded_rogue_case(addr: &'static str, make_rogue: fn(KeyRing) -> Msg, expect
             handles.push(sc.spawn(move || {
                 let mut tp = Tcp::connect(addr).unwrap();
                 multi::run_edge(
-                    EdgeCodec::Sharded { shard: ring.edge_shard(i as u64), workers: 1 },
+                    EdgeCodec::Sharded {
+                        shard: ring.edge_shard(i as u64),
+                        workers: 1,
+                        fft: FftBackend::default(),
+                    },
                     &mut tp,
                     steps,
                     i as u64,
@@ -452,7 +532,9 @@ fn sharded_rogue_case(addr: &'static str, make_rogue: fn(KeyRing) -> Msg, expect
 fn sharded_reactor_rejects_wrong_shard_id_without_disturbing_edges() {
     sharded_rogue_case(
         "127.0.0.1:39417",
-        |ring| Msg::KeyShard { client_id: 99, epoch: 0, proof: ring.shard_proof(99, 0) },
+        |ring, nonce| {
+            Msg::KeyShard { client_id: 99, epoch: 0, proof: ring.shard_proof(99, 0, nonce) }
+        },
         "out of range",
     );
 }
@@ -461,8 +543,30 @@ fn sharded_reactor_rejects_wrong_shard_id_without_disturbing_edges() {
 fn sharded_reactor_rejects_stale_epoch_without_disturbing_edges() {
     sharded_rogue_case(
         "127.0.0.1:39418",
-        |ring| Msg::KeyShard { client_id: 3, epoch: 7, proof: ring.shard_proof(3, 7) },
+        |ring, nonce| {
+            Msg::KeyShard { client_id: 3, epoch: 7, proof: ring.shard_proof(3, 7, nonce) }
+        },
         "stale key epoch",
+    );
+}
+
+#[test]
+fn sharded_reactor_rejects_replayed_proof_without_disturbing_edges() {
+    // The adversarial replay leg, end to end over TCP: the rogue holds a
+    // proof that was valid for an EARLIER challenge (simulated by answering
+    // a different nonce than the one this connection was issued).  The
+    // nonce-bound PRF makes it worthless: rejected, closed, healthy edges
+    // untouched.
+    sharded_rogue_case(
+        "127.0.0.1:39420",
+        |ring, nonce| {
+            Msg::KeyShard {
+                client_id: 3,
+                epoch: 0,
+                proof: ring.shard_proof(3, 0, nonce.wrapping_add(1)),
+            }
+        },
+        "proof mismatch",
     );
 }
 
@@ -498,8 +602,9 @@ fn key_shard_smoke_64_edge_reactor_rotation() {
             "client {} lost a step across the epoch boundary",
             c.client
         );
-        assert_eq!(c.rx_msgs, steps * 2 + 2, "client {} rx msgs", c.client);
-        assert_eq!(c.tx_msgs, steps * 2, "client {} tx msgs", c.client);
+        // hello + claim + per-step uplinks + shutdown; challenge + replies
+        assert_eq!(c.rx_msgs, steps * 2 + 3, "client {} rx msgs", c.client);
+        assert_eq!(c.tx_msgs, steps * 2 + 1, "client {} tx msgs", c.client);
     }
     let edge_tx: u64 = out.edges.iter().map(|e| e.tx_bytes).sum();
     let edge_rx: u64 = out.edges.iter().map(|e| e.rx_bytes).sum();
