@@ -131,10 +131,7 @@ fn samples_to_json(samples: &[Sample], b: usize, r: usize, quick: bool) -> Json 
 /// human-readable gate failures (empty = pass).
 fn gate_failures(samples: &[Sample], baseline: &Json, tol: f64) -> Vec<String> {
     let mut failures = Vec::new();
-    let calibrated = baseline
-        .get("calibrated")
-        .and_then(|v| v.as_bool())
-        .unwrap_or(true);
+    let calibrated = c3sl::util::bench::calibrated(baseline);
     if !calibrated {
         println!(
             "(gate: baseline is uncalibrated — absolute throughput checks skipped; \
@@ -146,6 +143,11 @@ fn gate_failures(samples: &[Sample], baseline: &Json, tol: f64) -> Vec<String> {
         return failures;
     };
     for (venue, per_d) in venues {
+        // `reactor/*` venues are owned by benches/reactor_scale.rs (which
+        // gates them itself); this bench neither measures nor judges them
+        if venue.starts_with("reactor/") {
+            continue;
+        }
         let Some(per_d) = per_d.as_obj() else { continue };
         for (dstr, entry) in per_d {
             let Ok(d) = dstr.parse::<usize>() else { continue };
@@ -187,10 +189,9 @@ fn main() {
     };
     let json_path = flag("--json");
     let gate_path = flag("--gate");
-    let gate_tol = std::env::var("C3SL_BENCH_GATE_TOL")
-        .ok()
-        .and_then(|v| v.parse::<f64>().ok())
-        .unwrap_or(0.15);
+    // tolerance + calibration policy is shared with the reactor gate
+    // (util::bench) so the two bench gates cannot silently diverge
+    let gate_tol = c3sl::util::bench::gate_tolerance();
 
     let quick = std::env::var("C3SL_BENCH_QUICK").is_ok();
     let iters = if quick { 5 } else { 10 };
@@ -310,10 +311,7 @@ fn main() {
     if let Some(path) = &gate_path {
         let text = std::fs::read_to_string(path).expect("reading bench baseline");
         let baseline = c3sl::util::json::parse(&text).expect("parsing bench baseline");
-        let calibrated = baseline
-            .get("calibrated")
-            .and_then(|v| v.as_bool())
-            .unwrap_or(true);
+        let calibrated = c3sl::util::bench::calibrated(&baseline);
         let mut failures = gate_failures(&samples, &baseline, gate_tol);
         if !packed_ok {
             let msg = "host/fft-packed decode rows/s below the 1.3x floor over \

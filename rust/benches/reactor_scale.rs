@@ -1,46 +1,303 @@
 //! Bench: multi-edge serving scale — thread-per-client vs the nonblocking
-//! reactor, the ROADMAP's "dozens → thousands of edges" axis.
+//! reactor on BOTH readiness backends (epoll / sweep), the ROADMAP's
+//! "dozens → thousands of edges" axis, plus the idle-fan-in venues the
+//! epoll backend exists for.
 //!
 //!   cargo bench --bench reactor_scale
-//!   C3SL_BENCH_QUICK=1 cargo bench --bench reactor_scale   # CI smoke
+//!   C3SL_BENCH_QUICK=1 cargo bench --bench reactor_scale      # CI smoke
+//!   cargo bench --bench reactor_scale -- \
+//!       --json BENCH_codec_hotpath.json \
+//!       --gate BENCH_baseline.json                            # CI bench-gate
 //!
-//! For each N ∈ {8, 64, 256} (quick: {8, 32}) the full multi-edge scenario
-//! runs end to end over localhost TCP — N in-process edge threads each
-//! training `steps` probe steps through the C3 codec in both directions —
-//! once against the thread-per-client cloud (N serving threads) and once
-//! against the reactor cloud (1 I/O thread + a codec worker pool).  Reported:
-//! wall time, edges/s (concurrent sessions brought to completion per second)
-//! and steps/s.  The same run also cross-checks byte accounting between the
-//! two serving styles: identical geometry must produce identical aggregate
-//! traffic no matter how the cloud is scheduled.
+//! **Throughput venues** — for each N (quick: {8, 32}; full: {8, 64, 256})
+//! the full multi-edge scenario runs end to end over localhost TCP, once per
+//! serving style: the thread-per-client cloud, the reactor on the portable
+//! `sweep` backend, and (Linux) the reactor on the `epoll` backend.  The
+//! same run cross-checks byte accounting: identical geometry must produce
+//! identical aggregate traffic no matter how the cloud is scheduled.
+//!
+//! **Idle fan-in venues** — N (quick: {64, 256}; full: {256, 1024})
+//! mostly-idle edges: every edge connects, sits silent through an idle
+//! window, then trains a single step.  Reported per backend: wakeups/sec
+//! of the I/O pump and the I/O thread's CPU time.  This is the tentpole
+//! acceptance instrument: the sweep backend burns ~1/poll_us timed sweeps
+//! per second at idle, the epoll backend blocks in `epoll_wait` and wakes
+//! only on events — wakeups/sec collapses by orders of magnitude and the
+//! I/O-thread CPU time drops with it.
+//!
+//! `--json PATH` merges `reactor/*` venues (N → steps/s, wakeups/s,
+//! io-cpu-ms) into the shared bench JSON next to the codec venues
+//! (`benches/codec_hotpath.rs` owns those and skips `reactor/*`).
+//! `--gate BASELINE` compares: steps/s floors (15% tolerance, env
+//! `C3SL_BENCH_GATE_TOL`) and — for the idle venues — wakeups/sec
+//! *ceilings* (an epoll regression that reintroduces timed polling blows
+//! the ceiling), plus an idle-efficiency floor: the epoll pump must wake at
+//! most 1/3 as often as the sweep pump at the largest idle N, plus a
+//! completeness check: every `reactor/*` cell the baseline tracks must
+//! have been measured (a venue that silently vanishes — say epoll
+//! degrading to sweep — fails rather than passes).  Exactly like the
+//! codec gate, zeroed cells and an uncalibrated baseline downgrade every
+//! check to a loud warning — no unmeasured threshold blocks merges.
+
+use std::collections::BTreeMap;
 
 use c3sl::config::TransportKind;
-use c3sl::coordinator::{run_multi_edge, MultiEdgeSpec};
+use c3sl::coordinator::multi::{self, CloudCodec, EdgeCodec};
+use c3sl::coordinator::{run_multi_edge, MultiEdgeSpec, MultiStats, RunCodec};
+use c3sl::transport::inproc_reactor_pair_with;
+use c3sl::transport::reactor::{ReactorConfig, ReactorConn};
+use c3sl::transport::readiness::ReadinessBackend;
+use c3sl::util::json::Json;
+
+/// One reactor venue measurement destined for the JSON artifact.
+struct Sample {
+    venue: String,
+    n: usize,
+    steps_per_s: f64,
+    wakeups_per_s: f64,
+    io_cpu_ms: f64,
+}
+
+/// The reactor backends available on this platform.
+fn backends() -> Vec<ReadinessBackend> {
+    if ReadinessBackend::Epoll.supported() {
+        vec![ReadinessBackend::Sweep, ReadinessBackend::Epoll]
+    } else {
+        vec![ReadinessBackend::Sweep]
+    }
+}
+
+/// N mostly-idle in-proc edges: connect, stay silent for `idle_ms`, then
+/// train exactly one step.  Returns (wall seconds, cloud stats).
+fn idle_fanin(n: usize, backend: ReadinessBackend, idle_ms: u64) -> (f64, MultiStats) {
+    let seed = 0xC3u64;
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let cloud_codec = RunCodec::host(seed, r, d, 1);
+    let edge_codec = RunCodec::host(seed, r, d, 1);
+    let mut conns: Vec<Box<dyn ReactorConn>> = Vec::with_capacity(n);
+    let mut edge_tps = Vec::with_capacity(n);
+    for _ in 0..n {
+        // doorbells only when the epoll pump will wait on them — the sweep
+        // venue must not pay N eventfds + a syscall per send for nothing
+        let (e, c) = inproc_reactor_pair_with(backend == ReadinessBackend::Epoll);
+        conns.push(Box::new(c));
+        edge_tps.push(e);
+    }
+    let cfg = ReactorConfig { backend, ..ReactorConfig::default() };
+    let t0 = std::time::Instant::now();
+    let stats = std::thread::scope(|sc| {
+        let cloud_codec = &cloud_codec;
+        let edge_codec = &edge_codec;
+        let cloud = sc.spawn(move || {
+            multi::serve_clients_reactor(CloudCodec::Shared(cloud_codec), conns, 2, cfg)
+                .expect("idle fan-in serve")
+        });
+        let mut handles = Vec::new();
+        for (i, mut tp) in edge_tps.into_iter().enumerate() {
+            handles.push(sc.spawn(move || {
+                // mostly idle: the whole fleet sits silent through the
+                // window — the pump's wakeups here are pure discovery cost
+                std::thread::sleep(std::time::Duration::from_millis(idle_ms));
+                multi::run_edge(
+                    EdgeCodec::Shared { codec: edge_codec, key_seed: seed },
+                    &mut tp,
+                    1,
+                    i as u64,
+                    batch,
+                    d,
+                )
+                .expect("idle edge")
+            }));
+        }
+        for h in handles {
+            h.join().expect("idle edge thread");
+        }
+        cloud.join().expect("cloud thread")
+    });
+    (t0.elapsed().as_secs_f64(), stats)
+}
+
+fn merge_into_json(path: &str, samples: &[Sample]) {
+    // An existing file that fails to parse must fail LOUDLY: silently
+    // replacing it with a reactor-only stub would discard every host/*
+    // codec venue — and a maintainer calibrating from the merged artifact
+    // would then commit a baseline with the codec gate disarmed.
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => c3sl::util::json::parse(&text).unwrap_or_else(|e| {
+            panic!("refusing to merge over unparseable {path}: {e}");
+        }),
+        Err(_) => Json::obj(vec![
+            ("bench", Json::str("reactor_scale")),
+            ("calibrated", Json::Bool(false)),
+            ("venues", Json::Obj(BTreeMap::new())),
+        ]),
+    };
+    let Json::Obj(m) = &mut root else {
+        // parseable-but-wrong-shape (e.g. a truncated `[]`/`null`) must
+        // fail as loudly as unparseable: rewriting it unchanged would
+        // silently drop every reactor/* cell from the calibration artifact
+        panic!("refusing to merge into non-object JSON at {path}");
+    };
+    {
+        let entry = m
+            .entry("venues".to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        let Json::Obj(vm) = entry else {
+            // same loud-failure policy as the root: a corrupted "venues"
+            // value must not let the merge silently drop every cell
+            panic!("refusing to merge into non-object \"venues\" in {path}");
+        };
+        // group samples by venue name
+        let mut by_venue: BTreeMap<&str, BTreeMap<String, Json>> = BTreeMap::new();
+        for s in samples {
+            by_venue.entry(&s.venue).or_default().insert(
+                s.n.to_string(),
+                Json::obj(vec![
+                    ("steps_per_s", Json::num(s.steps_per_s)),
+                    ("wakeups_per_s", Json::num(s.wakeups_per_s)),
+                    ("io_cpu_ms", Json::num(s.io_cpu_ms)),
+                ]),
+            );
+        }
+        for (venue, per_n) in by_venue {
+            vm.insert(venue.to_string(), Json::Obj(per_n));
+        }
+    }
+    std::fs::write(path, root.to_string() + "\n").expect("writing bench JSON");
+    println!("\nmerged reactor venues into {path}");
+}
+
+/// Compare fresh reactor samples against the committed baseline: steps/s
+/// floors everywhere, wakeups/s ceilings on the idle venues, and — like
+/// the codec gate — a completeness check: every `reactor/*` cell the
+/// baseline tracks must actually have been measured this run, so a venue
+/// that silently vanishes (e.g. epoll degrading to sweep and being
+/// skipped) fails the gate instead of sailing through it.  Zeroed cells
+/// and an uncalibrated baseline downgrade everything to warnings (the
+/// codec gate's policy).  NB: the baseline tracks the quick-mode
+/// (`C3SL_BENCH_QUICK=1`) venue cells, which is how CI invokes the gate.
+fn gate_failures(samples: &[Sample], baseline: &Json, tol: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let calibrated = c3sl::util::bench::calibrated(baseline);
+    if !calibrated {
+        println!(
+            "(reactor gate: baseline is uncalibrated — throughput/wakeup checks \
+             are warnings only)"
+        );
+    }
+    if let Some(venues) = baseline.get("venues").and_then(|v| v.as_obj()) {
+        for (venue, per_n) in venues {
+            if !venue.starts_with("reactor/") {
+                continue; // codec venues are the codec gate's job
+            }
+            let Some(per_n) = per_n.as_obj() else { continue };
+            for nstr in per_n.keys() {
+                let measured =
+                    samples.iter().any(|s| s.venue == *venue && s.n.to_string() == *nstr);
+                if measured {
+                    continue;
+                }
+                let msg = format!("baseline venue {venue} N={nstr} was not measured");
+                if calibrated {
+                    failures.push(msg);
+                } else {
+                    println!("(reactor gate WARNING: {msg})");
+                }
+            }
+        }
+    }
+    for s in samples {
+        let Some(cell) = baseline
+            .get("venues")
+            .and_then(|v| v.get(&s.venue))
+            .and_then(|v| v.get(&s.n.to_string()))
+        else {
+            continue; // venue/N not in the baseline yet
+        };
+        let old_steps = cell.get("steps_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if calibrated && old_steps > 0.0 {
+            let floor = old_steps * (1.0 - tol);
+            if s.steps_per_s < floor {
+                failures.push(format!(
+                    "{} N={} steps/s regressed {:.1}%: {:.0} vs baseline {:.0}",
+                    s.venue,
+                    s.n,
+                    100.0 * (1.0 - s.steps_per_s / old_steps),
+                    s.steps_per_s,
+                    old_steps,
+                ));
+            }
+        }
+        if s.venue.starts_with("reactor/idle") {
+            let old_wake = cell
+                .get("wakeups_per_s")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0);
+            if calibrated && old_wake > 0.0 {
+                let ceiling = old_wake * (1.0 + tol);
+                if s.wakeups_per_s > ceiling {
+                    failures.push(format!(
+                        "{} N={} wakeups/s grew {:.1}%: {:.0} vs baseline {:.0} \
+                         (idle discovery must stay event-driven)",
+                        s.venue,
+                        s.n,
+                        100.0 * (s.wakeups_per_s / old_wake - 1.0),
+                        s.wakeups_per_s,
+                        old_wake,
+                    ));
+                }
+            }
+        }
+    }
+    failures
+}
 
 fn main() {
+    // argv after `--`: [--json PATH] [--gate BASELINE]
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1))
+            .cloned()
+    };
+    let json_path = flag("--json");
+    let gate_path = flag("--gate");
+    // tolerance + calibration policy is shared with the codec gate
+    // (util::bench) so the two bench gates cannot silently diverge
+    let gate_tol = c3sl::util::bench::gate_tolerance();
+
     let quick = std::env::var("C3SL_BENCH_QUICK").is_ok();
     let ns: &[usize] = if quick { &[8, 32] } else { &[8, 64, 256] };
+    let idle_ns: &[usize] = if quick { &[64, 256] } else { &[256, 1024] };
+    let idle_ms: u64 = if quick { 300 } else { 500 };
     let steps: u64 = if quick { 2 } else { 4 };
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(2)
         .clamp(2, 8);
+    let mut samples: Vec<Sample> = Vec::new();
+
+    // ---- throughput: serving styles × backends over localhost TCP --------
     println!(
         "# reactor scale: N edges x {steps} steps over localhost TCP \
          (R=2, D=256, B=8, {workers} codec workers)\n"
     );
     println!(
-        "{:>6} {:<18} {:>10} {:>10} {:>10} {:>14}",
-        "edges", "cloud", "wall s", "edges/s", "steps/s", "agg bytes"
+        "{:>6} {:<22} {:>9} {:>9} {:>9} {:>11} {:>10} {:>9}",
+        "edges", "cloud", "wall s", "edges/s", "steps/s", "agg bytes", "wakeups/s", "iocpu ms"
     );
 
     let mut port = 40510u16;
     for &n in ns {
-        let mut agg = [0u64; 2];
-        for (mi, (label, reactor)) in
-            [("thread-per-client", false), ("reactor", true)].into_iter().enumerate()
-        {
-            let spec = MultiEdgeSpec {
+        let mut styles: Vec<(String, Option<ReadinessBackend>)> =
+            vec![("thread-per-client".into(), None)];
+        for b in backends() {
+            styles.push((format!("reactor/{}", b.name()), Some(b)));
+        }
+        let mut aggs: Vec<u64> = Vec::new();
+        for (label, backend) in styles {
+            let mut spec = MultiEdgeSpec {
                 edges: n,
                 steps,
                 r: 2,
@@ -50,31 +307,172 @@ fn main() {
                 workers,
                 transport: TransportKind::Tcp,
                 tcp_addr: format!("127.0.0.1:{port}"),
+                reactor: backend.is_some(),
                 ..MultiEdgeSpec::default()
             };
-            let spec = MultiEdgeSpec { reactor, ..spec };
+            if let Some(b) = backend {
+                spec.poll.backend = b;
+            }
             port += 1;
             let out = run_multi_edge(&spec).unwrap_or_else(|e| {
                 panic!("{label} run with {n} edges failed: {e}");
             });
             assert_eq!(out.cloud.total_steps(), steps * n as u64, "{label}: steps served");
-            agg[mi] = out.cloud.total_rx() + out.cloud.total_tx();
+            let agg = out.cloud.total_rx() + out.cloud.total_tx();
+            aggs.push(agg);
             let wall = out.wall_seconds.max(1e-9);
+            let (wakeups_per_s, io_cpu_ms) = match out.cloud.reactor_io {
+                Some(io) => (
+                    io.wakeups as f64 / wall,
+                    io.io_cpu_seconds.map(|s| s * 1e3).unwrap_or(-1.0),
+                ),
+                None => (-1.0, -1.0),
+            };
             println!(
-                "{:>6} {:<18} {:>10.3} {:>10.1} {:>10.1} {:>14}",
+                "{:>6} {:<22} {:>9.3} {:>9.1} {:>9.1} {:>11} {:>10.0} {:>9.1}",
                 n,
                 label,
                 wall,
                 n as f64 / wall,
                 (steps * n as u64) as f64 / wall,
-                agg[mi],
+                agg,
+                wakeups_per_s,
+                io_cpu_ms,
+            );
+            if let Some(b) = backend {
+                // record the sample only when the requested backend actually
+                // ran: a degraded run must show up as a MISSING venue cell
+                // (which a calibrated gate fails), never as sweep numbers
+                // filed under the epoll label
+                let ran = out.cloud.reactor_io.map(|io| io.backend);
+                if ran == Some(b) {
+                    samples.push(Sample {
+                        venue: format!("reactor/tcp-{}", b.name()),
+                        n,
+                        steps_per_s: (steps * n as u64) as f64 / wall,
+                        wakeups_per_s: wakeups_per_s.max(0.0),
+                        io_cpu_ms: io_cpu_ms.max(0.0),
+                    });
+                } else {
+                    println!(
+                        "        (sample for reactor/tcp-{} at N={n} skipped: \
+                         backend degraded — fd limit?)",
+                        b.name()
+                    );
+                }
+            }
+        }
+        for w in aggs.windows(2) {
+            assert_eq!(
+                w[0], w[1],
+                "serving style/backend must not change the bytes on the wire at N={n}"
             );
         }
-        assert_eq!(
-            agg[0], agg[1],
-            "serving style must not change the bytes on the wire at N={n}"
-        );
         println!();
     }
-    println!("reactor_scale OK — identical traffic, one I/O thread instead of N");
+
+    // ---- idle fan-in: the tentpole instrument ----------------------------
+    println!(
+        "# idle fan-in: N mostly-idle in-proc edges ({idle_ms} ms silent, then \
+         1 step each)\n"
+    );
+    println!(
+        "{:>6} {:<22} {:>9} {:>10} {:>10} {:>9}",
+        "edges", "backend", "wall s", "wakeups", "wakeups/s", "iocpu ms"
+    );
+    // (largest idle N, backend) → wakeups/s, for the efficiency floor below
+    let mut idle_rates: BTreeMap<&'static str, f64> = BTreeMap::new();
+    for &n in idle_ns {
+        for b in backends() {
+            let (wall, stats) = idle_fanin(n, b, idle_ms);
+            let io = stats.reactor_io.expect("reactor serve reports io stats");
+            if io.backend != b {
+                // descriptor exhaustion (N doorbells + epoll + waker) can
+                // degrade epoll to sweep; an "epoll" venue that silently ran
+                // the sweep would be meaningless, so skip it loudly instead
+                println!(
+                    "{:>6} {:<22} (skipped: backend degraded to {} — fd limit?)",
+                    n,
+                    b.name(),
+                    io.backend.name()
+                );
+                continue;
+            }
+            assert_eq!(stats.total_steps(), n as u64, "every idle edge trains its step");
+            let wakeups_per_s = io.wakeups as f64 / wall.max(1e-9);
+            let io_cpu_ms = io.io_cpu_seconds.map(|s| s * 1e3).unwrap_or(-1.0);
+            println!(
+                "{:>6} {:<22} {:>9.3} {:>10} {:>10.0} {:>9.1}",
+                n,
+                b.name(),
+                wall,
+                io.wakeups,
+                wakeups_per_s,
+                io_cpu_ms,
+            );
+            if n == *idle_ns.last().unwrap() {
+                idle_rates.insert(b.name(), wakeups_per_s);
+            }
+            samples.push(Sample {
+                venue: format!("reactor/idle-{}", b.name()),
+                n,
+                steps_per_s: n as f64 / wall.max(1e-9),
+                wakeups_per_s,
+                io_cpu_ms: io_cpu_ms.max(0.0),
+            });
+        }
+        println!();
+    }
+
+    // Acceptance summary: at the largest idle N, the epoll pump must wake
+    // at most 1/3 as often as the sweep pump (in practice it is orders of
+    // magnitude less — the sweep's timed polls vs pure events).
+    let idle_ok = match (idle_rates.get("sweep"), idle_rates.get("epoll")) {
+        (Some(&sweep), Some(&epoll)) => {
+            println!(
+                "idle discovery @N={}: sweep {sweep:.0} wakeups/s vs epoll \
+                 {epoll:.0} wakeups/s ({:.1}x fewer; floor: 3x)",
+                idle_ns.last().unwrap(),
+                sweep / epoll.max(1e-9),
+            );
+            epoll <= sweep / 3.0
+        }
+        _ => true, // single-backend platform: nothing to compare
+    };
+
+    println!(
+        "\nreading: the sweep pump pays ~1/poll_us timed wakeups per idle second \
+         no matter the fan-in; the epoll pump blocks in epoll_wait and wakes on \
+         events only, so idle cost collapses and worker replies are picked up \
+         the moment the eventfd rings."
+    );
+
+    if let Some(path) = &json_path {
+        merge_into_json(path, &samples);
+    }
+
+    if let Some(path) = &gate_path {
+        let text = std::fs::read_to_string(path).expect("reading bench baseline");
+        let baseline = c3sl::util::json::parse(&text).expect("parsing bench baseline");
+        let calibrated = c3sl::util::bench::calibrated(&baseline);
+        let mut failures = gate_failures(&samples, &baseline, gate_tol);
+        if !idle_ok {
+            let msg = "epoll idle wakeups/s above 1/3 of the sweep rate — idle \
+                       discovery is no longer event-driven";
+            if calibrated {
+                failures.push(msg.into());
+            } else {
+                println!("reactor-gate WARNING (uncalibrated baseline, not fatal): {msg}");
+            }
+        }
+        if failures.is_empty() {
+            println!("reactor-gate: PASS ({} venue cells checked)", samples.len());
+        } else {
+            eprintln!("reactor-gate: FAIL");
+            for f in &failures {
+                eprintln!("  - {f}");
+            }
+            std::process::exit(1);
+        }
+    }
 }

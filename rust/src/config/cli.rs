@@ -1,26 +1,38 @@
 //! Tiny CLI argument parser (no clap in this environment).
 //!
 //! Grammar: `c3sl <subcommand> [--flag value]... [--switch]...`
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: the subcommand plus `--flag value` pairs and bare
+/// `--switch`es (a `--name` followed by another `--...` token is a switch).
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The first positional token (`train`, `multi`, ...).
     pub subcommand: String,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
 }
 
+/// Anything that can go wrong reading the command line.
 #[derive(Debug)]
 pub enum CliError {
+    /// No subcommand token was given at all.
     NoSubcommand,
+    /// A flag that requires a value had none (reserved; the current
+    /// grammar reads a valueless `--flag` as a switch instead).
     MissingValue(String),
+    /// A required flag ([`Args::require`]) was absent.
     Required(String),
-    BadValue { flag: String, value: String, why: String },
+    /// A flag value failed to parse as the requested type.
+    BadValue {
+        /// The flag name (without `--`).
+        flag: String,
+        /// The raw value given.
+        value: String,
+        /// The parse failure.
+        why: String,
+    },
 }
 
 impl std::fmt::Display for CliError {
@@ -45,6 +57,10 @@ impl From<CliError> for crate::util::error::C3Error {
 }
 
 impl Args {
+    /// Parse `argv` (without the binary name): the first token is the
+    /// subcommand, `--name value` pairs become flags, everything else
+    /// (including a `--name` directly followed by another `--...`) becomes
+    /// a switch.
     pub fn parse(argv: &[String]) -> Result<Self, CliError> {
         let mut it = argv.iter().peekable();
         let subcommand = it.next().cloned().ok_or(CliError::NoSubcommand)?;
@@ -65,22 +81,28 @@ impl Args {
         Ok(Args { subcommand, flags, switches })
     }
 
+    /// The raw value of flag `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// The value of flag `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// The value of flag `--name`, or [`CliError::Required`] when absent.
     pub fn require(&self, name: &str) -> Result<&str, CliError> {
         self.get(name).ok_or_else(|| CliError::Required(name.into()))
     }
 
+    /// Whether `--name` appeared at all (as a switch or a valued flag).
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
     }
 
+    /// Flag `--name` parsed as `usize` (`Ok(None)` when absent,
+    /// [`CliError::BadValue`] when unparseable).
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
         self.get(name)
             .map(|v| {
@@ -93,6 +115,7 @@ impl Args {
             .transpose()
     }
 
+    /// Flag `--name` parsed as `f64` (`Ok(None)` when absent).
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
         self.get(name)
             .map(|v| {
@@ -105,6 +128,7 @@ impl Args {
             .transpose()
     }
 
+    /// Flag `--name` parsed as `u64` (`Ok(None)` when absent).
     pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
         self.get(name)
             .map(|v| {

@@ -4,29 +4,35 @@
 //! run: model artifacts, compression scheme, optimizer, dataset, transport,
 //! and link model.  `ExperimentConfig::load` validates everything up front
 //! so the coordinator never hits a half-configured state.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 pub mod cli;
 pub mod toml;
 
 use crate::hdc::FftBackend;
+use crate::transport::readiness::ReadinessBackend;
 use crate::transport::sim::LinkModel;
 use toml::{Doc, Value};
 
+/// Which compression scheme the run trains with (`[scheme] kind`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchemeKind {
     /// Vanilla SL: identity codec.
     Vanilla,
     /// C3-SL batch-wise codec with ratio R.
-    C3 { r: usize },
+    C3 {
+        /// Compression ratio: features folded per carrier.
+        r: usize,
+    },
     /// BottleNet++ (codec lives inside the model artifacts).
-    BottleNetPP { r: usize },
+    BottleNetPP {
+        /// Compression ratio of the bottleneck encoder/decoder pair.
+        r: usize,
+    },
 }
 
 impl SchemeKind {
+    /// Stable name used in output paths and run summaries
+    /// (e.g. `"c3-r4"`).
     pub fn name(&self) -> String {
         match self {
             SchemeKind::Vanilla => "vanilla".into(),
@@ -35,6 +41,7 @@ impl SchemeKind {
         }
     }
 
+    /// The scheme's compression ratio R (1 for vanilla).
     pub fn ratio(&self) -> usize {
         match self {
             SchemeKind::Vanilla => 1,
@@ -43,13 +50,17 @@ impl SchemeKind {
     }
 }
 
+/// Which link substrate connects edge and cloud (`[transport] kind`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransportKind {
+    /// In-process mpsc channels carrying serialized frames (one process,
+    /// two actors; byte accounting still measures real serialized bytes).
     InProc,
+    /// TCP sockets (separate processes or the multi-edge localhost venue).
     Tcp,
 }
 
-/// C3 codec execution venue.
+/// C3 codec execution venue (`[scheme] venue`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CodecVenue {
     /// rust-native hdc implementation (FFT or direct).
@@ -58,19 +69,26 @@ pub enum CodecVenue {
     Artifact,
 }
 
+/// Everything one training run needs, fully validated
+/// ([`ExperimentConfig::validate`]) before any actor starts.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Run name, used in output file names and summaries.
     pub name: String,
     /// Artifact directory key, e.g. "vggt_b32" (see python/compile/model.py).
     pub model_key: String,
+    /// Root directory holding the AOT model/codec artifacts.
     pub artifacts_root: String,
+    /// Compression scheme to train with.
     pub scheme: SchemeKind,
+    /// Where the C3 codec math runs (host engine or AOT artifacts).
     pub codec_venue: CodecVenue,
     /// Worker threads for group-parallel host codec encode/decode.
     pub codec_workers: usize,
-    /// FFT kernel family for the host codec: `"reference"` (full-spectrum,
-    /// bit-identical to the seed kernels) or `"packed"` (half-spectrum real
-    /// transforms — faster, tolerance-equal).
+    /// FFT kernel family for the host codec: `"packed"` (half-spectrum real
+    /// transforms — the default; faster, tolerance-equal, safe fallbacks at
+    /// degenerate D) or `"reference"` (full-spectrum, bit-identical to the
+    /// seed kernels).
     pub fft_backend: FftBackend,
     /// Derive a per-client key shard for every edge (multi-edge scenarios)
     /// instead of one global key set, so a compromised edge cannot decode
@@ -79,33 +97,51 @@ pub struct ExperimentConfig {
     /// Rotate every key shard to a fresh epoch each N training steps
     /// (0 = never; requires `key_sharding`).
     pub rotation_steps: u64,
+    /// Link substrate between edge and cloud.
     pub transport: TransportKind,
+    /// Listen/connect address for the TCP transport.
     pub tcp_addr: String,
     /// Concurrent edge clients the cloud accepts (multi-edge scenarios).
     pub num_edges: usize,
     /// Serve multi-edge clients from the nonblocking reactor (one I/O
     /// thread + a codec worker pool) instead of thread-per-client.
     pub reactor: bool,
-    /// Reactor idle poll backoff in microseconds.
+    /// Reactor readiness backend: `"epoll"` (event-driven, Linux default)
+    /// or `"sweep"` (portable timed poll sweep).
+    pub reactor_backend: ReadinessBackend,
+    /// Reactor idle poll backoff in microseconds (sweep backend only; the
+    /// epoll backend blocks in `epoll_wait` instead).
     pub reactor_poll_us: u64,
     /// Reactor per-client outbox bound in frames (read backpressure).
     pub reactor_outbox: usize,
+    /// Optional virtual link cost model (latency + bandwidth) applied on
+    /// the edge side for communication-cost accounting.
     pub link: Option<LinkModel>,
 
     // training
+    /// Training steps to run.
     pub steps: usize,
+    /// Learning rate (paper §4.1 default).
     pub lr: f32,
+    /// Base seed: keys, data order and init all derive from it.
     pub seed: u64,
+    /// Enable train-time data augmentation.
     pub augment: bool,
+    /// Evaluate every N training steps.
     pub eval_every: usize,
+    /// Batches per evaluation pass.
     pub eval_batches: usize,
 
     // data
+    /// Dataset root directory (CIFAR binaries, or synth fallback).
     pub data_root: String,
+    /// Synthetic-dataset training examples when no real data is present.
     pub synth_train: usize,
+    /// Synthetic-dataset test examples when no real data is present.
     pub synth_test: usize,
 
     // output
+    /// Directory run records (CSV curves) are written to.
     pub out_dir: String,
 }
 
@@ -118,13 +154,18 @@ impl Default for ExperimentConfig {
             scheme: SchemeKind::C3 { r: 4 },
             codec_venue: CodecVenue::Artifact,
             codec_workers: 1,
-            fft_backend: FftBackend::Reference,
+            // the packed half-spectrum kernels are the experiment-level
+            // default (bench-gate trajectory, ROADMAP follow-up from the
+            // packed-FFT PR); `reference` remains available as the
+            // bit-identical seed-kernel family
+            fft_backend: FftBackend::Packed,
             key_sharding: false,
             rotation_steps: 0,
             transport: TransportKind::InProc,
             tcp_addr: "127.0.0.1:7070".into(),
             num_edges: 1,
             reactor: false,
+            reactor_backend: ReadinessBackend::platform_default(),
             reactor_poll_us: 100,
             reactor_outbox: 8,
             link: None,
@@ -142,10 +183,15 @@ impl Default for ExperimentConfig {
     }
 }
 
+/// Anything that can go wrong loading or validating a config.
 #[derive(Debug)]
 pub enum ConfigError {
+    /// The file is not valid (subset-)TOML.
     Toml(toml::TomlError),
+    /// The file could not be read.
     Io(std::io::Error),
+    /// The file parsed but a value is out of range / the wrong type / an
+    /// inconsistent combination.
     Invalid(String),
 }
 
@@ -192,6 +238,8 @@ fn get<'a>(doc: &'a Doc, section: &str, key: &str) -> Option<&'a Value> {
 }
 
 impl ExperimentConfig {
+    /// Parse a config from TOML text, filling unspecified keys from the
+    /// defaults and validating the result.
     pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
         let doc = toml::parse(text)?;
         let mut cfg = ExperimentConfig::default();
@@ -267,6 +315,14 @@ impl ExperimentConfig {
         if let Some(v) = get(&doc, "transport", "reactor") {
             cfg.reactor = v.as_bool().ok_or_else(|| inv("transport.reactor".into()))?;
         }
+        if let Some(v) = get(&doc, "transport", "backend") {
+            let s = v.as_str().ok_or_else(|| inv("transport.backend".into()))?;
+            cfg.reactor_backend = ReadinessBackend::parse(s).ok_or_else(|| {
+                inv(format!(
+                    "transport.backend must be \"epoll\" or \"sweep\", got {s:?}"
+                ))
+            })?;
+        }
         if let Some(v) = get(&doc, "transport", "poll_us") {
             let us = v.as_i64().ok_or_else(|| inv("transport.poll_us".into()))?;
             if us < 0 {
@@ -322,11 +378,15 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Load and validate a config file ([`ExperimentConfig::from_toml_str`]).
     pub fn load(path: &str) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path)?;
         Self::from_toml_str(&text)
     }
 
+    /// Cross-field validation: ranges, required combinations, and
+    /// platform-dependent knobs — everything that would otherwise surface
+    /// mid-run as a hang or a confusing downstream error.
     pub fn validate(&self) -> Result<(), ConfigError> {
         let r = self.scheme.ratio();
         if r == 0 || (r & (r - 1)) != 0 && r % 2 != 0 {
@@ -348,6 +408,13 @@ impl ExperimentConfig {
             return Err(ConfigError::Invalid(
                 "transport.outbox_frames must be >= 1".into(),
             ));
+        }
+        if !self.reactor_backend.supported() {
+            return Err(ConfigError::Invalid(format!(
+                "transport.backend = \"{}\" is not supported on this platform \
+                 (use \"sweep\")",
+                self.reactor_backend.name()
+            )));
         }
         if self.rotation_steps > 0 && !self.key_sharding {
             return Err(ConfigError::Invalid(
@@ -479,6 +546,29 @@ mod tests {
     }
 
     #[test]
+    fn parses_readiness_backend_knob() {
+        // the portable value parses everywhere
+        let cfg = ExperimentConfig::from_toml_str("[transport]\nbackend = \"sweep\"\n").unwrap();
+        assert_eq!(cfg.reactor_backend, ReadinessBackend::Sweep);
+        // the default is the platform default (epoll on Linux)
+        assert_eq!(
+            ExperimentConfig::default().reactor_backend,
+            ReadinessBackend::platform_default()
+        );
+        // explicit epoll: accepted exactly where it can actually run,
+        // rejected loudly (not silently downgraded) elsewhere
+        let r = ExperimentConfig::from_toml_str("[transport]\nbackend = \"epoll\"\n");
+        if ReadinessBackend::Epoll.supported() {
+            assert_eq!(r.unwrap().reactor_backend, ReadinessBackend::Epoll);
+        } else {
+            assert!(r.is_err());
+        }
+        // unknown values are rejected loudly, never silently defaulted
+        assert!(ExperimentConfig::from_toml_str("[transport]\nbackend = \"magic\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[transport]\nbackend = 3\n").is_err());
+    }
+
+    #[test]
     fn parses_key_sharding_knobs() {
         let cfg = ExperimentConfig::from_toml_str(
             "[scheme]\nkind = \"c3\"\nkey_sharding = true\nrotation_steps = 50\n",
@@ -516,8 +606,9 @@ mod tests {
         let cfg =
             ExperimentConfig::from_toml_str("[scheme]\nfft_backend = \"reference\"\n").unwrap();
         assert_eq!(cfg.fft_backend, FftBackend::Reference);
-        // default: the seed's reference kernels
-        assert_eq!(ExperimentConfig::default().fft_backend, FftBackend::Reference);
+        // default: the packed half-spectrum kernels (flipped from
+        // `reference` once the bench-gate trajectory recorded the win)
+        assert_eq!(ExperimentConfig::default().fft_backend, FftBackend::Packed);
         // unknown values are rejected loudly, never silently defaulted
         assert!(
             ExperimentConfig::from_toml_str("[scheme]\nfft_backend = \"magic\"\n").is_err()

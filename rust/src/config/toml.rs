@@ -3,23 +3,28 @@
 //! Supported grammar: `[section]` headers, `key = value` with string,
 //! integer, float, boolean and homogeneous-array values, `#` comments.
 //! That covers every experiment config in configs/.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 
+/// One parsed TOML value.  Accessors return `None` on a type mismatch so
+/// callers can surface "wrong type" errors with their own context.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A double-quoted string (with `\"` and `\\` escapes).
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal (integers do NOT parse as floats; see
+    /// [`Value::as_f64`] for the one-way coercion).
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A bracketed array (possibly nested).
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -27,6 +32,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is a [`Value::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -34,6 +40,8 @@ impl Value {
         }
     }
 
+    /// The numeric payload as a float: floats as-is, integers coerced
+    /// (`lr = 1` and `lr = 1.0` both read as 1.0).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -42,6 +50,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -49,6 +58,7 @@ impl Value {
         }
     }
 
+    /// The array items, if this is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -60,9 +70,12 @@ impl Value {
 /// section → key → value.  Root-level keys live under the "" section.
 pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
 
+/// A parse failure, pinned to its 1-based source line.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line number the error was detected on.
     pub line: usize,
+    /// What went wrong there.
     pub msg: String,
 }
 
@@ -74,6 +87,9 @@ impl std::fmt::Display for TomlError {
 
 impl std::error::Error for TomlError {}
 
+/// Parse a complete document of the supported TOML subset into a [`Doc`].
+/// Later duplicate keys overwrite earlier ones (last-wins), matching how
+/// the config loader layers overrides.
 pub fn parse(input: &str) -> Result<Doc, TomlError> {
     let mut doc: Doc = BTreeMap::new();
     doc.insert(String::new(), BTreeMap::new());

@@ -17,9 +17,10 @@ use crate::hdc::FftBackend;
 use crate::metrics::RunRecorder;
 use crate::runtime::Engine;
 use crate::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
+use crate::transport::readiness::ReadinessBackend;
 use crate::transport::sim::{LinkModel, SimLink};
 use crate::transport::tcp::Tcp;
-use crate::transport::{inproc_pair, inproc_reactor_pair, Transport};
+use crate::transport::{inproc_pair, inproc_reactor_pair_with, Transport};
 use crate::util::error::{C3Error, Context, Result};
 
 /// Everything a finished run reports.
@@ -126,8 +127,9 @@ pub struct MultiEdgeSpec {
     /// the codec worker-pool size on the cloud.
     pub workers: usize,
     /// FFT kernel family for every host codec in the run
-    /// (`scheme.fft_backend`): reference full-spectrum kernels, or packed
-    /// half-spectrum kernels on power-of-two D.
+    /// (`scheme.fft_backend`): packed half-spectrum kernels (the default —
+    /// D = 1 and non-power-of-two D fall back safely), or the reference
+    /// full-spectrum kernels.
     pub fft_backend: FftBackend,
     /// Which link substrate connects edges and cloud.
     pub transport: TransportKind,
@@ -159,7 +161,10 @@ impl Default for MultiEdgeSpec {
             batch: 16,
             seed: 0,
             workers: 1,
-            fft_backend: FftBackend::default(),
+            // the packed kernels won the bench-gate trajectory (ROADMAP):
+            // experiment-level runs default to them; raw C3 constructors
+            // keep the bit-identical reference kernels as their default
+            fft_backend: FftBackend::Packed,
             transport: TransportKind::InProc,
             tcp_addr: "127.0.0.1:7071".into(),
             link: None,
@@ -250,11 +255,15 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
             let mut blocking: Vec<Box<dyn Transport>> = Vec::new();
             let mut nonblocking: Vec<Box<dyn ReactorConn>> = Vec::new();
             let mut edge_tps: Vec<Box<dyn Transport>> = Vec::with_capacity(spec.edges);
+            // doorbells only matter to an epoll-driven cloud; a sweep-backend
+            // run skips them (no fd, no per-send syscall — at 1024 edges the
+            // fds alone would brush the common soft descriptor limit)
+            let doorbell = spec.poll.backend == ReadinessBackend::Epoll;
             for _ in 0..spec.edges {
                 // only the cloud half differs between serving styles; the
                 // edge half is the same blocking endpoint either way
                 let e = if spec.reactor {
-                    let (e, c) = inproc_reactor_pair();
+                    let (e, c) = inproc_reactor_pair_with(doorbell);
                     nonblocking.push(Box::new(c));
                     e
                 } else {

@@ -53,7 +53,10 @@ use super::run_codec::RunCodec;
 use crate::hdc::keyring::{ClientCodec, EdgeShard, KeyRing};
 use crate::hdc::{C3Scratch, FftBackend, C3};
 use crate::tensor::{Labels, Tensor};
-use crate::transport::reactor::{Event, Reactor, ReactorConfig, ReactorConn};
+use crate::transport::reactor::{
+    Event, Reactor, ReactorConfig, ReactorConn, ReactorIoStats,
+};
+use crate::transport::readiness::{thread_cpu_time, ReadinessBackend, WakeHandle};
 use crate::transport::{Msg, Transport};
 use crate::util::error::{C3Error, Context, Result};
 use crate::util::rng::Rng;
@@ -87,6 +90,10 @@ pub struct ClientReport {
 pub struct MultiStats {
     /// One report per client, in accept order.
     pub per_client: Vec<ClientReport>,
+    /// I/O-thread observability for a reactor serve (readiness backend
+    /// actually used, pump wakeups, I/O-thread CPU time); `None` for the
+    /// thread-per-client pool, which has no single I/O thread to meter.
+    pub reactor_io: Option<ReactorIoStats>,
 }
 
 impl MultiStats {
@@ -147,9 +154,12 @@ fn nonce_seed() -> u64 {
 
 /// Mutable handshake state behind the gate's one lock.
 struct GateState {
-    /// Which shard ids have been claimed (indexed by shard id; each id may
-    /// be claimed by exactly one connection).
-    claimed: Vec<bool>,
+    /// Who holds each shard: indexed by shard id, `Some(slot)` names the
+    /// accept slot whose connection claimed it (each id is claimable by
+    /// exactly one connection at a time).  Recording the OWNER — not just
+    /// a boolean — is what lets [`ShardGate::release`] refuse to free a
+    /// claim on behalf of anyone but the connection that made it.
+    claimed: Vec<Option<usize>>,
     /// The challenge nonce issued to each accept slot (indexed by
     /// connection slot, NOT shard id — a proof must answer the challenge
     /// that went down its own connection).  Grown on demand: accept slots
@@ -183,7 +193,7 @@ impl ShardGate {
             workers: 1,
             fft: FftBackend::default(),
             state: Mutex::new(GateState {
-                claimed: vec![false; clients],
+                claimed: vec![None; clients],
                 nonces: vec![None; clients],
                 rng: Rng::new(nonce_seed()),
             }),
@@ -284,13 +294,41 @@ impl ShardGate {
              (announced {proof:#x} — wrong master seed, or a replayed/stale \
              proof that does not answer this connection's challenge?)"
         );
+        // The challenge is answered: BURN it before any further outcome, so
+        // a wire-recorded proof verifies at most once.  Without this, a
+        // later connection reusing this accept slot (shard re-claim keeps
+        // gates alive across connections) could replay the recorded frame
+        // against the still-stored nonce and squat the shard.  A fresh
+        // claim must re-hello for a fresh challenge.
+        st.nonces[client] = None;
         let slot = &mut st.claimed[client_id as usize];
         ensure!(
-            !*slot,
+            slot.is_none(),
             "client {client}: shard id {client_id} already claimed"
         );
-        *slot = true;
+        *slot = Some(client);
         Ok(self.ring.edge_shard(client_id))
+    }
+
+    /// Release a shard claim: accept-slot `client`'s connection is gone.
+    /// Both serve paths call this when a client's connection closes —
+    /// cleanly or not — so a restarted edge can re-handshake the same
+    /// shard id (fresh challenge, fresh proof) instead of being locked out
+    /// for the rest of the serving session.  The gate enforces ownership
+    /// *mechanically*: the claim is freed only when `client` is the slot
+    /// recorded at admission, so no connection — not even a buggy caller
+    /// releasing after its own "already claimed" rejection — can free a
+    /// live claim it does not hold.  Best-effort on a poisoned gate lock —
+    /// the session is already failing then, and a release must never mask
+    /// the original error.
+    pub fn release(&self, client: usize, client_id: u64) {
+        if let Ok(mut st) = self.state.lock() {
+            if let Some(slot) = st.claimed.get_mut(client_id as usize) {
+                if *slot == Some(client) {
+                    *slot = None;
+                }
+            }
+        }
     }
 }
 
@@ -399,14 +437,46 @@ fn check_uplink_geometry(d: Option<usize>, t: &Tensor, client: usize) -> Result<
 /// the probe objective, encode the gradients back.  In sharded mode the
 /// edge opens with `Msg::ShardHello`, the cloud answers with its fresh
 /// `Msg::ShardChallenge`, and the edge's next message must be the
-/// `Msg::KeyShard` claim answering it.
+/// `Msg::KeyShard` claim answering it.  When the connection ends — cleanly
+/// or with an error — any shard it claimed is released back to the gate
+/// ([`ShardGate::release`]) so a reconnecting edge can re-claim it.
 pub fn serve_one(
     codec: CloudCodec<'_>,
     transport: &mut dyn Transport,
     client: usize,
 ) -> Result<ClientReport> {
-    let mut challenged = false;
     let mut shard: Option<ClientCodec> = None;
+    let served = serve_one_session(codec, transport, client, &mut shard);
+    // Shard re-claim: this connection is over on every path through the
+    // session loop.  The gate frees the claim only if THIS slot owns it
+    // (and a rejected claim leaves `shard` empty anyway).
+    if let (CloudCodec::Sharded(gate), Some(cc)) = (codec, shard.as_ref()) {
+        gate.release(client, cc.client_id());
+    }
+    let (steps, last_loss) = served?;
+    let stats = transport.stats();
+    Ok(ClientReport {
+        client,
+        shard: shard.as_ref().map(|cc| cc.client_id()),
+        steps,
+        tx_bytes: stats.tx(),
+        rx_bytes: stats.rx(),
+        tx_msgs: stats.tx_msgs.load(std::sync::atomic::Ordering::Relaxed),
+        rx_msgs: stats.rx_msgs.load(std::sync::atomic::Ordering::Relaxed),
+        last_loss,
+    })
+}
+
+/// The protocol loop behind [`serve_one`], factored out so the caller can
+/// release the shard claim on *every* exit path (clean shutdown and error
+/// alike).  Returns (steps served, last loss).
+fn serve_one_session(
+    codec: CloudCodec<'_>,
+    transport: &mut dyn Transport,
+    client: usize,
+    shard: &mut Option<ClientCodec>,
+) -> Result<(u64, f32)> {
+    let mut challenged = false;
     let mut pending: Option<(u64, Tensor)> = None;
     let mut steps = 0u64;
     let mut last_loss = 0.0f32;
@@ -451,7 +521,7 @@ pub fn serve_one(
                     gate.admit(client, client_id, epoch, proof)?.client_codec_lazy();
                 cc.set_workers(gate.workers);
                 cc.set_fft_backend(gate.fft_backend());
-                shard = Some(cc);
+                *shard = Some(cc);
             }
             Msg::Features { step, tensor } => {
                 ensure!(
@@ -521,17 +591,7 @@ pub fn serve_one(
             other => bail!("client {client}: unexpected message {other:?}"),
         }
     }
-    let stats = transport.stats();
-    Ok(ClientReport {
-        client,
-        shard: shard.as_ref().map(|cc| cc.client_id()),
-        steps,
-        tx_bytes: stats.tx(),
-        rx_bytes: stats.rx(),
-        tx_msgs: stats.tx_msgs.load(std::sync::atomic::Ordering::Relaxed),
-        rx_msgs: stats.rx_msgs.load(std::sync::atomic::Ordering::Relaxed),
-        last_loss,
-    })
+    Ok((steps, last_loss))
 }
 
 /// Serve N edges concurrently, one OS thread per client.
@@ -555,7 +615,7 @@ pub fn serve_clients<T: Transport>(
         Ok(reports)
     })?;
     reports.sort_by_key(|r| r.client);
-    Ok(MultiStats { per_client: reports })
+    Ok(MultiStats { per_client: reports, reactor_io: None })
 }
 
 // ---------------------------------------------------------------------------
@@ -627,8 +687,10 @@ struct ClientSm {
 }
 
 /// Fail one client without disturbing the rest: close its connection, drop
-/// its queued work, and record the reason for the final aggregate error.
+/// its queued work, release any shard it claimed (so a restarted edge can
+/// re-handshake), and record the reason for the final aggregate error.
 fn fail_client(
+    codec: CloudCodec<'_>,
     st: &mut [ClientSm],
     reactor: &mut Reactor,
     open: &mut usize,
@@ -643,18 +705,26 @@ fn fail_client(
     c.jobs.clear();
     c.pending = None;
     c.closed = true;
+    // shard re-claim: the gate frees the claim only if THIS slot owns it
+    // (and a rejected claimant never got a shard_id anyway)
+    if let (CloudCodec::Sharded(gate), Some(id)) = (codec, c.shard_id) {
+        gate.release(client, id);
+    }
     reactor.close(client);
     *open -= 1;
 }
 
 /// One codec worker: pull jobs, run decode → probe step → encode with a
 /// thread-local `C3Scratch` (zero codec allocations in steady state on the
-/// host venue), serialize the reply frames, hand them back.  Sharded jobs
-/// carry their client's rotating codec; shared jobs use the pool-wide one.
+/// host venue), serialize the reply frames, hand them back — then ring the
+/// reactor's waker so an epoll-blocked I/O thread picks the result up
+/// immediately instead of on its next timed tick.  Sharded jobs carry their
+/// client's rotating codec; shared jobs use the pool-wide one.
 fn codec_worker(
     codec: CloudCodec<'_>,
     jobs: &Mutex<std::sync::mpsc::Receiver<Job>>,
     done: std::sync::mpsc::Sender<Done>,
+    waker: WakeHandle,
 ) {
     let engine = match codec {
         CloudCodec::Shared(rc) => rc.host_engine(),
@@ -676,6 +746,10 @@ fn codec_worker(
         if done.send(Done { client, result }).is_err() {
             break;
         }
+        // ring AFTER the result is visible on the channel: the pump clears
+        // the eventfd before draining, so this completion cannot be lost
+        // even if the ring lands exactly as the pump enters epoll_wait
+        waker.wake();
     }
 }
 
@@ -909,6 +983,7 @@ fn handle_client_msg(
 /// Apply one finished compute result: queue its reply frames and update the
 /// client state machine.  A worker-side error fails that client only.
 fn apply_done(
+    codec: CloudCodec<'_>,
     done: Done,
     st: &mut [ClientSm],
     reactor: &mut Reactor,
@@ -933,10 +1008,17 @@ fn apply_done(
             }
         }
         Err(e) => {
-            fail_client(st, reactor, open, client, format!("codec worker: {e}"));
+            fail_client(codec, st, reactor, open, client, format!("codec worker: {e}"));
         }
     }
 }
+
+/// The epoll backend's idle block, in milliseconds.  A pure safety net:
+/// every real wake arrives as an event (socket readiness, in-proc doorbell,
+/// the worker-pool eventfd), so this tick only bounds recovery from a
+/// hypothetically missed event — and sets the idle wakeup floor the scale
+/// bench measures (~10/s, against the sweep backend's ~10k timed polls/s).
+const EPOLL_IDLE_TIMEOUT_MS: i32 = 100;
 
 /// Serve N edges from ONE I/O thread plus `workers` codec threads: the
 /// reactor pumps frames, per-client state machines parse the protocol, a
@@ -947,6 +1029,14 @@ fn apply_done(
 /// the pool runs per-client `ClientCodec` instances (admitted by the
 /// KeyShard handshake, rotated on epoch boundaries) instead of one shared
 /// codec.
+///
+/// On the `epoll` readiness backend ([`ReactorConfig::backend`], the Linux
+/// default) the I/O thread *blocks* in `epoll_wait` whenever a full pass
+/// finds no work, and the codec workers ring an eventfd waker after every
+/// finished job — so an idle fleet costs no CPU and a finished reply never
+/// waits out a timed tick.  On the portable `sweep` backend the loop keeps
+/// its original `poll_us` backoff.  [`MultiStats::reactor_io`] reports the
+/// backend actually used, the pump wakeup count and the I/O-thread CPU time.
 pub fn serve_clients_reactor(
     codec: CloudCodec<'_>,
     conns: Vec<Box<dyn ReactorConn>>,
@@ -956,47 +1046,67 @@ pub fn serve_clients_reactor(
     if conns.is_empty() {
         return Ok(MultiStats::default());
     }
+    let cpu0 = thread_cpu_time();
+    let mut reactor = Reactor::new(conns, cfg);
+    let waker = reactor.waker();
     let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
     let (done_tx, done_rx) = std::sync::mpsc::channel::<Done>();
     let job_rx = Mutex::new(job_rx);
-    std::thread::scope(|sc| {
+    let served = std::thread::scope(|sc| {
         for _ in 0..workers.max(1) {
             let done_tx = done_tx.clone();
+            let waker = waker.clone();
             let job_rx = &job_rx;
-            sc.spawn(move || codec_worker(codec, job_rx, done_tx));
+            sc.spawn(move || codec_worker(codec, job_rx, done_tx, waker));
         }
         // only the workers hold Done senders now, so a dead pool is
         // observable as a disconnected done_rx
         drop(done_tx);
         // job_tx moves into the loop and drops on return, which is what
         // releases the workers (and lets this scope join them)
-        reactor_serve_loop(codec, conns, cfg, job_tx, &done_rx)
-    })
+        reactor_serve_loop(codec, &mut reactor, job_tx, &done_rx)
+    });
+    let mut stats = served?;
+    stats.reactor_io = Some(ReactorIoStats {
+        backend: reactor.backend(),
+        wakeups: reactor.wakeups(),
+        io_cpu_seconds: match (cpu0, thread_cpu_time()) {
+            (Some(a), Some(b)) => Some((b - a).max(0.0)),
+            _ => None,
+        },
+    });
+    Ok(stats)
 }
 
 fn reactor_serve_loop(
     codec: CloudCodec<'_>,
-    conns: Vec<Box<dyn ReactorConn>>,
-    cfg: ReactorConfig,
+    reactor: &mut Reactor,
     job_tx: std::sync::mpsc::Sender<Job>,
     done_rx: &std::sync::mpsc::Receiver<Done>,
 ) -> Result<MultiStats> {
     use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
-    let n = conns.len();
-    // this loop reads cfg bounds directly (step 3's hold), so normalize the
-    // same way Reactor::new does
-    let cfg = cfg.clamped();
-    let mut reactor = Reactor::new(conns, cfg);
+    let n = reactor.client_count();
+    // Reactor::new normalized the bounds; read them back for step 3's hold
+    let cfg = reactor.config();
     let mut st: Vec<ClientSm> = (0..n).map(|_| ClientSm::default()).collect();
     let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
     let mut events: Vec<Event> = Vec::new();
     let mut open = n;
     let mut inflight_total = 0usize;
+    // event-driven: once a full pass finds no work, the NEXT pass blocks in
+    // epoll_wait — sockets, doorbells and the worker waker cut it short
+    let mut idle = false;
 
     while open > 0 {
-        // 1) one fair I/O sweep; per-client failures (protocol violations,
-        //    transport errors, mid-protocol hangups) close that client only
-        let mut worked = reactor.poll(&mut events);
+        // re-checked every pass: a reactor whose epoll_wait breaks degrades
+        // itself to the sweep backend mid-serve, and the idle policy below
+        // must follow it (a blocking-style idle on a sweep pump would spin)
+        let event_driven = reactor.backend() == ReadinessBackend::Epoll;
+        // 1) one discovery pass (blocking only when event-driven and idle);
+        //    per-client failures (protocol violations, transport errors,
+        //    mid-protocol hangups) close that client only
+        let timeout_ms = if event_driven && idle { EPOLL_IDLE_TIMEOUT_MS } else { 0 };
+        let mut worked = reactor.poll_wait(&mut events, timeout_ms);
         for ev in events.drain(..) {
             match ev {
                 Event::Msg { client, msg } => {
@@ -1004,9 +1114,9 @@ fn reactor_serve_loop(
                         continue;
                     }
                     if let Err(e) =
-                        handle_client_msg(codec, &mut st[client], &mut reactor, client, msg)
+                        handle_client_msg(codec, &mut st[client], reactor, client, msg)
                     {
-                        fail_client(&mut st, &mut reactor, &mut open, client, e.to_string());
+                        fail_client(codec, &mut st, reactor, &mut open, client, e.to_string());
                     }
                 }
                 Event::Closed { client } => {
@@ -1014,8 +1124,9 @@ fn reactor_serve_loop(
                         st[client].peer_gone = true;
                     } else {
                         fail_client(
+                            codec,
                             &mut st,
-                            &mut reactor,
+                            reactor,
                             &mut open,
                             client,
                             "connection closed mid-protocol".into(),
@@ -1023,7 +1134,7 @@ fn reactor_serve_loop(
                     }
                 }
                 Event::Error { client, error } => {
-                    fail_client(&mut st, &mut reactor, &mut open, client, error.to_string());
+                    fail_client(codec, &mut st, reactor, &mut open, client, error.to_string());
                 }
             }
         }
@@ -1033,7 +1144,7 @@ fn reactor_serve_loop(
             match done_rx.try_recv() {
                 Ok(done) => {
                     worked = true;
-                    apply_done(done, &mut st, &mut reactor, &mut open, &mut inflight_total);
+                    apply_done(codec, done, &mut st, reactor, &mut open, &mut inflight_total);
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -1069,7 +1180,8 @@ fn reactor_serve_loop(
             }
         }
 
-        // 4) retire clients whose protocol, compute and outbox all drained
+        // 4) retire clients whose protocol, compute and outbox all drained,
+        //    releasing any shard claim for a future reconnect
         for ci in 0..n {
             let c = &mut st[ci];
             if !c.closed
@@ -1089,6 +1201,9 @@ fn reactor_serve_loop(
                     rx_msgs: stats.rx_msgs.load(std::sync::atomic::Ordering::Relaxed),
                     last_loss: c.last_loss,
                 });
+                if let (CloudCodec::Sharded(gate), Some(id)) = (codec, c.shard_id) {
+                    gate.release(ci, id);
+                }
                 reactor.close(ci);
                 c.closed = true;
                 open -= 1;
@@ -1096,21 +1211,36 @@ fn reactor_serve_loop(
             }
         }
 
-        // 5) idle: park briefly, but wake immediately on finished compute
-        if !worked && open > 0 {
-            match done_rx
-                .recv_timeout(std::time::Duration::from_micros(cfg.poll_sleep_us.max(1)))
-            {
-                Ok(done) => {
-                    apply_done(done, &mut st, &mut reactor, &mut open, &mut inflight_total)
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    ensure!(
-                        inflight_total == 0,
-                        "codec worker pool died with {inflight_total} jobs in flight"
-                    );
-                    reactor.idle_sleep();
+        // 5) idle policy.  Event-driven: flag the loop so the next pass
+        //    blocks in epoll_wait (the worker waker and every connection fd
+        //    cut that block short — no completion ever waits out a tick).
+        //    Sweep: park on the completion channel, waking immediately on
+        //    finished compute and at worst poll_us later for socket data.
+        if worked {
+            idle = false;
+        } else if open > 0 {
+            if event_driven {
+                idle = true;
+            } else {
+                match done_rx
+                    .recv_timeout(std::time::Duration::from_micros(cfg.poll_sleep_us.max(1)))
+                {
+                    Ok(done) => apply_done(
+                        codec,
+                        done,
+                        &mut st,
+                        reactor,
+                        &mut open,
+                        &mut inflight_total,
+                    ),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        ensure!(
+                            inflight_total == 0,
+                            "codec worker pool died with {inflight_total} jobs in flight"
+                        );
+                        reactor.idle_sleep();
+                    }
                 }
             }
         }
@@ -1136,6 +1266,7 @@ fn reactor_serve_loop(
             .into_iter()
             .map(|r| r.expect("every retired client leaves a report"))
             .collect(),
+        reactor_io: None, // filled by serve_clients_reactor
     })
 }
 
@@ -1397,14 +1528,120 @@ mod tests {
         assert!(gate.admit(0, 0, 0, ring.shard_proof(0, 0, n0)).is_ok());
         let err = gate.admit(1, 0, 0, ring.shard_proof(0, 0, n1)).unwrap_err();
         assert!(err.to_string().contains("already claimed"), "{err}");
-        // ...and none of the rejections burned the other shard
-        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0, n1)).is_ok());
+        // ...the duplicate's VERIFIED proof burned slot 1's challenge (a
+        // challenge answers at most one proof, whatever the claim outcome)...
+        let err = gate.admit(1, 1, 0, ring.shard_proof(1, 0, n1)).unwrap_err();
+        assert!(err.to_string().contains("no challenge issued"), "{err}");
+        // ...and after a re-hello the other shard is still claimable — no
+        // rejection burned it
+        let n1b = gate.issue_nonce(1).unwrap();
+        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0, n1b)).is_ok());
         // accept slots are NOT capped by the shard count: a connection
         // beyond the served shards still gets its challenge, and rejection
         // happens at the claim with the real reason
         let n5 = gate.issue_nonce(5).unwrap();
         let err = gate.admit(5, 5, 0, ring.shard_proof(5, 0, n5)).unwrap_err();
         assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn shard_gate_release_enables_reclaim_but_never_steals_live_claims() {
+        let ring = KeyRing::new(0x0C1A_11ED, 2, 64, 0);
+        let gate = ShardGate::new(ring, 1);
+        let n0 = gate.issue_nonce(0).unwrap();
+        assert!(gate.admit(0, 0, 0, ring.shard_proof(0, 0, n0)).is_ok());
+        // a LIVE claim cannot be stolen, even with a perfectly valid proof
+        // answering the thief's own fresh challenge
+        let n1 = gate.issue_nonce(1).unwrap();
+        let err = gate.admit(1, 0, 0, ring.shard_proof(0, 0, n1)).unwrap_err();
+        assert!(err.to_string().contains("already claimed"), "{err}");
+        // the rejected thief holds no shard handle, so its connection
+        // teardown releases nothing — the winner's claim survives
+        let n2 = gate.issue_nonce(2).unwrap();
+        let err = gate.admit(2, 0, 0, ring.shard_proof(0, 0, n2)).unwrap_err();
+        assert!(err.to_string().contains("already claimed"), "{err}");
+        // the ownership check is MECHANICAL, not call-site discipline: a
+        // losing slot releasing the shard it was denied frees nothing...
+        gate.release(1, 0);
+        let n2b = gate.issue_nonce(4).unwrap();
+        let err = gate.admit(4, 0, 0, ring.shard_proof(0, 0, n2b)).unwrap_err();
+        assert!(err.to_string().contains("already claimed"), "{err}");
+        // ...and an out-of-range release is a best-effort no-op, never a
+        // panic
+        gate.release(0, 7);
+        // once the HOLDER's slot releases, the claim frees and a restarted
+        // edge re-handshakes it (fresh challenge, fresh proof)
+        gate.release(0, 0);
+        // ...but the holder's RECORDED proof is spent: its challenge was
+        // burned at admission, so a wire observer replaying the frame on
+        // the same accept slot after the release gets nothing
+        let err = gate.admit(0, 0, 0, ring.shard_proof(0, 0, n0)).unwrap_err();
+        assert!(err.to_string().contains("no challenge issued"), "{err}");
+        let n3 = gate.issue_nonce(3).unwrap();
+        assert!(gate.admit(3, 0, 0, ring.shard_proof(0, 0, n3)).is_ok());
+    }
+
+    #[test]
+    fn serve_one_releases_shard_on_error_and_on_clean_shutdown() {
+        let ring = KeyRing::new(0x5E55_10F1, 2, 64, 0);
+        let gate = ShardGate::new(ring, 1);
+
+        // session 1: the handshake completes, then the edge vanishes
+        // mid-protocol — the serve errors AND releases the claim
+        let (mut etp, ctp) = inproc_pair();
+        let res = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            etp.send(&Msg::ShardHello).unwrap();
+            let nonce = match etp.recv().unwrap() {
+                Msg::ShardChallenge { nonce } => nonce,
+                other => panic!("expected ShardChallenge, got {other:?}"),
+            };
+            etp.send(&Msg::KeyShard {
+                client_id: 0,
+                epoch: 0,
+                proof: ring.shard_proof(0, 0, nonce),
+            })
+            .unwrap();
+            drop(etp); // hangup mid-protocol
+            cloud.join().unwrap()
+        });
+        assert!(res.is_err(), "mid-protocol hangup must error the session");
+
+        // session 2: the restarted edge re-claims the SAME shard id and
+        // trains a full run — it is not locked out by the dead session
+        let (mut etp, ctp) = inproc_pair();
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 1)
+            });
+            let edge = run_edge(
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(0),
+                    workers: 1,
+                    fft: FftBackend::default(),
+                },
+                &mut etp,
+                4,
+                3,
+                4,
+                64,
+            )
+            .unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        assert_eq!(cloud.shard, Some(0));
+        assert_eq!(cloud.steps, 4);
+        assert_eq!(edge.steps, 4);
+
+        // session 2 ended cleanly (Shutdown) — released again, claimable
+        let n = gate.issue_nonce(5).unwrap();
+        assert!(gate.admit(5, 0, 0, ring.shard_proof(0, 0, n)).is_ok());
     }
 
     #[test]

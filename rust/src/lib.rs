@@ -17,10 +17,10 @@
 //! docs/ARCHITECTURE.md for the layer map and serving architecture.
 
 // Public API documentation is enforced progressively: `transport`,
-// `coordinator`, `hdc`, `fft` and `compress` are fully documented and the
-// CI doc job denies warnings; each remaining module carries an explicit
-// `#![allow(missing_docs)]` doc-debt marker until its pass lands (tracked
-// in ROADMAP.md).
+// `coordinator`, `hdc`, `fft`, `compress`, `util` and `config` are fully
+// documented and the CI doc job denies warnings; each remaining module
+// carries an explicit `#![allow(missing_docs)]` doc-debt marker until its
+// pass lands (tracked in ROADMAP.md).
 #![warn(missing_docs)]
 
 pub mod compress;

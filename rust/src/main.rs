@@ -16,9 +16,12 @@
 //!   c3sl edge  --config configs/tiny_tcp.toml   # terminal 2
 //!   c3sl multi --edges 256 --reactor --tcp      # thousand-edge serving path
 //!   c3sl multi --edges 64 --reactor --key-sharding --rotate-every 20
-//!   c3sl multi --fft-backend packed             # half-spectrum codec kernels
+//!   c3sl multi --reactor --reactor-backend sweep  # portable poll-sweep pump
+//!   c3sl multi --fft-backend reference          # seed full-spectrum kernels
+//!                                               # (default is packed)
 
-use c3sl::bail;
+use c3sl::transport::readiness::ReadinessBackend;
+use c3sl::{bail, ensure};
 use c3sl::config::cli::Args;
 use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
 use c3sl::coordinator::{run_experiment, run_multi_edge, CloudWorker, EdgeWorker, MultiEdgeSpec};
@@ -210,12 +213,16 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// Multi-edge codec scenario: N concurrent edges against one cloud, host
 /// codec venue — runs without AOT artifacts.  `--reactor` serves every edge
 /// from one nonblocking I/O thread plus a codec worker pool (the
-/// thousand-edge path) instead of thread-per-client.  `--key-sharding`
+/// thousand-edge path) instead of thread-per-client;
+/// `--reactor-backend epoll|sweep` picks its readiness discovery
+/// (event-driven epoll on Linux — the default there — or the portable poll
+/// sweep).  `--key-sharding`
 /// derives a per-client key shard for every edge (challenge/`Msg::KeyShard`
 /// handshake) and `--rotate-every N` rotates each shard to a fresh key epoch
 /// every N steps.  `--fft-backend packed|reference` selects the codec's FFT
-/// kernel family (packed = half-spectrum real transforms).  `--config` seeds
-/// the defaults (transport.edges/reactor/poll_us/outbox_frames,
+/// kernel family (packed half-spectrum real transforms are the default).
+/// `--config` seeds
+/// the defaults (transport.edges/reactor/backend/poll_us/outbox_frames,
 /// scheme.r/workers/fft_backend/key_sharding/rotation_steps,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
@@ -227,6 +234,20 @@ fn cmd_multi(args: &Args) -> Result<()> {
     };
     let b = base.as_ref();
     let def = MultiEdgeSpec::default();
+    let reactor_backend = match args.get("reactor-backend") {
+        Some(s) => {
+            let backend = ReadinessBackend::parse(s).with_context(|| {
+                format!("--reactor-backend must be \"epoll\" or \"sweep\", got {s:?}")
+            })?;
+            ensure!(
+                backend.supported(),
+                "--reactor-backend {} is not supported on this platform (use sweep)",
+                backend.name()
+            );
+            backend
+        }
+        None => b.map(|c| c.reactor_backend).unwrap_or(def.poll.backend),
+    };
     let spec = MultiEdgeSpec {
         edges: args.get_usize("edges")?.or(b.map(|c| c.num_edges)).unwrap_or(def.edges),
         steps: args.get_u64("steps")?.or(b.map(|c| c.steps as u64)).unwrap_or(def.steps),
@@ -259,6 +280,7 @@ fn cmd_multi(args: &Args) -> Result<()> {
             .or(b.map(|c| c.rotation_steps))
             .unwrap_or(def.rotation_steps),
         poll: ReactorConfig {
+            backend: reactor_backend,
             poll_sleep_us: args
                 .get_u64("poll-us")?
                 .or(b.map(|c| c.reactor_poll_us))
@@ -281,7 +303,11 @@ fn cmd_multi(args: &Args) -> Result<()> {
         spec.workers,
         spec.fft_backend.name(),
         spec.transport,
-        if spec.reactor { "reactor" } else { "thread-per-client" },
+        if spec.reactor {
+            format!("reactor/{}", spec.poll.backend.name())
+        } else {
+            "thread-per-client".into()
+        },
         if !spec.key_sharding {
             "shared".into()
         } else if spec.rotation_steps == 0 {
@@ -313,6 +339,16 @@ fn cmd_multi(args: &Args) -> Result<()> {
         out.cloud.total_tx(),
         out.wall_seconds
     );
+    if let Some(io) = out.cloud.reactor_io {
+        println!(
+            "[c3sl] reactor io: backend={} wakeups={}{}",
+            io.backend.name(),
+            io.wakeups,
+            io.io_cpu_seconds
+                .map(|s| format!(" io_cpu={s:.3}s"))
+                .unwrap_or_default()
+        );
+    }
     Ok(())
 }
 

@@ -9,10 +9,13 @@
 //! Two serving styles share the same wire format: the blocking [`Transport`]
 //! endpoints (`InProc`, `tcp::Tcp`) used by the edges and the thread-per-
 //! client cloud, and the nonblocking [`reactor`] connections that let one
-//! thread multiplex thousands of edges.  Both funnel every peer-announced
-//! length prefix through [`check_frame_len`] before allocating.
+//! thread multiplex thousands of edges (event-driven via the [`readiness`]
+//! epoll backend on Linux, or the portable poll sweep elsewhere).  Both
+//! funnel every peer-announced length prefix through [`check_frame_len`]
+//! before allocating.
 
 pub mod reactor;
+pub mod readiness;
 pub mod sim;
 pub mod tcp;
 pub mod wire;
@@ -253,10 +256,16 @@ impl<T: Transport + ?Sized> Transport for Box<T> {
 
 /// Blocking in-process endpoint: mpsc channels carrying serialized frames,
 /// so byte accounting measures real serialized traffic even without sockets.
+/// When paired with a reactor connection ([`inproc_reactor_pair`]) it also
+/// rings the shared eventfd doorbell after every send — and once on drop —
+/// so an epoll-driven peer observes frames (and the final hangup) without a
+/// timed sweep.
 pub struct InProc {
     tx: mpsc::Sender<Vec<u8>>,
     rx: mpsc::Receiver<Vec<u8>>,
     stats: Arc<LinkStats>,
+    /// Doorbell to the reactor peer; unarmed (a no-op) for plain pairs.
+    notify: readiness::WakeHandle,
 }
 
 /// Create a connected pair of in-process endpoints.  Each endpoint has its
@@ -266,21 +275,74 @@ pub fn inproc_pair() -> (InProc, InProc) {
     let (txa, rxb) = mpsc::channel();
     let (txb, rxa) = mpsc::channel();
     (
-        InProc { tx: txa, rx: rxa, stats: Arc::new(LinkStats::default()) },
-        InProc { tx: txb, rx: rxb, stats: Arc::new(LinkStats::default()) },
+        InProc {
+            tx: txa,
+            rx: rxa,
+            stats: Arc::new(LinkStats::default()),
+            notify: readiness::WakeHandle::none(),
+        },
+        InProc {
+            tx: txb,
+            rx: rxb,
+            stats: Arc::new(LinkStats::default()),
+            notify: readiness::WakeHandle::none(),
+        },
     )
 }
 
 /// Create a mixed in-process pair: a blocking [`InProc`] endpoint for the
 /// edge and a nonblocking [`reactor::NbInProc`] endpoint for a reactor-driven
 /// cloud.  Used by the in-proc venue of the reactor multi-edge scenario.
+/// The two halves share an eventfd doorbell (Linux) so the cloud side is
+/// epoll-pollable; elsewhere the doorbell is unarmed and the reactor's
+/// sweep backend covers the pair.
 pub fn inproc_reactor_pair() -> (InProc, reactor::NbInProc) {
+    // arm exactly when this platform's default reactor backend can wait on
+    // the fd; on sweep-only platforms the bell would be pure overhead
+    inproc_reactor_pair_with(
+        readiness::ReadinessBackend::platform_default() == readiness::ReadinessBackend::Epoll,
+    )
+}
+
+/// [`inproc_reactor_pair`] with an explicit doorbell choice: pass `false`
+/// when the serving reactor will run the sweep backend anyway — an unarmed
+/// pair costs no file descriptor and no per-send `write(2)`, which matters
+/// at thousand-edge in-proc fan-in (N doorbells otherwise brush the common
+/// 1024 soft fd limit for nothing).
+pub fn inproc_reactor_pair_with(doorbell: bool) -> (InProc, reactor::NbInProc) {
     let (txa, rxb) = mpsc::channel();
     let (txb, rxa) = mpsc::channel();
+    let bell = if doorbell {
+        readiness::WakeHandle::armed()
+    } else {
+        readiness::WakeHandle::none()
+    };
     (
-        InProc { tx: txa, rx: rxa, stats: Arc::new(LinkStats::default()) },
-        reactor::NbInProc::new(txb, rxb),
+        InProc {
+            tx: txa,
+            rx: rxa,
+            stats: Arc::new(LinkStats::default()),
+            notify: bell.clone(),
+        },
+        reactor::NbInProc::new(txb, rxb, bell),
     )
+}
+
+impl Drop for InProc {
+    fn drop(&mut self) {
+        // Disconnect FIRST, then ring.  The hangup signal the reactor peer
+        // actually observes is the channel disconnect; ringing before the
+        // Sender is gone would race the peer's clear-then-recheck (it could
+        // consume the ring, find the sender still alive, clear the bell and
+        // park — and the disconnect itself never re-rings), leaving an
+        // epoll pump that services only OS-reported-ready tokens blind to
+        // the hangup forever.  Swapping in a dummy Sender drops the real
+        // one here and now; the wake that follows is then guaranteed to
+        // happen-after the disconnect is observable.
+        let (dummy, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dummy));
+        self.notify.wake();
+    }
 }
 
 impl Transport for InProc {
@@ -288,7 +350,11 @@ impl Transport for InProc {
         let frame = wire::encode(msg);
         self.stats.tx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
         self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(frame).map_err(|_| TransportError::Closed)
+        self.tx.send(frame).map_err(|_| TransportError::Closed)?;
+        // ring AFTER the frame is visible in the channel: the receiver's
+        // clear-then-recheck discipline then guarantees no lost frame
+        self.notify.wake();
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Msg, TransportError> {

@@ -10,15 +10,30 @@
 //!   reply frames as far as the peer will accept them without blocking.
 //! * [`NbTcp`] — a nonblocking TCP connection with explicit partial-read /
 //!   partial-write state machines for the `[len u32 LE][frame]` framing
-//!   (`std`-only: `TcpStream::set_nonblocking` + a poll list, no mio/epoll
-//!   binding needed, so the same code runs on every std platform).
+//!   (`std`-only: `TcpStream::set_nonblocking`, no external crates).
 //! * [`NbInProc`] — the in-process equivalent over mpsc channels (frames
 //!   arrive whole, so the state machine degenerates to `try_recv`), used by
-//!   tests and the in-proc multi-edge venue.
-//! * [`Reactor`] — the event pump: a fair round-robin sweep over all open
-//!   connections that flushes outboxes, pulls newly completed frames, decodes
-//!   them to [`Msg`] events, and applies backpressure by *not reading* from a
-//!   client whose outbox is backed up past [`ReactorConfig::max_outbox_frames`].
+//!   tests and the in-proc multi-edge venue.  Carries an eventfd *doorbell*
+//!   on Linux so channel-backed connections are epoll-pollable like sockets.
+//! * [`Reactor`] — the event pump, with two interchangeable readiness
+//!   backends ([`crate::transport::readiness`], knob:
+//!   [`ReactorConfig::backend`]):
+//!
+//!   * **`epoll`** (Linux default) — event-driven: every connection's fd is
+//!     registered with per-connection *interest* (read-interest whenever the
+//!     client may be read; write-interest only while its outbox has parked
+//!     bytes, re-armed on partial writes) and the pump blocks in
+//!     `epoll_wait` until the OS reports readiness.  Zero CPU at idle, no
+//!     matter the fan-in, and a worker-pool eventfd waker delivers finished
+//!     compute to the pump immediately.
+//!   * **`sweep`** (portable fallback) — the original fair round-robin
+//!     sweep over all open connections with a timed idle backoff.
+//!
+//!   Both backends flush outboxes first, then pull newly completed frames,
+//!   decode them to [`Msg`] events, and apply backpressure by *not reading*
+//!   from a client whose outbox is backed up past
+//!   [`ReactorConfig::max_outbox_frames`].  Byte-for-byte, the two backends
+//!   are indistinguishable on the wire (the conformance tests assert it).
 //!
 //! The reactor owns I/O only.  Compute (codec decode/step/encode) belongs on
 //! a worker pool — see `coordinator::multi::serve_clients_reactor`, which
@@ -37,6 +52,9 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
+use super::readiness::{RawFd, ReadinessBackend, WakeHandle};
+#[cfg(target_os = "linux")]
+use super::readiness::{Epoll, Interest, Ready, WAKER_TOKEN};
 use super::{check_frame_len, LinkStats, Msg, TransportError};
 use crate::transport::wire;
 
@@ -72,6 +90,15 @@ pub trait ReactorConn: Send {
 
     /// Shared byte counters for this connection (this endpoint's half).
     fn stats(&self) -> Arc<LinkStats>;
+
+    /// The OS-pollable readiness handle for this connection, if it has one:
+    /// the socket fd for [`NbTcp`], the eventfd doorbell for [`NbInProc`]
+    /// (Linux).  `None` means the connection cannot participate in an
+    /// event-driven backend — a reactor holding such a connection falls
+    /// back to the portable sweep for the whole session.
+    fn readiness_fd(&self) -> Option<RawFd> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -257,6 +284,18 @@ impl ReactorConn for NbTcp {
     fn stats(&self) -> Arc<LinkStats> {
         self.stats.clone()
     }
+
+    fn readiness_fd(&self) -> Option<RawFd> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            Some(self.stream.as_raw_fd())
+        }
+        #[cfg(not(unix))]
+        {
+            None
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -267,30 +306,60 @@ impl ReactorConn for NbTcp {
 /// [`super::InProc`] edge endpoint (see [`super::inproc_reactor_pair`]).
 /// Frames arrive whole, so `poll_recv` is a `try_recv`; sends never block
 /// (the channel is unbounded), so backpressure shows up only as outbox depth.
+///
+/// On Linux the pair shares an eventfd *doorbell*: the edge rings it after
+/// every channel send (and on drop), so the epoll backend can wait on this
+/// connection exactly like a socket.  The doorbell is cleared only when the
+/// channel is observed empty, then re-checked — a frame that lands between
+/// the check and the clear is picked up immediately, and one that lands
+/// after re-rings the level trigger, so no frame is ever stranded behind a
+/// cleared bell.
 pub struct NbInProc {
     tx: Sender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
     stats: Arc<LinkStats>,
     outbox: VecDeque<Vec<u8>>,
+    bell: WakeHandle,
 }
 
 impl NbInProc {
-    /// Build from raw channel halves (used by [`super::inproc_reactor_pair`]).
-    pub fn new(tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>>) -> Self {
-        NbInProc { tx, rx, stats: Arc::new(LinkStats::default()), outbox: VecDeque::new() }
+    /// Build from raw channel halves plus the doorbell the sending side
+    /// rings (used by [`super::inproc_reactor_pair`]; pass
+    /// [`WakeHandle::none`] for a sweep-only connection).
+    pub fn new(tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>>, bell: WakeHandle) -> Self {
+        NbInProc {
+            tx,
+            rx,
+            stats: Arc::new(LinkStats::default()),
+            outbox: VecDeque::new(),
+            bell,
+        }
+    }
+
+    /// Account and wrap one received frame.
+    fn accept_frame(&self, frame: Vec<u8>) -> Result<PollIn, TransportError> {
+        check_frame_len(frame.len())?;
+        self.stats.rx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(PollIn::Frame(frame))
     }
 }
 
 impl ReactorConn for NbInProc {
     fn poll_recv(&mut self) -> Result<PollIn, TransportError> {
         match self.rx.try_recv() {
-            Ok(frame) => {
-                check_frame_len(frame.len())?;
-                self.stats.rx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
-                self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
-                Ok(PollIn::Frame(frame))
+            Ok(frame) => self.accept_frame(frame),
+            Err(TryRecvError::Empty) => {
+                // Clear the doorbell only on an observed-empty channel, then
+                // re-check: the sender's send→ring order guarantees a frame
+                // enqueued after this second look re-rings the bell.
+                self.bell.clear();
+                match self.rx.try_recv() {
+                    Ok(frame) => self.accept_frame(frame),
+                    Err(TryRecvError::Empty) => Ok(PollIn::Idle),
+                    Err(TryRecvError::Disconnected) => Ok(PollIn::Closed),
+                }
             }
-            Err(TryRecvError::Empty) => Ok(PollIn::Idle),
             Err(TryRecvError::Disconnected) => Ok(PollIn::Closed),
         }
     }
@@ -318,24 +387,36 @@ impl ReactorConn for NbInProc {
     fn stats(&self) -> Arc<LinkStats> {
         self.stats.clone()
     }
+
+    fn readiness_fd(&self) -> Option<RawFd> {
+        self.bell.raw_fd()
+    }
 }
 
 // ---------------------------------------------------------------------------
-// The reactor: fair event pump over N connections
+// The reactor: event pump over N connections, sweep or epoll driven
 // ---------------------------------------------------------------------------
 
-/// Tunables for the reactor loop (config: `[transport] reactor/poll_us/...`).
+/// Tunables for the reactor loop (config: `[transport] backend/poll_us/...`).
 #[derive(Clone, Copy, Debug)]
 pub struct ReactorConfig {
+    /// Readiness discovery: event-driven `epoll` (Linux default) or the
+    /// portable `sweep` fallback (`[transport] backend`,
+    /// `--reactor-backend`).  A reactor that cannot realize `epoll` (non-fd
+    /// connection, descriptor exhaustion) silently degrades to `sweep` —
+    /// [`Reactor::backend`] reports what actually runs.
+    pub backend: ReadinessBackend,
     /// Idle backoff sleep in microseconds when a full sweep makes no
-    /// progress (the portable poll-list equivalent of an epoll timeout).
+    /// progress — the sweep backend's stand-in for blocking in `epoll_wait`
+    /// (the epoll backend blocks instead and ignores this).
     pub poll_sleep_us: u64,
     /// Per-client outbox bound, in frames: once a client's outbox reaches
     /// this depth the reactor stops *reading* from it until replies drain —
     /// a slow consumer stalls only itself, never the pump.
     pub max_outbox_frames: usize,
     /// Fairness cap: at most this many frames are pulled from one client per
-    /// sweep, so one chatty edge cannot starve the round-robin.
+    /// sweep (or per epoll readiness report), so one chatty edge cannot
+    /// starve the round-robin.
     pub max_frames_per_sweep: usize,
     /// Per-client bound on parsed-but-undispatched compute jobs; above it
     /// the serving loop holds reads from that client (pipelined clients get
@@ -350,6 +431,7 @@ impl ReactorConfig {
     /// one place.
     pub fn clamped(self) -> Self {
         ReactorConfig {
+            backend: self.backend,
             poll_sleep_us: self.poll_sleep_us,
             max_outbox_frames: self.max_outbox_frames.max(1),
             max_frames_per_sweep: self.max_frames_per_sweep.max(1),
@@ -361,6 +443,7 @@ impl ReactorConfig {
 impl Default for ReactorConfig {
     fn default() -> Self {
         ReactorConfig {
+            backend: ReadinessBackend::platform_default(),
             poll_sleep_us: 100,
             max_outbox_frames: 8,
             max_frames_per_sweep: 4,
@@ -393,33 +476,139 @@ pub enum Event {
     },
 }
 
+/// I/O-side observability for one reactor serve, surfaced by
+/// `coordinator::multi::MultiStats` and the scale bench: which readiness
+/// backend actually ran, how often the pump woke, and how much CPU the I/O
+/// thread burned (where the thread CPU clock exists).  The epoll backend's
+/// whole point is that `wakeups` tracks *events*, not time: a mostly-idle
+/// fleet wakes it orders of magnitude less often than the sweep's timed
+/// polling.
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorIoStats {
+    /// The readiness backend the reactor actually ran
+    /// (after any fallback — see [`ReactorConfig::backend`]).
+    pub backend: ReadinessBackend,
+    /// Pump wakeups: `epoll_wait` returns (epoll) or poll sweeps (sweep).
+    pub wakeups: u64,
+    /// CPU seconds the serving (I/O) thread consumed, when measurable.
+    pub io_cpu_seconds: Option<f64>,
+}
+
 struct Slot {
     link: Option<Box<dyn ReactorConn>>,
     stats: Arc<LinkStats>,
     hold: bool,
 }
 
+impl Slot {
+    /// Frames parked in this connection's outbox (0 once closed).
+    fn pending(&self) -> usize {
+        self.link.as_ref().map_or(0, |l| l.pending_out())
+    }
+
+    /// THE read gate: a client may be read iff open, not held, and its
+    /// outbox is under the backpressure bound.  Both backends' service
+    /// paths AND the epoll interest arming evaluate exactly this one
+    /// definition — epoll correctness depends on armed interest staying in
+    /// lockstep with the service gate, so the invariant must never be
+    /// restated anywhere else.
+    fn wants_read(&self, cfg: &ReactorConfig) -> bool {
+        self.link.is_some() && !self.hold && self.pending() < cfg.max_outbox_frames
+    }
+}
+
+/// Per-connection epoll registration state: the fd and the interest it is
+/// currently armed with (`None` = deregistered, e.g. a held client with an
+/// empty outbox, which must not wake the pump even via the always-reported
+/// error/hangup events).
+#[cfg(target_os = "linux")]
+struct EpollReg {
+    fd: RawFd,
+    armed: Option<Interest>,
+}
+
+/// The epoll backend's working state.
+#[cfg(target_os = "linux")]
+struct EpollState {
+    ep: Epoll,
+    /// The worker-pool waker, registered under [`WAKER_TOKEN`].
+    waker: WakeHandle,
+    /// Indexed by connection; `None` once permanently deregistered (closed).
+    reg: Vec<Option<EpollReg>>,
+    /// Connections whose interest must be recomputed before the next wait
+    /// (outbox changed, hold toggled, closed) — deduplicated via `is_dirty`.
+    dirty: Vec<usize>,
+    is_dirty: Vec<bool>,
+    /// Reused readiness buffer.
+    ready: Vec<Ready>,
+    /// `epoll_wait` returns so far (the bench's wakeups/sec numerator;
+    /// failed waits are not counted).
+    wakeups: u64,
+    /// Consecutive `epoll_wait` failures; at
+    /// [`MAX_WAIT_FAILURES`] the reactor degrades to the sweep backend
+    /// instead of spinning hot on a broken wait.
+    wait_failures: u32,
+}
+
+/// Consecutive `epoll_wait` failures tolerated (each bounded by a 1 ms
+/// backoff) before the reactor permanently degrades to the sweep backend.
+/// `epoll_wait` cannot fail on a valid epfd in normal operation — this
+/// guards pathological environments (a seccomp profile denying the
+/// syscall at runtime, an invalidated epfd) where silently retrying would
+/// otherwise become a 100% CPU busy-spin with no events and no error.
+#[cfg(target_os = "linux")]
+const MAX_WAIT_FAILURES: u32 = 3;
+
+#[cfg(target_os = "linux")]
+impl EpollState {
+    fn mark_dirty(&mut self, ci: usize) {
+        if ci < self.is_dirty.len() && !self.is_dirty[ci] {
+            self.is_dirty[ci] = true;
+            self.dirty.push(ci);
+        }
+    }
+}
+
+/// Which readiness machinery this reactor instance runs.
+enum BackendImpl {
+    Sweep,
+    #[cfg(target_os = "linux")]
+    Epoll(EpollState),
+}
+
 /// The event pump: owns all client connections and multiplexes them from a
-/// single thread.  Each [`Reactor::poll`] performs one fair round-robin
-/// sweep; callers interleave sweeps with their own work (dispatching compute,
-/// collecting results) and call [`Reactor::idle_sleep`] when neither side
-/// made progress.
+/// single thread.  Each [`Reactor::poll`] performs one discovery pass —
+/// a fair round-robin sweep (sweep backend) or an `epoll_wait` dispatch
+/// (epoll backend); callers interleave passes with their own work
+/// (dispatching compute, collecting results).  When neither side made
+/// progress, an epoll-backed caller simply blocks in the next
+/// [`Reactor::poll_wait`]; a sweep-backed caller parks via
+/// [`Reactor::idle_sleep`] / its own completion-channel timeout.
 pub struct Reactor {
     conns: Vec<Slot>,
     cfg: ReactorConfig,
     rr: usize,
+    /// Sweep passes so far (the sweep backend's wakeup counter).
+    sweeps: u64,
+    backend: BackendImpl,
 }
 
 impl Reactor {
     /// Take ownership of `links` (index = client id, accept order).  The
-    /// count bounds are normalized via [`ReactorConfig::clamped`].
+    /// count bounds are normalized via [`ReactorConfig::clamped`].  With
+    /// [`ReactorConfig::backend`] = `epoll`, every connection's
+    /// [`ReactorConn::readiness_fd`] is registered up front; if the backend
+    /// cannot be realized (unsupported platform, an fd-less connection,
+    /// descriptor exhaustion) the reactor degrades to the sweep —
+    /// [`Reactor::backend`] reports the outcome.
     pub fn new(links: Vec<Box<dyn ReactorConn>>, cfg: ReactorConfig) -> Self {
         let cfg = cfg.clamped();
-        let conns = links
+        let conns: Vec<Slot> = links
             .into_iter()
             .map(|link| Slot { stats: link.stats(), link: Some(link), hold: false })
             .collect();
-        Reactor { conns, cfg, rr: 0 }
+        let backend = build_backend(&conns, cfg.backend);
+        Reactor { conns, cfg, rr: 0, sweeps: 0, backend }
     }
 
     /// Tunables this reactor runs with.
@@ -427,85 +616,118 @@ impl Reactor {
         self.cfg
     }
 
-    /// One fair sweep over every open connection: flush outboxes, then pull
-    /// up to [`ReactorConfig::max_frames_per_sweep`] frames per client
+    /// The readiness backend actually in use (after any fallback).
+    pub fn backend(&self) -> ReadinessBackend {
+        match &self.backend {
+            BackendImpl::Sweep => ReadinessBackend::Sweep,
+            #[cfg(target_os = "linux")]
+            BackendImpl::Epoll(_) => ReadinessBackend::Epoll,
+        }
+    }
+
+    /// Total connections this reactor was built with (open or closed).
+    pub fn client_count(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Pump wakeups so far: `epoll_wait` returns (epoll backend) or poll
+    /// sweeps (sweep backend).  The scale bench divides by wall time to
+    /// report wakeups/sec per backend.
+    pub fn wakeups(&self) -> u64 {
+        match &self.backend {
+            BackendImpl::Sweep => self.sweeps,
+            #[cfg(target_os = "linux")]
+            BackendImpl::Epoll(st) => st.wakeups,
+        }
+    }
+
+    /// A cross-thread handle that wakes the pump out of `epoll_wait`
+    /// (worker pools ring it after publishing finished compute).  Unarmed —
+    /// a no-op — on the sweep backend, whose callers park on their
+    /// completion channel instead and need no wakeup.
+    pub fn waker(&self) -> WakeHandle {
+        match &self.backend {
+            BackendImpl::Sweep => WakeHandle::none(),
+            #[cfg(target_os = "linux")]
+            BackendImpl::Epoll(st) => st.waker.clone(),
+        }
+    }
+
+    /// Mark one connection's readiness interest stale (epoll backend); the
+    /// next poll re-arms it before waiting.
+    fn touch(&mut self, _ci: usize) {
+        #[cfg(target_os = "linux")]
+        if let BackendImpl::Epoll(st) = &mut self.backend {
+            st.mark_dirty(_ci);
+        }
+    }
+
+    /// One discovery pass without blocking: flush outboxes, pull up to
+    /// [`ReactorConfig::max_frames_per_sweep`] frames per ready client
     /// (skipping held or backlogged clients), decoding each into an
     /// [`Event`].  Connection failures surface as [`Event::Error`] and close
-    /// the connection; they never abort the sweep for other clients.
+    /// the connection; they never abort the pass for other clients.
     /// Returns `true` if any byte moved or any event was produced.
     pub fn poll(&mut self, events: &mut Vec<Event>) -> bool {
-        let n = self.conns.len();
-        let mut progress = false;
-        let start = self.rr;
-        self.rr = (self.rr + 1) % n.max(1);
-        for off in 0..n {
-            let ci = (start + off) % n;
-            let slot = &mut self.conns[ci];
-            let Some(link) = slot.link.as_mut() else { continue };
+        self.poll_wait(events, 0)
+    }
 
-            // 1) writes first: draining replies is what unblocks everyone
-            if link.pending_out() > 0 {
-                match link.poll_send() {
-                    Ok(true) => progress = true,
-                    Ok(false) => {}
-                    Err(error) => {
-                        progress = true;
-                        slot.link = None;
-                        events.push(Event::Error { client: ci, error });
-                        continue;
-                    }
+    /// Like [`Reactor::poll`], but the epoll backend may block up to
+    /// `timeout_ms` waiting for readiness (0 = return immediately) — the
+    /// serving loop passes its idle budget here instead of sleeping.  The
+    /// sweep backend cannot block on sockets, so it ignores the timeout and
+    /// performs one immediate sweep (its caller parks on the completion
+    /// channel, see `coordinator::multi`).
+    pub fn poll_wait(&mut self, events: &mut Vec<Event>, timeout_ms: i32) -> bool {
+        let _ = &timeout_ms;
+        #[cfg(target_os = "linux")]
+        {
+            let outcome = match &mut self.backend {
+                BackendImpl::Epoll(st) => {
+                    Some(poll_epoll(&mut self.conns, &self.cfg, st, events, timeout_ms))
                 }
-            }
-
-            // 2) reads, gated by backpressure: a client whose outbox is
-            //    backed up (or that the caller put on hold) is not read.
-            if slot.hold || link.pending_out() >= self.cfg.max_outbox_frames {
-                continue;
-            }
-            for _ in 0..self.cfg.max_frames_per_sweep {
-                match link.poll_recv() {
-                    Ok(PollIn::Frame(frame)) => {
-                        progress = true;
-                        match wire::decode(&frame) {
-                            Ok(msg) => events.push(Event::Msg { client: ci, msg }),
-                            Err(e) => {
-                                slot.link = None;
-                                events.push(Event::Error { client: ci, error: e.into() });
-                                break;
-                            }
-                        }
-                    }
-                    Ok(PollIn::Idle) => break,
-                    Ok(PollIn::Closed) => {
-                        progress = true;
-                        slot.link = None;
-                        events.push(Event::Closed { client: ci });
-                        break;
-                    }
-                    Err(error) => {
-                        progress = true;
-                        slot.link = None;
-                        events.push(Event::Error { client: ci, error });
-                        break;
-                    }
+                BackendImpl::Sweep => None,
+            };
+            match outcome {
+                Some(Some(progress)) => return progress,
+                Some(None) => {
+                    // epoll_wait is persistently failing: degrade to the
+                    // sweep backend (which needs no registrations) instead
+                    // of spinning hot on a broken wait.  Dropping the epoll
+                    // state closes the epfd; armed doorbells keep ringing
+                    // into the void, which is harmless.
+                    self.backend = BackendImpl::Sweep;
                 }
+                None => {}
             }
         }
-        progress
+        self.sweeps += 1;
+        poll_sweep(&mut self.conns, &self.cfg, &mut self.rr, events)
     }
 
     /// Queue a wire frame for `client` (dropped silently if already closed —
     /// the caller learns about closure via [`Event::Closed`]/[`Event::Error`]).
     pub fn queue_frame(&mut self, client: usize, frame: Vec<u8>) {
-        if let Some(link) = self.conns[client].link.as_mut() {
-            link.queue_frame(frame);
+        let queued = match self.conns[client].link.as_mut() {
+            Some(link) => {
+                link.queue_frame(frame);
+                true
+            }
+            None => false,
+        };
+        if queued {
+            self.touch(client);
         }
     }
 
     /// Pause (`true`) or resume (`false`) reading from `client` — the
     /// serving loop's lever for job-queue backpressure.
     pub fn set_hold(&mut self, client: usize, hold: bool) {
+        if self.conns[client].hold == hold {
+            return;
+        }
         self.conns[client].hold = hold;
+        self.touch(client);
     }
 
     /// Frames queued to `client` that have not fully reached the peer.
@@ -528,17 +750,315 @@ impl Reactor {
         self.conns[client].stats.clone()
     }
 
-    /// Close `client`'s connection (drops the socket / channel halves).
+    /// Close `client`'s connection (drops the socket / channel halves; the
+    /// epoll backend deregisters the fd before the next wait).
     pub fn close(&mut self, client: usize) {
         self.conns[client].link = None;
+        self.touch(client);
     }
 
-    /// Park the thread briefly after a no-progress sweep.  This is the
-    /// portable stand-in for blocking in `epoll_wait`: with work in flight
-    /// the loop never gets here, so the sleep only bounds idle CPU burn.
+    /// Park the thread briefly after a no-progress sweep — the sweep
+    /// backend's idle backoff (the epoll backend blocks in
+    /// [`Reactor::poll_wait`] instead and never needs this).
     pub fn idle_sleep(&self) {
         std::thread::sleep(std::time::Duration::from_micros(self.cfg.poll_sleep_us.max(1)));
     }
+}
+
+/// Construct the requested readiness backend, degrading to the sweep when
+/// it cannot be realized on this platform / connection set.
+fn build_backend(conns: &[Slot], want: ReadinessBackend) -> BackendImpl {
+    if want != ReadinessBackend::Epoll {
+        return BackendImpl::Sweep;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let Ok(ep) = Epoll::new() else {
+            return BackendImpl::Sweep;
+        };
+        let waker = WakeHandle::armed();
+        let Some(wfd) = waker.raw_fd() else {
+            return BackendImpl::Sweep;
+        };
+        if ep.add(wfd, WAKER_TOKEN, Interest { read: true, write: false }).is_err() {
+            return BackendImpl::Sweep;
+        }
+        let mut reg = Vec::with_capacity(conns.len());
+        for (ci, slot) in conns.iter().enumerate() {
+            let Some(link) = slot.link.as_ref() else {
+                reg.push(None);
+                continue;
+            };
+            // every connection must be OS-pollable, or the whole reactor
+            // falls back: a half-evented pump would strand the fd-less conns
+            let Some(fd) = link.readiness_fd() else {
+                return BackendImpl::Sweep;
+            };
+            let interest = Interest { read: true, write: false };
+            if ep.add(fd, ci as u64, interest).is_err() {
+                return BackendImpl::Sweep;
+            }
+            reg.push(Some(EpollReg { fd, armed: Some(interest) }));
+        }
+        BackendImpl::Epoll(EpollState {
+            ep,
+            waker,
+            reg,
+            dirty: Vec::new(),
+            is_dirty: vec![false; conns.len()],
+            ready: Vec::new(),
+            wakeups: 0,
+            wait_failures: 0,
+        })
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = conns;
+        BackendImpl::Sweep
+    }
+}
+
+/// Flush one slot's outbox (writes first: draining replies is what unblocks
+/// everyone).  A write failure closes the slot and pushes [`Event::Error`].
+/// Returns `true` when the outbox fully drained or the slot failed.
+fn flush_slot(slot: &mut Slot, ci: usize, events: &mut Vec<Event>) -> bool {
+    let Some(link) = slot.link.as_mut() else {
+        return false;
+    };
+    if link.pending_out() == 0 {
+        return false;
+    }
+    match link.poll_send() {
+        Ok(true) => true,
+        Ok(false) => false,
+        Err(error) => {
+            slot.link = None;
+            events.push(Event::Error { client: ci, error });
+            true
+        }
+    }
+}
+
+/// Pull up to `max_frames` complete frames from one slot, decoding each
+/// into an [`Event::Msg`].  Close/decode/transport failures close the slot
+/// and push the matching event.  Returns `true` on any progress.
+fn read_slot(slot: &mut Slot, ci: usize, max_frames: usize, events: &mut Vec<Event>) -> bool {
+    let mut progress = false;
+    for _ in 0..max_frames {
+        let Some(link) = slot.link.as_mut() else {
+            break;
+        };
+        match link.poll_recv() {
+            Ok(PollIn::Frame(frame)) => {
+                progress = true;
+                match wire::decode(&frame) {
+                    Ok(msg) => events.push(Event::Msg { client: ci, msg }),
+                    Err(e) => {
+                        slot.link = None;
+                        events.push(Event::Error { client: ci, error: e.into() });
+                        break;
+                    }
+                }
+            }
+            Ok(PollIn::Idle) => break,
+            Ok(PollIn::Closed) => {
+                progress = true;
+                slot.link = None;
+                events.push(Event::Closed { client: ci });
+                break;
+            }
+            Err(error) => {
+                progress = true;
+                slot.link = None;
+                events.push(Event::Error { client: ci, error });
+                break;
+            }
+        }
+    }
+    progress
+}
+
+/// One fair round-robin sweep over every open connection — the portable
+/// readiness backend.
+fn poll_sweep(
+    conns: &mut [Slot],
+    cfg: &ReactorConfig,
+    rr: &mut usize,
+    events: &mut Vec<Event>,
+) -> bool {
+    let n = conns.len();
+    let mut progress = false;
+    let start = *rr;
+    *rr = (start + 1) % n.max(1);
+    for off in 0..n {
+        let ci = (start + off) % n;
+        let slot = &mut conns[ci];
+        if slot.link.is_none() {
+            continue;
+        }
+
+        // 1) writes first: draining replies is what unblocks everyone
+        progress |= flush_slot(slot, ci, events);
+
+        // 2) reads, gated by backpressure: a client whose outbox is backed
+        //    up (or that the caller put on hold) is not read.
+        if slot.wants_read(cfg) {
+            progress |= read_slot(slot, ci, cfg.max_frames_per_sweep, events);
+        }
+    }
+    progress
+}
+
+/// Recompute and (re-)arm one connection's epoll interest:
+///
+/// * read-interest whenever the client may be read (open, not held, outbox
+///   under [`ReactorConfig::max_outbox_frames`]);
+/// * write-interest only while the outbox has parked bytes;
+/// * **no** interest → the fd is *deregistered* (a held, drained client
+///   must not wake the pump, not even via the always-reported
+///   error/hangup events), and re-added when interest returns;
+/// * a closed slot is deregistered permanently (the fd may outlive the
+///   close on shared-doorbell in-proc connections, so auto-removal on fd
+///   close cannot be relied on).
+///
+/// An `epoll_ctl` failure fails that connection only (like any transport
+/// error).  Returns `true` when an event was pushed.
+#[cfg(target_os = "linux")]
+fn update_interest(
+    conns: &mut [Slot],
+    cfg: &ReactorConfig,
+    st: &mut EpollState,
+    ci: usize,
+    events: &mut Vec<Event>,
+) -> bool {
+    let (fd, was_armed) = match st.reg[ci].as_ref() {
+        Some(reg) => (reg.fd, reg.armed),
+        None => return false,
+    };
+    if conns[ci].link.is_none() {
+        // closed: deregister permanently (the fd may outlive the close on
+        // shared-doorbell in-proc connections)
+        if was_armed.is_some() {
+            st.ep.del(fd);
+        }
+        st.reg[ci] = None;
+        return false;
+    }
+    let desired = Interest {
+        // the ONE read-gate definition (Slot::wants_read) keeps arming in
+        // lockstep with both backends' service paths
+        read: conns[ci].wants_read(cfg),
+        write: conns[ci].pending() > 0,
+    };
+    if desired.is_none() {
+        if was_armed.is_some() {
+            st.ep.del(fd);
+            if let Some(reg) = st.reg[ci].as_mut() {
+                reg.armed = None;
+            }
+        }
+        return false;
+    }
+    if was_armed == Some(desired) {
+        return false;
+    }
+    let armed = if was_armed.is_some() {
+        st.ep.modify(fd, ci as u64, desired)
+    } else {
+        st.ep.add(fd, ci as u64, desired)
+    };
+    match armed {
+        Ok(()) => {
+            if let Some(reg) = st.reg[ci].as_mut() {
+                reg.armed = Some(desired);
+            }
+            false
+        }
+        Err(e) => {
+            // an unarmable connection would never be serviced again: fail
+            // it now, loudly, instead of letting it hang silently
+            st.ep.del(fd);
+            st.reg[ci] = None;
+            conns[ci].link = None;
+            events.push(Event::Error { client: ci, error: TransportError::Io(e) });
+            true
+        }
+    }
+}
+
+/// One event-driven discovery pass: re-arm stale interest, block in
+/// `epoll_wait` up to `timeout_ms`, then service exactly the connections
+/// the OS reported ready (writes first, then gated reads, then re-arm).
+/// Returns `Some(progress)`, or `None` when `epoll_wait` has failed
+/// [`MAX_WAIT_FAILURES`] times in a row and the caller must degrade the
+/// reactor to the sweep backend.
+#[cfg(target_os = "linux")]
+fn poll_epoll(
+    conns: &mut [Slot],
+    cfg: &ReactorConfig,
+    st: &mut EpollState,
+    events: &mut Vec<Event>,
+    timeout_ms: i32,
+) -> Option<bool> {
+    let mut progress = false;
+
+    // 0) apply deferred interest updates so the wait reflects current state
+    while let Some(ci) = st.dirty.pop() {
+        st.is_dirty[ci] = false;
+        progress |= update_interest(conns, cfg, st, ci, events);
+    }
+
+    // 1) wait for readiness (level-triggered: nothing consumed is lost)
+    let mut ready = std::mem::take(&mut st.ready);
+    match st.ep.wait(&mut ready, timeout_ms) {
+        Ok(_) => st.wait_failures = 0,
+        Err(_) => {
+            // cannot happen on a valid epfd; guard pathological
+            // environments — a brief backoff bounds any retry spin, and a
+            // persistent failure hands the reactor to the sweep backend
+            // rather than spinning hot forever with no events
+            st.ready = ready;
+            st.wait_failures += 1;
+            if st.wait_failures >= MAX_WAIT_FAILURES {
+                return None;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            return Some(progress);
+        }
+    }
+    st.wakeups += 1;
+
+    // 2) service exactly what the OS reported
+    for r in &ready {
+        if r.token == WAKER_TOKEN {
+            // worker-pool wakeup: clear the counter; the serving loop
+            // drains its completion channel right after this pass (anything
+            // enqueued after the clear re-rings the level trigger)
+            st.waker.clear();
+            continue;
+        }
+        let ci = r.token as usize;
+        if ci >= conns.len() {
+            continue;
+        }
+        {
+            let slot = &mut conns[ci];
+            if slot.link.is_some() {
+                // writes first, exactly like the sweep
+                progress |= flush_slot(slot, ci, events);
+            }
+        }
+        {
+            let slot = &mut conns[ci];
+            if slot.wants_read(cfg) {
+                progress |= read_slot(slot, ci, cfg.max_frames_per_sweep, events);
+            }
+        }
+        // 3) re-arm this connection's interest for the next wait
+        progress |= update_interest(conns, cfg, st, ci, events);
+    }
+    st.ready = ready;
+    Some(progress)
 }
 
 #[cfg(test)]
@@ -552,38 +1072,60 @@ mod tests {
         Msg::Features { step, tensor: Tensor::from_vec(&[n], (0..n).map(|i| i as f32).collect()) }
     }
 
-    #[test]
-    fn inproc_reactor_roundtrip() {
-        let (mut edge, cloud) = inproc_reactor_pair();
-        let mut reactor = Reactor::new(vec![Box::new(cloud)], ReactorConfig::default());
-        edge.send(&feat(1, 8)).unwrap();
-        let mut events = Vec::new();
-        assert!(reactor.poll(&mut events));
-        match events.as_slice() {
-            [Event::Msg { client: 0, msg }] => assert_eq!(msg, &feat(1, 8)),
-            other => panic!("unexpected events {other:?}"),
+    fn cfg_with(backend: ReadinessBackend) -> ReactorConfig {
+        ReactorConfig { backend, ..ReactorConfig::default() }
+    }
+
+    /// Backends every roundtrip-style test runs through on this platform.
+    fn backends() -> Vec<ReadinessBackend> {
+        if ReadinessBackend::Epoll.supported() {
+            vec![ReadinessBackend::Sweep, ReadinessBackend::Epoll]
+        } else {
+            vec![ReadinessBackend::Sweep]
         }
-        // reply path: queue + flush, edge receives
-        reactor.queue_frame(0, wire::encode(&Msg::KeySeed { seed: 7 }));
-        events.clear();
-        reactor.poll(&mut events);
-        assert_eq!(reactor.outbox_len(0), 0);
-        assert_eq!(edge.recv().unwrap(), Msg::KeySeed { seed: 7 });
-        // accounting: both halves agree
-        assert_eq!(edge.stats().tx(), reactor.stats(0).rx());
-        assert_eq!(edge.stats().rx(), reactor.stats(0).tx());
     }
 
     #[test]
-    fn closed_peer_surfaces_as_event() {
-        let (edge, cloud) = inproc_reactor_pair();
-        let mut reactor = Reactor::new(vec![Box::new(cloud)], ReactorConfig::default());
-        drop(edge);
-        let mut events = Vec::new();
-        reactor.poll(&mut events);
-        assert!(matches!(events.as_slice(), [Event::Closed { client: 0 }]));
-        assert!(!reactor.is_open(0));
-        assert_eq!(reactor.open_count(), 0);
+    fn inproc_reactor_roundtrip_all_backends() {
+        for backend in backends() {
+            let (mut edge, cloud) = inproc_reactor_pair();
+            let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(backend));
+            assert_eq!(reactor.backend(), backend, "requested backend must engage");
+            edge.send(&feat(1, 8)).unwrap();
+            let mut events = Vec::new();
+            assert!(reactor.poll(&mut events));
+            match events.as_slice() {
+                [Event::Msg { client: 0, msg }] => assert_eq!(msg, &feat(1, 8)),
+                other => panic!("unexpected events {other:?}"),
+            }
+            // reply path: queue + flush, edge receives
+            reactor.queue_frame(0, wire::encode(&Msg::KeySeed { seed: 7 }));
+            events.clear();
+            reactor.poll(&mut events);
+            assert_eq!(reactor.outbox_len(0), 0);
+            assert_eq!(edge.recv().unwrap(), Msg::KeySeed { seed: 7 });
+            // accounting: both halves agree
+            assert_eq!(edge.stats().tx(), reactor.stats(0).rx());
+            assert_eq!(edge.stats().rx(), reactor.stats(0).tx());
+            assert!(reactor.wakeups() > 0, "discovery passes are counted");
+        }
+    }
+
+    #[test]
+    fn closed_peer_surfaces_as_event_all_backends() {
+        for backend in backends() {
+            let (edge, cloud) = inproc_reactor_pair();
+            let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(backend));
+            drop(edge); // drop rings the doorbell, so epoll observes it too
+            let mut events = Vec::new();
+            reactor.poll(&mut events);
+            assert!(
+                matches!(events.as_slice(), [Event::Closed { client: 0 }]),
+                "{backend:?}: {events:?}"
+            );
+            assert!(!reactor.is_open(0));
+            assert_eq!(reactor.open_count(), 0);
+        }
     }
 
     #[test]
@@ -600,7 +1142,7 @@ mod tests {
         assert_eq!(reactor.outbox_len(0), 3);
         edge.send(&feat(0, 4)).unwrap();
         let mut events = Vec::new();
-        // Sweep: writes flush first (in-proc never blocks), after which the
+        // Poll: writes flush first (in-proc never blocks), after which the
         // read gate reopens and the frame arrives — the TCP case where the
         // flush stalls is exercised end-to-end in tests/multi_edge.rs.
         reactor.poll(&mut events);
@@ -612,17 +1154,100 @@ mod tests {
     }
 
     #[test]
-    fn hold_gates_reads() {
+    fn hold_gates_reads_all_backends() {
+        for backend in backends() {
+            let (mut edge, cloud) = inproc_reactor_pair();
+            let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(backend));
+            edge.send(&feat(0, 4)).unwrap();
+            reactor.set_hold(0, true);
+            let mut events = Vec::new();
+            reactor.poll(&mut events);
+            assert!(events.is_empty(), "{backend:?}: held client must not be read");
+            reactor.set_hold(0, false);
+            reactor.poll(&mut events);
+            assert_eq!(events.len(), 1, "{backend:?}: unheld client delivers");
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_blocks_instead_of_sweeping_when_idle() {
+        // The tentpole property, at the unit level: with one idle
+        // connection, a blocking poll_wait performs exactly ONE wakeup per
+        // call (the wait itself) instead of a timed sweep train, and a
+        // doorbell ring cuts the block short.
         let (mut edge, cloud) = inproc_reactor_pair();
-        let mut reactor = Reactor::new(vec![Box::new(cloud)], ReactorConfig::default());
-        edge.send(&feat(0, 4)).unwrap();
-        reactor.set_hold(0, true);
+        let mut reactor =
+            Reactor::new(vec![Box::new(cloud)], cfg_with(ReadinessBackend::Epoll));
+        assert_eq!(reactor.backend(), ReadinessBackend::Epoll);
         let mut events = Vec::new();
-        reactor.poll(&mut events);
-        assert!(events.is_empty(), "held client must not be read");
-        reactor.set_hold(0, false);
-        reactor.poll(&mut events);
+
+        // idle: one blocking pass, one wakeup, zero events
+        let w0 = reactor.wakeups();
+        let t0 = std::time::Instant::now();
+        assert!(!reactor.poll_wait(&mut events, 60));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(40), "must block");
+        assert_eq!(reactor.wakeups(), w0 + 1, "idle block is a single wakeup");
+        assert!(events.is_empty());
+
+        // a frame sent mid-block wakes it early
+        let t0 = std::time::Instant::now();
+        let send = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            edge.send(&feat(3, 4)).unwrap();
+            edge
+        });
+        assert!(reactor.poll_wait(&mut events, 5_000));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "doorbell must cut the block short"
+        );
         assert_eq!(events.len(), 1);
+        let _edge = send.join().unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_waker_wakes_blocking_poll() {
+        // The worker-completion path: a waker ring — even one that lands
+        // BEFORE the pump blocks — pulls poll_wait out of epoll_wait.
+        let (_edge, cloud) = inproc_reactor_pair();
+        let mut reactor =
+            Reactor::new(vec![Box::new(cloud)], cfg_with(ReadinessBackend::Epoll));
+        let waker = reactor.waker();
+        assert!(waker.is_armed());
+        let mut events = Vec::new();
+
+        // ring happens-before the wait: must not sleep out the timeout
+        waker.wake();
+        let t0 = std::time::Instant::now();
+        reactor.poll_wait(&mut events, 5_000);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "pre-block ring must wake the pump (lost-wakeup race)"
+        );
+
+        // ring from another thread mid-block
+        let w = waker.clone();
+        let ringer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            w.wake();
+        });
+        let t0 = std::time::Instant::now();
+        reactor.poll_wait(&mut events, 5_000);
+        ringer.join().unwrap();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "mid-block ring must wake the pump"
+        );
+    }
+
+    #[test]
+    fn sweep_waker_is_noop() {
+        let (_edge, cloud) = inproc_reactor_pair();
+        let reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(ReadinessBackend::Sweep));
+        assert_eq!(reactor.backend(), ReadinessBackend::Sweep);
+        assert!(!reactor.waker().is_armed());
     }
 
     #[test]
@@ -635,6 +1260,8 @@ mod tests {
         let mut client = std::net::TcpStream::connect(addr).unwrap();
         let (stream, _) = listener.accept().unwrap();
         let mut conn = NbTcp::from_stream(stream).unwrap();
+        #[cfg(unix)]
+        assert!(conn.readiness_fd().is_some(), "a socket is always pollable");
 
         let msg = feat(3, 16);
         let frame = wire::encode(&msg);

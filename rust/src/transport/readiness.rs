@@ -1,0 +1,562 @@
+//! OS readiness substrate for the reactor: epoll + eventfd, std-only.
+//!
+//! The portable reactor backend ([`super::reactor`]) discovers work by
+//! *sweeping* — polling every connection each pass and sleeping a fixed
+//! `poll_us` when nothing moved.  That burns a full CPU at high idle fan-in
+//! (N connections × 10k sweeps/s of `WouldBlock` syscalls) and taxes every
+//! worker-pool reply with up to one `poll_us` tick of discovery latency.
+//! This module provides the event-driven alternative on Linux:
+//!
+//! * [`Epoll`] — a thin, safe wrapper over raw `epoll_create1` /
+//!   `epoll_ctl` / `epoll_wait` FFI (no crate dependency, keeping the
+//!   crate's std-only stance).  The reactor registers per-connection
+//!   *interest* (read / write) and blocks in [`Epoll::wait`] until the OS
+//!   reports readiness — zero CPU while every edge is idle.
+//! * [`EventFd`] / [`WakeHandle`] — an `eventfd`-based waker.  Codec
+//!   workers ring it when a job completes, waking the I/O thread out of
+//!   `epoll_wait` immediately instead of on the next timed sweep.  The
+//!   eventfd is a kernel *counter*, so a ring that lands before the waiter
+//!   enters `epoll_wait` is never lost: level-triggered readiness holds
+//!   until the counter is [`WakeHandle::clear`]ed.
+//! * [`ReadinessBackend`] — the `[transport] backend = "epoll" | "sweep"`
+//!   knob ([`ReadinessBackend::platform_default`] picks `epoll` on Linux,
+//!   `sweep` elsewhere; the sweep loop remains the portable fallback).
+//! * [`thread_cpu_time`] — `CLOCK_THREAD_CPUTIME_ID`, so the scale bench
+//!   can report how much CPU the I/O thread actually burned per backend.
+//!
+//! Everything Linux-specific is `cfg(target_os = "linux")`-gated; on other
+//! platforms the types still exist but are permanently unarmed, so callers
+//! (the reactor, the in-proc doorbell) compile unchanged everywhere.
+
+/// Raw OS file descriptor, as the FFI layer sees it (`c_int` everywhere —
+/// on non-unix platforms nothing ever produces one, but the type keeps the
+/// [`super::reactor::ReactorConn::readiness_fd`] signature portable).
+pub type RawFd = std::os::raw::c_int;
+
+/// Which readiness discovery the reactor runs on
+/// (`[transport] backend = "epoll" | "sweep"`, CLI `--reactor-backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadinessBackend {
+    /// Event-driven: block in `epoll_wait` on registered interest, wake on
+    /// socket readiness / in-proc doorbells / the worker-pool eventfd.
+    /// Linux only; zero idle CPU, immediate worker-completion replies.
+    Epoll,
+    /// Portable fallback: the original fair round-robin poll sweep with a
+    /// timed idle backoff (`poll_us`).  Runs on every std platform.
+    Sweep,
+}
+
+impl ReadinessBackend {
+    /// Stable lowercase name, as written in configs and bench venue labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReadinessBackend::Epoll => "epoll",
+            ReadinessBackend::Sweep => "sweep",
+        }
+    }
+
+    /// Parse a config/CLI value (`"epoll"` or `"sweep"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "epoll" => Some(ReadinessBackend::Epoll),
+            "sweep" => Some(ReadinessBackend::Sweep),
+            _ => None,
+        }
+    }
+
+    /// The default for this platform: `epoll` on Linux, `sweep` elsewhere.
+    pub fn platform_default() -> Self {
+        if cfg!(target_os = "linux") {
+            ReadinessBackend::Epoll
+        } else {
+            ReadinessBackend::Sweep
+        }
+    }
+
+    /// Whether this backend can actually run on the current platform.
+    pub fn supported(self) -> bool {
+        match self {
+            ReadinessBackend::Epoll => cfg!(target_os = "linux"),
+            ReadinessBackend::Sweep => true,
+        }
+    }
+}
+
+/// Readiness interest for one registered connection: what the reactor wants
+/// the OS to watch.  Read interest is armed whenever the connection may be
+/// read (not held, outbox under its bound); write interest only while the
+/// outbox has parked bytes — re-armed on partial writes, dropped the moment
+/// the outbox drains, so a writable-and-empty socket never spins the loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Watch for readable data (or peer close).
+    pub read: bool,
+    /// Watch for writability (only meaningful with a non-empty outbox).
+    pub write: bool,
+}
+
+impl Interest {
+    /// No interest at all — the connection should be *deregistered* (a
+    /// held connection with an empty outbox must not wake the loop, not
+    /// even via the always-reported error/hangup events).
+    pub fn none() -> Self {
+        Interest { read: false, write: false }
+    }
+
+    /// True when neither direction is watched.
+    pub fn is_none(self) -> bool {
+        !self.read && !self.write
+    }
+}
+
+/// One readiness report from [`Epoll::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Ready {
+    /// The `token` the fd was registered with (connection index, or
+    /// [`WAKER_TOKEN`] for the worker-pool waker).
+    pub token: u64,
+    /// Data (or EOF/error) is readable.  Error and hangup conditions are
+    /// folded in: a read attempt is what surfaces them as proper
+    /// transport errors.
+    pub readable: bool,
+    /// The fd accepted more bytes (or errored; folded in likewise).
+    pub writable: bool,
+}
+
+/// Registration token reserved for the reactor's own waker eventfd — never
+/// a valid connection index.
+pub const WAKER_TOKEN: u64 = u64::MAX;
+
+// ---------------------------------------------------------------------------
+// Linux: raw FFI over epoll(7) + eventfd(2) + clock_gettime(2).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_long, c_uint, c_void};
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+    pub const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
+
+    /// Matches the kernel's `struct epoll_event`: packed on x86-64 (the
+    /// kernel ABI there has no padding between `events` and `data`),
+    /// naturally aligned elsewhere — the same split glibc encodes with its
+    /// `__EPOLL_PACKED` attribute.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: c_long,
+        pub tv_nsec: c_long,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn clock_gettime(clockid: c_int, tp: *mut Timespec) -> c_int;
+    }
+}
+
+/// CPU time consumed by the *calling thread* (`CLOCK_THREAD_CPUTIME_ID`),
+/// in seconds.  `None` where the clock is unavailable (non-Linux).  The
+/// scale bench diffs two readings around a serve to report how much CPU the
+/// I/O thread burned — the number the epoll backend exists to shrink.
+pub fn thread_cpu_time() -> Option<f64> {
+    #[cfg(target_os = "linux")]
+    {
+        let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
+        let rc = unsafe { sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        if rc != 0 {
+            return None;
+        }
+        Some(ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// A nonblocking `eventfd`: a kernel counter that is readable whenever
+/// non-zero.  [`EventFd::ring`] adds to the counter (from any thread);
+/// [`EventFd::clear`] resets it.  Because readiness is *level-triggered* on
+/// the counter, a ring that happens-before the waiter's `epoll_wait` still
+/// wakes it — the lost-wakeup race a condvar would have to be careful about
+/// simply cannot happen.
+#[cfg(target_os = "linux")]
+#[derive(Debug)]
+pub struct EventFd {
+    fd: RawFd,
+}
+
+#[cfg(target_os = "linux")]
+impl EventFd {
+    /// Create a fresh counter (CLOEXEC + nonblocking).
+    pub fn new() -> std::io::Result<Self> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(EventFd { fd })
+    }
+
+    /// The descriptor to register with [`Epoll`] (read interest).
+    pub fn raw_fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Add 1 to the counter, making the fd readable.  Thread-safe (`&self`:
+    /// one `write(2)`).  A saturated counter returns `EAGAIN`, which is
+    /// fine — the fd is already readable, so the wakeup is not lost.
+    pub fn ring(&self) {
+        let one: u64 = 1;
+        let _ = unsafe { sys::write(self.fd, (&one as *const u64).cast(), 8) };
+    }
+
+    /// Reset the counter (one nonblocking `read(2)`; `EAGAIN` when already
+    /// zero).  Clear *before* draining the guarded queue: anything enqueued
+    /// after the clear re-rings and re-arms the level trigger.
+    pub fn clear(&self) {
+        let mut buf: u64 = 0;
+        let _ = unsafe { sys::read(self.fd, (&mut buf as *mut u64).cast(), 8) };
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        let _ = unsafe { sys::close(self.fd) };
+    }
+}
+
+/// A cloneable, cross-thread wakeup handle over an [`EventFd`] — or a
+/// no-op when unarmed (non-Linux, eventfd exhaustion, or sweep backend,
+/// where waking is unnecessary).  Used two ways:
+///
+/// * the reactor's **worker waker**: codec workers [`WakeHandle::wake`]
+///   after publishing a finished job, pulling the I/O thread out of
+///   `epoll_wait` immediately;
+/// * the in-proc **doorbell**: the blocking `InProc` edge endpoint rings
+///   after every channel send (and on drop), giving channel-backed
+///   connections a pollable fd like a socket's.
+#[derive(Clone, Debug, Default)]
+pub struct WakeHandle {
+    #[cfg(target_os = "linux")]
+    fd: Option<std::sync::Arc<EventFd>>,
+}
+
+impl WakeHandle {
+    /// A permanently unarmed handle (every operation is a no-op).
+    pub fn none() -> Self {
+        WakeHandle::default()
+    }
+
+    /// A fresh armed handle.  Falls back to unarmed when the platform has
+    /// no eventfd or the process is out of descriptors — callers degrade
+    /// to sweep-based discovery instead of failing.
+    pub fn armed() -> Self {
+        #[cfg(target_os = "linux")]
+        {
+            WakeHandle { fd: EventFd::new().ok().map(std::sync::Arc::new) }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            WakeHandle {}
+        }
+    }
+
+    /// Whether this handle actually wakes anything.
+    pub fn is_armed(&self) -> bool {
+        #[cfg(target_os = "linux")]
+        {
+            self.fd.is_some()
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            false
+        }
+    }
+
+    /// Ring the counter (no-op when unarmed).  Never lost: the level
+    /// trigger holds until [`WakeHandle::clear`].
+    pub fn wake(&self) {
+        #[cfg(target_os = "linux")]
+        if let Some(fd) = &self.fd {
+            fd.ring();
+        }
+    }
+
+    /// Reset the counter (no-op when unarmed).
+    pub fn clear(&self) {
+        #[cfg(target_os = "linux")]
+        if let Some(fd) = &self.fd {
+            fd.clear();
+        }
+    }
+
+    /// The pollable descriptor behind this handle, when armed.
+    pub fn raw_fd(&self) -> Option<RawFd> {
+        #[cfg(target_os = "linux")]
+        {
+            self.fd.as_ref().map(|fd| fd.raw_fd())
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            None
+        }
+    }
+}
+
+/// Safe wrapper over one epoll instance.  Registrations carry a `u64`
+/// token (the reactor uses the connection index; [`WAKER_TOKEN`] marks the
+/// worker waker) that [`Epoll::wait`] hands back with each readiness
+/// report.  All readiness is level-triggered: un-consumed input (or an
+/// un-cleared eventfd counter) keeps reporting until acted on, so no edge
+/// condition can be missed between waits.
+#[cfg(target_os = "linux")]
+#[derive(Debug)]
+pub struct Epoll {
+    epfd: RawFd,
+}
+
+#[cfg(target_os = "linux")]
+impl Epoll {
+    /// Create an epoll instance (CLOEXEC).
+    pub fn new() -> std::io::Result<Self> {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Epoll { epfd })
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: RawFd, interest: Interest, token: u64) -> std::io::Result<()> {
+        let mut events = 0u32;
+        if interest.read {
+            events |= sys::EPOLLIN;
+        }
+        if interest.write {
+            events |= sys::EPOLLOUT;
+        }
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest.
+    pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Re-arm `fd`'s interest (must already be registered).
+    pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Deregister `fd`.  Best-effort: an fd that was already closed (and
+    /// therefore auto-removed by the kernel) is not an error worth
+    /// surfacing, so failures are swallowed.
+    pub fn del(&self, fd: RawFd) {
+        let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        let _ = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Block until at least one registered fd is ready or `timeout_ms`
+    /// elapses (`0` = poll without blocking, negative = wait forever).
+    /// Ready reports are appended to `ready` (cleared first); returns the
+    /// report count.  `EINTR` retries internally.
+    pub fn wait(&self, ready: &mut Vec<Ready>, timeout_ms: i32) -> std::io::Result<usize> {
+        const CAP: usize = 256;
+        ready.clear();
+        let mut buf = [sys::EpollEvent { events: 0, data: 0 }; CAP];
+        let n = loop {
+            let n = unsafe {
+                sys::epoll_wait(self.epfd, buf.as_mut_ptr(), CAP as std::os::raw::c_int, timeout_ms)
+            };
+            if n >= 0 {
+                break n as usize;
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        };
+        for ev in buf.iter().take(n) {
+            let e = *ev;
+            let bits = e.events;
+            // Error/hangup are folded into both directions: the service
+            // attempt (a read / write) is what turns them into a typed
+            // transport error or a clean close.
+            let err = bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+            ready.push(Ready {
+                token: e.data,
+                readable: bits & sys::EPOLLIN != 0 || err,
+                writable: bits & sys::EPOLLOUT != 0 || err,
+            });
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        let _ = unsafe { sys::close(self.epfd) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_and_parse_roundtrip() {
+        for b in [ReadinessBackend::Epoll, ReadinessBackend::Sweep] {
+            assert_eq!(ReadinessBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(ReadinessBackend::parse("magic"), None);
+        assert!(ReadinessBackend::Sweep.supported());
+        assert!(ReadinessBackend::platform_default().supported());
+        #[cfg(target_os = "linux")]
+        assert_eq!(ReadinessBackend::platform_default(), ReadinessBackend::Epoll);
+        #[cfg(not(target_os = "linux"))]
+        assert_eq!(ReadinessBackend::platform_default(), ReadinessBackend::Sweep);
+    }
+
+    #[test]
+    fn unarmed_handle_is_inert() {
+        let w = WakeHandle::none();
+        assert!(!w.is_armed());
+        assert_eq!(w.raw_fd(), None);
+        w.wake();
+        w.clear();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn eventfd_wake_before_wait_is_not_lost() {
+        // The lost-wakeup race: the worker completes (and rings) just as —
+        // or strictly before — the I/O thread enters epoll_wait.  The
+        // eventfd counter is level-triggered, so the wait must return
+        // immediately instead of sleeping out its timeout.
+        let ep = Epoll::new().unwrap();
+        let ef = EventFd::new().unwrap();
+        ep.add(ef.raw_fd(), WAKER_TOKEN, Interest { read: true, write: false }).unwrap();
+
+        ef.ring(); // happens-before the wait
+        let mut ready = Vec::new();
+        let t0 = std::time::Instant::now();
+        let n = ep.wait(&mut ready, 5_000).unwrap();
+        assert_eq!(n, 1, "pre-wait ring must wake the waiter");
+        assert_eq!(ready[0].token, WAKER_TOKEN);
+        assert!(ready[0].readable);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "wake must be immediate, not a timeout expiry"
+        );
+
+        // clearing consumes the level trigger...
+        ef.clear();
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 0, "cleared counter is quiet");
+
+        // ...and a ring from another thread while blocked wakes promptly
+        let fd = ef.raw_fd();
+        let ringer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            let one: u64 = 1;
+            let _ = unsafe {
+                super::sys::write(fd, (&one as *const u64).cast(), 8)
+            };
+        });
+        let t0 = std::time::Instant::now();
+        let n = ep.wait(&mut ready, 5_000).unwrap();
+        ringer.join().unwrap();
+        assert_eq!(n, 1);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "blocked waiter must wake on the ring, not the timeout"
+        );
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn wake_handle_clear_then_requeue_rearms() {
+        // The clear-before-drain contract: clear, then anything enqueued
+        // after the clear re-rings — the level trigger re-arms.
+        let ep = Epoll::new().unwrap();
+        let w = WakeHandle::armed();
+        assert!(w.is_armed());
+        let fd = w.raw_fd().unwrap();
+        ep.add(fd, 7, Interest { read: true, write: false }).unwrap();
+        let mut ready = Vec::new();
+
+        w.wake();
+        w.wake(); // counter accumulates; still one readiness report
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 1);
+        w.clear();
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 0);
+        w.wake(); // post-clear ring re-arms
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 1);
+        assert_eq!(ready[0].token, 7);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn interest_rearming_gates_reports() {
+        // A registered-but-interestless fd must not report plain readiness
+        // (the reactor's "held client" state), and MOD re-arms it.
+        let ep = Epoll::new().unwrap();
+        let ef = EventFd::new().unwrap();
+        ep.add(ef.raw_fd(), 3, Interest::none()).unwrap();
+        ef.ring();
+        let mut ready = Vec::new();
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 0, "no interest → no report");
+        ep.modify(ef.raw_fd(), 3, Interest { read: true, write: false }).unwrap();
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 1, "re-armed interest reports");
+        ep.del(ef.raw_fd());
+        assert_eq!(ep.wait(&mut ready, 0).unwrap(), 0, "deregistered fd is silent");
+        ep.del(ef.raw_fd()); // double-del is best-effort, not a panic
+    }
+
+    #[test]
+    fn thread_cpu_clock_is_monotonic_where_available() {
+        if let Some(a) = thread_cpu_time() {
+            // burn a little CPU so the clock visibly advances
+            let mut acc = 0u64;
+            for i in 0..2_000_000u64 {
+                acc = acc.wrapping_add(i ^ (acc >> 3));
+            }
+            std::hint::black_box(acc);
+            let b = thread_cpu_time().expect("clock stays available");
+            assert!(b >= a, "thread CPU clock went backwards: {a} -> {b}");
+        }
+    }
+}

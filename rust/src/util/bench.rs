@@ -1,0 +1,54 @@
+//! Shared policy plumbing for the benchmark-regression gates.
+//!
+//! Two benches gate against the committed `BENCH_baseline.json` —
+//! `benches/codec_hotpath.rs` (the `host/*` venues) and
+//! `benches/reactor_scale.rs` (the `reactor/*` venues) — and their
+//! warn-vs-fail policy must stay in lockstep: the tolerance knob and the
+//! calibrated-baseline switch live HERE, once, so a policy change cannot
+//! silently diverge the two gates.  The venue-schema-specific comparison
+//! loops remain in each bench (the schemas legitimately differ).
+
+use crate::util::json::Json;
+
+/// The relative regression tolerance every bench gate applies: env
+/// `C3SL_BENCH_GATE_TOL` (a fraction, e.g. `0.15`), defaulting to 15%.
+pub fn gate_tolerance() -> f64 {
+    std::env::var("C3SL_BENCH_GATE_TOL")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.15)
+}
+
+/// Whether a committed baseline is calibrated — i.e. its absolute numbers
+/// were measured on the reference runner class, arming the hard checks.
+/// A baseline WITHOUT the flag reads as calibrated (a hand-written
+/// baseline that omits it should block on its numbers, not silently
+/// downgrade to warnings); the committed uncalibrated baselines say
+/// `"calibrated": false` explicitly.
+pub fn calibrated(baseline: &Json) -> bool {
+    baseline.get("calibrated").and_then(|v| v.as_bool()).unwrap_or(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn calibrated_flag_policy() {
+        assert!(!calibrated(&parse(r#"{"calibrated": false}"#).unwrap()));
+        assert!(calibrated(&parse(r#"{"calibrated": true}"#).unwrap()));
+        // absent flag = armed: hand-written baselines must not silently
+        // downgrade themselves to warnings
+        assert!(calibrated(&parse(r#"{"venues": {}}"#).unwrap()));
+    }
+
+    #[test]
+    fn tolerance_defaults_to_fifteen_percent() {
+        // (env-var override is exercised by the benches themselves; the
+        // default is the contract both gates share)
+        if std::env::var("C3SL_BENCH_GATE_TOL").is_err() {
+            assert!((gate_tolerance() - 0.15).abs() < 1e-12);
+        }
+    }
+}

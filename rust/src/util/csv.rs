@@ -1,19 +1,20 @@
 //! Tiny CSV writer for loss curves and bench tables.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
+/// A buffered CSV file with a fixed column count, checked (debug builds)
+/// against every row's arity.
 pub struct CsvWriter {
     w: BufWriter<File>,
     cols: usize,
 }
 
 impl CsvWriter {
+    /// Create (or truncate) `path`, creating parent directories as needed,
+    /// and write the header row.  The header's length fixes the column
+    /// count for the file.
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
         if let Some(dir) = path.as_ref().parent() {
             if !dir.as_os_str().is_empty() {
@@ -25,16 +26,19 @@ impl CsvWriter {
         Ok(CsvWriter { w, cols: header.len() })
     }
 
+    /// Write one pre-stringified row (must match the header's arity).
     pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
         debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
         writeln!(self.w, "{}", fields.join(","))
     }
 
+    /// Write one numeric row (each field formatted with `{}`).
     pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
         let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
         self.row(&strs)
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.w.flush()
     }

@@ -3,26 +3,33 @@
 //! Used for the AOT `manifest.json` files and for metrics dumps.  No serde in
 //! this environment; the grammar we need is small and fully covered here
 //! (objects, arrays, strings with escapes, numbers, bools, null).
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// One JSON value.  Numbers are uniformly `f64` (like JavaScript); object
+/// keys are kept sorted (`BTreeMap`) so serialization is deterministic —
+/// important for committed artifacts like the bench baselines.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (integers included — see [`Json::as_i64`]).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- accessors -------------------------------------------------------
+
+    /// Member `key` of an object (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -30,6 +37,7 @@ impl Json {
         }
     }
 
+    /// Element `i` of an array (`None` for non-arrays / out of range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -37,6 +45,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -44,14 +53,17 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to `usize` (manifest shapes/counts).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The numeric payload truncated to `i64`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// The string payload, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -59,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The boolean payload, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -66,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -73,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The key → value map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -81,18 +96,23 @@ impl Json {
     }
 
     // ---- construction helpers for writers ---------------------------------
+
+    /// An object from `(key, value)` pairs (keys are copied).
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// A number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// A string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// An array.
     pub fn arr(v: Vec<Json>) -> Json {
         Json::Arr(v)
     }
@@ -168,9 +188,12 @@ fn write_escaped(out: &mut String, s: &str) {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// A parse failure, pinned to its byte offset in the input.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset the error was detected at.
     pub pos: usize,
+    /// What went wrong there.
     pub msg: String,
 }
 
@@ -182,6 +205,9 @@ impl std::fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parse one complete JSON document (trailing data is an error).  Fully
+/// checked — malformed input returns a positioned [`ParseError`], never a
+/// panic.
 pub fn parse(input: &str) -> Result<Json, ParseError> {
     let mut p = Parser { b: input.as_bytes(), pos: 0 };
     p.skip_ws();

@@ -1,6 +1,7 @@
 //! Utility substrates: errors, PRNG, JSON, timing, property-testing
-//! harness, tolerance assertions, CSV.
+//! harness, tolerance assertions, CSV, bench-gate policy.
 
+pub mod bench;
 pub mod csv;
 pub mod error;
 pub mod json;

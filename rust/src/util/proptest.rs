@@ -12,10 +12,6 @@
 //!         assert_eq!(a + b, b + a);
 //!     });
 //! ```
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use crate::util::rng::Rng;
 
@@ -27,43 +23,51 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// A generator for one case, seeded deterministically.
     pub fn new(seed: u64) -> Self {
         Gen { rng: Rng::new(seed), log: Vec::new() }
     }
 
+    /// Uniform integer in `[lo, hi]` (inclusive), logged.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         let v = lo + self.rng.below(hi - lo + 1);
         self.log.push(format!("usize={v}"));
         v
     }
 
+    /// Uniform float in `[lo, hi)`, logged.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         let v = self.rng.uniform_in(lo, hi);
         self.log.push(format!("f32={v}"));
         v
     }
 
+    /// Fair coin flip, logged.
     pub fn bool(&mut self) -> bool {
         let v = self.rng.next_u64() & 1 == 1;
         self.log.push(format!("bool={v}"));
         v
     }
 
+    /// A power of two between `2^lo_log2` and `2^hi_log2` (inclusive).
     pub fn pow2_in(&mut self, lo_log2: u32, hi_log2: u32) -> usize {
         let e = self.usize_in(lo_log2 as usize, hi_log2 as usize);
         1usize << e
     }
 
+    /// One element of `xs`, uniformly, logged by index.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         let i = self.rng.below(xs.len());
         self.log.push(format!("choice#{i}"));
         &xs[i]
     }
 
+    /// `len` uniform floats in `[lo, hi)` (not logged — bulk data).
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len).map(|_| self.rng.uniform_in(lo, hi)).collect()
     }
 
+    /// `len` normal draws N(mean, std²) (not logged — bulk data).
     pub fn vec_normal(&mut self, len: usize, mean: f32, std: f32) -> Vec<f32> {
         let mut v = vec![0.0; len];
         self.rng.fill_normal(&mut v, mean, std);
@@ -79,10 +83,12 @@ pub struct Prop {
 }
 
 impl Prop {
+    /// A property named `name`, run over `cases` deterministic cases.
     pub fn new(name: &'static str, cases: usize) -> Self {
         Prop { name, cases, seed: 0xC3C3_5150 }
     }
 
+    /// Override the base seed (case i runs with `seed + i`).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self

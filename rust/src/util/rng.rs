@@ -4,10 +4,6 @@
 //! substrates anyway.  xoshiro256++ is the reference generator of Blackman &
 //! Vigna; splitmix64 expands a 64-bit seed into the 256-bit state, which is
 //! the initialization the authors recommend.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 /// xoshiro256++ generator.
 #[derive(Clone, Debug)]
@@ -44,6 +40,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next 64 uniformly random bits (the core xoshiro256++ step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -61,6 +58,8 @@ impl Rng {
         result
     }
 
+    /// Next 32 uniformly random bits (the generator's top half, which has
+    /// the better equidistribution properties).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -1,8 +1,4 @@
 //! Timing helpers for metrics and the bench harness.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::time::{Duration, Instant};
 
@@ -12,18 +8,22 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Wall time since start (or the last [`Timer::restart`]).
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// [`Timer::elapsed`] as fractional seconds.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Return the elapsed time and restart the stopwatch (lap timing).
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();
@@ -41,14 +41,20 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 /// Bench statistics over repeated runs (used by the criterion-free harness).
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Timed iterations (warmup excluded).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Fastest iteration, in seconds — the noise-robust throughput basis.
     pub min_s: f64,
+    /// Slowest iteration, in seconds.
     pub max_s: f64,
+    /// Population standard deviation, in seconds.
     pub stddev_s: f64,
 }
 
 impl BenchStats {
+    /// Items processed per second at the mean iteration time.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
     }

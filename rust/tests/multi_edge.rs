@@ -146,6 +146,144 @@ fn reactor_matches_thread_per_client_traffic() {
     assert_eq!(threads.cloud.total_rx(), reactor.cloud.total_rx());
     assert_eq!(threads.cloud.total_tx(), reactor.cloud.total_tx());
     assert_eq!(threads.cloud.total_steps(), reactor.cloud.total_steps());
+    // only the reactor style reports I/O-thread observability
+    assert!(threads.cloud.reactor_io.is_none());
+    let io = reactor.cloud.reactor_io.expect("reactor serve reports its backend");
+    assert!(io.wakeups > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Readiness backends: epoll vs sweep must be indistinguishable on the wire
+// ---------------------------------------------------------------------------
+
+use c3sl::transport::readiness::ReadinessBackend;
+
+fn backend_spec(
+    edges: usize,
+    transport: TransportKind,
+    addr: &str,
+    backend: ReadinessBackend,
+) -> MultiEdgeSpec {
+    let mut s = reactor_spec(edges, transport, addr);
+    s.poll.backend = backend;
+    s
+}
+
+/// Compare two sharded runs client-by-client, matching on shard id (accept
+/// order is arbitrary over TCP): bytes, messages and final losses must be
+/// identical — readiness discovery is not allowed to change which keys any
+/// step is served with, nor a single byte of traffic.
+fn assert_same_wire(a: &c3sl::coordinator::MultiStats, b: &c3sl::coordinator::MultiStats) {
+    assert_eq!(a.total_steps(), b.total_steps());
+    assert_eq!(a.total_rx(), b.total_rx());
+    assert_eq!(a.total_tx(), b.total_tx());
+    let key = |s: &c3sl::coordinator::MultiStats| {
+        let mut v: Vec<(Option<u64>, u64, u64, u64, u64, u64, u32)> = s
+            .per_client
+            .iter()
+            .map(|c| {
+                (c.shard, c.steps, c.rx_bytes, c.tx_bytes, c.rx_msgs, c.tx_msgs,
+                 c.last_loss.to_bits())
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(key(a), key(b), "per-client wire contract differs between backends");
+}
+
+#[test]
+fn readiness_backends_byte_and_loss_parity_under_rotation_inproc() {
+    // The ISSUE acceptance check: the SAME sharded, rotating workload
+    // through the sweep pump and the epoll pump puts byte-identical traffic
+    // and bit-identical losses on every link.
+    let mut sweep = sharded_spec(3, TransportKind::InProc, "");
+    sweep.rotation_steps = 2;
+    sweep.reactor = true;
+    sweep.poll.backend = ReadinessBackend::Sweep;
+    let a = run_multi_edge(&sweep).unwrap();
+    assert_eq!(
+        a.cloud.reactor_io.unwrap().backend,
+        ReadinessBackend::Sweep,
+        "requested sweep backend must engage"
+    );
+    if !ReadinessBackend::Epoll.supported() {
+        return; // single-backend platform: nothing to compare against
+    }
+    let mut epoll = sweep.clone();
+    epoll.poll.backend = ReadinessBackend::Epoll;
+    let b = run_multi_edge(&epoll).unwrap();
+    assert_eq!(
+        b.cloud.reactor_io.unwrap().backend,
+        ReadinessBackend::Epoll,
+        "requested epoll backend must engage (in-proc doorbells are pollable)"
+    );
+    assert_same_wire(&a.cloud, &b.cloud);
+    for (i, (ea, eb)) in a.edges.iter().zip(&b.edges).enumerate() {
+        assert_eq!(ea.tx_bytes, eb.tx_bytes, "edge {i} uplink");
+        assert_eq!(ea.rx_bytes, eb.rx_bytes, "edge {i} downlink");
+        assert_eq!(ea.first_loss.to_bits(), eb.first_loss.to_bits(), "edge {i}");
+        assert_eq!(ea.last_loss.to_bits(), eb.last_loss.to_bits(), "edge {i}");
+    }
+}
+
+#[test]
+fn readiness_backends_byte_and_loss_parity_under_rotation_tcp() {
+    // Same parity over real sockets (NbTcp registered in epoll), rotation
+    // active.  Accept order is arbitrary, so clients match on shard id.
+    let mut sweep = sharded_spec(3, TransportKind::Tcp, "127.0.0.1:39421");
+    sweep.rotation_steps = 2;
+    sweep.reactor = true;
+    sweep.poll.backend = ReadinessBackend::Sweep;
+    let a = run_multi_edge(&sweep).unwrap();
+    if !ReadinessBackend::Epoll.supported() {
+        return;
+    }
+    let mut epoll = sweep.clone();
+    epoll.tcp_addr = "127.0.0.1:39422".into();
+    epoll.poll.backend = ReadinessBackend::Epoll;
+    let b = run_multi_edge(&epoll).unwrap();
+    assert_eq!(b.cloud.reactor_io.unwrap().backend, ReadinessBackend::Epoll);
+    assert_same_wire(&a.cloud, &b.cloud);
+}
+
+#[test]
+fn reactor_sweep_backend_stays_green() {
+    // The portable fallback keeps serving even where epoll is the platform
+    // default — pinned explicitly so Linux CI covers both pumps end to end.
+    let out = run_multi_edge(&backend_spec(
+        3,
+        TransportKind::Tcp,
+        "127.0.0.1:39423",
+        ReadinessBackend::Sweep,
+    ))
+    .unwrap();
+    check_accounting(&out, 3);
+    assert_eq!(out.cloud.reactor_io.unwrap().backend, ReadinessBackend::Sweep);
+}
+
+#[test]
+fn reactor_scales_to_1024_edges_with_exact_accounting() {
+    // The thousand-edge acceptance scenario: 1024 concurrent edges against
+    // ONE reactor I/O thread (+4 codec workers) on the platform-default
+    // readiness backend, exact per-client byte accounting, decreasing probe
+    // objective on every edge.  Small geometry keeps it in the smoke budget.
+    // (If descriptor limits deny 1024 doorbells, the reactor degrades to
+    // the sweep and the accounting contract must hold regardless.)
+    let out = run_multi_edge(&MultiEdgeSpec {
+        edges: 1024,
+        steps: 2,
+        r: 2,
+        d: 64,
+        batch: 4,
+        seed: 23,
+        workers: 4,
+        transport: TransportKind::InProc,
+        reactor: true,
+        ..MultiEdgeSpec::default()
+    })
+    .unwrap();
+    check_accounting_steps(&out, 1024, 2);
 }
 
 #[test]
@@ -568,6 +706,151 @@ fn sharded_reactor_rejects_replayed_proof_without_disturbing_edges() {
         },
         "proof mismatch",
     );
+}
+
+#[test]
+fn shard_reclaim_after_disconnect_but_live_claim_cannot_be_stolen() {
+    // The shard re-claim contract, end to end over TCP against a reactor
+    // cloud serving ONE shard across THREE connections:
+    //
+    //   1. connection A claims shard 0 and holds it;
+    //   2. a thief with a perfectly VALID proof (same ring, its own fresh
+    //      challenge) tries to claim shard 0 while A is LIVE → rejected
+    //      ("already claimed") and closed, A undisturbed;
+    //   3. A trains and shuts down cleanly → the gate releases shard 0;
+    //   4. a reconnecting edge claims shard 0 on a fresh connection and
+    //      trains a full run — no longer locked out for the session.
+    use c3sl::coordinator::multi;
+    use c3sl::coordinator::{CloudCodec, EdgeCodec, ShardGate};
+    use c3sl::hdc::FftBackend;
+    use c3sl::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
+    use std::sync::mpsc;
+
+    let addr = "127.0.0.1:39424";
+    let steps = 2u64;
+    let ring = KeyRing::new(0xC1A1_4EC1, 2, 128, 0);
+    let gate = ShardGate::new(ring, 1);
+    let listener = Tcp::bind(addr).unwrap();
+    let (steal_go_tx, steal_go_rx) = mpsc::channel::<()>();
+    let (steal_done_tx, steal_done_rx) = mpsc::channel::<()>();
+    let (reclaim_go_tx, reclaim_go_rx) = mpsc::channel::<()>();
+
+    let (serve_result, reclaim_report) = std::thread::scope(|sc| {
+        let gate = &gate;
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(&listener, 3, std::time::Duration::from_secs(30)).unwrap();
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| Box::new(NbTcp::from_stream(s).unwrap()) as Box<dyn ReactorConn>)
+                .collect();
+            multi::serve_clients_reactor(
+                CloudCodec::Sharded(gate),
+                conns,
+                2,
+                ReactorConfig::default(),
+            )
+        });
+
+        // connection A: manual protocol so the steal happens while the
+        // claim is demonstrably live (between handshake and training)
+        let holder = sc.spawn(move || {
+            let mut tp = Tcp::connect(addr).unwrap();
+            tp.send(&Msg::ShardHello).unwrap();
+            let nonce = match tp.recv().unwrap() {
+                Msg::ShardChallenge { nonce } => nonce,
+                other => panic!("holder expected ShardChallenge, got {other:?}"),
+            };
+            let shard = ring.edge_shard(0);
+            tp.send(&Msg::KeyShard { client_id: 0, epoch: 0, proof: shard.proof(0, nonce) })
+                .unwrap();
+            let mut cc = shard.client_codec();
+            let z = Tensor::from_vec(
+                &[4, 128],
+                (0..512).map(|i| (i as f32 * 0.037).sin()).collect(),
+            );
+            let mut train_step = |tp: &mut Tcp, step: u64| {
+                let s = cc.for_step(step).unwrap().encode(&z);
+                tp.send(&Msg::Features { step, tensor: s }).unwrap();
+                tp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; 4]) }).unwrap();
+                match tp.recv().unwrap() {
+                    Msg::Gradients { step: g, .. } => assert_eq!(g, step),
+                    other => panic!("holder expected Gradients, got {other:?}"),
+                }
+                match tp.recv().unwrap() {
+                    Msg::StepStats { step: g, .. } => assert_eq!(g, step),
+                    other => panic!("holder expected StepStats, got {other:?}"),
+                }
+            };
+            // train a first full step BEFORE inviting the thief: the served
+            // gradient proves the cloud admitted this claim, so the steal
+            // attempt below races nothing
+            train_step(&mut tp, 0);
+            steal_go_tx.send(()).unwrap();
+            steal_done_rx.recv().unwrap();
+            // ...and a second step after the rejected steal proves the live
+            // claim was never disturbed
+            train_step(&mut tp, 1);
+            tp.send(&Msg::Shutdown).unwrap();
+        });
+
+        let thief = sc.spawn(move || {
+            let mut tp = Tcp::connect(addr).unwrap();
+            steal_go_rx.recv().unwrap();
+            tp.send(&Msg::ShardHello).unwrap();
+            let nonce = match tp.recv().unwrap() {
+                Msg::ShardChallenge { nonce } => nonce,
+                other => panic!("thief expected ShardChallenge, got {other:?}"),
+            };
+            // a VALID possession proof answering the thief's own challenge
+            // — rejected purely because the claim is live
+            tp.send(&Msg::KeyShard {
+                client_id: 0,
+                epoch: 0,
+                proof: ring.shard_proof(0, 0, nonce),
+            })
+            .unwrap();
+            assert!(tp.recv().is_err(), "live claim must be rejected and closed");
+            steal_done_tx.send(()).unwrap();
+        });
+
+        // reconnector: its socket must be accepted up front (the cloud
+        // collects all 3 connections before serving) but stays completely
+        // silent until A's session is fully over
+        let reclaimer = sc.spawn(move || {
+            let mut tp = Tcp::connect(addr).unwrap();
+            reclaim_go_rx.recv().unwrap();
+            // give the cloud a beat to process A's Shutdown and retire it
+            // (release happens at retirement; µs-scale — this is generous)
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            multi::run_edge(
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(0),
+                    workers: 1,
+                    fft: FftBackend::default(),
+                },
+                &mut tp,
+                steps,
+                9,
+                4,
+                128,
+            )
+            .unwrap()
+        });
+        holder.join().unwrap();
+        thief.join().unwrap();
+        reclaim_go_tx.send(()).unwrap();
+        let report = reclaimer.join().unwrap();
+        (cloud.join().unwrap(), report)
+    });
+
+    // the reconnecting edge re-claimed the released shard and trained
+    assert_eq!(reclaim_report.steps, steps);
+    // the only failure in the aggregate is the thief's rejected steal
+    let err = serve_result.expect_err("the thief's rejection surfaces in the aggregate");
+    let msg = err.to_string();
+    assert!(msg.contains("already claimed"), "{msg}");
+    assert!(msg.contains("1 client(s) failed"), "{msg}");
 }
 
 #[test]
