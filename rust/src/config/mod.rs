@@ -350,6 +350,9 @@ impl ExperimentConfig {
         ] {
             if let Some(v) = get(&doc, "train", key) {
                 let val = v.as_i64().ok_or_else(|| inv(format!("train.{key}")))? as usize;
+                // SAFETY: each pointer was taken from a distinct live field
+                // of `cfg` just above, `cfg` outlives the loop, and no other
+                // reference to those fields exists while we write.
                 unsafe { *field = val };
             }
         }

@@ -167,6 +167,13 @@ struct GateState {
     /// connections than it serves shards (reconnects, rogues) still
     /// challenges every one of them and rejects at the claim, not here.
     nonces: Vec<Option<u64>>,
+    /// The highest training step each shard id has uplinked this session
+    /// (`None` until its first step).  This is the re-claim watermark: a
+    /// reconnecting edge resumes at the epoch of the step after the last
+    /// one its shard completed, so admission accepts that CURRENT epoch —
+    /// per shard, because step numbering is per-client, and a fast
+    /// sibling's progress must never invalidate a fresh edge's claim.
+    last_step: Vec<Option<u64>>,
     /// The fresh-challenge stream.
     rng: Rng,
 }
@@ -195,6 +202,7 @@ impl ShardGate {
             state: Mutex::new(GateState {
                 claimed: vec![None; clients],
                 nonces: vec![None; clients],
+                last_step: vec![None; clients],
                 rng: Rng::new(nonce_seed()),
             }),
         }
@@ -250,24 +258,16 @@ impl ShardGate {
     /// and hand back the validated shard handle (no keygen here — admission
     /// is cheap; the caller decides when to derive keys).  Every check is a
     /// *per-client* rejection — the caller fails that connection only.
-    fn admit(
+    /// Public alongside [`ShardGate::issue_nonce`] / [`ShardGate::release`]
+    /// so custom serving loops (and the interleaving harness) can drive the
+    /// full admission protocol; the built-in serve paths call it for you.
+    pub fn admit(
         &self,
         client: usize,
         client_id: u64,
         epoch: u64,
         proof: u64,
     ) -> Result<EdgeShard> {
-        // Admission today always happens at session start, so the expected
-        // claim epoch is epoch_of(step 0) — identically 0 for every
-        // rotation cadence.  The wire field (and this derivation, rather
-        // than a literal 0) exists for the ROADMAP mid-session re-claim
-        // follow-up, where a reconnecting edge would join at the CURRENT
-        // epoch instead.
-        let want_epoch = self.ring.epoch_of_step(0);
-        ensure!(
-            epoch == want_epoch,
-            "client {client}: stale key epoch {epoch} (expected {want_epoch})"
-        );
         let mut st = self
             .state
             .lock()
@@ -276,6 +276,31 @@ impl ShardGate {
         ensure!(
             client_id < n as u64,
             "client {client}: shard id {client_id} out of range (serving {n} shards)"
+        );
+        // The expected claim epoch is the shard's CURRENT rotation epoch:
+        // a fresh shard claims at epoch_of(step 0) — identically 0 for
+        // every rotation cadence — while a mid-session re-claim (the edge
+        // reconnected after a drop) resumes at the step after the last one
+        // this shard completed.  A disconnect exactly on an epoch boundary
+        // leaves the resume step in the NEXT epoch, so both the epoch of
+        // the last observed step and of the step after it are accepted.
+        // The proof still binds the announced epoch (it is derived from
+        // that epoch's sub-seed), so acceptance is never wider than the
+        // key material the edge actually proves it holds.
+        let (lo, hi) = match st.last_step[client_id as usize] {
+            None => {
+                let e0 = self.ring.epoch_of_step(0);
+                (e0, e0)
+            }
+            Some(last) => (
+                self.ring.epoch_of_step(last),
+                self.ring.epoch_of_step(last.saturating_add(1)),
+            ),
+        };
+        ensure!(
+            epoch == lo || epoch == hi,
+            "client {client}: stale key epoch {epoch} for shard {client_id} \
+             (expected {lo}..={hi} at its current rotation position)"
         );
         // a missing nonce is the CLIENT's protocol violation (KeyShard as
         // the first message, skipping ShardHello), not a server invariant
@@ -327,6 +352,25 @@ impl ShardGate {
                 if *slot == Some(client) {
                     *slot = None;
                 }
+            }
+        }
+    }
+
+    /// Record that shard `client_id` uplinked training step `step` — the
+    /// re-claim watermark consulted by admission.  Monotonic (out-of-order
+    /// observations never move it backwards) and per shard, because step
+    /// numbering is per-client.  Both serve paths call this as each
+    /// training step's labels arrive, so a reconnecting edge is admitted
+    /// at the epoch it will actually resume in instead of epoch 0.
+    /// Best-effort on a poisoned lock (the session is already failing) and
+    /// a no-op for out-of-range ids.
+    pub fn observe_step(&self, client_id: u64, step: u64) {
+        if let Ok(mut st) = self.state.lock() {
+            if let Some(slot) = st.last_step.get_mut(client_id as usize) {
+                *slot = Some(match *slot {
+                    Some(prev) => prev.max(step),
+                    None => step,
+                });
             }
         }
     }
@@ -563,6 +607,11 @@ fn serve_one_session(
                         bail!("client {client}: labels before the KeyShard handshake")
                     }
                 };
+                // advance the re-claim watermark: a reconnect after this
+                // step must be admitted at the epoch it resumes in
+                if let (CloudCodec::Sharded(gate), Some(cc)) = (codec, shard.as_ref()) {
+                    gate.observe_step(cc.client_id(), step);
+                }
                 last_loss = loss;
                 steps += 1;
                 transport.send(&Msg::Gradients { step, tensor: gs })?;
@@ -957,6 +1006,11 @@ fn handle_client_msg(
                 kind: JobKind::Train(s),
                 shard: c.shard.clone(),
             });
+            // advance the re-claim watermark: a reconnect after this step
+            // must be admitted at the epoch it resumes in
+            if let (CloudCodec::Sharded(gate), Some(id)) = (codec, c.shard_id) {
+                gate.observe_step(id, step);
+            }
         }
         Msg::EvalFeatures { step, tensor, labels } => {
             ensure!(
@@ -1372,7 +1426,7 @@ pub fn run_edge(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transport::{inproc_pair, inproc_reactor_pair};
+    use crate::transport::{inproc_pair, inproc_reactor_pair, InProc};
 
     #[test]
     fn single_client_roundtrip_decreases_probe_loss() {
@@ -1642,6 +1696,149 @@ mod tests {
         // session 2 ended cleanly (Shutdown) — released again, claimable
         let n = gate.issue_nonce(5).unwrap();
         assert!(gate.admit(5, 0, 0, ring.shard_proof(0, 0, n)).is_ok());
+    }
+
+    #[test]
+    fn reclaim_watermark_opens_the_current_epoch_per_shard() {
+        // rotation every 2 steps: epoch_of = 0,0,1,1,2,2,3,...
+        let ring = KeyRing::new(0x0E0C_4A11, 2, 64, 2);
+        let gate = ShardGate::new(ring, 2);
+
+        // a never-trained shard claims only at the session-start epoch
+        let n = gate.issue_nonce(0).unwrap();
+        let err = gate.admit(0, 0, 1, ring.shard_proof(0, 1, n)).unwrap_err();
+        assert!(err.to_string().contains("stale key epoch"), "{err}");
+        let n = gate.issue_nonce(0).unwrap();
+        assert!(gate.admit(0, 0, 0, ring.shard_proof(0, 0, n)).is_ok());
+
+        // shard 0 trains through step 5, out-of-order observations
+        // included, then its connection drops
+        for step in [0u64, 1, 2, 4, 3, 5, 4] {
+            gate.observe_step(0, step);
+        }
+        gate.release(0, 0);
+
+        // the resume point is step 6: epoch_of(5) = 2 and epoch_of(6) = 3
+        // are both claimable (the drop landed exactly on a boundary), the
+        // session-start epoch no longer is
+        let n = gate.issue_nonce(0).unwrap();
+        let err = gate.admit(0, 0, 0, ring.shard_proof(0, 0, n)).unwrap_err();
+        assert!(err.to_string().contains("stale key epoch"), "{err}");
+        let n = gate.issue_nonce(0).unwrap();
+        assert!(gate.admit(0, 0, 2, ring.shard_proof(0, 2, n)).is_ok());
+        gate.release(0, 0);
+        let n = gate.issue_nonce(0).unwrap();
+        assert!(gate.admit(0, 0, 3, ring.shard_proof(0, 3, n)).is_ok());
+
+        // the watermark is PER SHARD: sibling shard 1 never trained, so its
+        // fresh epoch-0 claim is untouched by shard 0's progress
+        let n1 = gate.issue_nonce(1).unwrap();
+        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0, n1)).is_ok());
+
+        // out-of-range observations are a best-effort no-op, never a panic
+        gate.observe_step(7, 100);
+    }
+
+    #[test]
+    fn reconnect_under_rotation_resumes_at_current_epoch() {
+        // End-to-end over the blocking serve path: rotation every 2 steps,
+        // the edge trains into epoch 1, drops, and reconnects.  The gate
+        // must reject a stale epoch-0 re-claim and admit the claim at the
+        // epoch the edge actually resumes in.
+        let ring = KeyRing::new(0x0E0C_4A12, 2, 64, 2);
+        let gate = ShardGate::new(ring, 1);
+        let shard = ring.edge_shard(0);
+        let (b, d) = (4usize, 64usize);
+        let mut rng = Rng::new(11);
+        let mut zdata = vec![0.0f32; b * d];
+        rng.fill_normal(&mut zdata, 0.0, 1.0);
+        let z = Tensor::from_vec(&[b, d], zdata);
+
+        let drive_steps = |etp: &mut InProc, cc: &mut ClientCodec, steps: std::ops::Range<u64>| {
+            for step in steps {
+                let s = cc.for_step(step).unwrap().encode(&z);
+                etp.send(&Msg::Features { step, tensor: s }).unwrap();
+                etp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; b]) })
+                    .unwrap();
+                match etp.recv().unwrap() {
+                    Msg::Gradients { step: gs, .. } => assert_eq!(gs, step),
+                    other => panic!("expected Gradients, got {other:?}"),
+                }
+                match etp.recv().unwrap() {
+                    Msg::StepStats { .. } => {}
+                    other => panic!("expected StepStats, got {other:?}"),
+                }
+            }
+        };
+        let handshake = |etp: &mut InProc, epoch: u64| {
+            etp.send(&Msg::ShardHello).unwrap();
+            let nonce = match etp.recv().unwrap() {
+                Msg::ShardChallenge { nonce } => nonce,
+                other => panic!("expected ShardChallenge, got {other:?}"),
+            };
+            etp.send(&Msg::KeyShard {
+                client_id: 0,
+                epoch,
+                proof: shard.proof(epoch, nonce),
+            })
+            .unwrap();
+        };
+
+        // session 1: claim at epoch 0, train steps 0..4 (the codec rotates
+        // into epoch 1 at step 2), then vanish mid-session
+        let (mut etp, ctp) = inproc_pair();
+        let res = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            handshake(&mut etp, 0);
+            let mut cc = shard.client_codec();
+            drive_steps(&mut etp, &mut cc, 0..4);
+            drop(etp); // vanish — the serve errors and releases the claim
+            cloud.join().unwrap()
+        });
+        assert!(res.is_err(), "hangup must error session 1");
+
+        // session 2a: a re-claim at the stale session-start epoch is
+        // rejected — the shard's watermark has moved on
+        let (mut etp, ctp) = inproc_pair();
+        let res = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 1)
+            });
+            handshake(&mut etp, 0);
+            cloud.join().unwrap()
+        });
+        let err = res.expect_err("stale epoch-0 re-claim must be rejected");
+        assert!(err.to_string().contains("stale key epoch"), "{err}");
+
+        // session 2b: the claim at the CURRENT epoch (resume step 4 →
+        // epoch 2) is admitted and training resumes in lockstep
+        let resume = 4u64;
+        let epoch = shard.epoch_of_step(resume);
+        assert_eq!(epoch, 2, "steps 0..4 complete → the edge resumes in epoch 2");
+        let (mut etp, ctp) = inproc_pair();
+        let report = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 2)
+            });
+            handshake(&mut etp, epoch);
+            // a fresh codec handle: for_step(4) derives epoch-2 keys
+            // directly, matching the cloud's freshly admitted shard
+            let mut cc = shard.client_codec();
+            drive_steps(&mut etp, &mut cc, resume..resume + 2);
+            etp.send(&Msg::Shutdown).unwrap();
+            cloud.join().unwrap()
+        })
+        .unwrap();
+        assert_eq!(report.shard, Some(0));
+        assert_eq!(report.steps, 2);
     }
 
     #[test]

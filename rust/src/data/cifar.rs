@@ -6,11 +6,6 @@
 //!            (coarse, fine) + 3072 pixel bytes.
 //!
 //! Pixels are normalized with the usual per-channel CIFAR statistics.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 use std::io::Read;
 use std::path::{Path, PathBuf};
 
@@ -37,6 +32,7 @@ fn normalize_into(pixels: &[u8], out: &mut [f32]) {
     }
 }
 
+/// CIFAR-10 loaded whole into memory from the binary batch files.
 pub struct Cifar10 {
     records: Vec<u8>,
     n: usize,
@@ -44,6 +40,9 @@ pub struct Cifar10 {
 }
 
 impl Cifar10 {
+    /// Load the train split (`data_batch_{1..5}.bin`) or the test split
+    /// (`test_batch.bin`) from `root/cifar-10-batches-bin/`; errors if the
+    /// files are missing or not a whole number of records.
     pub fn open(root: &str, train: bool) -> std::io::Result<Self> {
         let dir = PathBuf::from(root).join("cifar-10-batches-bin");
         let files: Vec<PathBuf> = if train {
@@ -96,6 +95,7 @@ impl Dataset for Cifar10 {
     }
 }
 
+/// CIFAR-100 (fine labels) loaded whole into memory from the binary files.
 pub struct Cifar100 {
     records: Vec<u8>,
     n: usize,
@@ -103,6 +103,8 @@ pub struct Cifar100 {
 }
 
 impl Cifar100 {
+    /// Load `train.bin` or `test.bin` from `root/cifar-100-binary/`;
+    /// errors if the file is missing or not a whole number of records.
     pub fn open(root: &str, train: bool) -> std::io::Result<Self> {
         let dir = PathBuf::from(root).join("cifar-100-binary");
         let file = dir.join(if train { "train.bin" } else { "test.bin" });

@@ -7,11 +7,6 @@
 //! learnable-but-nontrivial.  If real CIFAR binaries are present under
 //! `data/cifar-10-batches-bin/` (or `data/cifar-100-binary/`) the loader
 //! picks them up instead.  See DESIGN.md §3 (substitutions).
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 pub mod cifar;
 pub mod synth;
 
@@ -20,22 +15,28 @@ use crate::util::rng::Rng;
 
 /// A labelled image dataset with fixed geometry.
 pub trait Dataset: Send + Sync {
+    /// Number of examples.
     fn len(&self) -> usize;
+    /// True when the dataset holds no examples.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Number of distinct class labels.
     fn num_classes(&self) -> usize;
     /// (channels, height, width)
     fn image_shape(&self) -> (usize, usize, usize);
     /// Write example `i` (CHW, f32, normalized) into `out`; return its label.
     fn fetch(&self, i: usize, out: &mut [f32]) -> i32;
+    /// Stable human-readable dataset name (used in logs and CSV venues).
     fn name(&self) -> &str;
 }
 
 /// Batch of images + labels, ready for the runtime.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Image tensor shaped `[batch, channels, height, width]`.
     pub images: Tensor,
+    /// Class label per image (length = batch).
     pub labels: Labels,
 }
 
@@ -52,6 +53,9 @@ pub struct Loader<'a> {
 }
 
 impl<'a> Loader<'a> {
+    /// Loader over `ds` producing `batch`-sized batches, shuffled by `seed`,
+    /// with the CIFAR flip/crop augmentation when `augment` is set.
+    /// Panics when `batch` is 0 or exceeds the dataset size.
     pub fn new(ds: &'a dyn Dataset, batch: usize, seed: u64, augment: bool) -> Self {
         assert!(batch > 0 && batch <= ds.len(), "batch {batch} vs dataset {}", ds.len());
         let mut rng = Rng::new(seed);
@@ -70,10 +74,12 @@ impl<'a> Loader<'a> {
         }
     }
 
+    /// Completed passes over the dataset so far (0 during the first).
     pub fn epoch(&self) -> usize {
         self.epoch
     }
 
+    /// Full batches one pass over the dataset yields (remainder dropped).
     pub fn batches_per_epoch(&self) -> usize {
         self.ds.len() / self.batch
     }

@@ -6,11 +6,6 @@
 //! noise, then normalizes.  Classes are well separated but overlapping enough
 //! that accuracy saturates below 100% — informative features survive the cut
 //! layer, which is what the C3-SL compression claims need (DESIGN.md §3).
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 use super::Dataset;
 use crate::util::rng::Rng;
 
@@ -25,6 +20,10 @@ struct ClassSig {
     blob_amp: f32,
 }
 
+/// Procedural class-conditional image dataset (see the module docs for the
+/// generative model).  Deterministic given `(seed, index)`: the same index
+/// always yields the same pixels and label, so eval sets are reproducible
+/// without storing anything.
 pub struct SynthCifar {
     classes: usize,
     image: usize,
@@ -36,6 +35,10 @@ pub struct SynthCifar {
 }
 
 impl SynthCifar {
+    /// Dataset of `len` examples over `classes` classes at `image`×`image`
+    /// resolution (3 channels); `seed` varies the instance jitter and noise
+    /// while class signatures stay fixed, so train/eval splits use
+    /// different seeds over the same classes.
     pub fn new(classes: usize, image: usize, len: usize, seed: u64) -> Self {
         assert!(classes >= 2 && image >= 4 && len >= classes);
         let mut rng = Rng::new(0xC1A5_5E5E ^ classes as u64);

@@ -13,18 +13,14 @@
 //! imply C′ = 9C/8 rather than C′ = 4C/R = 2C.  For R ∈ {4, 8, 16} formula
 //! and table agree to rounding.  We expose both: `formula` values and the
 //! `published` Table 1 values.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 /// Cut-layer geometry for one model/dataset pair (paper §4.1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CutSpec {
     /// Channels of the cut tensor.
     pub c: usize,
-    /// Spatial height/width of the cut tensor.
+    /// Spatial height of the cut tensor.
     pub h: usize,
+    /// Spatial width of the cut tensor.
     pub w: usize,
     /// Batch size.
     pub b: usize,
@@ -52,7 +48,9 @@ impl CutSpec {
 /// Codec cost (parameters + training-time FLOPs per batch).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CodecCost {
+    /// Trainable (or fixed-key) parameters the codec adds.
     pub params: u64,
+    /// FLOPs the codec spends per training batch (encode + decode).
     pub flops: u64,
 }
 
@@ -103,14 +101,19 @@ pub fn uplink_bytes_per_batch(spec: &CutSpec, r: usize, scheme: Scheme) -> u64 {
     }
 }
 
+/// Compression scheme being accounted (the paper's Table 1 rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scheme {
+    /// Uncompressed split learning (the R=1 baseline).
     Vanilla,
+    /// C3-SL circular-convolution batch compression (this repo).
     C3,
+    /// The BottleNet++ autoencoder baseline the paper compares against.
     BottleNetPP,
 }
 
 impl Scheme {
+    /// Stable lowercase name, as used in CSV venues and CLI flags.
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::Vanilla => "vanilla",
@@ -130,14 +133,17 @@ pub fn conv2d_flops(c_in: usize, c_out: usize, k: usize, h_out: usize, w_out: us
     2 * (c_in * k * k * c_out * h_out * w_out) as u64
 }
 
+/// Parameters of a conv layer: Cin·k²·Cout weights plus optional bias.
 pub fn conv2d_params(c_in: usize, c_out: usize, k: usize, bias: bool) -> u64 {
     (c_in * k * k * c_out + if bias { c_out } else { 0 }) as u64
 }
 
+/// FLOPs for a dense layer: 2·Din·Dout (MACs counted as 2).
 pub fn dense_flops(d_in: usize, d_out: usize) -> u64 {
     2 * (d_in * d_out) as u64
 }
 
+/// Parameters of a dense layer: Din·Dout weights plus optional bias.
 pub fn dense_params(d_in: usize, d_out: usize, bias: bool) -> u64 {
     (d_in * d_out + if bias { d_out } else { 0 }) as u64
 }

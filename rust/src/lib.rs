@@ -16,11 +16,10 @@
 //! rust.  See DESIGN.md for the system inventory and experiment index, and
 //! docs/ARCHITECTURE.md for the layer map and serving architecture.
 
-// Public API documentation is enforced progressively: `transport`,
-// `coordinator`, `hdc`, `fft`, `compress`, `util` and `config` are fully
-// documented and the CI doc job denies warnings; each remaining module
-// carries an explicit `#![allow(missing_docs)]` doc-debt marker until its
-// pass lands (tracked in ROADMAP.md).
+// Public API documentation is enforced crate-wide: every module is fully
+// documented, the CI doc job denies warnings, and repolint cross-checks
+// that any future `#![allow(missing_docs)]` doc-debt marker is declared in
+// rust/tools/repolint/doc_debt_allowlist.txt (currently empty).
 #![warn(missing_docs)]
 
 pub mod compress;

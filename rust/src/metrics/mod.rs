@@ -1,9 +1,5 @@
 //! Metrics substrate: counters, gauges, EWMA, histograms, and a run recorder
 //! that writes loss curves / throughput as CSV for EXPERIMENTS.md.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -15,10 +11,12 @@ use crate::util::csv::CsvWriter;
 pub struct Counter(pub u64);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&mut self) {
         self.0 += 1;
     }
 
+    /// Add `n`.
     pub fn add(&mut self, n: u64) {
         self.0 += n;
     }
@@ -32,11 +30,15 @@ pub struct Ewma {
 }
 
 impl Ewma {
+    /// Smoother with weight `alpha` ∈ [0, 1] on the newest sample (1 =
+    /// no smoothing, 0 = frozen at the first sample).
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         Ewma { alpha, value: None }
     }
 
+    /// Fold in a sample and return the updated average (the first sample
+    /// seeds the average directly).
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -46,6 +48,7 @@ impl Ewma {
         v
     }
 
+    /// Current average, or `None` before the first sample.
     pub fn get(&self) -> Option<f64> {
         self.value
     }
@@ -56,13 +59,19 @@ impl Ewma {
 pub struct Histogram {
     bounds: Vec<f64>,
     counts: Vec<u64>,
+    /// Total number of observations.
     pub total: u64,
+    /// Sum of all observed values (for [`Histogram::mean`]).
     pub sum: f64,
+    /// Smallest observation so far (+∞ before the first).
     pub min: f64,
+    /// Largest observation so far (−∞ before the first).
     pub max: f64,
 }
 
 impl Histogram {
+    /// Histogram with bucket upper bounds `bounds` (ascending) plus an
+    /// implicit overflow bucket above the last bound.
     pub fn new(bounds: Vec<f64>) -> Self {
         let n = bounds.len() + 1;
         Histogram {
@@ -80,6 +89,7 @@ impl Histogram {
         Self::new(vec![1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0])
     }
 
+    /// Record one observation into its bucket and the min/max/sum stats.
     pub fn observe(&mut self, x: f64) {
         let idx = self.bounds.iter().position(|b| x <= *b).unwrap_or(self.bounds.len());
         self.counts[idx] += 1;
@@ -89,6 +99,7 @@ impl Histogram {
         self.max = self.max.max(x);
     }
 
+    /// Arithmetic mean of all observations (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -117,47 +128,63 @@ impl Histogram {
 /// A step record in a training run.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
+    /// Global training step index.
     pub step: usize,
+    /// Training loss at this step.
     pub loss: f64,
+    /// Training accuracy at this step (fraction in [0, 1]).
     pub acc: f64,
+    /// Bytes the edge sent up (activations / compressed carriers).
     pub uplink_bytes: u64,
+    /// Bytes the cloud sent down (gradients / compressed carriers).
     pub downlink_bytes: u64,
+    /// Wall-clock duration of the step, in seconds.
     pub step_seconds: f64,
 }
 
 /// Collects per-step records and writes them out as CSV.
 #[derive(Debug, Default)]
 pub struct RunRecorder {
+    /// Every recorded training step, in order.
     pub records: Vec<StepRecord>,
-    pub evals: Vec<(usize, f64, f64)>, // (step, eval_loss, eval_acc)
+    /// Eval checkpoints as `(step, eval_loss, eval_acc)` tuples.
+    pub evals: Vec<(usize, f64, f64)>,
+    /// Free-form named scalars (hyperparameters, derived summaries).
     pub scalars: BTreeMap<String, f64>,
 }
 
 impl RunRecorder {
+    /// Empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one training-step record.
     pub fn record(&mut self, rec: StepRecord) {
         self.records.push(rec);
     }
 
+    /// Append one eval checkpoint.
     pub fn record_eval(&mut self, step: usize, loss: f64, acc: f64) {
         self.evals.push((step, loss, acc));
     }
 
+    /// Set (or overwrite) a named scalar.
     pub fn set_scalar(&mut self, key: &str, v: f64) {
         self.scalars.insert(key.to_string(), v);
     }
 
+    /// Total uplink bytes across all recorded steps.
     pub fn total_uplink(&self) -> u64 {
         self.records.iter().map(|r| r.uplink_bytes).sum()
     }
 
+    /// Total downlink bytes across all recorded steps.
     pub fn total_downlink(&self) -> u64 {
         self.records.iter().map(|r| r.downlink_bytes).sum()
     }
 
+    /// Mean wall-clock seconds per recorded step (0 when empty).
     pub fn mean_step_seconds(&self) -> f64 {
         if self.records.is_empty() {
             return 0.0;
@@ -165,10 +192,13 @@ impl RunRecorder {
         self.records.iter().map(|r| r.step_seconds).sum::<f64>() / self.records.len() as f64
     }
 
+    /// Loss of the last recorded step, if any.
     pub fn final_loss(&self) -> Option<f64> {
         self.records.last().map(|r| r.loss)
     }
 
+    /// Write the step records to `path` as CSV (one row per step, header
+    /// included) — the format EXPERIMENTS.md plots are generated from.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,

@@ -1,10 +1,5 @@
 //! CodecRuntime: the C3 encode/decode artifacts (the L1 Pallas kernels,
 //! AOT-lowered) plus key generation, executed through PJRT.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 use std::path::PathBuf;
 
 use crate::ensure;
@@ -16,7 +11,10 @@ use super::engine::{Engine, Executable};
 use super::manifest::CodecManifest;
 use crate::tensor::Tensor;
 
+/// The AOT-compiled C3 codec: gen_keys/encode/decode executables plus the
+/// key literal they share once [`CodecRuntime::init_keys`] has run.
 pub struct CodecRuntime {
+    /// The artifact set's manifest (geometry, kernel family, file map).
     pub manifest: CodecManifest,
     gen_keys: std::sync::Arc<Executable>,
     encode: std::sync::Arc<Executable>,
@@ -28,6 +26,8 @@ pub struct CodecRuntime {
 }
 
 impl CodecRuntime {
+    /// Load and compile the codec artifact set under `dir` (expects
+    /// `gen_keys`, `c3_encode` and `c3_decode` in its manifest).
     pub fn load(engine: &Engine, dir: impl Into<PathBuf>) -> Result<Self> {
         let dir: PathBuf = dir.into();
         let manifest = CodecManifest::load(&dir)
@@ -46,10 +46,12 @@ impl CodecRuntime {
         })
     }
 
+    /// Compression ratio R the artifacts were lowered for.
     pub fn r(&self) -> usize {
         self.manifest.r
     }
 
+    /// Carrier dimensionality D the artifacts were lowered for.
     pub fn d(&self) -> usize {
         self.manifest.d
     }
@@ -70,6 +72,7 @@ impl CodecRuntime {
         Ok(())
     }
 
+    /// The generated key tensor `(R, D)`, or `None` before `init_keys`.
     pub fn keys_tensor(&self) -> Option<&Tensor> {
         self.keys_tensor.as_ref()
     }

@@ -6,6 +6,9 @@ use crate::util::error::{C3Error, Result};
 
 /// f32 Tensor → XLA literal.
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // SAFETY: the view reinterprets the tensor's f32 storage as bytes —
+    // same allocation, `len * 4` bytes, u8 has no alignment requirement,
+    // and the borrow of `t` keeps the storage alive for the view's use.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
     };
@@ -26,6 +29,9 @@ pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
 
 /// Labels → i32 literal of shape (B,).
 pub fn labels_to_literal(l: &Labels) -> Result<xla::Literal> {
+    // SAFETY: reinterprets the label i32 storage as bytes — same
+    // allocation, `len * 4` bytes, u8 is alignment-free, and the borrow
+    // of `l` keeps the storage alive for the view's use.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(l.0.as_ptr() as *const u8, l.0.len() * 4)
     };
@@ -39,6 +45,9 @@ pub fn labels_to_literal(l: &Labels) -> Result<xla::Literal> {
 /// 64-bit seed → u32[2] literal (jax PRNG key data).
 pub fn seed_literal(seed: u64) -> Result<xla::Literal> {
     let words = [(seed >> 32) as u32, seed as u32];
+    // SAFETY: `words` is a live [u32; 2] on this stack frame — exactly 8
+    // bytes, u8 is alignment-free, and the view ends before `words` does
+    // (the literal constructor copies out of it).
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, 8) };
     Ok(xla::Literal::create_from_shape_and_untyped_data(

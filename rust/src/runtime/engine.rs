@@ -1,8 +1,4 @@
 //! PJRT engine: client + compiled-executable cache.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -20,11 +16,14 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Engine over the PJRT CPU client with an empty executable cache.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine { client, cache: Arc::new(Mutex::new(HashMap::new())) })
     }
 
+    /// The PJRT platform name (e.g. `"cpu"` — or the stub's marker when
+    /// the real bindings are absent).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -53,6 +52,8 @@ impl Engine {
 /// decompose into the output list.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// The artifact path this executable was compiled from (cache key,
+    /// echoed in execution error contexts).
     pub name: String,
 }
 

@@ -1,10 +1,5 @@
 //! Manifest parsing: the JSON descriptions aot.py writes next to each
 //! artifact set (argument/result shapes, parameter leaf counts, geometry).
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -12,13 +7,17 @@ use crate::util::error::{C3Error, Context, Result};
 
 use crate::util::json::{self, Json};
 
+/// Shape + dtype of one argument or result tensor, as declared by aot.py.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Element type name as written in the manifest (e.g. `"f32"`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (product of the dims).
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -40,10 +39,14 @@ impl TensorSpec {
     }
 }
 
+/// One lowered HLO artifact: its file plus declared argument/output shapes.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// HLO text filename, relative to the manifest's directory.
     pub file: String,
+    /// Argument tensors, in call order.
     pub args: Vec<TensorSpec>,
+    /// Output tensors, in result-tuple order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -81,20 +84,33 @@ fn parse_artifacts(j: &Json) -> Result<BTreeMap<String, ArtifactSpec>> {
 /// Manifest of a model artifact set (edge/cloud nets + steps + adam).
 #[derive(Clone, Debug)]
 pub struct ModelManifest {
+    /// Artifact-set key (directory naming convention, e.g. `vggt_b32`).
     pub key: String,
+    /// Architecture name (`vgg16`, `resnet50`, or a slim variant).
     pub arch: String,
+    /// Input image resolution (square).
     pub image: usize,
+    /// Number of output classes.
     pub classes: usize,
+    /// Batch size the artifacts were lowered for.
     pub batch: usize,
+    /// Flattened dimension of the transmitted cut tensor (after any
+    /// BottleNet++ reduction).
     pub d_tx: usize,
+    /// Flattened dimension of the raw cut-layer tensor.
     pub d_cut: usize,
+    /// BottleNet++ compression ratio baked into the model, if any.
     pub bnpp_ratio: Option<usize>,
+    /// Edge-side parameter leaves, in argument order.
     pub edge_params: Vec<TensorSpec>,
+    /// Cloud-side parameter leaves, in argument order.
     pub cloud_params: Vec<TensorSpec>,
+    /// Every lowered artifact in the set, keyed by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 impl ModelManifest {
+    /// Parse `dir/manifest.json`; errors name the missing field.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let path = dir.as_ref().join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -128,16 +144,19 @@ impl ModelManifest {
         })
     }
 
+    /// Look up an artifact by name; errors with the model key on a miss.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
             .ok_or_else(|| C3Error::msg(format!("model {} has no artifact {name}", self.key)))
     }
 
+    /// Total edge-side parameter count, summed over leaves.
     pub fn edge_param_count(&self) -> usize {
         self.edge_params.iter().map(|s| s.elems()).sum()
     }
 
+    /// Total cloud-side parameter count, summed over leaves.
     pub fn cloud_param_count(&self) -> usize {
         self.cloud_params.iter().map(|s| s.elems()).sum()
     }
@@ -146,15 +165,22 @@ impl ModelManifest {
 /// Manifest of a C3 codec artifact set.
 #[derive(Clone, Debug)]
 pub struct CodecManifest {
+    /// Compression ratio R (batch images folded per carrier).
     pub r: usize,
+    /// Carrier groups per batch (G = B/R).
     pub g: usize,
+    /// Carrier dimensionality D (flattened cut-tensor length).
     pub d: usize,
+    /// Batch size the codec artifacts were lowered for.
     pub batch: usize,
+    /// Kernel family the encoder/decoder were lowered with.
     pub kernel: String,
+    /// Every lowered codec artifact, keyed by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 impl CodecManifest {
+    /// Parse `dir/manifest.json`; errors name the missing field.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let path = dir.as_ref().join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -175,6 +201,7 @@ impl CodecManifest {
         })
     }
 
+    /// Look up a codec artifact by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)

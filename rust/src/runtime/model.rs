@@ -3,11 +3,6 @@
 //! Holds the compiled executables and exposes the split-learning step
 //! functions with rust signatures.  Parameter/optimizer state lives in
 //! `Vec<xla::Literal>` ordered exactly as the manifest's leaf lists.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 use std::path::PathBuf;
 
 use crate::ensure;
@@ -24,8 +19,11 @@ use crate::tensor::{Labels, Tensor};
 
 /// Adam moment state for one parameter list.
 pub struct AdamState {
+    /// First-moment estimates, one literal per parameter leaf.
     pub m: Vec<xla::Literal>,
+    /// Second-moment estimates, one literal per parameter leaf.
     pub v: Vec<xla::Literal>,
+    /// Update count (drives the bias-correction schedule).
     pub step: usize,
 }
 
@@ -46,8 +44,11 @@ impl AdamState {
 
 /// Output of one cloud training step.
 pub struct StepOutput {
+    /// Mean cross-entropy loss over the batch.
     pub loss: f32,
+    /// Number of correct top-1 predictions in the batch.
     pub ncorrect: f32,
+    /// Cloud-side parameter gradients, in leaf order.
     pub grads: Vec<xla::Literal>,
     /// dL/dẑ — gradient w.r.t. the (decoded) transmitted features.
     pub gz: Tensor,
@@ -55,6 +56,7 @@ pub struct StepOutput {
 
 /// Compiled artifact set for one model (edge side + cloud side).
 pub struct ModelRuntime {
+    /// The artifact set's manifest (geometry, parameter leaves, file map).
     pub manifest: ModelManifest,
     dir: PathBuf,
     edge_init: std::sync::Arc<Executable>,
@@ -91,17 +93,20 @@ impl ModelRuntime {
         })
     }
 
+    /// The artifact directory this runtime was loaded from.
     pub fn dir(&self) -> &PathBuf {
         &self.dir
     }
 
     // ---- initialization ----------------------------------------------------
 
+    /// Fresh edge-side parameter leaves, seeded deterministically.
     pub fn edge_init(&self, seed: u64) -> Result<Vec<xla::Literal>> {
         let s = seed_literal(seed)?;
         self.edge_init.run(&[&s])
     }
 
+    /// Fresh cloud-side parameter leaves, seeded deterministically.
     pub fn cloud_init(&self, seed: u64) -> Result<Vec<xla::Literal>> {
         let s = seed_literal(seed)?;
         self.cloud_init.run(&[&s])

@@ -11,11 +11,6 @@
 //! PJRT device (client construction, HLO parsing, compilation, execution)
 //! returns [`XlaError`], so the engine fails loudly at `Engine::cpu()` and
 //! every artifact-dependent test/example skips or reports cleanly.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
-
 use std::fmt;
 
 /// Error for unavailable PJRT functionality (and literal misuse).
@@ -45,8 +40,11 @@ fn unavailable(what: &str) -> XlaError {
 /// Literal element types used by the conversion layer (all 4-byte).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ElementType {
+    /// 32-bit IEEE float.
     F32,
+    /// 32-bit signed integer.
     S32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
@@ -58,7 +56,9 @@ impl ElementType {
 
 /// Element types that can be read back out of a literal.
 pub trait NativeType: Copy {
+    /// The literal element type this Rust type reads back as.
     const TY: ElementType;
+    /// Decode one element from its 4 little-endian bytes.
     fn from_le(bytes: [u8; 4]) -> Self;
 }
 
@@ -92,6 +92,8 @@ pub struct Literal {
 }
 
 impl Literal {
+    /// Build a literal from raw little-endian bytes; errors unless the
+    /// byte length matches the shape's element count × element size.
     pub fn create_from_shape_and_untyped_data(
         ty: ElementType,
         dims: &[usize],
@@ -112,14 +114,17 @@ impl Literal {
         })
     }
 
+    /// Total element count (product of the dims).
     pub fn element_count(&self) -> usize {
         self.dims.iter().product::<i64>() as usize
     }
 
+    /// The literal's shape (mirrors the xla crate's fallible accessor).
     pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
         Ok(ArrayShape { dims: self.dims.clone() })
     }
 
+    /// Read the elements back as `T`; errors on a dtype mismatch.
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
         if self.ty != T::TY {
             return Err(XlaError(format!(
@@ -135,6 +140,8 @@ impl Literal {
             .collect())
     }
 
+    /// Decompose a tuple literal into its elements — device-only in the
+    /// stub, so this always errors.
     pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
         Err(unavailable("decomposing tuple literals"))
     }
@@ -147,6 +154,7 @@ pub struct ArrayShape {
 }
 
 impl ArrayShape {
+    /// Dimension sizes, outermost first.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }
@@ -159,58 +167,71 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Construct the CPU client — always errors in the stub (no device
+    /// plugin offline); [`super::engine::Engine::cpu`] surfaces this.
     pub fn cpu() -> Result<PjRtClient, XlaError> {
         Err(unavailable("PjRtClient::cpu"))
     }
 
+    /// The platform name the stub reports (`"stub"`).
     pub fn platform_name(&self) -> String {
         "stub".into()
     }
 
+    /// Compile a computation for this client — always errors in the stub.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
         Err(unavailable("compiling an XlaComputation"))
     }
 }
 
+/// Parsed HLO module stub (construction always errors offline).
 pub struct HloModuleProto {
     _private: (),
 }
 
 impl HloModuleProto {
+    /// Parse an HLO text artifact — always errors in the stub.
     pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
         Err(unavailable(&format!("parsing HLO text {path}")))
     }
 }
 
+/// Computation wrapper stub, mirroring the xla crate's type.
 pub struct XlaComputation {
     _private: (),
 }
 
 impl XlaComputation {
+    /// Wrap a parsed module (shape-only; nothing to do in the stub).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { _private: () }
     }
 }
 
+/// Compiled-executable stub (never obtainable offline; methods error).
 pub struct PjRtLoadedExecutable {
     _private: (),
 }
 
 impl PjRtLoadedExecutable {
+    /// Execute with literal arguments — always errors in the stub.
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         Err(unavailable("executing a loaded executable"))
     }
 
+    /// Execute with device-buffer arguments — always errors in the stub.
     pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         Err(unavailable("executing a loaded executable"))
     }
 }
 
+/// Device buffer stub (never obtainable offline; methods error).
 pub struct PjRtBuffer {
     _private: (),
 }
 
 impl PjRtBuffer {
+    /// Copy the buffer back to a host literal — always errors in the stub.
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         Err(unavailable("fetching a device buffer"))
     }

@@ -3,13 +3,13 @@
 //! Deliberately small: the heavy math runs inside AOT-compiled XLA
 //! executables; this type exists for host-side plumbing (datasets, codecs,
 //! oracles for tests, metrics) and for the rust-native C3 hot path.
-// Doc debt, explicitly tracked: this module predates the missing_docs
-// push (ROADMAP "docs completion").  The CI doc job denies warnings, so
-// remove this allow as part of documenting every public item here.
-#![allow(missing_docs)]
 
 use std::fmt;
 
+/// Dense row-major f32 tensor: a shape vector plus a flat data buffer of
+/// `shape.iter().product()` elements.  Shape/length agreement is an
+/// invariant enforced at every constructor and reshape; accessors can
+/// therefore index without bounds arithmetic surprises.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
@@ -24,11 +24,14 @@ impl fmt::Debug for Tensor {
 
 impl Tensor {
     // ---- construction ----------------------------------------------------
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap an existing buffer; panics unless `data.len()` matches the
+    /// shape's element count.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -40,44 +43,55 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Rank-0 tensor holding one value (read back with [`Tensor::item`]).
     pub fn scalar(x: f32) -> Self {
         Tensor { shape: vec![], data: vec![x] }
     }
 
+    /// Tensor of the given shape with every element set to `x`.
     pub fn filled(shape: &[usize], x: f32) -> Self {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![x; n] }
     }
 
     // ---- accessors --------------------------------------------------------
+    /// The shape vector (empty for a scalar).
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of axes (0 for a scalar).
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count (the flat buffer's length).
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements (some axis is 0).
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// The flat row-major element buffer, read-only.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// The flat row-major element buffer, mutable (shape is fixed; only
+    /// values may change).
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor and take its flat buffer (drops the shape).
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
 
+    /// The single element of a one-element tensor; panics otherwise.
     pub fn item(&self) -> f32 {
         assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
         self.data[0]
@@ -91,6 +105,8 @@ impl Tensor {
     }
 
     // ---- shape ops ---------------------------------------------------------
+    /// Reinterpret the buffer under a new shape with the same element
+    /// count (no data movement); panics on a count mismatch.
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -130,6 +146,7 @@ impl Tensor {
     }
 
     // ---- math (host-side oracles / codecs) ---------------------------------
+    /// Element-wise sum; shapes must match exactly.
     pub fn add(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
         let data = self
@@ -141,6 +158,7 @@ impl Tensor {
         Tensor { shape: self.shape.clone(), data }
     }
 
+    /// Element-wise difference `self − other`; shapes must match exactly.
     pub fn sub(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
         let data = self
@@ -152,6 +170,7 @@ impl Tensor {
         Tensor { shape: self.shape.clone(), data }
     }
 
+    /// Every element multiplied by the scalar `s`.
     pub fn scale(&self, s: f32) -> Tensor {
         Tensor {
             shape: self.shape.clone(),
@@ -159,15 +178,19 @@ impl Tensor {
         }
     }
 
+    /// Flat inner product Σ aᵢ·bᵢ over all elements; shapes must match.
     pub fn dot(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
         self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
     }
 
+    /// Euclidean (L2) norm over all elements.
     pub fn norm(&self) -> f32 {
         self.data.iter().map(|a| a * a).sum::<f32>().sqrt()
     }
 
+    /// Largest element-wise absolute difference (L∞ distance); shapes must
+    /// match.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
         self.data
@@ -209,10 +232,12 @@ impl Tensor {
 pub struct Labels(pub Vec<i32>);
 
 impl Labels {
+    /// Number of labels (the batch size it pairs with).
     pub fn len(&self) -> usize {
         self.0.len()
     }
 
+    /// True when the label vector is empty.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }

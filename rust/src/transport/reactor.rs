@@ -261,13 +261,17 @@ impl ReactorConn for NbTcp {
                 Ok(n) => {
                     self.out_off += n;
                     if self.out_off == front.total() {
-                        let done = self.outbox.pop_front().expect("front checked above");
-                        self.out_off = 0;
-                        // prefix + frame bytes, matching Tcp::send accounting
-                        self.stats
-                            .tx_bytes
-                            .fetch_add(done.total() as u64, Ordering::Relaxed);
-                        self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+                        // `front` came off this queue above, so pop_front
+                        // cannot miss — but the I/O thread must never
+                        // panic, so an (impossible) empty queue is a no-op
+                        if let Some(done) = self.outbox.pop_front() {
+                            self.out_off = 0;
+                            // prefix + frame bytes, matching Tcp::send accounting
+                            self.stats
+                                .tx_bytes
+                                .fetch_add(done.total() as u64, Ordering::Relaxed);
+                            self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),

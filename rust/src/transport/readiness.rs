@@ -190,6 +190,8 @@ pub fn thread_cpu_time() -> Option<f64> {
     #[cfg(target_os = "linux")]
     {
         let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
+        // SAFETY: `ts` is a live, properly aligned Timespec matching the
+        // kernel's struct layout; clock_gettime writes it or fails.
         let rc = unsafe { sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
         if rc != 0 {
             return None;
@@ -218,6 +220,8 @@ pub struct EventFd {
 impl EventFd {
     /// Create a fresh counter (CLOEXEC + nonblocking).
     pub fn new() -> std::io::Result<Self> {
+        // SAFETY: eventfd(2) takes no pointers; it returns a fresh fd we
+        // own (closed in Drop) or a negative errno checked below.
         let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
         if fd < 0 {
             return Err(std::io::Error::last_os_error());
@@ -235,6 +239,8 @@ impl EventFd {
     /// fine — the fd is already readable, so the wakeup is not lost.
     pub fn ring(&self) {
         let one: u64 = 1;
+        // SAFETY: `one` is a live 8-byte u64 on this stack frame and
+        // `self.fd` is an eventfd we own; write(2) reads exactly 8 bytes.
         let _ = unsafe { sys::write(self.fd, (&one as *const u64).cast(), 8) };
     }
 
@@ -243,6 +249,8 @@ impl EventFd {
     /// after the clear re-rings and re-arms the level trigger.
     pub fn clear(&self) {
         let mut buf: u64 = 0;
+        // SAFETY: `buf` is a live, writable 8-byte u64 on this stack frame;
+        // an eventfd read(2) writes exactly 8 bytes or fails with EAGAIN.
         let _ = unsafe { sys::read(self.fd, (&mut buf as *mut u64).cast(), 8) };
     }
 }
@@ -250,6 +258,8 @@ impl EventFd {
 #[cfg(target_os = "linux")]
 impl Drop for EventFd {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is the eventfd this struct owns exclusively;
+        // it is closed exactly once, here.
         let _ = unsafe { sys::close(self.fd) };
     }
 }
@@ -348,6 +358,8 @@ pub struct Epoll {
 impl Epoll {
     /// Create an epoll instance (CLOEXEC).
     pub fn new() -> std::io::Result<Self> {
+        // SAFETY: epoll_create1(2) takes no pointers; it returns a fresh
+        // fd we own (closed in Drop) or a negative errno checked below.
         let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
         if epfd < 0 {
             return Err(std::io::Error::last_os_error());
@@ -364,6 +376,8 @@ impl Epoll {
             events |= sys::EPOLLOUT;
         }
         let mut ev = sys::EpollEvent { events, data: token };
+        // SAFETY: `ev` is a live EpollEvent matching the kernel ABI layout
+        // (see the cfg_attr on the struct); epoll_ctl only reads it.
         let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
         if rc != 0 {
             return Err(std::io::Error::last_os_error());
@@ -386,6 +400,8 @@ impl Epoll {
     /// surfacing, so failures are swallowed.
     pub fn del(&self, fd: RawFd) {
         let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        // SAFETY: `ev` is a live EpollEvent (pre-2.6.9 kernels demand a
+        // non-null pointer even for DEL, which ignores its contents).
         let _ = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
     }
 
@@ -398,6 +414,9 @@ impl Epoll {
         ready.clear();
         let mut buf = [sys::EpollEvent { events: 0, data: 0 }; CAP];
         let n = loop {
+            // SAFETY: `buf` is a live array of CAP properly laid-out
+            // EpollEvents; the kernel writes at most `maxevents` = CAP
+            // entries and we read back only the first `n` it reports.
             let n = unsafe {
                 sys::epoll_wait(self.epfd, buf.as_mut_ptr(), CAP as std::os::raw::c_int, timeout_ms)
             };
@@ -429,6 +448,8 @@ impl Epoll {
 #[cfg(target_os = "linux")]
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.epfd` is the epoll fd this struct owns exclusively;
+        // it is closed exactly once, here.
         let _ = unsafe { sys::close(self.epfd) };
     }
 }
@@ -492,6 +513,9 @@ mod tests {
         let ringer = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(30));
             let one: u64 = 1;
+            // SAFETY: `one` is a live 8-byte u64 and `fd` outlives the
+            // thread (the EventFd is joined before drop); write(2) reads
+            // exactly 8 bytes.
             let _ = unsafe {
                 super::sys::write(fd, (&one as *const u64).cast(), 8)
             };

@@ -1,5 +1,6 @@
 //! Utility substrates: errors, PRNG, JSON, timing, property-testing
-//! harness, tolerance assertions, CSV, bench-gate policy.
+//! harness, tolerance assertions, CSV, bench-gate policy, and the
+//! deterministic-interleaving scheduler for concurrency tests.
 
 pub mod bench;
 pub mod csv;
@@ -7,5 +8,6 @@ pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sched;
 pub mod testing;
 pub mod timer;

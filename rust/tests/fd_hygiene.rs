@@ -1,0 +1,131 @@
+//! File-descriptor hygiene under connection churn.
+//!
+//! The epoll backend owns kernel objects the sweep backend never touches —
+//! the epoll instance, the worker-pool waker, per-edge doorbells — and
+//! every TCP edge adds a socket on both sides plus a registration that must
+//! be deregistered on hangup.  A leak of any of these survives every
+//! byte-level parity test (the traffic is identical) and only shows up as
+//! descriptor exhaustion hours into a real serving session.  So this test
+//! measures the one thing that matters directly: join and leave 256 edges
+//! through the reactor on EACH readiness backend, then assert the process'
+//! `/proc/self/fd` population is exactly back at its baseline.
+//!
+//! Everything runs inside one `#[test]` on purpose: the descriptor table is
+//! process-global, and a concurrently running test opening so much as a
+//! socket would make the counts lie.
+
+#![cfg(target_os = "linux")]
+
+use c3sl::transport::inproc_reactor_pair_with;
+use c3sl::transport::reactor::{Event, NbTcp, Reactor, ReactorConfig, ReactorConn};
+use c3sl::transport::readiness::ReadinessBackend;
+use c3sl::transport::tcp::Tcp;
+use std::time::{Duration, Instant};
+
+/// Live descriptors right now.  The `read_dir` handle itself is open while
+/// counting, so the absolute number is one high — a constant bias that
+/// cancels in the baseline comparison.
+fn fd_count() -> usize {
+    std::fs::read_dir("/proc/self/fd")
+        .expect("procfs must be mounted on Linux")
+        .count()
+}
+
+/// Drive `r` until every connection has left, draining events.  The
+/// reactor is caller-driven (no background threads), so when this returns
+/// every per-edge descriptor the reactor held is closed and deregistered.
+fn drain_until_empty(r: &mut Reactor, events: &mut Vec<Event>) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while r.open_count() > 0 {
+        assert!(
+            Instant::now() < deadline,
+            "edges never drained — a leave went unnoticed by the reactor"
+        );
+        r.poll_wait(events, 10);
+        events.clear();
+    }
+}
+
+/// One churn round: `edges` clients join over real TCP, then immediately
+/// leave; the reactor must notice every hangup (EOF or reset — both are
+/// legitimate leaves) and close its side.  Dropping the reactor at the end
+/// releases the backend's own descriptors too.
+fn tcp_churn_round(backend: ReadinessBackend, edges: usize) {
+    let listener = Tcp::bind("127.0.0.1:0").expect("bind churn listener");
+    let addr = listener
+        .local_addr()
+        .expect("bound listener has an address")
+        .to_string();
+    let clients: Vec<_> = (0..edges)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // join, then leave by dropping the socket
+                let _edge = Tcp::connect(&addr).expect("churn client connect");
+            })
+        })
+        .collect();
+    let streams =
+        Tcp::accept_streams(&listener, edges, Duration::from_secs(30)).expect("accept churn edges");
+    let conns: Vec<Box<dyn ReactorConn>> = streams
+        .into_iter()
+        .map(|s| Box::new(NbTcp::from_stream(s).expect("nonblocking edge")) as Box<dyn ReactorConn>)
+        .collect();
+    let mut r = Reactor::new(conns, ReactorConfig { backend, ..ReactorConfig::default() });
+    assert_eq!(
+        r.backend(),
+        backend,
+        "the requested readiness backend must realize on Linux TCP edges"
+    );
+    let mut events = Vec::new();
+    drain_until_empty(&mut r, &mut events);
+    for c in clients {
+        c.join().expect("churn client thread");
+    }
+}
+
+/// In-proc doorbell churn: each edge is a doorbelled in-proc pair — the
+/// join allocates the doorbell descriptor, the leave (dropping the edge
+/// endpoint) must ring it, be observed, and release it.  This is the
+/// drop-order protocol `tests/interleave.rs` pins, exercised here for its
+/// descriptor lifecycle.
+fn doorbell_churn_round(backend: ReadinessBackend, edges: usize) {
+    for _ in 0..edges {
+        let (edge, nb) = inproc_reactor_pair_with(true);
+        let mut r = Reactor::new(
+            vec![Box::new(nb) as Box<dyn ReactorConn>],
+            ReactorConfig { backend, ..ReactorConfig::default() },
+        );
+        drop(edge); // the leave
+        let mut events = Vec::new();
+        drain_until_empty(&mut r, &mut events);
+    }
+}
+
+fn churn(backend: ReadinessBackend) {
+    // settle one-time allocations (DNS-free loopback still warms libc
+    // internals, thread stacks, etc.) before taking the baseline
+    tcp_churn_round(backend, 4);
+    doorbell_churn_round(backend, 4);
+    let baseline = fd_count();
+
+    const ROUNDS: usize = 8;
+    const EDGES: usize = 32; // 8 × 32 = 256 join/leave edges per backend
+    for _ in 0..ROUNDS {
+        tcp_churn_round(backend, EDGES);
+    }
+    doorbell_churn_round(backend, 64);
+
+    assert_eq!(
+        fd_count(),
+        baseline,
+        "descriptor leak: the {} backend did not return every fd after churn",
+        backend.name()
+    );
+}
+
+#[test]
+fn fd_population_returns_to_baseline_after_256_edge_churn_on_both_backends() {
+    churn(ReadinessBackend::Sweep);
+    churn(ReadinessBackend::Epoll);
+}
