@@ -1,0 +1,108 @@
+//! Bench: fault-injector overhead.  The chaos harness wraps every edge
+//! link in a `transport::faulty::FaultyLink`; for the parity scenarios to
+//! mean anything, a zero-impairment injector must be a near-free
+//! pass-through — same frames, same accounting, and throughput within
+//! noise of the bare transport.  This harness measures exactly that
+//! tax, plus a sanity venue showing a scripted latency really costs what
+//! the schedule says it does.
+//!
+//!   cargo bench --bench faulty_overhead
+//!   C3SL_BENCH_QUICK=1 cargo bench --bench faulty_overhead     # CI smoke
+//!
+//! Venues (ping-pong round trips of a Features/Gradients pair over the
+//! in-proc transport, feature rows 4 × D):
+//!   bare          — InProc directly
+//!   faulty-off    — InProc behind `Impairments::off()` both directions
+//!   faulty-250us  — InProc behind a fixed 250 µs tx latency (sanity: the
+//!                   measured per-frame cost must be at least the script)
+//!
+//! The bare vs faulty-off comparison prints the relative tax; it is
+//! advisory output, not a gate — the bench-regression gate tracks the
+//! codec and reactor venues, this one exists so a chaos-harness change
+//! that makes the pass-through expensive is visible immediately.
+
+use std::time::Instant;
+
+use c3sl::tensor::Tensor;
+use c3sl::transport::faulty::{FaultyLink, Impairments};
+use c3sl::transport::{inproc_pair, Msg, Transport};
+
+/// Drive `frames` Features→Gradients round trips through `tp` against an
+/// echo peer already running on the other end.  Returns wall seconds.
+fn pingpong(tp: &mut dyn Transport, frames: u64, d: usize) -> f64 {
+    let t0 = Instant::now();
+    for step in 0..frames {
+        tp.send(&Msg::Features { step, tensor: Tensor::zeros(&[4, d]) })
+            .expect("bench send");
+        match tp.recv().expect("bench recv") {
+            Msg::Gradients { step: got, .. } => assert_eq!(got, step),
+            other => panic!("echo peer answered {other:?}"),
+        }
+    }
+    tp.send(&Msg::Shutdown).expect("bench shutdown");
+    t0.elapsed().as_secs_f64()
+}
+
+/// One venue: spawn the echo peer, run the driver (optionally behind a
+/// `FaultyLink` with the given impairments), return seconds per frame.
+fn venue(frames: u64, d: usize, wrap: Option<(Impairments, Impairments)>) -> f64 {
+    let (mut a, mut b) = inproc_pair();
+    std::thread::scope(|sc| {
+        let echo = sc.spawn(move || loop {
+            match b.recv() {
+                Ok(Msg::Features { step, tensor }) => {
+                    b.send(&Msg::Gradients { step, tensor }).expect("echo send");
+                }
+                Ok(Msg::Shutdown) | Err(_) => break,
+                Ok(other) => panic!("echo peer got {other:?}"),
+            }
+        });
+        let secs = match wrap {
+            Some((tx, rx)) => {
+                let mut link = FaultyLink::new(a, 0xBE_AC4, tx, rx);
+                pingpong(&mut link, frames, d)
+            }
+            None => pingpong(&mut a, frames, d),
+        };
+        echo.join().expect("echo thread");
+        secs / frames as f64
+    })
+}
+
+fn main() {
+    let quick = std::env::var("C3SL_BENCH_QUICK").is_ok();
+    let frames: u64 = if quick { 2_000 } else { 20_000 };
+    let lat_frames: u64 = if quick { 100 } else { 400 };
+    let d = 256usize;
+
+    println!("# faulty-link overhead: {frames} Features/Gradients round trips, D={d}\n");
+    println!("{:<14} {:>12} {:>12}", "venue", "us/frame", "frames/s");
+
+    let report = |name: &str, spf: f64| {
+        println!("{:<14} {:>12.2} {:>12.0}", name, spf * 1e6, 1.0 / spf.max(1e-12));
+    };
+
+    // warm-up then measure, bare vs zero-impairment wrapper
+    venue(frames / 10, d, None);
+    let bare = venue(frames, d, None);
+    report("bare", bare);
+    let off = venue(frames, d, Some((Impairments::off(), Impairments::off())));
+    report("faulty-off", off);
+
+    // sanity: a scripted 250 µs tx latency must actually be paid per frame
+    let scripted = Impairments { latency_us: 250, ..Impairments::off() };
+    let lat = venue(lat_frames, d, Some((scripted, Impairments::off())));
+    report("faulty-250us", lat);
+    assert!(
+        lat >= 250e-6,
+        "scripted 250 us/frame latency not observed: {:.2} us/frame",
+        lat * 1e6
+    );
+
+    let tax = (off / bare.max(1e-12) - 1.0) * 100.0;
+    println!(
+        "\nzero-impairment tax: {tax:+.1}% per frame (advisory — the injector \
+         must stay a pass-through; see tests/chaos.rs parity scenarios for \
+         the correctness side of this claim)"
+    );
+}

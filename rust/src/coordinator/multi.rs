@@ -50,7 +50,7 @@
 //!   purely from the step number.
 
 use super::run_codec::RunCodec;
-use crate::hdc::keyring::{ClientCodec, EdgeShard, KeyRing};
+use crate::hdc::keyring::{ClientCodec, EdgeShard, KeyRing, RevocationList};
 use crate::hdc::{C3Scratch, FftBackend, C3};
 use crate::tensor::{Labels, Tensor};
 use crate::transport::reactor::{
@@ -64,7 +64,9 @@ use crate::{bail, ensure};
 use std::sync::{Arc, Mutex};
 
 /// Per-client report from the multi-edge cloud (its half of the link).
-#[derive(Clone, Debug)]
+/// `PartialEq` so the chaos harness can compare whole reports across runs
+/// (seed reproducibility) and across serving styles.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClientReport {
     /// Accept-order client index.
     pub client: usize,
@@ -113,8 +115,9 @@ impl MultiStats {
     }
 }
 
-/// Per-edge report (the edge's half of the link).
-#[derive(Clone, Debug)]
+/// Per-edge report (the edge's half of the link).  `PartialEq` so the
+/// chaos harness can assert byte-identical reports across runs and styles.
+#[derive(Clone, Debug, PartialEq)]
 pub struct EdgeReport {
     /// Training steps this edge ran.
     pub steps: u64,
@@ -176,6 +179,9 @@ struct GateState {
     last_step: Vec<Option<u64>>,
     /// The fresh-challenge stream.
     rng: Rng,
+    /// Claims refused by operator policy even with a valid proof
+    /// ([`ShardGate::revoke`]) — the per-epoch revocation list.
+    revoked: RevocationList,
 }
 
 /// Shared handshake state for one sharded serving session: the key ring the
@@ -204,6 +210,7 @@ impl ShardGate {
                 nonces: vec![None; clients],
                 last_step: vec![None; clients],
                 rng: Rng::new(nonce_seed()),
+                revoked: RevocationList::new(),
             }),
         }
     }
@@ -326,6 +333,16 @@ impl ShardGate {
         // against the still-stored nonce and squat the shard.  A fresh
         // claim must re-hello for a fresh challenge.
         st.nonces[client] = None;
+        // Policy gate AFTER proof verification and the nonce burn: a
+        // revoked (shard, epoch) pair is refused even when the edge holds
+        // perfectly valid key material — revocation is an operator
+        // decision, not a cryptographic failure — and the burned nonce
+        // means the refused proof cannot be replayed either.
+        ensure!(
+            !st.revoked.is_revoked(client_id, epoch),
+            "client {client}: shard {client_id} epoch {epoch} is revoked \
+             (valid proof refused by policy)"
+        );
         let slot = &mut st.claimed[client_id as usize];
         ensure!(
             slot.is_none(),
@@ -372,6 +389,56 @@ impl ShardGate {
                     None => step,
                 });
             }
+        }
+    }
+
+    /// Revoke shard `client_id`'s claim rights for key `epoch`: any later
+    /// [`ShardGate::admit`] announcing that (shard, epoch) pair is refused
+    /// even with a valid proof.  Scoped to one epoch — the shard claims
+    /// again once rotation moves it past the revoked epoch (or at an
+    /// earlier epoch still inside its admission window) — and irreversible,
+    /// mirroring [`RevocationList::revoke`].  Existing claims are NOT torn
+    /// down: revocation gates (re-)admission, and the serving loop owns
+    /// live connections.  Returns `true` if the pair was newly revoked,
+    /// `false` if it already was (or the gate lock is poisoned — the
+    /// session is already failing then).
+    pub fn revoke(&self, client_id: u64, epoch: u64) -> bool {
+        match self.state.lock() {
+            Ok(mut st) => st.revoked.revoke(client_id, epoch),
+            Err(_) => false,
+        }
+    }
+
+    /// Whether (shard `client_id`, key `epoch`) is on the revocation list.
+    /// `false` on a poisoned gate lock (best-effort, like `release`).
+    pub fn is_revoked(&self, client_id: u64, epoch: u64) -> bool {
+        match self.state.lock() {
+            Ok(st) => st.revoked.is_revoked(client_id, epoch),
+            Err(_) => false,
+        }
+    }
+
+    /// The accept-slot currently holding shard `client_id`'s claim, or
+    /// `None` when the shard is unclaimed (or the id is out of range, or
+    /// the gate lock is poisoned).  The chaos harness uses this for exact
+    /// final accounting: after a serving session every claim must be back
+    /// to `None`, however rudely its connection ended.
+    pub fn claimant(&self, client_id: u64) -> Option<usize> {
+        match self.state.lock() {
+            Ok(st) => st.claimed.get(client_id as usize).copied().flatten(),
+            Err(_) => None,
+        }
+    }
+
+    /// The re-claim watermark for shard `client_id`: the highest training
+    /// step it has uplinked, or `None` before its first observed step (or
+    /// for an out-of-range id / poisoned lock).  Read-side twin of
+    /// [`ShardGate::observe_step`], exposed so churn tests can assert the
+    /// exact resume cursor a reconnecting edge will be admitted at.
+    pub fn last_step(&self, client_id: u64) -> Option<u64> {
+        match self.state.lock() {
+            Ok(st) => st.last_step.get(client_id as usize).copied().flatten(),
+            Err(_) => None,
         }
     }
 }
@@ -1344,6 +1411,26 @@ pub fn run_edge(
     batch: usize,
     d: usize,
 ) -> Result<EdgeReport> {
+    run_edge_resumed(keys, transport, 0, steps, data_seed, batch, d)
+}
+
+/// [`run_edge`] resuming at training step `first_step` instead of 0 — a
+/// reconnecting edge picking its session back up where the previous
+/// connection died.  The sharded handshake announces (and proves) the key
+/// epoch of `first_step` rather than epoch 0, matching the gate's re-claim
+/// admission window, and step numbering continues from `first_step` so the
+/// cloud's per-shard watermark keeps advancing monotonically.  The probe
+/// state `z` is re-drawn from `data_seed` — the toy objective carries no
+/// cross-connection optimizer state, only the step cursor matters.
+pub fn run_edge_resumed(
+    keys: EdgeCodec<'_>,
+    transport: &mut dyn Transport,
+    first_step: u64,
+    steps: u64,
+    data_seed: u64,
+    batch: usize,
+    d: usize,
+) -> Result<EdgeReport> {
     ensure!(steps >= 1, "edge needs at least one step");
     let mut rng = Rng::new(data_seed);
     let mut zdata = vec![0.0f32; batch * d];
@@ -1361,7 +1448,7 @@ pub fn run_edge(
                 Msg::ShardChallenge { nonce } => nonce,
                 other => bail!("edge expected ShardChallenge, got {other:?}"),
             };
-            let epoch = shard.epoch_of_step(0);
+            let epoch = shard.epoch_of_step(first_step);
             transport.send(&Msg::KeyShard {
                 client_id: shard.client_id(),
                 epoch,
@@ -1381,7 +1468,7 @@ pub fn run_edge(
     // while still shrinking the probe loss measurably over a few steps.
     let lr = 0.005f32 * (batch * d) as f32;
     let (mut first_loss, mut last_loss) = (0.0f32, 0.0f32);
-    for step in 0..steps {
+    for step in first_step..first_step.saturating_add(steps) {
         let s = engine.encode(step, &z)?;
         transport.send(&Msg::Features { step, tensor: s })?;
         transport.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })?;
@@ -1407,7 +1494,7 @@ pub fn run_edge(
         );
         z = z.sub(&gz.scale(lr));
 
-        if step == 0 {
+        if step == first_step {
             first_loss = loss;
         }
         last_loss = loss;
@@ -1737,6 +1824,101 @@ mod tests {
 
         // out-of-range observations are a best-effort no-op, never a panic
         gate.observe_step(7, 100);
+    }
+
+    #[test]
+    fn revoked_claim_is_refused_despite_valid_proof_and_scoped_per_epoch() {
+        // rotation every 2 steps: epoch_of = 0,0,1,1,2,...
+        let ring = KeyRing::new(0x0E0C_4A13, 2, 64, 2);
+        let gate = ShardGate::new(ring, 2);
+
+        // revocation is an operator decision recorded ahead of the claim
+        assert!(gate.revoke(0, 0), "first revocation is new");
+        assert!(!gate.revoke(0, 0), "re-revoking the same pair is a no-op");
+        assert!(gate.is_revoked(0, 0));
+        assert!(!gate.is_revoked(0, 1), "scoped to the revoked epoch");
+        assert!(!gate.is_revoked(1, 0), "scoped to the revoked shard");
+
+        // the refused claim carries a VALID proof for the announced epoch —
+        // the rejection is policy, not cryptography, and says so
+        let n = gate.issue_nonce(0).unwrap();
+        let err = gate.admit(0, 0, 0, ring.shard_proof(0, 0, n)).unwrap_err();
+        assert!(err.to_string().contains("revoked"), "{err}");
+        // the verified proof still burned the challenge: a wire observer
+        // cannot replay the refused frame against a fresh policy decision
+        let err = gate.admit(0, 0, 0, ring.shard_proof(0, 0, n)).unwrap_err();
+        assert!(err.to_string().contains("no challenge issued"), "{err}");
+
+        // the sibling shard is untouched by shard 0's revocation
+        let n1 = gate.issue_nonce(1).unwrap();
+        assert!(gate.admit(1, 1, 0, ring.shard_proof(1, 0, n1)).is_ok());
+
+        // rotation moves shard 0 past the revoked epoch: once its watermark
+        // opens epoch 1 (steps 2..), the shard claims again — revocation
+        // retired the COMPROMISED epoch, not the shard
+        gate.observe_step(0, 2);
+        let n = gate.issue_nonce(0).unwrap();
+        assert!(gate.admit(0, 0, 1, ring.shard_proof(0, 1, n)).is_ok());
+    }
+
+    #[test]
+    fn claimant_and_last_step_expose_exact_gate_accounting() {
+        let ring = KeyRing::new(0x0E0C_4A14, 2, 64, 0);
+        let gate = ShardGate::new(ring, 1);
+        assert_eq!(gate.claimant(0), None);
+        assert_eq!(gate.claimant(9), None, "out of range reads as unclaimed");
+        assert_eq!(gate.last_step(0), None);
+        assert_eq!(gate.last_step(9), None);
+
+        let n = gate.issue_nonce(3).unwrap();
+        assert!(gate.admit(3, 0, 0, ring.shard_proof(0, 0, n)).is_ok());
+        assert_eq!(gate.claimant(0), Some(3), "claim records the accept slot");
+        gate.observe_step(0, 4);
+        gate.observe_step(0, 2);
+        assert_eq!(gate.last_step(0), Some(4), "watermark is monotonic");
+
+        gate.release(3, 0);
+        assert_eq!(gate.claimant(0), None, "release restores exact accounting");
+        assert_eq!(gate.last_step(0), Some(4), "the watermark outlives claims");
+    }
+
+    #[test]
+    fn run_edge_resumed_reclaims_at_the_resume_epoch_end_to_end() {
+        // rotation every 2 steps; the shard already trained steps 0..=3 in
+        // a previous (simulated) connection, so its resume cursor is step 4
+        // and the handshake must announce epoch_of(4) = 2, not epoch 0.
+        let ring = KeyRing::new(0x0E0C_4A15, 2, 64, 2);
+        let gate = ShardGate::new(ring, 1);
+        gate.observe_step(0, 3);
+
+        let (mut etp, ctp) = inproc_pair();
+        let (cloud, edge) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud = sc.spawn(move || {
+                let mut tp = ctp;
+                serve_one(CloudCodec::Sharded(gate), &mut tp, 0)
+            });
+            let edge = run_edge_resumed(
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(0),
+                    workers: 1,
+                    fft: FftBackend::default(),
+                },
+                &mut etp,
+                4,
+                2,
+                3,
+                4,
+                64,
+            )
+            .unwrap();
+            (cloud.join().unwrap().unwrap(), edge)
+        });
+        assert_eq!(cloud.shard, Some(0));
+        assert_eq!(cloud.steps, 2, "the resumed session served steps 4..6");
+        assert_eq!(edge.steps, 2);
+        assert_eq!(gate.last_step(0), Some(5), "the watermark kept advancing");
+        assert_eq!(gate.claimant(0), None, "clean shutdown released the claim");
     }
 
     #[test]

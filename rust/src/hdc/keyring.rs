@@ -447,11 +447,83 @@ impl ClientCodec {
     }
 }
 
+/// A per-epoch shard revocation list: the set of `(client_id, epoch)`
+/// claims the coordinator refuses **even when the possession proof
+/// verifies**.
+///
+/// Possession is necessary but not sufficient: a shard whose epoch is
+/// known-compromised (leaked sub-seed, device reported stolen, operator
+/// kill-switch) must stop being claimable *now*, without waiting for the
+/// rotation schedule to age the epoch out.  Revocation is deliberately
+/// scoped to single `(client_id, epoch)` pairs — rotation already bounds
+/// an epoch's useful life, so revoking the compromised epoch forces the
+/// client onto fresh key material (the next epoch) instead of banning the
+/// client id outright.
+///
+/// Policy lives with the caller: nothing in this crate auto-revokes.  The
+/// coordinator's `ShardGate` consults the list during admission (after
+/// proof verification, so a revoked claim also burns its challenge nonce
+/// like any other answered challenge) and exposes `revoke` as an operator
+/// action.
+#[derive(Clone, Debug, Default)]
+pub struct RevocationList {
+    revoked: std::collections::BTreeSet<(u64, u64)>,
+}
+
+impl RevocationList {
+    /// An empty list (nothing revoked).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Revoke the `(client_id, epoch)` claim.  Returns `true` if it was not
+    /// already revoked.  Irreversible by design: un-revoking would reopen
+    /// the compromised epoch, which is never the right remediation — rotate
+    /// forward instead.
+    pub fn revoke(&mut self, client_id: u64, epoch: u64) -> bool {
+        self.revoked.insert((client_id, epoch))
+    }
+
+    /// Whether the `(client_id, epoch)` claim is revoked.
+    pub fn is_revoked(&self, client_id: u64, epoch: u64) -> bool {
+        self.revoked.contains(&(client_id, epoch))
+    }
+
+    /// Number of revoked `(client_id, epoch)` pairs.
+    pub fn len(&self) -> usize {
+        self.revoked.len()
+    }
+
+    /// Whether nothing is revoked.
+    pub fn is_empty(&self) -> bool {
+        self.revoked.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tensor::Tensor;
     use crate::util::proptest::Prop;
+
+    #[test]
+    fn revocation_list_is_per_epoch_and_idempotent() {
+        let mut rl = RevocationList::new();
+        assert!(rl.is_empty());
+        assert!(!rl.is_revoked(3, 1));
+        assert!(rl.revoke(3, 1), "first revocation is new");
+        assert!(!rl.revoke(3, 1), "second revocation of the same pair is a no-op");
+        assert_eq!(rl.len(), 1);
+        // scoped to the exact (client, epoch) pair: neither the client's
+        // other epochs nor other clients at the same epoch are touched
+        assert!(rl.is_revoked(3, 1));
+        assert!(!rl.is_revoked(3, 0));
+        assert!(!rl.is_revoked(3, 2));
+        assert!(!rl.is_revoked(2, 1));
+        rl.revoke(3, 2);
+        assert_eq!(rl.len(), 2);
+        assert!(!rl.is_empty());
+    }
 
     #[test]
     fn subseeds_are_domain_separated() {

@@ -44,8 +44,14 @@ pub fn step_payload_bytes(spec: &CutSpec, r: usize, scheme: Scheme) -> (u64, u64
     };
     let t = Tensor::zeros(&[tensor_rows, tensor_cols]);
     let bytes = wire::tensor_msg_bytes(&t) as u64;
-    // uplink: features (+ labels, 4B each); downlink: gradients (same shape).
-    let label_bytes = 4 * b as u64 + 13; // labels message overhead
+    // uplink: features + labels; downlink: gradients (same tensor shape).
+    // Measure the labels frame by encoding it — the codec, not a formula,
+    // owns the framing overhead.
+    let label_bytes = wire::encode(&crate::transport::Msg::TrainLabels {
+        step: 0,
+        labels: crate::tensor::Labels(vec![0; b]),
+    })
+    .len() as u64;
     (bytes + label_bytes, bytes)
 }
 

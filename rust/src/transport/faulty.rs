@@ -1,0 +1,1036 @@
+//! Deterministic fault injection: adversarial network shapes for chaos tests.
+//!
+//! Every link this repo serves over in production crosses radio hops, load
+//! balancers and congested uplinks; every link the test suite exercised
+//! before this module crossed a clean mpsc channel or a loopback socket.
+//! [`FaultyLink`] (blocking [`Transport`]) and [`FaultyConn`] (nonblocking
+//! [`ReactorConn`]) wrap a real endpoint and impair it according to a
+//! per-direction [`Impairments`] matrix: latency/jitter, probabilistic and
+//! burst frame drop, detected corruption and truncation, mid-stream
+//! disconnects, slow-loris pacing, and bandwidth caps.
+//!
+//! # Determinism
+//!
+//! The entire fault schedule is a pure function of `(seed, matrix, frame
+//! index)`.  Both wrappers fork one [`Rng`] stream per direction with fixed
+//! tags, and every frame draws the same fixed sequence of rolls (drop,
+//! corrupt, truncate, truncation cut, jitter) whether or not the matching
+//! impairment is enabled — so enabling one impairment never shifts a
+//! sibling's schedule, and two links built from the same seed and matrix
+//! produce bit-identical [`FaultEvent`] logs.  The chaos harness
+//! (`util::chaos`) prints the seed on every run and embeds it in every
+//! assertion failure, so a red chaos test reproduces exactly.
+//!
+//! # Detected corruption, by design
+//!
+//! The wire format carries no checksum (the transport beneath it — TCP,
+//! in-process channels — is assumed byte-faithful), so a random payload bit
+//! flip could decode into a silently wrong tensor.  The injector's contract
+//! is corruption the decoder is *guaranteed* to detect, never silently
+//! decode: corruption smashes the frame's tag byte to a value `wire::decode`
+//! has no arm for ([`CORRUPT_TAG`]), and truncation cuts to a strict prefix,
+//! which the fully length-checked decoder always rejects (every field length
+//! is self-describing, so a prefix of a valid frame cannot decode).
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::reactor::{PollIn, ReactorConn};
+use super::{wire, LinkStats, Msg, Transport, TransportError};
+use crate::util::rng::Rng;
+
+/// The tag byte corruption smashes a frame's first byte to.  `wire::decode`
+/// has no arm for it (tags stop well below), so a corrupted frame always
+/// surfaces as a loud `WireError::UnknownTag` — never a silently wrong
+/// message.
+pub const CORRUPT_TAG: u8 = 0xEE;
+
+// ---------------------------------------------------------------------------
+// Pacing + frame-level access to the wrapped endpoint
+// ---------------------------------------------------------------------------
+
+/// Byte pacing for one frame: trickle the body in `chunk`-byte writes
+/// separated by `gap` — the slow-loris writer shape.  [`Pacing::NONE`]
+/// writes the frame in one piece.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pacing {
+    /// Bytes per write; 0 disables pacing.
+    pub chunk: usize,
+    /// Sleep between chunk writes.
+    pub gap: Duration,
+}
+
+impl Pacing {
+    /// No pacing: the frame goes out in one write.
+    pub const NONE: Pacing = Pacing { chunk: 0, gap: Duration::ZERO };
+
+    /// Whether this pacing actually trickles.
+    pub fn is_active(&self) -> bool {
+        self.chunk > 0 && !self.gap.is_zero()
+    }
+
+    /// Total trickle time for a `len`-byte body under this pacing.
+    pub fn total_delay(&self, len: usize) -> Duration {
+        if !self.is_active() || len == 0 {
+            return Duration::ZERO;
+        }
+        // a gap lands between consecutive chunks, not after the last one
+        let chunks = len.div_ceil(self.chunk);
+        self.gap * (chunks.saturating_sub(1)) as u32
+    }
+}
+
+/// Raw frame-level access to a blocking endpoint, the seam [`FaultyLink`]
+/// injects through.  [`Transport::send`] re-encodes a [`Msg`], so a
+/// corrupted or truncated frame could never pass through it; this trait
+/// moves already-encoded (and possibly impaired) frames while preserving
+/// the endpoint's exact byte accounting.
+pub trait FrameLink: Send {
+    /// Transmit one already-encoded frame, optionally trickled under
+    /// `pace`.  Accounting must match the endpoint's [`Transport::send`].
+    fn send_frame(&mut self, frame: Vec<u8>, pace: Pacing) -> Result<(), TransportError>;
+
+    /// Receive one raw frame without decoding it (length gate still
+    /// applies).  Accounting must match the endpoint's [`Transport::recv`].
+    fn recv_frame(&mut self) -> Result<Vec<u8>, TransportError>;
+
+    /// Announce a full frame but transmit only `part` of it (paced), then
+    /// sever the link: the slow-loris death.  The peer must observe a
+    /// partial frame it loudly rejects — byte-stream links ship the partial
+    /// body; message links (which cannot ship half a frame) just sever,
+    /// and the peer still observes a mid-protocol hangup.
+    fn send_partial_then_sever(&mut self, part: &[u8], total: usize, pace: Pacing);
+
+    /// Hard-close both directions of the link (mid-stream disconnect).
+    fn sever(&mut self);
+
+    /// The endpoint's shared byte counters.
+    fn link_stats(&self) -> Arc<LinkStats>;
+}
+
+impl FrameLink for super::InProc {
+    fn send_frame(&mut self, frame: Vec<u8>, pace: Pacing) -> Result<(), TransportError> {
+        // a message channel cannot trickle bytes; charge the whole trickle
+        // as one up-front delay so pacing still shapes time identically
+        let d = pace.total_delay(frame.len());
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+        self.stats.tx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(frame).map_err(|_| TransportError::Closed)?;
+        self.notify.wake();
+        Ok(())
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, TransportError> {
+        let frame = self.rx.recv().map_err(|_| TransportError::Closed)?;
+        self.stats.rx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(frame)
+    }
+
+    fn send_partial_then_sever(&mut self, _part: &[u8], _total: usize, pace: Pacing) {
+        // no partial frames over a channel; the hangup is the signal
+        if pace.is_active() {
+            std::thread::sleep(pace.gap);
+        }
+        self.sever();
+    }
+
+    fn sever(&mut self) {
+        // mirror of InProc::drop: disconnect FIRST, then ring, so a reactor
+        // peer's clear-then-recheck observes the hangup (see that comment)
+        let (dummy, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dummy));
+        self.notify.wake();
+    }
+
+    fn link_stats(&self) -> Arc<LinkStats> {
+        self.stats.clone()
+    }
+}
+
+impl FrameLink for super::tcp::Tcp {
+    fn send_frame(&mut self, frame: Vec<u8>, pace: Pacing) -> Result<(), TransportError> {
+        self.write_frame_paced(&frame, pace.chunk, pace.gap)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, TransportError> {
+        self.read_frame_raw()
+    }
+
+    fn send_partial_then_sever(&mut self, part: &[u8], total: usize, pace: Pacing) {
+        self.write_partial_then_sever(part, total, pace.chunk, pace.gap);
+    }
+
+    fn sever(&mut self) {
+        self.sever_stream();
+    }
+
+    fn link_stats(&self) -> Arc<LinkStats> {
+        self.stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The impairment matrix
+// ---------------------------------------------------------------------------
+
+/// A contiguous run of dropped frames: indices `first .. first + len`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Burst {
+    /// First frame index the burst swallows.
+    pub first: u64,
+    /// Number of consecutive frames dropped.
+    pub len: u64,
+}
+
+impl Burst {
+    fn covers(&self, idx: u64) -> bool {
+        idx >= self.first && idx - self.first < self.len
+    }
+}
+
+/// One direction's impairment matrix.  `Default` is all-off: a wrapper
+/// carrying two default matrices is byte- and accounting-identical to the
+/// bare endpoint (the zero-impairment parity tests pin this).
+///
+/// Frame indices count the frames *this wrapper carries in this direction*,
+/// starting at 0 — e.g. on a sharded edge uplink, frame 0 is `ShardHello`,
+/// 1 is `KeyShard`, and training step `k` sends frames `2+2k` (Features)
+/// and `3+2k` (TrainLabels).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Impairments {
+    /// Fixed added latency per frame, microseconds.
+    pub latency_us: u64,
+    /// Uniform extra jitter per frame in `[0, jitter_us]`, microseconds.
+    pub jitter_us: u64,
+    /// Probability each frame is dropped (lost in flight, no error).
+    pub drop_prob: f64,
+    /// Deterministic burst drop on top of `drop_prob`.
+    pub burst_drop: Option<Burst>,
+    /// Probability each frame's tag byte is smashed to [`CORRUPT_TAG`].
+    pub corrupt_prob: f64,
+    /// Deterministically corrupt this frame index.
+    pub corrupt_at: Option<u64>,
+    /// Probability each frame is cut to a strict (undecodable) prefix.
+    pub truncate_prob: f64,
+    /// Deterministically truncate this frame index.
+    pub truncate_at: Option<u64>,
+    /// Sever the link instead of carrying this frame index.
+    pub disconnect_at: Option<u64>,
+    /// Trickle roughly half of this frame index, then sever mid-frame:
+    /// the slow-loris death (tx direction; on rx it severs like
+    /// `disconnect_at`).
+    pub die_mid_frame: Option<u64>,
+    /// Serialization-delay cap in bits/second (0 = unlimited): each frame
+    /// is delayed by `wire_bytes * 8e6 / bandwidth_bps` microseconds.
+    pub bandwidth_bps: u64,
+    /// Slow-loris write pacing: bytes per write (0 = off).
+    pub stall_chunk: usize,
+    /// Slow-loris write pacing: microseconds between chunk writes.
+    pub stall_gap_us: u64,
+}
+
+impl Impairments {
+    /// The all-off matrix (same as `Default`).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Whether every impairment is disabled.
+    pub fn is_off(&self) -> bool {
+        *self == Self::default()
+    }
+
+    fn pacing(&self) -> Pacing {
+        if self.stall_chunk > 0 && self.stall_gap_us > 0 {
+            Pacing {
+                chunk: self.stall_chunk,
+                gap: Duration::from_micros(self.stall_gap_us),
+            }
+        } else {
+            Pacing::NONE
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule + recording
+// ---------------------------------------------------------------------------
+
+/// Which half of the link an event happened on, from the wrapper's own
+/// perspective (`Tx` = frames this endpoint sends).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// The wrapper's outbound direction.
+    Tx,
+    /// The wrapper's inbound direction.
+    Rx,
+}
+
+/// What the injector did to one frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Carried intact after `delay_us` microseconds of injected delay.
+    Delivered {
+        /// Injected latency + jitter + serialization delay, microseconds.
+        delay_us: u64,
+    },
+    /// Lost in flight: the sender observes success, the peer nothing.
+    Dropped,
+    /// Tag byte smashed to [`CORRUPT_TAG`]; the peer's decode fails loudly.
+    Corrupted,
+    /// Cut to a strict prefix; the peer's decode fails loudly.
+    Truncated {
+        /// Bytes kept (0 ≤ kept < original length).
+        kept: usize,
+    },
+    /// Link severed instead of carrying the frame.
+    Disconnected,
+    /// Partial frame trickled, then the link severed mid-frame.
+    DiedMidFrame {
+        /// Body bytes actually shipped before the cut.
+        sent: usize,
+    },
+}
+
+/// One entry of a fault schedule log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Direction the frame was traveling.
+    pub dir: Dir,
+    /// Frame index within that direction (0-based).
+    pub frame: u64,
+    /// What the injector did to it.
+    pub action: FaultAction,
+}
+
+/// Shared, thread-safe log of every decision an injector made — the
+/// artifact the seed-reproducibility tests compare bit-for-bit.
+#[derive(Debug, Default)]
+pub struct FaultRecorder {
+    events: Mutex<Vec<FaultEvent>>,
+}
+
+impl FaultRecorder {
+    /// Snapshot of all recorded events, in decision order.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.events.lock().map(|e| e.clone()).unwrap_or_default()
+    }
+
+    /// Count of events in direction `dir` matching `pred`.
+    pub fn count(&self, dir: Dir, pred: impl Fn(&FaultAction) -> bool) -> usize {
+        self.events()
+            .iter()
+            .filter(|e| e.dir == dir && pred(&e.action))
+            .count()
+    }
+
+    /// Dropped-frame count in direction `dir`.
+    pub fn dropped(&self, dir: Dir) -> usize {
+        self.count(dir, |a| matches!(a, FaultAction::Dropped))
+    }
+
+    fn push(&self, dir: Dir, frame: u64, action: FaultAction) {
+        if let Ok(mut e) = self.events.lock() {
+            e.push(FaultEvent { dir, frame, action });
+        }
+    }
+}
+
+/// The scheduled treatment of one frame, decided before any I/O.
+enum Decision {
+    Disconnect,
+    DieMidFrame,
+    Drop,
+    Deliver { corrupt: bool, truncate: Option<usize>, delay_us: u64 },
+}
+
+/// One direction's live schedule: matrix + RNG stream + frame counter.
+struct DirState {
+    imp: Impairments,
+    rng: Rng,
+    frame: u64,
+}
+
+impl DirState {
+    fn new(imp: Impairments, rng: Rng) -> Self {
+        DirState { imp, rng, frame: 0 }
+    }
+
+    /// Decide frame `self.frame`'s fate and advance the counter.  The roll
+    /// sequence is FIXED (drop, corrupt, truncate, cut, jitter — always all
+    /// five) so the decision stream is a pure function of (seed, matrix,
+    /// index) and enabling one impairment never shifts another's schedule.
+    fn decide(&mut self, len: usize) -> (u64, Decision) {
+        let idx = self.frame;
+        self.frame += 1;
+        let drop_roll = self.rng.uniform();
+        let corrupt_roll = self.rng.uniform();
+        let trunc_roll = self.rng.uniform();
+        let cut = if len > 1 { 1 + self.rng.below(len - 1) } else { 0 };
+        let jitter = if self.imp.jitter_us > 0 {
+            self.rng.below(self.imp.jitter_us as usize + 1) as u64
+        } else {
+            self.rng.next_u64();
+            0
+        };
+        if self.imp.disconnect_at == Some(idx) {
+            return (idx, Decision::Disconnect);
+        }
+        if self.imp.die_mid_frame == Some(idx) {
+            return (idx, Decision::DieMidFrame);
+        }
+        let burst = self.imp.burst_drop.map(|b| b.covers(idx)).unwrap_or(false);
+        if burst || drop_roll < self.imp.drop_prob {
+            return (idx, Decision::Drop);
+        }
+        let corrupt =
+            corrupt_roll < self.imp.corrupt_prob || self.imp.corrupt_at == Some(idx);
+        let truncate = (trunc_roll < self.imp.truncate_prob
+            || self.imp.truncate_at == Some(idx))
+        .then_some(cut);
+        let mut delay_us = self.imp.latency_us + jitter;
+        if self.imp.bandwidth_bps > 0 {
+            // 4-byte prefix included: serialization delay charges wire bytes
+            let bits = (len as u64 + 4).saturating_mul(8_000_000);
+            delay_us += bits / self.imp.bandwidth_bps;
+        }
+        (idx, Decision::Deliver { corrupt, truncate, delay_us })
+    }
+}
+
+/// Apply a deliver-decision's mutation to the frame, recording exactly one
+/// event.  Truncation wins over corruption when both trigger (one frame,
+/// one observable fault).
+fn mutate_frame(
+    frame: &mut Vec<u8>,
+    corrupt: bool,
+    truncate: Option<usize>,
+    delay_us: u64,
+    rec: &FaultRecorder,
+    dir: Dir,
+    idx: u64,
+) {
+    if let Some(kept) = truncate {
+        frame.truncate(kept);
+        rec.push(dir, idx, FaultAction::Truncated { kept });
+    } else if corrupt {
+        if let Some(b) = frame.first_mut() {
+            *b = CORRUPT_TAG;
+        }
+        rec.push(dir, idx, FaultAction::Corrupted);
+    } else {
+        rec.push(dir, idx, FaultAction::Delivered { delay_us });
+    }
+}
+
+fn sleep_us(us: u64) {
+    if us > 0 {
+        std::thread::sleep(Duration::from_micros(us));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultyLink: blocking Transport wrapper
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault-injecting wrapper around a blocking endpoint.
+///
+/// With both matrices at [`Impairments::off`] it is byte- and
+/// accounting-identical to the bare endpoint.  Temporal impairments
+/// (latency, jitter, bandwidth, pacing) sleep on the calling thread, which
+/// is exactly where a blocking edge would feel them.
+pub struct FaultyLink<T: FrameLink> {
+    inner: T,
+    tx: DirState,
+    rx: DirState,
+    rec: Arc<FaultRecorder>,
+    /// Severed by a disconnect/die impairment; all further I/O is `Closed`.
+    dead: bool,
+}
+
+/// Fixed fork tags so the two direction streams are independent of each
+/// other's traffic volume (and shared with [`FaultyConn`], so a blocking
+/// and a reactor wrapper built from the same seed schedule identically).
+const TX_STREAM: u64 = 0x74_78; // "tx"
+const RX_STREAM: u64 = 0x72_78; // "rx"
+
+impl<T: FrameLink> FaultyLink<T> {
+    /// Wrap `inner`, deriving both direction schedules from `seed`.
+    pub fn new(inner: T, seed: u64, tx: Impairments, rx: Impairments) -> Self {
+        let mut root = Rng::new(seed);
+        let txr = root.fork(TX_STREAM);
+        let rxr = root.fork(RX_STREAM);
+        FaultyLink {
+            inner,
+            tx: DirState::new(tx, txr),
+            rx: DirState::new(rx, rxr),
+            rec: Arc::new(FaultRecorder::default()),
+            dead: false,
+        }
+    }
+
+    /// The shared fault-schedule log for this link.
+    pub fn recorder(&self) -> Arc<FaultRecorder> {
+        self.rec.clone()
+    }
+}
+
+impl<T: FrameLink> Transport for FaultyLink<T> {
+    fn send(&mut self, msg: &Msg) -> Result<(), TransportError> {
+        if self.dead {
+            return Err(TransportError::Closed);
+        }
+        let mut frame = wire::encode(msg);
+        let (idx, decision) = self.tx.decide(frame.len());
+        match decision {
+            Decision::Disconnect => {
+                self.rec.push(Dir::Tx, idx, FaultAction::Disconnected);
+                self.inner.sever();
+                self.dead = true;
+                Err(TransportError::Closed)
+            }
+            Decision::DieMidFrame => {
+                let sent = frame.len() / 2;
+                self.rec.push(Dir::Tx, idx, FaultAction::DiedMidFrame { sent });
+                let pace = self.tx.imp.pacing();
+                self.inner.send_partial_then_sever(&frame[..sent], frame.len(), pace);
+                self.dead = true;
+                Err(TransportError::Closed)
+            }
+            Decision::Drop => {
+                // lossy-network semantics: the frame vanishes in flight, the
+                // sender observes success.  Not charged to tx stats — it
+                // never reached the wire.
+                self.rec.push(Dir::Tx, idx, FaultAction::Dropped);
+                Ok(())
+            }
+            Decision::Deliver { corrupt, truncate, delay_us } => {
+                sleep_us(delay_us);
+                mutate_frame(
+                    &mut frame, corrupt, truncate, delay_us, &self.rec, Dir::Tx, idx,
+                );
+                self.inner.send_frame(frame, self.tx.imp.pacing())
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Msg, TransportError> {
+        if self.dead {
+            return Err(TransportError::Closed);
+        }
+        loop {
+            let mut frame = self.inner.recv_frame()?;
+            let (idx, decision) = self.rx.decide(frame.len());
+            match decision {
+                Decision::Disconnect | Decision::DieMidFrame => {
+                    self.rec.push(Dir::Rx, idx, FaultAction::Disconnected);
+                    self.inner.sever();
+                    self.dead = true;
+                    return Err(TransportError::Closed);
+                }
+                Decision::Drop => {
+                    // the frame was lost in flight: keep waiting for the next
+                    self.rec.push(Dir::Rx, idx, FaultAction::Dropped);
+                    continue;
+                }
+                Decision::Deliver { corrupt, truncate, delay_us } => {
+                    sleep_us(delay_us);
+                    mutate_frame(
+                        &mut frame, corrupt, truncate, delay_us, &self.rec, Dir::Rx, idx,
+                    );
+                    return Ok(wire::decode(&frame)?);
+                }
+            }
+        }
+    }
+
+    fn stats(&self) -> Arc<LinkStats> {
+        self.inner.link_stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultyConn: nonblocking ReactorConn wrapper
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault-injecting wrapper around a reactor connection.
+///
+/// A reactor connection must never sleep on the I/O thread, so temporal
+/// impairments use *deadline staging* instead: delayed inbound frames are
+/// held in a queue and released once due ([`ReactorConn::poll_recv`]
+/// reports `Idle` meanwhile), and delayed outbound frames stage before
+/// entering the inner outbox (counting toward [`ReactorConn::pending_out`],
+/// so they engage the reactor's outbox backpressure like a genuinely slow
+/// writer).  Under the epoll backend a staged deadline with no other
+/// traffic is noticed at worst one idle tick later (`EPOLL_IDLE_TIMEOUT_MS`
+/// bounds it); instant impairments (drop, corrupt, truncate, disconnect)
+/// have no such latency on either backend.
+pub struct FaultyConn<C: ReactorConn> {
+    inner: C,
+    tx: DirState,
+    rx: DirState,
+    rec: Arc<FaultRecorder>,
+    /// Outbound frames impaired-and-accepted but not yet due to enter the
+    /// inner outbox (latency/bandwidth staging), with their release times.
+    staged_out: VecDeque<(Instant, Vec<u8>)>,
+    /// Inbound frames pulled from the inner connection but not yet due for
+    /// delivery (latency/jitter staging).
+    held_in: VecDeque<(Instant, Vec<u8>)>,
+    dead: bool,
+}
+
+impl<C: ReactorConn> FaultyConn<C> {
+    /// Wrap `inner`, deriving both direction schedules from `seed`.  The
+    /// stream derivation matches [`FaultyLink::new`], so the same seed and
+    /// matrix schedule identically on both wrappers.
+    pub fn new(inner: C, seed: u64, tx: Impairments, rx: Impairments) -> Self {
+        let mut root = Rng::new(seed);
+        let txr = root.fork(TX_STREAM);
+        let rxr = root.fork(RX_STREAM);
+        FaultyConn {
+            inner,
+            tx: DirState::new(tx, txr),
+            rx: DirState::new(rx, rxr),
+            rec: Arc::new(FaultRecorder::default()),
+            staged_out: VecDeque::new(),
+            held_in: VecDeque::new(),
+            dead: false,
+        }
+    }
+
+    /// The shared fault-schedule log for this connection.
+    pub fn recorder(&self) -> Arc<FaultRecorder> {
+        self.rec.clone()
+    }
+}
+
+impl<C: ReactorConn> ReactorConn for FaultyConn<C> {
+    fn poll_recv(&mut self) -> Result<PollIn, TransportError> {
+        if self.dead {
+            return Ok(PollIn::Closed);
+        }
+        // release due held frames first, preserving arrival order; a head
+        // frame that is not yet due blocks the queue (order over speed)
+        if let Some((due, _)) = self.held_in.front() {
+            if *due <= Instant::now() {
+                if let Some((_, frame)) = self.held_in.pop_front() {
+                    return Ok(PollIn::Frame(frame));
+                }
+            }
+            return Ok(PollIn::Idle);
+        }
+        loop {
+            match self.inner.poll_recv()? {
+                PollIn::Frame(mut frame) => {
+                    let (idx, decision) = self.rx.decide(frame.len());
+                    match decision {
+                        Decision::Disconnect | Decision::DieMidFrame => {
+                            self.rec.push(Dir::Rx, idx, FaultAction::Disconnected);
+                            self.dead = true;
+                            return Ok(PollIn::Closed);
+                        }
+                        Decision::Drop => {
+                            self.rec.push(Dir::Rx, idx, FaultAction::Dropped);
+                            continue;
+                        }
+                        Decision::Deliver { corrupt, truncate, delay_us } => {
+                            mutate_frame(
+                                &mut frame, corrupt, truncate, delay_us, &self.rec,
+                                Dir::Rx, idx,
+                            );
+                            if delay_us == 0 {
+                                return Ok(PollIn::Frame(frame));
+                            }
+                            let due =
+                                Instant::now() + Duration::from_micros(delay_us);
+                            self.held_in.push_back((due, frame));
+                            return Ok(PollIn::Idle);
+                        }
+                    }
+                }
+                other => return Ok(other),
+            }
+        }
+    }
+
+    fn queue_frame(&mut self, frame: Vec<u8>) {
+        if self.dead {
+            return;
+        }
+        let mut frame = frame;
+        let (idx, decision) = self.tx.decide(frame.len());
+        match decision {
+            Decision::Disconnect | Decision::DieMidFrame => {
+                self.rec.push(Dir::Tx, idx, FaultAction::Disconnected);
+                self.dead = true;
+            }
+            Decision::Drop => {
+                self.rec.push(Dir::Tx, idx, FaultAction::Dropped);
+            }
+            Decision::Deliver { corrupt, truncate, delay_us } => {
+                mutate_frame(
+                    &mut frame, corrupt, truncate, delay_us, &self.rec, Dir::Tx, idx,
+                );
+                if delay_us == 0 && self.staged_out.is_empty() {
+                    self.inner.queue_frame(frame);
+                } else {
+                    let due = Instant::now() + Duration::from_micros(delay_us);
+                    self.staged_out.push_back((due, frame));
+                }
+            }
+        }
+    }
+
+    fn poll_send(&mut self) -> Result<bool, TransportError> {
+        if self.dead {
+            // a severed peer accepts nothing more; the hangup surfaces via
+            // poll_recv's Closed, matching a real half-dead socket
+            return Ok(true);
+        }
+        let now = Instant::now();
+        while let Some((due, _)) = self.staged_out.front() {
+            if *due > now {
+                break;
+            }
+            if let Some((_, frame)) = self.staged_out.pop_front() {
+                self.inner.queue_frame(frame);
+            }
+        }
+        let drained = self.inner.poll_send()?;
+        Ok(drained && self.staged_out.is_empty())
+    }
+
+    fn pending_out(&self) -> usize {
+        // staged frames count: a slow link's backlog must engage the
+        // reactor's outbox bound exactly like an unwritable socket's
+        self.staged_out.len() + self.inner.pending_out()
+    }
+
+    fn stats(&self) -> Arc<LinkStats> {
+        self.inner.stats()
+    }
+
+    fn readiness_fd(&self) -> Option<std::os::fd::RawFd> {
+        self.inner.readiness_fd()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Labels, Tensor};
+    use crate::transport::{inproc_pair, inproc_reactor_pair_with};
+
+    fn feat(step: u64) -> Msg {
+        Msg::Features {
+            step,
+            tensor: Tensor::from_vec(&[2, 4], (0..8).map(|i| i as f32).collect()),
+        }
+    }
+
+    fn menu() -> Vec<Msg> {
+        vec![
+            feat(0),
+            Msg::TrainLabels { step: 0, labels: Labels(vec![1, 2]) },
+            Msg::Gradients { step: 0, tensor: Tensor::zeros(&[2, 4]) },
+            Msg::StepStats { step: 0, loss: 0.5, ncorrect: 1.0 },
+            Msg::ShardHello,
+            Msg::KeyShard { client_id: 1, epoch: 0, proof: 7 },
+            Msg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn zero_impairment_parity_with_bare_inproc() {
+        // identical traffic over a bare pair and an all-off faulty pair:
+        // every decoded message and every stats counter must match
+        let (mut ba, mut bb) = inproc_pair();
+        let (fa, fb) = inproc_pair();
+        let mut fa = FaultyLink::new(fa, 1, Impairments::off(), Impairments::off());
+        let mut fb = FaultyLink::new(fb, 2, Impairments::off(), Impairments::off());
+        for m in menu() {
+            ba.send(&m).unwrap();
+            fa.send(&m).unwrap();
+            assert_eq!(bb.recv().unwrap(), m);
+            assert_eq!(fb.recv().unwrap(), m);
+            bb.send(&m).unwrap();
+            fb.send(&m).unwrap();
+            assert_eq!(ba.recv().unwrap(), m);
+            assert_eq!(fa.recv().unwrap(), m);
+        }
+        for (b, f) in [(ba.stats(), fa.stats()), (bb.stats(), fb.stats())] {
+            assert_eq!(b.tx(), f.tx());
+            assert_eq!(b.rx(), f.rx());
+            assert_eq!(
+                b.tx_msgs.load(Ordering::Relaxed),
+                f.tx_msgs.load(Ordering::Relaxed)
+            );
+            assert_eq!(
+                b.rx_msgs.load(Ordering::Relaxed),
+                f.rx_msgs.load(Ordering::Relaxed)
+            );
+        }
+        // and the schedule log records pure deliveries with zero delay
+        assert!(fa
+            .recorder()
+            .events()
+            .iter()
+            .all(|e| e.action == FaultAction::Delivered { delay_us: 0 }));
+    }
+
+    #[test]
+    fn drop_count_matches_schedule_and_replays_bit_for_bit() {
+        let run = |seed: u64| {
+            let (a, b) = inproc_pair();
+            let imp = Impairments { drop_prob: 0.5, ..Impairments::off() };
+            let mut a = FaultyLink::new(a, seed, imp, Impairments::off());
+            let mut b = b;
+            for i in 0..40 {
+                a.send(&feat(i)).unwrap();
+            }
+            drop(a.inner); // hang up so the receive loop terminates
+            let mut got = 0;
+            while b.recv().is_ok() {
+                got += 1;
+            }
+            (got, a.rec.events())
+        };
+        let (got1, log1) = run(0xC3);
+        let (got2, log2) = run(0xC3);
+        // same seed → bit-identical schedule, and delivered + dropped = sent
+        assert_eq!(log1, log2);
+        assert_eq!(got1, got2);
+        let dropped =
+            log1.iter().filter(|e| e.action == FaultAction::Dropped).count();
+        assert_eq!(got1 + dropped, 40);
+        assert!(dropped > 0, "p=0.5 over 40 frames never dropping is ~1e-12");
+    }
+
+    #[test]
+    fn burst_drop_swallows_exactly_the_scheduled_indices() {
+        let (a, b) = inproc_pair();
+        let imp = Impairments {
+            burst_drop: Some(Burst { first: 2, len: 3 }),
+            ..Impairments::off()
+        };
+        let mut a = FaultyLink::new(a, 9, imp, Impairments::off());
+        let mut b = b;
+        for i in 0..8 {
+            a.send(&feat(i)).unwrap();
+        }
+        let dropped: Vec<u64> = a
+            .recorder()
+            .events()
+            .iter()
+            .filter(|e| e.action == FaultAction::Dropped)
+            .map(|e| e.frame)
+            .collect();
+        assert_eq!(dropped, vec![2, 3, 4]);
+        // the peer sees exactly the surviving steps, in order
+        for step in [0u64, 1, 5, 6, 7] {
+            assert_eq!(b.recv().unwrap(), feat(step));
+        }
+    }
+
+    #[test]
+    fn truncation_is_always_a_loud_transport_error() {
+        // property: whatever the message and wherever the cut lands, a
+        // truncated frame NEVER decodes — the peer errors loudly
+        crate::util::proptest::Prop::new("truncate-loud", 40).run(|g| {
+            let msg = match g.usize_in(0, 3) {
+                0 => feat(g.usize_in(0, 100) as u64),
+                1 => Msg::TrainLabels {
+                    step: 1,
+                    labels: Labels((0..g.usize_in(1, 9)).map(|i| i as i32).collect()),
+                },
+                2 => Msg::KeySeed { seed: 0xAB },
+                _ => Msg::Shutdown,
+            };
+            let (a, b) = inproc_pair();
+            let imp = Impairments { truncate_prob: 1.0, ..Impairments::off() };
+            let mut a =
+                FaultyLink::new(a, g.usize_in(0, 1 << 20) as u64, imp, Impairments::off());
+            let mut b = b;
+            a.send(&msg).unwrap();
+            match b.recv() {
+                Err(TransportError::Wire(_)) | Err(TransportError::EmptyFrame) => {}
+                other => panic!("truncated frame must not decode: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn corruption_is_always_detected_never_misdecoded() {
+        let (a, b) = inproc_pair();
+        let imp = Impairments { corrupt_at: Some(0), ..Impairments::off() };
+        let mut a = FaultyLink::new(a, 5, imp, Impairments::off());
+        let mut b = b;
+        a.send(&feat(3)).unwrap();
+        match b.recv() {
+            Err(TransportError::Wire(wire::WireError::UnknownTag(t))) => {
+                assert_eq!(t, CORRUPT_TAG)
+            }
+            other => panic!("corrupted frame must fail decode, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disconnect_at_severs_both_ways() {
+        let (a, b) = inproc_pair();
+        let imp = Impairments { disconnect_at: Some(2), ..Impairments::off() };
+        let mut a = FaultyLink::new(a, 5, imp, Impairments::off());
+        let mut b = b;
+        a.send(&feat(0)).unwrap();
+        a.send(&feat(1)).unwrap();
+        assert!(matches!(a.send(&feat(2)), Err(TransportError::Closed)));
+        // the wrapper is dead for every later call too
+        assert!(matches!(a.send(&feat(3)), Err(TransportError::Closed)));
+        assert!(matches!(a.recv(), Err(TransportError::Closed)));
+        // the peer drains what was carried, then observes the hangup
+        assert_eq!(b.recv().unwrap(), feat(0));
+        assert_eq!(b.recv().unwrap(), feat(1));
+        assert!(matches!(b.recv(), Err(TransportError::Closed)));
+    }
+
+    #[test]
+    fn rx_impairments_apply_on_the_receive_side() {
+        let (a, b) = inproc_pair();
+        let imp = Impairments {
+            burst_drop: Some(Burst { first: 0, len: 1 }),
+            corrupt_at: Some(1),
+            ..Impairments::off()
+        };
+        let mut a = a;
+        let mut b = FaultyLink::new(b, 5, Impairments::off(), imp);
+        a.send(&feat(0)).unwrap(); // dropped in flight (rx frame 0)
+        a.send(&feat(1)).unwrap(); // corrupted (rx frame 1)
+        a.send(&feat(2)).unwrap(); // delivered (rx frame 2)
+        assert!(matches!(b.recv(), Err(TransportError::Wire(_))));
+        assert_eq!(b.recv().unwrap(), feat(2));
+        assert_eq!(b.recorder().dropped(Dir::Rx), 1);
+    }
+
+    #[test]
+    fn pacing_charges_trickle_time() {
+        assert_eq!(Pacing::NONE.total_delay(1000), Duration::ZERO);
+        let p = Pacing { chunk: 64, gap: Duration::from_millis(1) };
+        // 1000 bytes → 16 chunks → 15 gaps
+        assert_eq!(p.total_delay(1000), Duration::from_millis(15));
+        assert_eq!(p.total_delay(0), Duration::ZERO);
+        assert_eq!(p.total_delay(64), Duration::ZERO);
+    }
+
+    #[test]
+    fn faulty_conn_corrupts_and_drops_on_poll_recv() {
+        // edge (blocking InProc) → cloud (FaultyConn over NbInProc): rx
+        // drop swallows frame 0, rx corruption smashes frame 1 — and the
+        // corrupted frame is returned for the PUMP to detect (the reactor's
+        // decode is the detection point), never silently fixed up
+        let (mut edge, conn) = inproc_reactor_pair_with(false);
+        let imp = Impairments {
+            burst_drop: Some(Burst { first: 0, len: 1 }),
+            corrupt_at: Some(1),
+            ..Impairments::off()
+        };
+        let mut conn = FaultyConn::new(conn, 11, Impairments::off(), imp);
+        edge.send(&feat(0)).unwrap();
+        edge.send(&feat(1)).unwrap();
+        edge.send(&feat(2)).unwrap();
+        // frame 0 dropped inside the poll loop; frame 1 surfaces corrupted
+        let got = match conn.poll_recv().unwrap() {
+            PollIn::Frame(f) => f,
+            other => panic!("expected corrupted frame, got {other:?}"),
+        };
+        assert_eq!(got[0], CORRUPT_TAG);
+        assert!(wire::decode(&got).is_err(), "corruption must be detectable");
+        // frame 2 intact
+        match conn.poll_recv().unwrap() {
+            PollIn::Frame(f) => assert_eq!(wire::decode(&f).unwrap(), feat(2)),
+            other => panic!("expected intact frame, got {other:?}"),
+        }
+        assert_eq!(conn.recorder().dropped(Dir::Rx), 1);
+    }
+
+    #[test]
+    fn faulty_conn_stages_delayed_frames_without_blocking() {
+        let (mut edge, conn) = inproc_reactor_pair_with(false);
+        let imp = Impairments { latency_us: 20_000, ..Impairments::off() };
+        let mut conn = FaultyConn::new(conn, 3, Impairments::off(), imp);
+        edge.send(&feat(0)).unwrap();
+        // the frame is pulled and staged, not delivered: Idle, immediately
+        let t0 = Instant::now();
+        assert!(matches!(conn.poll_recv().unwrap(), PollIn::Idle));
+        assert!(
+            t0.elapsed() < Duration::from_millis(15),
+            "poll_recv must never sleep on the I/O thread"
+        );
+        // once due, the frame is released intact
+        std::thread::sleep(Duration::from_millis(25));
+        match conn.poll_recv().unwrap() {
+            PollIn::Frame(f) => assert_eq!(wire::decode(&f).unwrap(), feat(0)),
+            other => panic!("expected staged frame after its deadline, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn faulty_conn_tx_staging_counts_toward_outbox_backpressure() {
+        let (_edge, conn) = inproc_reactor_pair_with(false);
+        let imp = Impairments { latency_us: 50_000, ..Impairments::off() };
+        let mut conn = FaultyConn::new(conn, 3, imp, Impairments::off());
+        for i in 0..5 {
+            conn.queue_frame(wire::encode(&feat(i)));
+        }
+        // all five are staged behind their deadlines: pending_out must show
+        // them (this is what engages the reactor's wants_read outbox bound)
+        assert_eq!(conn.pending_out(), 5);
+        assert!(!conn.poll_send().unwrap(), "staged frames are not drained");
+        // after the deadline they drain into the inner outbox and out
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(conn.poll_send().unwrap());
+        assert_eq!(conn.pending_out(), 0);
+    }
+
+    #[test]
+    fn same_seed_same_schedule_across_wrapper_kinds() {
+        // FaultyLink and FaultyConn built from one seed and matrix must
+        // make identical per-frame decisions (the conformance the chaos
+        // harness's reproduce-from-seed promise rests on)
+        let imp = Impairments {
+            drop_prob: 0.3,
+            corrupt_prob: 0.2,
+            jitter_us: 50,
+            ..Impairments::off()
+        };
+        let sizes = [64usize, 8, 300, 9, 120, 64, 33, 7];
+        let link_log = {
+            let (a, _b) = inproc_pair();
+            let mut a = FaultyLink::new(a, 77, imp, Impairments::off());
+            for (i, _) in sizes.iter().enumerate() {
+                // drive the tx schedule with same-size frames via decide()
+                // through real sends of fixed shape
+                let _ = a.send(&feat(i as u64));
+            }
+            a.recorder().events()
+        };
+        let conn_log = {
+            let (_edge, conn) = inproc_reactor_pair_with(false);
+            let mut conn = FaultyConn::new(conn, 77, imp, Impairments::off());
+            for (i, _) in sizes.iter().enumerate() {
+                conn.queue_frame(wire::encode(&feat(i as u64)));
+            }
+            conn.recorder().events()
+        };
+        // compare decisions only (delay realization differs: the link
+        // sleeps, the conn stages — but the schedule itself must agree)
+        let strip = |log: Vec<FaultEvent>| -> Vec<(Dir, u64, FaultAction)> {
+            log.into_iter().map(|e| (e.dir, e.frame, e.action)).collect()
+        };
+        assert_eq!(strip(link_log), strip(conn_log));
+    }
+}

@@ -14,6 +14,7 @@
 //! funnel every peer-announced length prefix through [`check_frame_len`]
 //! before allocating.
 
+pub mod faulty;
 pub mod reactor;
 pub mod readiness;
 pub mod sim;

@@ -95,6 +95,89 @@ impl Tcp {
         Tcp::accept(&listener)
     }
 
+    /// Transmit one already-encoded frame, optionally trickling the body in
+    /// `chunk`-byte writes separated by `gap` (the fault injector's
+    /// slow-loris pacing; `chunk == 0` writes in one piece).  Byte
+    /// accounting matches [`Transport::send`]: 4-byte prefix + frame.
+    pub(crate) fn write_frame_paced(
+        &mut self,
+        frame: &[u8],
+        chunk: usize,
+        gap: std::time::Duration,
+    ) -> Result<(), TransportError> {
+        let len = frame.len() as u32;
+        self.stream.write_all(&len.to_le_bytes())?;
+        if chunk == 0 || gap.is_zero() {
+            self.stream.write_all(frame)?;
+        } else {
+            let mut first = true;
+            for piece in frame.chunks(chunk) {
+                if !first {
+                    std::thread::sleep(gap);
+                }
+                first = false;
+                self.stream.write_all(piece)?;
+                self.stream.flush()?;
+            }
+        }
+        self.stats
+            .tx_bytes
+            .fetch_add(4 + frame.len() as u64, Ordering::Relaxed);
+        self.stats.tx_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Receive one raw frame without decoding it (the fault injector mutates
+    /// frames between wire and decoder).  Length gate and byte accounting
+    /// match [`Transport::recv`].
+    pub(crate) fn read_frame_raw(&mut self) -> Result<Vec<u8>, TransportError> {
+        let mut lenb = [0u8; 4];
+        self.stream.read_exact(&mut lenb)?;
+        let len = u32::from_le_bytes(lenb) as usize;
+        check_frame_len(len)?;
+        let mut frame = vec![0u8; len];
+        self.stream.read_exact(&mut frame)?;
+        self.stats
+            .rx_bytes
+            .fetch_add(4 + len as u64, Ordering::Relaxed);
+        self.stats.rx_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(frame)
+    }
+
+    /// Announce a `total`-byte frame but ship only `part` of it (paced),
+    /// then sever the socket: the peer is left holding EOF inside a frame
+    /// body.  Write errors are ignored (the link is dying by design) and
+    /// nothing is charged to stats — the frame never completed.
+    pub(crate) fn write_partial_then_sever(
+        &mut self,
+        part: &[u8],
+        total: usize,
+        chunk: usize,
+        gap: std::time::Duration,
+    ) {
+        let _ = self.stream.write_all(&(total as u32).to_le_bytes());
+        let pieces: Vec<&[u8]> =
+            if chunk == 0 { vec![part] } else { part.chunks(chunk).collect() };
+        let mut first = true;
+        for piece in pieces {
+            if !first && !gap.is_zero() {
+                std::thread::sleep(gap);
+            }
+            first = false;
+            if self.stream.write_all(piece).is_err() {
+                break;
+            }
+            let _ = self.stream.flush();
+        }
+        self.sever_stream();
+    }
+
+    /// Hard-close both directions of the socket (mid-stream disconnect).
+    /// Errors are ignored: severing an already-dead socket is a no-op.
+    pub(crate) fn sever_stream(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
     /// Connect to a listening peer (edge side), retrying briefly while the
     /// server comes up.
     pub fn connect(addr: &str) -> std::io::Result<Self> {

@@ -1,0 +1,385 @@
+//! Chaos scenario driver: scripted multi-edge fleets over real TCP with
+//! per-edge fault injection ([`crate::transport::faulty`]), runnable through
+//! BOTH serving styles (thread-per-client and reactor) and both readiness
+//! backends.  Everything is deterministic from one fleet seed: per-edge link
+//! seeds and data seeds are derived by a splitmix64 stream, so a failing
+//! scenario replays bit-for-bit from the seed printed on failure
+//! (`C3SL_CHAOS_SEED=<seed>` reruns any [`ChaosCtx`]-driven test with it).
+//!
+//! The driver owns only the *mechanics* — bind, accept, wrap, serve, join,
+//! final gate accounting.  What a scenario asserts stays in the test, via
+//! [`ChaosCtx::check`]-style assertions that embed the seed in every failure
+//! message.
+
+use std::time::Duration;
+
+use crate::coordinator::multi::{
+    self, CloudCodec, EdgeCodec, EdgeReport, MultiStats, ShardGate,
+};
+use crate::hdc::keyring::KeyRing;
+use crate::hdc::FftBackend;
+use crate::transport::faulty::{FaultEvent, FaultyLink, Impairments};
+use crate::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
+use crate::transport::readiness::ReadinessBackend;
+use crate::transport::tcp::Tcp;
+
+/// Environment variable that pins every [`ChaosCtx`] seed for a rerun.
+pub const SEED_ENV: &str = "C3SL_CHAOS_SEED";
+
+/// splitmix64 — the standard 64-bit seed scrambler.  Pure, so every derived
+/// seed is a function of (fleet seed, stream tag, index) and nothing else.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive a deterministic sub-seed for stream `tag`, element `i`.
+pub fn sub_seed(seed: u64, tag: u64, i: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(tag) ^ splitmix64(i.wrapping_mul(0xA5A5_A5A5)))
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Per-test chaos context: owns the scenario seed (default, or overridden by
+/// `C3SL_CHAOS_SEED` for a replay) and stamps it into every assertion
+/// failure, so a red chaos test is reproducible from its output alone.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosCtx {
+    name: &'static str,
+    seed: u64,
+}
+
+impl ChaosCtx {
+    /// Create a context for scenario `name` with `default_seed`, announcing
+    /// the effective seed (env override included) on stderr up front.
+    pub fn new(name: &'static str, default_seed: u64) -> Self {
+        let seed = std::env::var(SEED_ENV)
+            .ok()
+            .as_deref()
+            .and_then(parse_seed)
+            .unwrap_or(default_seed);
+        eprintln!("chaos[{name}]: seed = {seed:#018x} (rerun: {SEED_ENV}={seed})");
+        ChaosCtx { name, seed }
+    }
+
+    /// The effective scenario seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Assert `cond`, failing with the scenario name, `what`, and the seed.
+    #[track_caller]
+    pub fn check(&self, cond: bool, what: &str) {
+        if !cond {
+            self.fail(what);
+        }
+    }
+
+    /// Assert `a == b`, failing with both values, `what`, and the seed.
+    #[track_caller]
+    pub fn check_eq<T: std::fmt::Debug + PartialEq>(&self, a: &T, b: &T, what: &str) {
+        if a != b {
+            self.fail(&format!("{what}: {a:?} != {b:?}"));
+        }
+    }
+
+    /// Unconditional failure carrying the replay seed.
+    #[track_caller]
+    pub fn fail(&self, what: &str) -> ! {
+        panic!(
+            "chaos[{}] FAILED: {what} (seed = {:#018x}; rerun with {SEED_ENV}={})",
+            self.name, self.seed, self.seed
+        );
+    }
+}
+
+/// One edge of a scripted fleet: its uplink and downlink impairment
+/// matrices (from the edge wrapper's perspective — `tx` shapes what the
+/// edge sends toward the cloud).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChaosEdge {
+    /// Uplink (edge → cloud) impairments.
+    pub tx: Impairments,
+    /// Downlink (cloud → edge) impairments.
+    pub rx: Impairments,
+}
+
+impl ChaosEdge {
+    /// A fully healthy edge (both directions all-off).
+    pub fn clean() -> Self {
+        Self::default()
+    }
+}
+
+/// Which serving loop the cloud runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeStyle {
+    /// One blocking thread per accepted client ([`multi::serve_clients`]).
+    Threaded,
+    /// One nonblocking I/O thread on the given readiness backend
+    /// ([`multi::serve_clients_reactor`], 2 codec workers).
+    Reactor(ReadinessBackend),
+}
+
+/// A scripted chaos scenario: N sharded edges (edge `i` claims shard `i`)
+/// training over real TCP against one cloud, each edge behind its own
+/// seeded fault injector.
+#[derive(Clone, Debug)]
+pub struct ChaosFleet {
+    /// Scenario label (seed banners and failure messages).
+    pub name: &'static str,
+    /// Fleet seed — the only entropy; link and data seeds derive from it.
+    pub seed: u64,
+    /// Which serving loop the cloud runs.
+    pub serve: ServeStyle,
+    /// Listen/connect address, e.g. `"127.0.0.1:39440"` (one port per
+    /// scenario, like every TCP test in this repo).
+    pub addr: String,
+    /// Per-edge impairment matrices; `edges.len()` is the fleet size.
+    pub edges: Vec<ChaosEdge>,
+    /// Training steps per edge.
+    pub steps: u64,
+    /// Key-rotation cadence in steps (0 = fixed keys).
+    pub rotation_steps: u64,
+    /// Compression ratio R (must divide `batch`).
+    pub r: usize,
+    /// Feature dimensionality D.
+    pub d: usize,
+    /// Batch size B.
+    pub batch: usize,
+}
+
+impl ChaosFleet {
+    /// A fleet of `n` healthy edges at the default chaos geometry
+    /// (R=4, D=128, B=8, 3 steps, fixed keys) — the baseline scenarios
+    /// mutate individual edges from here.
+    pub fn clean(
+        name: &'static str,
+        seed: u64,
+        serve: ServeStyle,
+        addr: &str,
+        n: usize,
+    ) -> Self {
+        ChaosFleet {
+            name,
+            seed,
+            serve,
+            addr: addr.to_string(),
+            edges: vec![ChaosEdge::clean(); n],
+            steps: 3,
+            rotation_steps: 0,
+            r: 4,
+            d: 128,
+            batch: 8,
+        }
+    }
+
+    /// The key ring this fleet's gate and edges share (derived from the
+    /// fleet seed, so two fleets with equal seeds share key material).
+    pub fn ring(&self) -> KeyRing {
+        KeyRing::new(
+            sub_seed(self.seed, 0x4B45_5952, 0), // "KEYR"
+            self.r,
+            self.d,
+            self.rotation_steps,
+        )
+    }
+
+    /// Edge `i`'s fault-injector seed.
+    pub fn link_seed(&self, i: usize) -> u64 {
+        sub_seed(self.seed, 0x4C49_4E4B, i as u64) // "LINK"
+    }
+
+    /// Edge `i`'s probe-data seed.
+    pub fn data_seed(&self, i: usize) -> u64 {
+        sub_seed(self.seed, 0x4441_5441, i as u64) // "DATA"
+    }
+}
+
+/// Everything a finished fleet run produced, for exact accounting.
+#[derive(Debug)]
+pub struct ChaosRun {
+    /// The cloud's aggregate outcome (first failing client's error when any
+    /// connection died — healthy accounting lives in `edges`).
+    pub cloud: Result<MultiStats, String>,
+    /// Per-edge outcome, in fleet order (edge `i` = shard `i`).
+    pub edges: Vec<Result<EdgeReport, String>>,
+    /// Per-edge fault-injector logs, in fleet order — the deterministic
+    /// schedule artifact the reproducibility tests compare bit-for-bit.
+    pub events: Vec<Vec<FaultEvent>>,
+    /// Shard ids still claimed after every connection ended — MUST be empty
+    /// (the gate releases claims on every exit path, rude or clean).
+    pub unreleased: Vec<u64>,
+}
+
+/// Run a scripted fleet to completion: bind, accept, serve through the
+/// scripted style, drive every edge through its own seeded injector, join
+/// everything, and snapshot the gate's final accounting.  Edges connect
+/// sequentially so accept slot `i` is edge `i` on every platform.
+pub fn run_fleet(fleet: &ChaosFleet) -> ChaosRun {
+    let n = fleet.edges.len();
+    let ring = fleet.ring();
+    let gate = ShardGate::new(ring, n);
+    let listener = Tcp::bind(&fleet.addr).expect("bind chaos listener");
+    eprintln!(
+        "chaos fleet '{}': {n} edge(s), seed = {:#018x} (rerun: {SEED_ENV}={})",
+        fleet.name, fleet.seed, fleet.seed
+    );
+
+    let (cloud, per_edge) = std::thread::scope(|sc| {
+        let gate = &gate;
+        let serve = fleet.serve;
+        let cloud = sc.spawn(move || -> Result<MultiStats, String> {
+            let streams = Tcp::accept_streams(&listener, n, Duration::from_secs(30))
+                .map_err(|e| format!("chaos accept: {e}"))?;
+            match serve {
+                ServeStyle::Threaded => {
+                    let tps = streams
+                        .into_iter()
+                        .map(Tcp::from_stream)
+                        .collect::<std::io::Result<Vec<_>>>()
+                        .map_err(|e| format!("chaos wrap: {e}"))?;
+                    multi::serve_clients(CloudCodec::Sharded(gate), tps)
+                        .map_err(|e| e.to_string())
+                }
+                ServeStyle::Reactor(backend) => {
+                    let conns = streams
+                        .into_iter()
+                        .map(|s| {
+                            NbTcp::from_stream(s)
+                                .map(|c| Box::new(c) as Box<dyn ReactorConn>)
+                        })
+                        .collect::<std::io::Result<Vec<_>>>()
+                        .map_err(|e| format!("chaos wrap: {e}"))?;
+                    let cfg = ReactorConfig { backend, ..ReactorConfig::default() };
+                    multi::serve_clients_reactor(CloudCodec::Sharded(gate), conns, 2, cfg)
+                        .map_err(|e| e.to_string())
+                }
+            }
+        });
+
+        // sequential connects pin accept order: slot i == edge i == shard i
+        let mut links = Vec::with_capacity(n);
+        for (i, e) in fleet.edges.iter().enumerate() {
+            let tp = Tcp::connect(&fleet.addr).expect("connect chaos edge");
+            links.push(FaultyLink::new(tp, fleet.link_seed(i), e.tx, e.rx));
+        }
+        let handles: Vec<_> = links
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut link)| {
+                let (steps, batch, d) = (fleet.steps, fleet.batch, fleet.d);
+                let data_seed = fleet.data_seed(i);
+                sc.spawn(move || {
+                    let rec = link.recorder();
+                    let res = multi::run_edge(
+                        EdgeCodec::Sharded {
+                            shard: ring.edge_shard(i as u64),
+                            workers: 1,
+                            fft: FftBackend::default(),
+                        },
+                        &mut link,
+                        steps,
+                        data_seed,
+                        batch,
+                        d,
+                    )
+                    .map_err(|e| e.to_string());
+                    (res, rec.events())
+                })
+            })
+            .collect();
+        let per_edge: Vec<_> = handles
+            .into_iter()
+            .map(|h| h.join().expect("chaos edge thread panicked"))
+            .collect();
+        (cloud.join().expect("chaos cloud thread panicked"), per_edge)
+    });
+
+    let (edges, events) = per_edge.into_iter().unzip();
+    let unreleased =
+        (0..n as u64).filter(|&id| gate.claimant(id).is_some()).collect();
+    ChaosRun { cloud, edges, events, unreleased }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_parsing_takes_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed(" 0x2A "), Some(42));
+        assert_eq!(parse_seed("0XfF"), Some(255));
+        assert_eq!(parse_seed("nope"), None);
+    }
+
+    #[test]
+    fn sub_seeds_are_deterministic_and_distinct_per_stream() {
+        assert_eq!(sub_seed(7, 1, 0), sub_seed(7, 1, 0));
+        assert_ne!(sub_seed(7, 1, 0), sub_seed(7, 1, 1));
+        assert_ne!(sub_seed(7, 1, 0), sub_seed(7, 2, 0));
+        assert_ne!(sub_seed(7, 1, 0), sub_seed(8, 1, 0));
+        let f = ChaosFleet::clean("t", 9, ServeStyle::Threaded, "unused", 2);
+        assert_ne!(f.link_seed(0), f.data_seed(0), "streams must not collide");
+    }
+
+    #[test]
+    fn chaos_failures_always_carry_the_replay_seed() {
+        let ctx = ChaosCtx { name: "carrier", seed: 0xABCD };
+        ctx.check(true, "fine");
+        ctx.check_eq(&1, &1, "fine");
+        let err = std::panic::catch_unwind(|| ctx.check(false, "boom"))
+            .expect_err("check(false) must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .expect("chaos panics carry a formatted String");
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("C3SL_CHAOS_SEED=43981"), "{msg}");
+        assert!(msg.contains("0x000000000000abcd"), "{msg}");
+    }
+
+    #[test]
+    fn clean_threaded_fleet_smoke() {
+        // the driver's own mechanics: 2 healthy edges, exact accounting
+        let fleet = ChaosFleet::clean(
+            "driver-smoke",
+            0x5D0C,
+            ServeStyle::Threaded,
+            "127.0.0.1:39430",
+            2,
+        );
+        let run = run_fleet(&fleet);
+        let stats = run.cloud.expect("healthy fleet serves cleanly");
+        assert_eq!(stats.per_client.len(), 2);
+        let mut edge_tx = 0u64;
+        for (i, e) in run.edges.iter().enumerate() {
+            let e = e.as_ref().expect("healthy edge finishes");
+            assert_eq!(e.steps, fleet.steps, "edge {i}");
+            edge_tx += e.tx_bytes;
+        }
+        assert_eq!(stats.total_rx(), edge_tx, "cloud rx == sum of edge uplinks");
+        assert!(run.unreleased.is_empty(), "{:?}", run.unreleased);
+        // a clean fleet's schedule is all zero-delay deliveries
+        for log in &run.events {
+            for ev in log {
+                assert!(
+                    matches!(
+                        ev.action,
+                        crate::transport::faulty::FaultAction::Delivered { delay_us: 0 }
+                    ),
+                    "{ev:?}"
+                );
+            }
+        }
+    }
+}

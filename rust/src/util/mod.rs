@@ -1,8 +1,10 @@
 //! Utility substrates: errors, PRNG, JSON, timing, property-testing
-//! harness, tolerance assertions, CSV, bench-gate policy, and the
-//! deterministic-interleaving scheduler for concurrency tests.
+//! harness, tolerance assertions, CSV, bench-gate policy, the
+//! deterministic-interleaving scheduler for concurrency tests, and the
+//! seeded chaos scenario driver for fault-injection suites.
 
 pub mod bench;
+pub mod chaos;
 pub mod csv;
 pub mod error;
 pub mod json;

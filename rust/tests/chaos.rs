@@ -1,0 +1,869 @@
+//! Chaos harness: scripted fault-injection scenarios over the REAL
+//! multi-edge serve paths — thread-per-client and reactor, both readiness
+//! backends — built on `transport::faulty` injectors and the
+//! `util::chaos` fleet driver.  Every scenario is deterministic from one
+//! seed (printed on entry, embedded in every failure, overridable via
+//! `C3SL_CHAOS_SEED`), and every impairment class has at least one
+//! end-to-end scenario where the healthy edges finish with exact
+//! accounting while the rogue fails loudly and its shard claim is
+//! released.  Ports 39440+ (one per scenario, like every TCP test here).
+//!
+//! The long-soak churn test is `#[ignore]`-gated: CI smoke skips it, the
+//! scheduled `chaos-soak` workflow runs it with `--ignored` and scales it
+//! via `C3SL_SOAK_EDGES` / `C3SL_SOAK_ROUNDS` / `C3SL_SOAK_STEPS`.
+
+use std::time::Duration;
+
+use c3sl::coordinator::multi::{self, CloudCodec, EdgeCodec};
+use c3sl::coordinator::{ClientReport, EdgeReport, RunCodec, ShardGate};
+use c3sl::hdc::keyring::KeyRing;
+use c3sl::hdc::FftBackend;
+use c3sl::tensor::{Labels, Tensor};
+use c3sl::transport::faulty::{
+    Burst, Dir, FaultAction, FaultyConn, FaultyLink, Impairments,
+};
+use c3sl::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
+use c3sl::transport::readiness::ReadinessBackend;
+use c3sl::transport::tcp::Tcp;
+use c3sl::transport::{Msg, Transport};
+use c3sl::util::chaos::{
+    run_fleet, sub_seed, ChaosCtx, ChaosEdge, ChaosFleet, ChaosRun, ServeStyle,
+};
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Epoll where the platform has it, the portable sweep otherwise — so the
+/// epoll-targeted scenarios still run (and mean something) everywhere.
+fn reactor_style() -> ServeStyle {
+    if ReadinessBackend::Epoll.supported() {
+        ServeStyle::Reactor(ReadinessBackend::Epoll)
+    } else {
+        ServeStyle::Reactor(ReadinessBackend::Sweep)
+    }
+}
+
+/// Run the same fleet with every impairment stripped, as the exact-
+/// accounting reference: a healthy edge behind an injector must produce a
+/// byte-identical `EdgeReport` to its clean twin.
+fn reference_reports(fleet: &ChaosFleet, addr: &str, ctx: &ChaosCtx) -> Vec<EdgeReport> {
+    let mut bare = fleet.clone();
+    bare.name = "reference";
+    bare.addr = addr.to_string();
+    for e in &mut bare.edges {
+        *e = ChaosEdge::clean();
+    }
+    let run = run_fleet(&bare);
+    ctx.check(run.cloud.is_ok(), "reference fleet must serve cleanly");
+    run.edges
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| match r {
+            Ok(rep) => rep,
+            Err(e) => ctx.fail(&format!("reference edge {i} failed: {e}")),
+        })
+        .collect()
+}
+
+fn expect_edge_ok<'a>(ctx: &ChaosCtx, run: &'a ChaosRun, i: usize) -> &'a EdgeReport {
+    match &run.edges[i] {
+        Ok(rep) => rep,
+        Err(e) => ctx.fail(&format!("edge {i} should have finished, got: {e}")),
+    }
+}
+
+fn expect_edge_err<'a>(ctx: &ChaosCtx, run: &'a ChaosRun, i: usize) -> &'a str {
+    match &run.edges[i] {
+        Ok(rep) => ctx.fail(&format!("edge {i} should have failed, got {rep:?}")),
+        Err(e) => e,
+    }
+}
+
+fn expect_cloud_err<'a>(ctx: &ChaosCtx, run: &'a ChaosRun, needle: &str) -> &'a str {
+    match &run.cloud {
+        Ok(_) => ctx.fail("cloud serve should have reported the rogue"),
+        Err(e) => {
+            ctx.check(e.contains(needle), &format!("cloud error {e:?} lacks {needle:?}"));
+            e
+        }
+    }
+}
+
+fn released(ctx: &ChaosCtx, run: &ChaosRun) {
+    ctx.check(
+        run.unreleased.is_empty(),
+        &format!("shards still claimed after the run: {:?}", run.unreleased),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 1. Zero impairment: the harness itself is transparent, on every serve path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_impairment_fleet_is_transparent_across_styles_and_backends() {
+    let ctx = ChaosCtx::new("zero-impairment-parity", 0xC3_0001);
+    let styles = [
+        (ServeStyle::Threaded, "127.0.0.1:39440"),
+        (ServeStyle::Reactor(ReadinessBackend::Sweep), "127.0.0.1:39441"),
+        (reactor_style(), "127.0.0.1:39442"),
+    ];
+    let mut runs = Vec::new();
+    for (serve, addr) in styles {
+        let fleet = ChaosFleet::clean("zero-impairment", ctx.seed(), serve, addr, 3);
+        runs.push(run_fleet(&fleet));
+    }
+    let first_clients: Vec<ClientReport> = match &runs[0].cloud {
+        Ok(stats) => stats.per_client.clone(),
+        Err(e) => ctx.fail(&format!("threaded clean fleet failed: {e}")),
+    };
+    for (ri, run) in runs.iter().enumerate() {
+        let stats = match &run.cloud {
+            Ok(s) => s,
+            Err(e) => ctx.fail(&format!("clean fleet (style {ri}) failed: {e}")),
+        };
+        // identical per-client wire contract on every serve path
+        ctx.check_eq(&stats.per_client, &first_clients, "per-client reports");
+        for i in 0..3 {
+            let a = expect_edge_ok(&ctx, &runs[0], i);
+            let b = expect_edge_ok(&ctx, run, i);
+            ctx.check_eq(a, b, "edge report across styles");
+        }
+        // a clean schedule is all zero-delay deliveries — nothing injected
+        for (i, log) in run.events.iter().enumerate() {
+            for ev in log {
+                ctx.check(
+                    matches!(ev.action, FaultAction::Delivered { delay_us: 0 }),
+                    &format!("edge {i} clean schedule has {ev:?}"),
+                );
+            }
+        }
+        released(&ctx, run);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Drop: a swallowed uplink frame desyncs only its own client
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropped_uplink_frame_fails_loudly_and_spares_the_fleet() {
+    let ctx = ChaosCtx::new("burst-drop", 0xC3_0002);
+    let mut fleet = ChaosFleet::clean(
+        "burst-drop",
+        ctx.seed(),
+        ServeStyle::Threaded,
+        "127.0.0.1:39443",
+        2,
+    );
+    // swallow exactly frame 2 — step 0's Features — so the cloud sees
+    // TrainLabels arrive first and rejects the protocol state, loudly
+    fleet.edges[0].tx.burst_drop = Some(Burst { first: 2, len: 1 });
+    let run = run_fleet(&fleet);
+    expect_cloud_err(&ctx, &run, "labels before features");
+    expect_edge_err(&ctx, &run, 0);
+    // the schedule dropped exactly the scripted frame, nothing else
+    let drops: Vec<u64> = run.events[0]
+        .iter()
+        .filter(|e| e.dir == Dir::Tx && matches!(e.action, FaultAction::Dropped))
+        .map(|e| e.frame)
+        .collect();
+    ctx.check(drops == [2], &format!("dropped frame indices: {drops:?}"));
+    // the healthy neighbour is byte-identical to its clean twin
+    let reference = reference_reports(&fleet, "127.0.0.1:39457", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 1), &reference[1], "healthy edge report");
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Corrupt: a smashed tag byte is DETECTED at the reactor pump, never
+//    silently decoded
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupted_frame_is_detected_by_the_reactor_and_isolated() {
+    let ctx = ChaosCtx::new("corrupt-frame", 0xC3_0003);
+    let mut fleet = ChaosFleet::clean(
+        "corrupt-frame",
+        ctx.seed(),
+        reactor_style(),
+        "127.0.0.1:39444",
+        2,
+    );
+    fleet.edges[0].tx.corrupt_at = Some(2);
+    let run = run_fleet(&fleet);
+    // detection, not misdecoding: the poisoned tag surfaces as a decode
+    // error naming the unknown tag
+    expect_cloud_err(&ctx, &run, "unknown tag");
+    expect_edge_err(&ctx, &run, 0);
+    ctx.check(
+        run.events[0]
+            .iter()
+            .any(|e| e.dir == Dir::Tx
+                && e.frame == 2
+                && matches!(e.action, FaultAction::Corrupted)),
+        "schedule must record the scripted corruption",
+    );
+    let reference = reference_reports(&fleet, "127.0.0.1:39458", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 1), &reference[1], "healthy edge report");
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Truncate: a cut frame is a loud framing error on the sweep pump
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_frame_is_a_loud_error_on_the_sweep_pump() {
+    let ctx = ChaosCtx::new("truncate-frame", 0xC3_0004);
+    let mut fleet = ChaosFleet::clean(
+        "truncate-frame",
+        ctx.seed(),
+        ServeStyle::Reactor(ReadinessBackend::Sweep),
+        "127.0.0.1:39445",
+        2,
+    );
+    fleet.edges[0].tx.truncate_at = Some(2);
+    let run = run_fleet(&fleet);
+    expect_cloud_err(&ctx, &run, "truncated frame");
+    expect_edge_err(&ctx, &run, 0);
+    ctx.check(
+        run.events[0]
+            .iter()
+            .any(|e| e.dir == Dir::Tx
+                && e.frame == 2
+                && matches!(e.action, FaultAction::Truncated { .. })),
+        "schedule must record the scripted truncation",
+    );
+    let reference = reference_reports(&fleet, "127.0.0.1:39459", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 1), &reference[1], "healthy edge report");
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 5. Disconnect: a mid-stream hangup at a scripted frame index, both styles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_stream_disconnect_is_isolated_on_both_serve_paths() {
+    let ctx = ChaosCtx::new("mid-stream-disconnect", 0xC3_0005);
+    // frame 4 = step 1's Features: the edge finishes step 0, then vanishes
+    let mut reactor = ChaosFleet::clean(
+        "disconnect-reactor",
+        ctx.seed(),
+        reactor_style(),
+        "127.0.0.1:39446",
+        2,
+    );
+    reactor.edges[0].tx.disconnect_at = Some(4);
+    let run = run_fleet(&reactor);
+    // EOF lands exactly on a frame boundary → the reactor's clean-cut error
+    expect_cloud_err(&ctx, &run, "connection closed mid-protocol");
+    let e = expect_edge_err(&ctx, &run, 0);
+    ctx.check(e.contains("channel closed"), &format!("edge error {e:?}"));
+    ctx.check(
+        run.events[0]
+            .iter()
+            .any(|ev| ev.frame == 4 && matches!(ev.action, FaultAction::Disconnected)),
+        "schedule must record the scripted disconnect",
+    );
+    let reference = reference_reports(&reactor, "127.0.0.1:39460", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 1), &reference[1], "healthy edge report");
+    released(&ctx, &run);
+
+    // same script through the thread-per-client pool: loud there too
+    let mut threaded = reactor.clone();
+    threaded.name = "disconnect-threaded";
+    threaded.serve = ServeStyle::Threaded;
+    threaded.addr = "127.0.0.1:39447".to_string();
+    let run = run_fleet(&threaded);
+    ctx.check(run.cloud.is_err(), "threaded serve must surface the hangup");
+    expect_edge_err(&ctx, &run, 0);
+    expect_edge_ok(&ctx, &run, 1);
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 6. Stall / slow loris: trickled bytes, then death inside a frame body
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_loris_death_mid_frame_is_detected() {
+    let ctx = ChaosCtx::new("slow-loris", 0xC3_0006);
+    let mut fleet = ChaosFleet::clean(
+        "slow-loris",
+        ctx.seed(),
+        reactor_style(),
+        "127.0.0.1:39448",
+        2,
+    );
+    // pace every write in 64-byte chunks, and die halfway through frame 4:
+    // the cloud reads a complete length prefix, then starves inside the body
+    fleet.edges[0].tx.stall_chunk = 64;
+    fleet.edges[0].tx.stall_gap_us = 500;
+    fleet.edges[0].tx.die_mid_frame = Some(4);
+    let run = run_fleet(&fleet);
+    expect_cloud_err(&ctx, &run, "EOF inside a frame body");
+    expect_edge_err(&ctx, &run, 0);
+    ctx.check(
+        run.events[0].iter().any(|ev| ev.frame == 4
+            && matches!(ev.action, FaultAction::DiedMidFrame { sent } if sent > 0)),
+        "schedule must record the mid-frame death with bytes shipped",
+    );
+    let reference = reference_reports(&fleet, "127.0.0.1:39461", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 1), &reference[1], "healthy edge report");
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 7. Latency/jitter: a straggler finishes exactly; a disconnector fails
+// ---------------------------------------------------------------------------
+
+#[test]
+fn straggler_jitter_finishes_while_disconnector_fails() {
+    let ctx = ChaosCtx::new("straggler-jitter", 0xC3_0007);
+    let mut fleet = ChaosFleet::clean(
+        "straggler-jitter",
+        ctx.seed(),
+        ServeStyle::Threaded,
+        "127.0.0.1:39449",
+        3,
+    );
+    // edge 0: slow but correct — fixed latency plus seeded jitter, both ways
+    fleet.edges[0].tx.latency_us = 1500;
+    fleet.edges[0].tx.jitter_us = 2500;
+    fleet.edges[0].rx.latency_us = 1500;
+    fleet.edges[0].rx.jitter_us = 2500;
+    // edge 1: dies at frame 6 (step 2's Features) after two clean steps
+    fleet.edges[1].tx.disconnect_at = Some(6);
+    let run = run_fleet(&fleet);
+    ctx.check(run.cloud.is_err(), "the disconnector must surface");
+    expect_edge_err(&ctx, &run, 1);
+    // delay changes schedules, never content: the straggler's report is
+    // byte-identical to its clean twin, and the delays really happened
+    let reference = reference_reports(&fleet, "127.0.0.1:39450", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 0), &reference[0], "straggler report");
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 2), &reference[2], "clean edge report");
+    ctx.check(
+        run.events[0]
+            .iter()
+            .all(|ev| matches!(ev.action, FaultAction::Delivered { delay_us } if delay_us >= 1500)),
+        "every straggler frame must carry its injected delay",
+    );
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 8. Bandwidth cap: serialization delay scales with frame size, content
+//    untouched; capped + dying edge still fails loudly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bandwidth_capped_edge_finishes_with_exact_accounting() {
+    let ctx = ChaosCtx::new("bandwidth-cap", 0xC3_0008);
+    let mut fleet = ChaosFleet::clean(
+        "bandwidth-cap",
+        ctx.seed(),
+        reactor_style(),
+        "127.0.0.1:39451",
+        2,
+    );
+    // edge 0: a 2 Mbit/s link both ways — every frame is delayed, none harmed
+    fleet.edges[0].tx.bandwidth_bps = 2_000_000;
+    fleet.edges[0].rx.bandwidth_bps = 2_000_000;
+    // edge 1: same cap, but the link dies inside frame 4
+    fleet.edges[1].tx.bandwidth_bps = 2_000_000;
+    fleet.edges[1].tx.die_mid_frame = Some(4);
+    let run = run_fleet(&fleet);
+    expect_cloud_err(&ctx, &run, "client(s) failed");
+    expect_edge_err(&ctx, &run, 1);
+    let reference = reference_reports(&fleet, "127.0.0.1:39462", &ctx);
+    ctx.check_eq(expect_edge_ok(&ctx, &run, 0), &reference[0], "capped edge report");
+    ctx.check(
+        run.events[0]
+            .iter()
+            .all(|ev| matches!(ev.action, FaultAction::Delivered { delay_us } if delay_us > 0)),
+        "every capped frame must pay its serialization delay",
+    );
+    released(&ctx, &run);
+}
+
+// ---------------------------------------------------------------------------
+// 9. Outbox bound: a cloud-side slow writer (FaultyConn tx staging) against
+//    a pipelining client — staged frames count toward the outbox bound, the
+//    pump never blocks, and accounting stays exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn outbox_bound_holds_against_cloud_side_slow_writer() {
+    let ctx = ChaosCtx::new("outbox-bound", 0xC3_0009);
+    let addr = "127.0.0.1:39452";
+    let (r, d, batch, steps) = (2usize, 128usize, 8usize, 12u64);
+    let key_seed = sub_seed(ctx.seed(), 0x0B0C, 0);
+    let cloud_codec = RunCodec::host(key_seed, r, d, 2);
+    let listener = Tcp::bind(addr).expect("bind");
+    let seed = ctx.seed();
+
+    let (served, rec) = std::thread::scope(|sc| {
+        let cloud_codec = &cloud_codec;
+        let cloud = sc.spawn(move || {
+            let mut streams =
+                Tcp::accept_streams(&listener, 1, Duration::from_secs(30)).expect("accept");
+            let nb = NbTcp::from_stream(streams.remove(0)).expect("wrap");
+            // every reply staged 3 ms before it may reach the socket: with
+            // 2 replies per pipelined step, staged depth sails past the
+            // default max_outbox_frames=8 and trips the read gate via
+            // pending_out — on the sweep pump, which polls the deadline
+            let conn = FaultyConn::new(
+                nb,
+                sub_seed(seed, 0x0B0D, 0),
+                Impairments { latency_us: 3000, ..Impairments::off() },
+                Impairments::off(),
+            );
+            let rec = conn.recorder();
+            let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(conn)];
+            let cfg = ReactorConfig {
+                backend: ReadinessBackend::Sweep,
+                ..ReactorConfig::default()
+            };
+            let served =
+                multi::serve_clients_reactor(CloudCodec::Shared(cloud_codec), conns, 2, cfg)
+                    .map_err(|e| e.to_string());
+            (served, rec)
+        });
+
+        // the client pipelines the whole session before reading one reply
+        let mut tp = Tcp::connect(addr).expect("connect");
+        tp.send(&Msg::KeySeed { seed: key_seed }).expect("hello");
+        for step in 0..steps {
+            let z = Tensor::zeros(&[batch / r, d]);
+            tp.send(&Msg::Features { step, tensor: z }).expect("features");
+            tp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })
+                .expect("labels");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        for step in 0..steps {
+            match tp.recv().expect("gradients") {
+                Msg::Gradients { step: g, .. } => ctx.check_eq(&g, &step, "gradient step"),
+                other => ctx.fail(&format!("expected Gradients, got {other:?}")),
+            }
+            match tp.recv().expect("stats") {
+                Msg::StepStats { step: s, .. } => ctx.check_eq(&s, &step, "stats step"),
+                other => ctx.fail(&format!("expected StepStats, got {other:?}")),
+            }
+        }
+        tp.send(&Msg::Shutdown).expect("shutdown");
+        cloud.join().expect("cloud thread")
+    });
+
+    let stats = match served {
+        Ok(s) => s,
+        Err(e) => ctx.fail(&format!("backpressured serve failed: {e}")),
+    };
+    ctx.check_eq(&stats.per_client.len(), &1, "one client");
+    let c = &stats.per_client[0];
+    ctx.check_eq(&c.steps, &steps, "every pipelined step served");
+    ctx.check_eq(&c.rx_msgs, &(steps * 2 + 2), "uplink messages");
+    ctx.check_eq(&c.tx_msgs, &(steps * 2), "downlink messages");
+    // the injector delayed every single reply by exactly the scripted 3 ms
+    let delayed = rec.count(
+        Dir::Tx,
+        |a| matches!(a, FaultAction::Delivered { delay_us: 3000 }),
+    );
+    ctx.check_eq(&delayed, &(steps as usize * 2), "delayed reply count");
+}
+
+// ---------------------------------------------------------------------------
+// 10. Reconnect storms, re-claim under rotation, and per-epoch revocation:
+//     one shard, thirteen connections, exact cursor/watermark ledger
+// ---------------------------------------------------------------------------
+
+/// One reconnect round: a serve thread accepts the next connection and runs
+/// `serve_one` on `slot`; the edge resumes at `first` for `steps` behind a
+/// fault injector.  Returns both outcomes.
+#[allow(clippy::too_many_arguments)]
+fn reconnect_round(
+    listener: &std::net::TcpListener,
+    gate: &ShardGate,
+    ring: KeyRing,
+    addr: &str,
+    slot: usize,
+    first: u64,
+    steps: u64,
+    link_seed: u64,
+    tx: Impairments,
+) -> (Result<ClientReport, String>, Result<EdgeReport, String>) {
+    std::thread::scope(|sc| {
+        let serve = sc.spawn(move || {
+            let mut tp = Tcp::accept(listener).map_err(|e| e.to_string())?;
+            multi::serve_one(CloudCodec::Sharded(gate), &mut tp, slot)
+                .map_err(|e| e.to_string())
+        });
+        let tp = Tcp::connect(addr).expect("connect");
+        let mut link = FaultyLink::new(tp, link_seed, tx, Impairments::off());
+        let edge = multi::run_edge_resumed(
+            EdgeCodec::Sharded {
+                shard: ring.edge_shard(0),
+                workers: 1,
+                fft: FftBackend::default(),
+            },
+            &mut link,
+            first,
+            steps,
+            0xDA7A,
+            4,
+            64,
+        )
+        .map_err(|e| e.to_string());
+        (serve.join().expect("serve thread"), edge)
+    })
+}
+
+#[test]
+fn reconnect_storm_reclaim_and_revocation_accounting() {
+    let ctx = ChaosCtx::new("reconnect-storm-revocation", 0xC3_000A);
+    let addr = "127.0.0.1:39453";
+    // rotation every 2 steps: epoch_of = 0,0,1,1,2,2,3,3,4,4,5,...
+    let ring = KeyRing::new(ctx.seed(), 2, 64, 2);
+    let gate = ShardGate::new(ring, 1);
+    let listener = Tcp::bind(addr).expect("bind");
+    // frame 4 = the second Features of a connection: an "abrupt" round
+    // completes exactly one of its two planned steps, then vanishes
+    let abrupt = Impairments { disconnect_at: Some(4), ..Impairments::off() };
+    let mut served_steps = 0u64;
+
+    // five reconnect rounds: clean, abrupt, clean, abrupt, clean — the
+    // cursor ledger is 2+1+2+1+2 = 8 steps trained, watermark 7
+    let script: [(u64, u64, bool); 5] =
+        [(0, 2, false), (2, 2, true), (3, 2, false), (5, 2, true), (6, 2, false)];
+    for (round, &(first, steps, dies)) in script.iter().enumerate() {
+        let tx = if dies { abrupt } else { Impairments::off() };
+        let (serve, edge) = reconnect_round(
+            &listener,
+            &gate,
+            ring,
+            addr,
+            round,
+            first,
+            steps,
+            sub_seed(ctx.seed(), 0x4C4B, round as u64),
+            tx,
+        );
+        if dies {
+            ctx.check(serve.is_err(), "abrupt round must error the serve");
+            ctx.check(edge.is_err(), "abrupt round must error the edge");
+        } else {
+            match serve {
+                Ok(rep) => {
+                    ctx.check_eq(&rep.steps, &steps, "clean round steps");
+                    served_steps += rep.steps;
+                }
+                Err(e) => ctx.fail(&format!("clean round {round} failed: {e}")),
+            }
+            ctx.check(edge.is_ok(), "clean round edge must finish");
+        }
+        ctx.check(gate.claimant(0).is_none(), "claim must be released every round");
+    }
+    ctx.check_eq(&gate.last_step(0), &Some(7), "watermark after the ledger");
+
+    // operator policy: epoch 4 (steps 8..=9) is revoked.  The next resume
+    // announces epoch_of(8) = 4 with a perfectly VALID proof — refused.
+    ctx.check(gate.revoke(0, 4), "first revocation is new");
+    ctx.check(gate.is_revoked(0, 4), "revocation recorded");
+    let (serve, edge) = reconnect_round(
+        &listener,
+        &gate,
+        ring,
+        addr,
+        5,
+        8,
+        1,
+        sub_seed(ctx.seed(), 0x4C4B, 10),
+        Impairments::off(),
+    );
+    match serve {
+        Ok(rep) => ctx.fail(&format!("revoked claim was admitted: {rep:?}")),
+        Err(e) => ctx.check(e.contains("revoked"), &format!("serve error {e:?}")),
+    }
+    ctx.check(edge.is_err(), "the refused edge fails loudly");
+    ctx.check(gate.claimant(0).is_none(), "refused claim holds nothing");
+
+    // recovery: resume one step earlier, inside still-valid epoch 3, and
+    // train THROUGH the revoked epoch to step 9 — the watermark then opens
+    // epoch 5 and the shard has outrun the revocation
+    let (serve, _edge) = reconnect_round(
+        &listener,
+        &gate,
+        ring,
+        addr,
+        6,
+        7,
+        3,
+        sub_seed(ctx.seed(), 0x4C4B, 11),
+        Impairments::off(),
+    );
+    match serve {
+        Ok(rep) => {
+            ctx.check_eq(&rep.steps, &3, "recovery steps");
+            served_steps += rep.steps;
+        }
+        Err(e) => ctx.fail(&format!("epoch-3 recovery refused: {e}")),
+    }
+    ctx.check_eq(&gate.last_step(0), &Some(9), "watermark after recovery");
+
+    // the storm: six edges reconnect at once, all claiming shard 0 at
+    // epoch_of(10) = 5.  At least one wins; every loser is rejected with
+    // "already claimed"; afterwards the gate accounts for exactly nothing.
+    let (serves, edges) = std::thread::scope(|sc| {
+        let gate = &gate;
+        let listener = &listener;
+        let serves: Vec<_> = (0..6)
+            .map(|k| {
+                sc.spawn(move || {
+                    let mut tp = Tcp::accept(listener).map_err(|e| e.to_string())?;
+                    multi::serve_one(CloudCodec::Sharded(gate), &mut tp, 20 + k)
+                        .map_err(|e| e.to_string())
+                })
+            })
+            .collect();
+        let edges: Vec<_> = (0..6u64)
+            .map(|k| {
+                sc.spawn(move || {
+                    let mut tp = Tcp::connect(addr).expect("storm connect");
+                    multi::run_edge_resumed(
+                        EdgeCodec::Sharded {
+                            shard: ring.edge_shard(0),
+                            workers: 1,
+                            fft: FftBackend::default(),
+                        },
+                        &mut tp,
+                        10,
+                        1,
+                        0xDA7A + k,
+                        4,
+                        64,
+                    )
+                    .map_err(|e| e.to_string())
+                })
+            })
+            .collect();
+        (
+            serves.into_iter().map(|h| h.join().expect("storm serve")).collect::<Vec<_>>(),
+            edges.into_iter().map(|h| h.join().expect("storm edge")).collect::<Vec<_>>(),
+        )
+    });
+    let mut winners = 0u64;
+    for (k, s) in serves.iter().enumerate() {
+        match s {
+            Ok(rep) => {
+                ctx.check_eq(&rep.steps, &1, "storm winner steps");
+                winners += 1;
+                served_steps += rep.steps;
+            }
+            Err(e) => ctx.check(
+                e.contains("already claimed"),
+                &format!("storm loser {k} error {e:?}"),
+            ),
+        }
+    }
+    ctx.check(winners >= 1, "the storm must produce at least one winner");
+    ctx.check_eq(
+        &(edges.iter().filter(|e| e.is_ok()).count() as u64),
+        &winners,
+        "edge-side winners mirror serve-side winners",
+    );
+    // exact final accounting: nothing claimed, the watermark sits at the
+    // storm's step, and every successful round's steps are accounted for
+    ctx.check(gate.claimant(0).is_none(), "storm must leave the shard free");
+    ctx.check_eq(&gate.last_step(0), &Some(10), "final watermark");
+    ctx.check_eq(&served_steps, &(9 + winners), "total steps served cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// 11. Seed reproducibility: one seed, two runs, identical everything
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_seed_replays_identical_schedules_and_stats() {
+    let ctx = ChaosCtx::new("seed-reproducibility", 0xC3_000B);
+    let build = |addr: &str| {
+        let mut fleet = ChaosFleet::clean(
+            "seed-repro",
+            ctx.seed(),
+            ServeStyle::Threaded,
+            addr,
+            3,
+        );
+        fleet.edges[0].tx.latency_us = 300;
+        fleet.edges[0].tx.jitter_us = 700;
+        fleet.edges[0].rx.jitter_us = 700;
+        fleet.edges[2].tx.bandwidth_bps = 8_000_000;
+        fleet
+    };
+    let a = run_fleet(&build("127.0.0.1:39454"));
+    let b = run_fleet(&build("127.0.0.1:39455"));
+    // bit-for-bit identical fault schedules — the jitter draws included
+    ctx.check_eq(&a.events, &b.events, "fault schedules");
+    ctx.check(
+        a.events[0]
+            .iter()
+            .any(|ev| matches!(ev.action, FaultAction::Delivered { delay_us } if delay_us > 300)),
+        "jitter must actually draw nonzero delays",
+    );
+    // identical edge outcomes and identical final MultiStats (per-client
+    // reports; reactor_io is timing observability and is never compared)
+    ctx.check_eq(&a.edges, &b.edges, "edge reports");
+    match (&a.cloud, &b.cloud) {
+        (Ok(sa), Ok(sb)) => ctx.check_eq(&sa.per_client, &sb.per_client, "per-client stats"),
+        (ra, rb) => ctx.fail(&format!("cloud runs diverged: {ra:?} vs {rb:?}")),
+    }
+    released(&ctx, &a);
+    released(&ctx, &b);
+}
+
+// ---------------------------------------------------------------------------
+// 12. Long soak: hundreds of edges churn under key rotation, exact final
+//     accounting — #[ignore]-gated, run by the scheduled chaos-soak workflow
+// ---------------------------------------------------------------------------
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+}
+
+#[test]
+#[ignore = "long soak: run via `cargo test --test chaos -- --ignored` (chaos-soak workflow)"]
+fn long_soak_churn_under_rotation_with_exact_accounting() {
+    let ctx = ChaosCtx::new("long-soak-churn", 0xC3_000C);
+    let n = env_u64("C3SL_SOAK_EDGES", 96).max(2) as usize;
+    let rounds = env_u64("C3SL_SOAK_ROUNDS", 4).max(1);
+    let steps = env_u64("C3SL_SOAK_STEPS", 3).max(1);
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let addr = "127.0.0.1:39456";
+    let ring = KeyRing::new(ctx.seed(), r, d, steps.max(2));
+    let gate = ShardGate::new(ring, n);
+    let listener = Tcp::bind(addr).expect("bind");
+    let mut cursors = vec![0u64; n];
+
+    // `rounds` churn rounds, then one final clean round
+    for round in 0..=rounds {
+        let last = round == rounds;
+        // the churn script for this round: roughly one in five edges dies
+        // after `kc` completed steps (kc = 0 means it dies at its first
+        // Features frame, having trained nothing on this connection)
+        let churn: Vec<Option<u64>> = (0..n)
+            .map(|i| {
+                if last {
+                    return None;
+                }
+                let roll = sub_seed(ctx.seed(), 0xC4 + round, i as u64);
+                if roll % 5 == 0 { Some((roll >> 8) % steps) } else { None }
+            })
+            .collect();
+        let firsts = cursors.clone();
+
+        let (cloud_res, edge_res) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let listener = &listener;
+            let cloud = sc.spawn(move || {
+                let streams = Tcp::accept_streams(listener, n, Duration::from_secs(120))
+                    .map_err(|e| e.to_string())?;
+                let conns = streams
+                    .into_iter()
+                    .map(|s| {
+                        NbTcp::from_stream(s).map(|c| Box::new(c) as Box<dyn ReactorConn>)
+                    })
+                    .collect::<std::io::Result<Vec<_>>>()
+                    .map_err(|e| e.to_string())?;
+                let cfg = ReactorConfig {
+                    backend: ReadinessBackend::platform_default(),
+                    ..ReactorConfig::default()
+                };
+                multi::serve_clients_reactor(CloudCodec::Sharded(gate), conns, 4, cfg)
+                    .map_err(|e| e.to_string())
+            });
+            let mut handles = Vec::new();
+            for i in 0..n {
+                let tp = Tcp::connect(addr).expect("soak connect");
+                let mut imp = Impairments::off();
+                if let Some(kc) = churn[i] {
+                    imp.disconnect_at = Some(2 + 2 * kc);
+                }
+                let link_seed = sub_seed(ctx.seed(), 0x50A0 + round, i as u64);
+                let mut link = FaultyLink::new(tp, link_seed, imp, Impairments::off());
+                let first = firsts[i];
+                handles.push(sc.spawn(move || {
+                    multi::run_edge_resumed(
+                        EdgeCodec::Sharded {
+                            shard: ring.edge_shard(i as u64),
+                            workers: 1,
+                            fft: FftBackend::default(),
+                        },
+                        &mut link,
+                        first,
+                        steps,
+                        0xDA7A + i as u64,
+                        batch,
+                        d,
+                    )
+                    .map_err(|e| e.to_string())
+                }));
+            }
+            let edges: Vec<_> =
+                handles.into_iter().map(|h| h.join().expect("soak edge")).collect();
+            (cloud.join().expect("soak cloud"), edges)
+        });
+
+        // round accounting: churners fail loudly and advance only their
+        // completed steps; survivors advance the full round
+        let churned = churn.iter().filter(|c| c.is_some()).count();
+        match (&cloud_res, churned) {
+            (Ok(stats), 0) => {
+                ctx.check_eq(&stats.per_client.len(), &n, "clean round client count");
+                for c in &stats.per_client {
+                    ctx.check_eq(&c.steps, &steps, "clean round per-client steps");
+                }
+                let edge_tx: u64 = edge_res
+                    .iter()
+                    .map(|e| e.as_ref().map(|r| r.tx_bytes).unwrap_or(0))
+                    .sum();
+                ctx.check_eq(&stats.total_rx(), &edge_tx, "clean round byte mirror");
+            }
+            (Err(e), c) if c > 0 => ctx.check(
+                e.contains(&format!("{c} client(s) failed")),
+                &format!("round {round}: expected exactly {c} failures in {e:?}"),
+            ),
+            (res, c) => ctx.fail(&format!(
+                "round {round}: {c} churner(s) but cloud returned {res:?}"
+            )),
+        }
+        for i in 0..n {
+            match churn[i] {
+                None => {
+                    ctx.check(
+                        edge_res[i].is_ok(),
+                        &format!("round {round}: survivor {i}: {:?}", edge_res[i]),
+                    );
+                    cursors[i] += steps;
+                }
+                Some(kc) => {
+                    ctx.check(
+                        edge_res[i].is_err(),
+                        &format!("round {round}: churner {i} should have died"),
+                    );
+                    cursors[i] += kc;
+                }
+            }
+            ctx.check(
+                gate.claimant(i as u64).is_none(),
+                &format!("round {round}: shard {i} still claimed"),
+            );
+            let want = if cursors[i] > 0 { Some(cursors[i] - 1) } else { None };
+            ctx.check_eq(
+                &gate.last_step(i as u64),
+                &want,
+                &format!("round {round}: shard {i} watermark"),
+            );
+        }
+    }
+}
