@@ -117,6 +117,11 @@ pub struct ExperimentConfig {
     /// Optional virtual link cost model (latency + bandwidth) applied on
     /// the edge side for communication-cost accounting.
     pub link: Option<LinkModel>,
+    /// Bind address for the plaintext ops control plane (`[ops] addr`):
+    /// `/metrics`, `/healthz`, `POST /drain` served off the reactor's own
+    /// readiness loop.  Requires `transport.reactor = true`; `None` disables
+    /// the endpoint.
+    pub ops_addr: Option<String>,
 
     // training
     /// Training steps to run.
@@ -169,6 +174,7 @@ impl Default for ExperimentConfig {
             reactor_poll_us: 100,
             reactor_outbox: 8,
             link: None,
+            ops_addr: None,
             steps: 200,
             lr: 1e-4, // paper §4.1
             seed: 0,
@@ -337,6 +343,9 @@ impl ExperimentConfig {
             }
             cfg.reactor_outbox = fr as usize;
         }
+        if let Some(v) = get(&doc, "ops", "addr") {
+            cfg.ops_addr = Some(v.as_str().ok_or_else(|| inv("ops.addr".into()))?.into());
+        }
         if let (Some(lat), Some(bw)) = (
             get(&doc, "link", "latency_ms").and_then(|v| v.as_f64()),
             get(&doc, "link", "bandwidth_mbps").and_then(|v| v.as_f64()),
@@ -418,6 +427,20 @@ impl ExperimentConfig {
                  (use \"sweep\")",
                 self.reactor_backend.name()
             )));
+        }
+        if let Some(addr) = &self.ops_addr {
+            if addr.parse::<std::net::SocketAddr>().is_err() {
+                return Err(ConfigError::Invalid(format!(
+                    "ops.addr must be a host:port socket address, got {addr:?}"
+                )));
+            }
+            if !self.reactor {
+                return Err(ConfigError::Invalid(
+                    "ops.addr requires transport.reactor = true — the ops \
+                     control plane is served from the reactor's readiness loop"
+                        .into(),
+                ));
+            }
         }
         if self.rotation_steps > 0 && !self.key_sharding {
             return Err(ConfigError::Invalid(
@@ -592,6 +615,28 @@ mod tests {
         .is_err());
         // sharding with rotation disabled is fine
         assert!(ExperimentConfig::from_toml_str("[scheme]\nkey_sharding = true\n").is_ok());
+    }
+
+    #[test]
+    fn parses_ops_addr_knob() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[transport]\nreactor = true\n[ops]\naddr = \"127.0.0.1:9100\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.ops_addr.as_deref(), Some("127.0.0.1:9100"));
+        // default: no ops endpoint
+        assert!(ExperimentConfig::default().ops_addr.is_none());
+        // the ops plane rides the reactor loop — blocking serving has none
+        assert!(ExperimentConfig::from_toml_str("[ops]\naddr = \"127.0.0.1:9100\"\n").is_err());
+        // unparseable socket addresses are rejected loudly at load time
+        assert!(ExperimentConfig::from_toml_str(
+            "[transport]\nreactor = true\n[ops]\naddr = \"not-an-addr\"\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[transport]\nreactor = true\n[ops]\naddr = 9100\n"
+        )
+        .is_err());
     }
 
     #[test]

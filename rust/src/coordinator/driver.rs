@@ -6,7 +6,10 @@
 //! thread) and runs the edge on the caller's thread.  TCP mode is driven from
 //! main.rs with `c3sl edge` / `c3sl cloud` in separate processes.
 
-use super::multi::{self, CloudCodec, EdgeCodec, EdgeReport, MultiStats, ShardGate};
+use super::multi::{
+    self, CloudCodec, EdgeCodec, EdgeReport, MultiStats, OpsOptions, OpsRegistry, OpsReload,
+    ShardGate,
+};
 use super::run_codec::RunCodec;
 use super::{CloudWorker, EdgeWorker};
 use crate::config::{ExperimentConfig, TransportKind};
@@ -22,6 +25,7 @@ use crate::transport::sim::{LinkModel, SimLink};
 use crate::transport::tcp::Tcp;
 use crate::transport::{inproc_pair, inproc_reactor_pair_with, Transport};
 use crate::util::error::{C3Error, Context, Result};
+use std::sync::Arc;
 
 /// Everything a finished run reports.
 pub struct RunOutput {
@@ -149,6 +153,13 @@ pub struct MultiEdgeSpec {
     /// Rotate every shard to a fresh key epoch each `rotation_steps`
     /// training steps (0 = never; requires `key_sharding`).
     pub rotation_steps: u64,
+    /// Serve the plaintext ops endpoints (`GET /metrics`, `GET /healthz`,
+    /// `POST /drain`) on this address, off the reactor's own readiness
+    /// loop — no extra threads.  Requires `reactor`.
+    pub ops_addr: Option<String>,
+    /// Config file re-parsed on SIGHUP for the live-reload knob subset
+    /// (`transport.outbox_frames`, `transport.poll_us`); reactor mode only.
+    pub ops_reload_path: Option<String>,
 }
 
 impl Default for MultiEdgeSpec {
@@ -172,6 +183,8 @@ impl Default for MultiEdgeSpec {
             poll: ReactorConfig::default(),
             key_sharding: false,
             rotation_steps: 0,
+            ops_addr: None,
+            ops_reload_path: None,
         }
     }
 }
@@ -232,6 +245,21 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
         spec.rotation_steps == 0 || spec.key_sharding,
         "rotation_steps requires key_sharding"
     );
+    ensure!(
+        (spec.ops_addr.is_none() && spec.ops_reload_path.is_none()) || spec.reactor,
+        "the ops control plane rides the reactor's readiness loop — \
+         ops_addr / ops_reload_path require reactor serving"
+    );
+    // bind the ops listener before anything spawns, so an unusable address
+    // fails the run loudly up front instead of inside the cloud thread
+    let ops_listener = match &spec.ops_addr {
+        Some(addr) => Some(
+            std::net::TcpListener::bind(addr)
+                .with_context(|| format!("binding ops listener {addr}"))?,
+        ),
+        None => None,
+    };
+    let ops_registry = Arc::new(OpsRegistry::new());
     // zero reactor bounds are normalized (ReactorConfig::clamped), not errors
     let t0 = std::time::Instant::now();
     let key_seed = spec.seed ^ 0xC3_C3_C3_C3u64;
@@ -300,9 +328,31 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     let fft_backend = spec.fft_backend;
     let poll = spec.poll;
     let n_edges = spec.edges;
+    let reload_path = spec.ops_reload_path.clone();
+    let cloud_registry = ops_registry.clone();
     let cloud_handle = std::thread::Builder::new()
         .name("multi-cloud".into())
         .spawn(move || -> Result<MultiStats> {
+            // the SIGHUP reload source: re-parse the config file and apply
+            // the safe knob subset (bad reloads are ignored loudly, never
+            // fatal to a serving fleet)
+            let reload = reload_path.map(|p| {
+                Box::new(move || match ExperimentConfig::load(&p) {
+                    Ok(cfg) => OpsReload {
+                        max_outbox_frames: Some(cfg.reactor_outbox),
+                        poll_sleep_us: Some(cfg.reactor_poll_us),
+                    },
+                    Err(e) => {
+                        eprintln!("ops reload: ignoring unreadable config {p}: {e}");
+                        OpsReload::default()
+                    }
+                }) as Box<dyn Fn() -> OpsReload + Send>
+            });
+            let ops = OpsOptions {
+                listener: ops_listener,
+                registry: cloud_registry,
+                reload,
+            };
             // the cloud's key source lives on this thread for the whole
             // serve: either the shared codec or the shard gate
             let gate = ring.map(|ring| {
@@ -316,9 +366,11 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                 (None, None) => unreachable!("one of shared codec / key ring is always built"),
             };
             match cloud_plan {
-                CloudPlan::Blocking(tps) => multi::serve_clients(codec, tps),
+                CloudPlan::Blocking(tps) => {
+                    multi::serve_clients_with_ops(codec, tps, &ops.registry)
+                }
                 CloudPlan::Reactor(conns) => {
-                    multi::serve_clients_reactor(codec, conns, workers, poll)
+                    multi::serve_clients_reactor_ops(codec, conns, workers, poll, ops)
                 }
                 CloudPlan::TcpAccept { listener, n, reactor } => {
                     // Deadline-bounded accept: a client that never connects
@@ -333,13 +385,13 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                                 NbTcp::from_stream(s).context("nonblocking accept")?,
                             ));
                         }
-                        multi::serve_clients_reactor(codec, conns, workers, poll)
+                        multi::serve_clients_reactor_ops(codec, conns, workers, poll, ops)
                     } else {
                         let mut tps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
                         for s in streams {
                             tps.push(Box::new(Tcp::from_stream(s).context("blocking accept")?));
                         }
-                        multi::serve_clients(codec, tps)
+                        multi::serve_clients_with_ops(codec, tps, &ops.registry)
                     }
                 }
             }

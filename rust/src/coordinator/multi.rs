@@ -49,18 +49,34 @@
 //!   both endpoints re-derive the shard at the next epoch, in lockstep,
 //!   purely from the step number.
 
+//!
+//! # Ops control plane
+//!
+//! The reactor serve can additionally answer a plaintext HTTP/1.0 ops
+//! endpoint off its *own* readiness loop (the listener is one more pollable
+//! fd — no extra threads): `GET /metrics` (Prometheus text format),
+//! `GET /healthz` and `POST /drain` (graceful drain).  Both serving styles
+//! publish live counters into a shared [`OpsRegistry`]; SIGHUP re-applies
+//! the safe knob subset ([`OpsReload`]).  See [`OpsOptions`],
+//! [`serve_clients_reactor_ops`] and ARCHITECTURE.md.
+
 use super::run_codec::RunCodec;
 use crate::hdc::keyring::{ClientCodec, EdgeShard, KeyRing, RevocationList};
 use crate::hdc::{C3Scratch, FftBackend, C3};
+use crate::metrics::prom::PromWriter;
+use crate::metrics::Histogram;
 use crate::tensor::{Labels, Tensor};
 use crate::transport::reactor::{
     Event, Reactor, ReactorConfig, ReactorConn, ReactorIoStats,
 };
-use crate::transport::readiness::{thread_cpu_time, ReadinessBackend, WakeHandle};
+use crate::transport::readiness::{
+    hangup_count, install_hangup_handler, thread_cpu_time, ReadinessBackend, WakeHandle,
+};
 use crate::transport::{Msg, Transport};
 use crate::util::error::{C3Error, Context, Result};
 use crate::util::rng::Rng;
 use crate::{bail, ensure};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Per-client report from the multi-edge cloud (its half of the link).
@@ -441,6 +457,16 @@ impl ShardGate {
             Err(_) => None,
         }
     }
+
+    /// Number of shard ids this gate serves: the ops `/metrics` exporter
+    /// enumerates `0..shards()` for its per-shard watermark gauges.  0 on
+    /// a poisoned lock.
+    pub fn shards(&self) -> usize {
+        match self.state.lock() {
+            Ok(st) => st.claimed.len(),
+            Err(_) => 0,
+        }
+    }
 }
 
 /// How the cloud obtains codec keys for its clients.
@@ -556,13 +582,34 @@ pub fn serve_one(
     transport: &mut dyn Transport,
     client: usize,
 ) -> Result<ClientReport> {
+    serve_one_ops(codec, transport, client, None)
+}
+
+/// [`serve_one`] with live ops publication: completed train steps and the
+/// session outcome feed the shared [`OpsRegistry`] as they happen, and a
+/// requested drain ([`OpsRegistry::request_drain`]) ends the session
+/// cleanly at the next message boundary — the blocking path's half of the
+/// drain contract (it has no reactor loop to serve the HTTP endpoints from;
+/// the registry itself is its publication surface).
+pub fn serve_one_ops(
+    codec: CloudCodec<'_>,
+    transport: &mut dyn Transport,
+    client: usize,
+    registry: Option<&OpsRegistry>,
+) -> Result<ClientReport> {
     let mut shard: Option<ClientCodec> = None;
-    let served = serve_one_session(codec, transport, client, &mut shard);
+    let served = serve_one_session(codec, transport, client, &mut shard, registry);
     // Shard re-claim: this connection is over on every path through the
     // session loop.  The gate frees the claim only if THIS slot owns it
     // (and a rejected claim leaves `shard` empty anyway).
     if let (CloudCodec::Sharded(gate), Some(cc)) = (codec, shard.as_ref()) {
         gate.release(client, cc.client_id());
+    }
+    if let Some(reg) = registry {
+        match &served {
+            Ok(_) => reg.note_client_finished(),
+            Err(_) => reg.note_client_failed(),
+        }
     }
     let (steps, last_loss) = served?;
     let stats = transport.stats();
@@ -586,12 +633,21 @@ fn serve_one_session(
     transport: &mut dyn Transport,
     client: usize,
     shard: &mut Option<ClientCodec>,
+    registry: Option<&OpsRegistry>,
 ) -> Result<(u64, f32)> {
     let mut challenged = false;
     let mut pending: Option<(u64, Tensor)> = None;
     let mut steps = 0u64;
     let mut last_loss = 0.0f32;
     loop {
+        // drain: stop admitting at the message boundary (a blocking recv
+        // in progress still completes — the blocking path cannot interrupt
+        // it, so drain latency here is one message, not zero)
+        if let Some(reg) = registry {
+            if reg.drain_state() != DrainState::Serving {
+                break;
+            }
+        }
         match transport.recv()? {
             Msg::KeySeed { .. } => {
                 // keys already derived from the shared seed at construction
@@ -681,6 +737,9 @@ fn serve_one_session(
                 }
                 last_loss = loss;
                 steps += 1;
+                if let Some(reg) = registry {
+                    reg.note_step(loss);
+                }
                 transport.send(&Msg::Gradients { step, tensor: gs })?;
                 transport.send(&Msg::StepStats { step, loss, ncorrect: 0.0 })?;
             }
@@ -731,6 +790,39 @@ pub fn serve_clients<T: Transport>(
         Ok(reports)
     })?;
     reports.sort_by_key(|r| r.client);
+    Ok(MultiStats { per_client: reports, reactor_io: None })
+}
+
+/// [`serve_clients`] with live ops publication into a shared registry —
+/// the blocking-path twin of [`serve_clients_reactor_ops`].  Every client
+/// thread feeds the same [`OpsRegistry`] and honors a requested drain at
+/// its next message boundary.
+pub fn serve_clients_with_ops<T: Transport>(
+    codec: CloudCodec<'_>,
+    transports: Vec<T>,
+    registry: &OpsRegistry,
+) -> Result<MultiStats> {
+    let mut reports = std::thread::scope(|sc| -> Result<Vec<ClientReport>> {
+        let handles: Vec<_> = transports
+            .into_iter()
+            .enumerate()
+            .map(|(ci, mut tp)| {
+                sc.spawn(move || serve_one_ops(codec, &mut tp, ci, Some(registry)))
+            })
+            .collect();
+        let mut reports = Vec::with_capacity(handles.len());
+        for h in handles {
+            reports.push(
+                h.join()
+                    .map_err(|_| C3Error::msg("cloud client thread panicked"))??,
+            );
+        }
+        Ok(reports)
+    })?;
+    reports.sort_by_key(|r| r.client);
+    if registry.drain_state() == DrainState::Draining {
+        registry.mark_drained();
+    }
     Ok(MultiStats { per_client: reports, reactor_io: None })
 }
 
@@ -812,11 +904,13 @@ fn fail_client(
     open: &mut usize,
     client: usize,
     why: String,
+    registry: &OpsRegistry,
 ) {
     let c = &mut st[client];
     if c.closed {
         return;
     }
+    registry.note_client_failed();
     c.failed = Some(why);
     c.jobs.clear();
     c.pending = None;
@@ -1110,6 +1204,7 @@ fn apply_done(
     reactor: &mut Reactor,
     open: &mut usize,
     inflight_total: &mut usize,
+    registry: &OpsRegistry,
 ) {
     let Done { client, result } = done;
     st[client].inflight = false;
@@ -1123,15 +1218,355 @@ fn apply_done(
             if ok.is_train {
                 c.steps += 1;
                 c.last_loss = ok.loss;
+                registry.note_step(ok.loss);
             }
             for frame in ok.frames {
                 reactor.queue_frame(client, frame);
             }
         }
         Err(e) => {
-            fail_client(codec, st, reactor, open, client, format!("codec worker: {e}"));
+            fail_client(codec, st, reactor, open, client, format!("codec worker: {e}"), registry);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Ops control plane: the registry both serve paths publish into, plus the
+// /metrics, /healthz and /drain handling the reactor loop answers off its
+// own readiness pump (the transport::reactor ops listener).
+// ---------------------------------------------------------------------------
+
+/// Where a serving session stands in its graceful-drain lifecycle.  The
+/// machine is one-way: `Serving → Draining → Drained`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainState {
+    /// Normal operation: clients admitted and served.
+    Serving,
+    /// Drain requested: no new work admitted; in-flight compute finishes,
+    /// outboxes flush, and shard claims release as each client retires.
+    Draining,
+    /// Every client retired and the serving call has returned (or is
+    /// about to).
+    Drained,
+}
+
+/// Live counters both serving styles publish while they run, shared with
+/// scrapers through an `Arc` so ops state outlives the serve call itself.
+/// All counters are monotone (Prometheus counter semantics); the drain
+/// field is the one-way [`DrainState`] machine.
+#[derive(Debug)]
+pub struct OpsRegistry {
+    steps_total: AtomicU64,
+    clients_finished: AtomicU64,
+    clients_failed: AtomicU64,
+    reloads_total: AtomicU64,
+    drain: AtomicU8,
+    step_loss: Mutex<Histogram>,
+}
+
+impl Default for OpsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OpsRegistry {
+    /// Fresh registry: zero counters, [`DrainState::Serving`].
+    pub fn new() -> Self {
+        OpsRegistry {
+            steps_total: AtomicU64::new(0),
+            clients_finished: AtomicU64::new(0),
+            clients_failed: AtomicU64::new(0),
+            reloads_total: AtomicU64::new(0),
+            drain: AtomicU8::new(0),
+            // probe losses span orders of magnitude across geometries, so
+            // the buckets are log-spaced rather than latency-shaped
+            step_loss: Mutex::new(Histogram::new(vec![
+                1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0, 100.0,
+            ])),
+        }
+    }
+
+    /// Record one completed training step and its probe loss.
+    pub fn note_step(&self, loss: f32) {
+        self.steps_total.fetch_add(1, Ordering::Relaxed);
+        if let Ok(mut h) = self.step_loss.lock() {
+            h.observe(loss as f64);
+        }
+    }
+
+    /// Record one client retiring cleanly.
+    pub fn note_client_finished(&self) {
+        self.clients_finished.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one client failed (protocol violation, transport error, …).
+    pub fn note_client_failed(&self) {
+        self.clients_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one applied SIGHUP knob reload.
+    pub fn note_reload(&self) {
+        self.reloads_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Training steps served so far, summed over clients.
+    pub fn steps_total(&self) -> u64 {
+        self.steps_total.load(Ordering::Relaxed)
+    }
+
+    /// Clients retired cleanly so far.
+    pub fn clients_finished(&self) -> u64 {
+        self.clients_finished.load(Ordering::Relaxed)
+    }
+
+    /// Clients failed so far.
+    pub fn clients_failed(&self) -> u64 {
+        self.clients_failed.load(Ordering::Relaxed)
+    }
+
+    /// SIGHUP reloads applied so far.
+    pub fn reloads_total(&self) -> u64 {
+        self.reloads_total.load(Ordering::Relaxed)
+    }
+
+    /// Request a graceful drain (idempotent; `POST /drain` lands here, and
+    /// embedders may call it directly).  The serving loop stops admitting
+    /// work, finishes what is in flight, flushes outboxes, releases shard
+    /// claims and returns.  A registry already `Drained` stays drained.
+    pub fn request_drain(&self) {
+        let _ = self.drain.compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    /// Current drain lifecycle state.
+    pub fn drain_state(&self) -> DrainState {
+        match self.drain.load(Ordering::Acquire) {
+            0 => DrainState::Serving,
+            1 => DrainState::Draining,
+            _ => DrainState::Drained,
+        }
+    }
+
+    /// Promote `Draining` to `Drained` once every client has retired.
+    fn mark_drained(&self) {
+        self.drain.store(2, Ordering::Release);
+    }
+
+    /// Snapshot of the per-step probe-loss histogram.
+    pub fn step_loss_snapshot(&self) -> Histogram {
+        match self.step_loss.lock() {
+            Ok(h) => h.clone(),
+            Err(e) => e.into_inner().clone(),
+        }
+    }
+}
+
+/// The SIGHUP-reloadable knob subset.  `None` fields leave the running
+/// value untouched.  Deliberately small: the rotation cadence is *excluded*
+/// (epoch derivation is lockstep between edges and cloud, so changing it
+/// mid-run would desynchronize every key schedule), and so is the codec
+/// worker count (the pool is scoped to the serve call); both are recorded
+/// with their rationale in ARCHITECTURE.md.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpsReload {
+    /// New per-client outbox bound, in frames (clamped to ≥ 1).
+    pub max_outbox_frames: Option<usize>,
+    /// New sweep-backend idle poll backoff, in microseconds.
+    pub poll_sleep_us: Option<u64>,
+}
+
+/// Ops control-plane wiring for [`serve_clients_reactor_ops`].
+pub struct OpsOptions {
+    /// Pre-bound listener the reactor answers `GET /metrics`,
+    /// `GET /healthz` and `POST /drain` on.  It is registered with the
+    /// reactor's own readiness backend — no extra threads, no async
+    /// runtime.  `None` serves without HTTP endpoints.
+    pub listener: Option<std::net::TcpListener>,
+    /// Counters the serve publishes into; keep a clone of the `Arc` to
+    /// read them while (and after) the serve runs.
+    pub registry: Arc<OpsRegistry>,
+    /// Invoked once per observed SIGHUP (the handler is installed when
+    /// this is `Some`); returns the knob values to apply.
+    pub reload: Option<Box<dyn Fn() -> OpsReload + Send>>,
+}
+
+impl Default for OpsOptions {
+    fn default() -> Self {
+        OpsOptions { listener: None, registry: Arc::new(OpsRegistry::new()), reload: None }
+    }
+}
+
+impl std::fmt::Debug for OpsOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OpsOptions")
+            .field("listener", &self.listener)
+            .field("registry", &self.registry)
+            .field("reload", &self.reload.is_some())
+            .finish()
+    }
+}
+
+/// Render the Prometheus text-format `/metrics` payload from live serving
+/// state.  Byte totals sum per-connection `LinkStats`, which survive close
+/// — so every series here is monotone across a client's whole lifecycle.
+fn render_metrics(codec: CloudCodec<'_>, reactor: &Reactor, registry: &OpsRegistry) -> String {
+    let mut w = PromWriter::new();
+    w.counter(
+        "c3sl_steps_total",
+        "Training steps served, summed over clients.",
+        registry.steps_total(),
+    );
+    w.counter(
+        "c3sl_clients_finished_total",
+        "Clients that retired cleanly.",
+        registry.clients_finished(),
+    );
+    w.counter(
+        "c3sl_clients_failed_total",
+        "Clients failed and disconnected.",
+        registry.clients_failed(),
+    );
+    w.counter("c3sl_reloads_total", "SIGHUP knob reloads applied.", registry.reloads_total());
+    w.gauge(
+        "c3sl_clients_open",
+        "Client connections currently open.",
+        reactor.open_count() as f64,
+    );
+    w.gauge(
+        "c3sl_drain_state",
+        "Drain lifecycle: 0 = serving, 1 = draining, 2 = drained.",
+        match registry.drain_state() {
+            DrainState::Serving => 0.0,
+            DrainState::Draining => 1.0,
+            DrainState::Drained => 2.0,
+        },
+    );
+    w.counter("c3sl_reactor_wakeups_total", "Readiness pump wakeups.", reactor.wakeups());
+    w.family(
+        "c3sl_reactor_backend",
+        "Readiness backend actually in use (series value is always 1).",
+        "gauge",
+    );
+    w.sample("c3sl_reactor_backend", &[("backend", reactor.backend().name())], 1.0);
+    let (mut tx, mut rx) = (0u64, 0u64);
+    for ci in 0..reactor.client_count() {
+        let s = reactor.stats(ci);
+        tx += s.tx();
+        rx += s.rx();
+    }
+    w.counter("c3sl_tx_bytes_total", "Bytes sent to clients (cloud downlink).", tx);
+    w.counter("c3sl_rx_bytes_total", "Bytes received from clients (cloud uplink).", rx);
+    w.histogram("c3sl_step_loss", "Per-step probe loss.", &registry.step_loss_snapshot());
+    if let CloudCodec::Sharded(gate) = codec {
+        w.family(
+            "c3sl_shard_claimed",
+            "1 when the shard id is currently claimed by a client.",
+            "gauge",
+        );
+        for id in 0..gate.shards() {
+            let shard = id.to_string();
+            let v = if gate.claimant(id as u64).is_some() { 1.0 } else { 0.0 };
+            w.sample("c3sl_shard_claimed", &[("shard", &shard)], v);
+        }
+        w.family(
+            "c3sl_shard_last_step",
+            "Re-claim watermark per shard: highest uplinked training step (-1 before the first).",
+            "gauge",
+        );
+        for id in 0..gate.shards() {
+            let shard = id.to_string();
+            let v = gate.last_step(id as u64).map_or(-1.0, |s| s as f64);
+            w.sample("c3sl_shard_last_step", &[("shard", &shard)], v);
+        }
+    }
+    w.finish()
+}
+
+/// Render the `/healthz` body.  `degraded: true` reports a reactor whose
+/// requested epoll backend broke and degraded itself to the timed sweep —
+/// the run is still correct, just no longer event-driven.
+fn render_healthz(reactor: &Reactor, registry: &OpsRegistry) -> String {
+    let requested = reactor.config().backend;
+    let actual = reactor.backend();
+    format!(
+        "status: ok\nbackend: {}\nrequested: {}\ndegraded: {}\ndrain: {}\nopen_clients: {}\n",
+        actual.name(),
+        requested.name(),
+        actual != requested,
+        match registry.drain_state() {
+            DrainState::Serving => "serving",
+            DrainState::Draining => "draining",
+            DrainState::Drained => "drained",
+        },
+        reactor.open_count(),
+    )
+}
+
+/// Answer every ops request the reactor's pump surfaced this pass; returns
+/// whether any was served (progress, for the idle policy).  `POST /drain`
+/// flips the registry to `Draining` — the serve loop folds that into its
+/// clients in the same pass.
+fn handle_ops_requests(
+    codec: CloudCodec<'_>,
+    reactor: &mut Reactor,
+    registry: &OpsRegistry,
+) -> bool {
+    let reqs = reactor.take_ops_requests();
+    let mut served = false;
+    for req in reqs {
+        served = true;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/metrics") => {
+                let body = render_metrics(codec, reactor, registry);
+                reactor.ops_respond(
+                    req.conn,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    body.as_bytes(),
+                );
+            }
+            ("GET", "/healthz") => {
+                let body = render_healthz(reactor, registry);
+                reactor.ops_respond(
+                    req.conn,
+                    200,
+                    "OK",
+                    "text/plain; charset=utf-8",
+                    body.as_bytes(),
+                );
+            }
+            ("POST", "/drain") => {
+                registry.request_drain();
+                reactor.ops_respond(
+                    req.conn,
+                    200,
+                    "OK",
+                    "text/plain; charset=utf-8",
+                    b"draining\n",
+                );
+            }
+            (_, "/drain") => {
+                reactor.ops_respond(
+                    req.conn,
+                    405,
+                    "Method Not Allowed",
+                    "text/plain; charset=utf-8",
+                    b"drain is a POST\n",
+                );
+            }
+            _ => {
+                reactor.ops_respond(
+                    req.conn,
+                    404,
+                    "Not Found",
+                    "text/plain; charset=utf-8",
+                    b"unknown ops path\n",
+                );
+            }
+        }
+    }
+    served
 }
 
 /// The epoll backend's idle block, in milliseconds.  A pure safety net:
@@ -1164,11 +1599,37 @@ pub fn serve_clients_reactor(
     workers: usize,
     cfg: ReactorConfig,
 ) -> Result<MultiStats> {
+    serve_clients_reactor_ops(codec, conns, workers, cfg, OpsOptions::default())
+}
+
+/// [`serve_clients_reactor`] with the ops control plane attached: the
+/// listener in `ops` (if any) becomes one more pollable fd on the
+/// reactor's readiness backend, and `GET /metrics`, `GET /healthz` and
+/// `POST /drain` are answered from the serve loop itself — no extra
+/// threads.  SIGHUP applies the [`OpsReload`] knob subset via the `ops`
+/// reload callback, and every counter the loop touches lands in the
+/// shared [`OpsRegistry`] as it happens.
+pub fn serve_clients_reactor_ops(
+    codec: CloudCodec<'_>,
+    conns: Vec<Box<dyn ReactorConn>>,
+    workers: usize,
+    cfg: ReactorConfig,
+    ops: OpsOptions,
+) -> Result<MultiStats> {
+    let OpsOptions { listener, registry, reload } = ops;
     if conns.is_empty() {
         return Ok(MultiStats::default());
     }
     let cpu0 = thread_cpu_time();
     let mut reactor = Reactor::new(conns, cfg);
+    if let Some(listener) = listener {
+        reactor
+            .serve_ops(listener)
+            .map_err(|e| C3Error::msg(format!("registering ops listener: {e}")))?;
+    }
+    if reload.is_some() {
+        install_hangup_handler();
+    }
     let waker = reactor.waker();
     let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
     let (done_tx, done_rx) = std::sync::mpsc::channel::<Done>();
@@ -1185,7 +1646,7 @@ pub fn serve_clients_reactor(
         drop(done_tx);
         // job_tx moves into the loop and drops on return, which is what
         // releases the workers (and lets this scope join them)
-        reactor_serve_loop(codec, &mut reactor, job_tx, &done_rx)
+        reactor_serve_loop(codec, &mut reactor, job_tx, &done_rx, &registry, reload.as_deref())
     });
     let mut stats = served?;
     stats.reactor_io = Some(ReactorIoStats {
@@ -1204,11 +1665,11 @@ fn reactor_serve_loop(
     reactor: &mut Reactor,
     job_tx: std::sync::mpsc::Sender<Job>,
     done_rx: &std::sync::mpsc::Receiver<Done>,
+    registry: &OpsRegistry,
+    reload: Option<&(dyn Fn() -> OpsReload + Send)>,
 ) -> Result<MultiStats> {
     use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
     let n = reactor.client_count();
-    // Reactor::new normalized the bounds; read them back for step 3's hold
-    let cfg = reactor.config();
     let mut st: Vec<ClientSm> = (0..n).map(|_| ClientSm::default()).collect();
     let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
     let mut events: Vec<Event> = Vec::new();
@@ -1217,8 +1678,13 @@ fn reactor_serve_loop(
     // event-driven: once a full pass finds no work, the NEXT pass blocks in
     // epoll_wait — sockets, doorbells and the worker waker cut it short
     let mut idle = false;
+    // SIGHUPs observed before the serve started are not reload requests
+    let mut seen_hups = hangup_count();
 
     while open > 0 {
+        // Reactor::new normalized the bounds; re-read them every pass so a
+        // SIGHUP retune below reaches step 3's hold and step 5's backoff
+        let cfg = reactor.config();
         // re-checked every pass: a reactor whose epoll_wait breaks degrades
         // itself to the sweep backend mid-serve, and the idle policy below
         // must follow it (a blocking-style idle on a sweep pump would spin)
@@ -1237,7 +1703,15 @@ fn reactor_serve_loop(
                     if let Err(e) =
                         handle_client_msg(codec, &mut st[client], reactor, client, msg)
                     {
-                        fail_client(codec, &mut st, reactor, &mut open, client, e.to_string());
+                        fail_client(
+                            codec,
+                            &mut st,
+                            reactor,
+                            &mut open,
+                            client,
+                            e.to_string(),
+                            registry,
+                        );
                     }
                 }
                 Event::Closed { client } => {
@@ -1251,11 +1725,20 @@ fn reactor_serve_loop(
                             &mut open,
                             client,
                             "connection closed mid-protocol".into(),
+                            registry,
                         );
                     }
                 }
                 Event::Error { client, error } => {
-                    fail_client(codec, &mut st, reactor, &mut open, client, error.to_string());
+                    fail_client(
+                        codec,
+                        &mut st,
+                        reactor,
+                        &mut open,
+                        client,
+                        error.to_string(),
+                        registry,
+                    );
                 }
             }
         }
@@ -1265,7 +1748,15 @@ fn reactor_serve_loop(
             match done_rx.try_recv() {
                 Ok(done) => {
                     worked = true;
-                    apply_done(codec, done, &mut st, reactor, &mut open, &mut inflight_total);
+                    apply_done(
+                        codec,
+                        done,
+                        &mut st,
+                        reactor,
+                        &mut open,
+                        &mut inflight_total,
+                        registry,
+                    );
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -1274,6 +1765,40 @@ fn reactor_serve_loop(
                         "codec worker pool died with {inflight_total} jobs in flight"
                     );
                     break;
+                }
+            }
+        }
+
+        // 2b) ops control plane: answer any /metrics, /healthz, /drain
+        //     requests the pump surfaced, apply SIGHUP knob reloads, and
+        //     fold a requested drain into every still-serving client — each
+        //     then retires through the normal step-4 path (compute and
+        //     outbox drain, report filled, shard claim released), so drain
+        //     accounting is exactly the clean-shutdown accounting
+        worked |= handle_ops_requests(codec, reactor, registry);
+        if let Some(reload) = reload {
+            let hups = hangup_count();
+            if hups != seen_hups {
+                seen_hups = hups;
+                let r = reload();
+                if let Some(frames) = r.max_outbox_frames {
+                    reactor.set_max_outbox_frames(frames);
+                }
+                if let Some(us) = r.poll_sleep_us {
+                    reactor.set_poll_sleep_us(us);
+                }
+                registry.note_reload();
+                worked = true;
+            }
+        }
+        if registry.drain_state() == DrainState::Draining {
+            for ci in 0..n {
+                let c = &mut st[ci];
+                if !c.closed && !c.finishing {
+                    c.finishing = true;
+                    c.pending = None;
+                    reactor.set_hold(ci, true);
+                    worked = true;
                 }
             }
         }
@@ -1328,6 +1853,7 @@ fn reactor_serve_loop(
                 reactor.close(ci);
                 c.closed = true;
                 open -= 1;
+                registry.note_client_finished();
                 worked = true;
             }
         }
@@ -1353,6 +1879,7 @@ fn reactor_serve_loop(
                         reactor,
                         &mut open,
                         &mut inflight_total,
+                        registry,
                     ),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {
@@ -1365,6 +1892,13 @@ fn reactor_serve_loop(
                 }
             }
         }
+    }
+
+    // a requested drain has fully completed once every client retired —
+    // promote before surfacing failures so scrapers holding the registry
+    // observe the terminal state even for a partly-failed fleet
+    if registry.drain_state() == DrainState::Draining {
+        registry.mark_drained();
     }
 
     // every healthy client has fully retired; only now surface failures,
@@ -2338,5 +2872,105 @@ mod tests {
         assert_eq!(stats.per_client[0].client, 0);
         assert_eq!(stats.per_client[1].client, 1);
         assert_eq!(stats.total_steps(), 3 + 4);
+    }
+
+    #[test]
+    fn ops_registry_counts_and_drain_lifecycle() {
+        let reg = OpsRegistry::new();
+        assert_eq!(reg.drain_state(), DrainState::Serving);
+        reg.note_step(0.5);
+        reg.note_step(2.0);
+        reg.note_client_finished();
+        reg.note_client_failed();
+        reg.note_reload();
+        assert_eq!(reg.steps_total(), 2);
+        assert_eq!(reg.clients_finished(), 1);
+        assert_eq!(reg.clients_failed(), 1);
+        assert_eq!(reg.reloads_total(), 1);
+        let h = reg.step_loss_snapshot();
+        assert_eq!(h.total, 2);
+        assert_eq!(h.min, 0.5);
+        // one-way lifecycle: request_drain is idempotent and never
+        // regresses a Drained registry back to Draining
+        reg.request_drain();
+        reg.request_drain();
+        assert_eq!(reg.drain_state(), DrainState::Draining);
+        reg.mark_drained();
+        reg.request_drain();
+        assert_eq!(reg.drain_state(), DrainState::Drained);
+    }
+
+    #[test]
+    fn ops_metrics_render_covers_gate_and_reactor() {
+        let ring = KeyRing::new(7, 2, 8, 0);
+        let gate = ShardGate::new(ring, 2);
+        let codec = CloudCodec::Sharded(&gate);
+        let (_edge, conn) = inproc_reactor_pair();
+        let reactor =
+            Reactor::new(vec![Box::new(conn) as Box<dyn ReactorConn>], ReactorConfig::default());
+        let reg = OpsRegistry::new();
+        reg.note_step(1.5);
+        let body = render_metrics(codec, &reactor, &reg);
+        assert!(body.contains("# TYPE c3sl_steps_total counter"), "{body}");
+        assert!(body.contains("\nc3sl_steps_total 1\n"), "{body}");
+        assert!(body.contains("\nc3sl_clients_open 1\n"), "{body}");
+        assert!(body.contains("\nc3sl_drain_state 0\n"), "{body}");
+        assert!(body.contains("c3sl_reactor_backend{backend=\""), "{body}");
+        assert!(body.contains("c3sl_shard_claimed{shard=\"0\"} 0\n"), "{body}");
+        assert!(body.contains("c3sl_shard_last_step{shard=\"1\"} -1\n"), "{body}");
+        assert!(body.contains("c3sl_step_loss_bucket{le=\"+Inf\"} 1\n"), "{body}");
+        assert!(body.contains("\nc3sl_step_loss_count 1\n"), "{body}");
+        let hz = render_healthz(&reactor, &reg);
+        assert!(hz.starts_with("status: ok\n"), "{hz}");
+        assert!(hz.contains("drain: serving\n"), "{hz}");
+        assert!(hz.contains("open_clients: 1\n"), "{hz}");
+    }
+
+    #[test]
+    fn drain_request_retires_a_live_fleet_cleanly() {
+        // Two edges planning far more steps than the drain allows: the
+        // registry flips to Draining mid-run, every client retires through
+        // the normal path (report filled), and the serve returns Ok even
+        // though the edges die on their severed connections.
+        let (mut e1, c1) = inproc_reactor_pair();
+        let (mut e2, c2) = inproc_reactor_pair();
+        let cloud_codec = RunCodec::host(11, 2, 64, 1);
+        let edge_codec = RunCodec::host(11, 2, 64, 1);
+        let ops = OpsOptions::default();
+        let registry = ops.registry.clone();
+        let stats = std::thread::scope(|sc| {
+            let cloud = sc.spawn(|| {
+                serve_clients_reactor_ops(
+                    CloudCodec::Shared(&cloud_codec),
+                    vec![Box::new(c1) as Box<dyn ReactorConn>, Box::new(c2)],
+                    1,
+                    ReactorConfig::default(),
+                    ops,
+                )
+            });
+            let reg = registry.clone();
+            sc.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                reg.request_drain();
+            });
+            // the edges either get cut mid-run (Err) or finish early (Ok);
+            // both are acceptable endings for a drained fleet
+            let ec = &edge_codec;
+            let a = sc.spawn(move || {
+                run_edge(EdgeCodec::Shared { codec: ec, key_seed: 11 }, &mut e1, 100_000, 1, 4, 64)
+            });
+            let b = sc.spawn(move || {
+                run_edge(EdgeCodec::Shared { codec: ec, key_seed: 11 }, &mut e2, 100_000, 2, 4, 64)
+            });
+            let _ = a.join().expect("edge thread must not panic");
+            let _ = b.join().expect("edge thread must not panic");
+            cloud.join().expect("cloud thread must not panic")
+        })
+        .expect("drained serve returns cleanly");
+        assert_eq!(stats.per_client.len(), 2, "every client leaves a report");
+        assert_eq!(registry.drain_state(), DrainState::Drained);
+        assert_eq!(registry.clients_finished(), 2);
+        // the registry counted exactly the steps the reports account for
+        assert_eq!(registry.steps_total(), stats.total_steps());
     }
 }

@@ -17,6 +17,7 @@
 //!   c3sl multi --edges 256 --reactor --tcp      # thousand-edge serving path
 //!   c3sl multi --edges 64 --reactor --key-sharding --rotate-every 20
 //!   c3sl multi --reactor --reactor-backend sweep  # portable poll-sweep pump
+//!   c3sl multi --reactor --ops-addr 127.0.0.1:9100  # /metrics /healthz /drain
 //!   c3sl multi --fft-backend reference          # seed full-spectrum kernels
 //!                                               # (default is packed)
 
@@ -221,9 +222,14 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// handshake) and `--rotate-every N` rotates each shard to a fresh key epoch
 /// every N steps.  `--fft-backend packed|reference` selects the codec's FFT
 /// kernel family (packed half-spectrum real transforms are the default).
-/// `--config` seeds
+/// `--ops-addr HOST:PORT` serves the plaintext ops control plane
+/// (`GET /metrics` Prometheus text, `GET /healthz`, `POST /drain`) off the
+/// reactor's own readiness loop — no extra thread — and `--ops-reload PATH`
+/// re-parses that config file on SIGHUP to retune the safe reactor knobs
+/// (`transport.outbox_frames`, `transport.poll_us`) live; both require
+/// `--reactor`.  `--config` seeds
 /// the defaults (transport.edges/reactor/backend/poll_us/outbox_frames,
-/// scheme.r/workers/fft_backend/key_sharding/rotation_steps,
+/// ops.addr, scheme.r/workers/fft_backend/key_sharding/rotation_steps,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
     let base = match args.get("config") {
@@ -291,7 +297,15 @@ fn cmd_multi(args: &Args) -> Result<()> {
                 .unwrap_or(def.poll.max_outbox_frames),
             ..def.poll
         },
+        ops_addr: args
+            .get("ops-addr")
+            .map(Into::into)
+            .or_else(|| b.and_then(|c| c.ops_addr.clone())),
+        ops_reload_path: args.get("ops-reload").map(Into::into),
     };
+    if let Some(addr) = &spec.ops_addr {
+        println!("[c3sl] ops: http://{addr}/metrics /healthz (POST /drain)");
+    }
     println!(
         "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} fft={} \
          transport={:?} serve={} keys={}",

@@ -1,6 +1,8 @@
 //! Metrics substrate: counters, gauges, EWMA, histograms, and a run recorder
 //! that writes loss curves / throughput as CSV for EXPERIMENTS.md.
 
+pub mod prom;
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -109,11 +111,23 @@ impl Histogram {
     }
 
     /// Approximate quantile from bucket boundaries.
+    ///
+    /// `q` is clamped to `[0, 1]` (NaN reads as 0): the extremes return the
+    /// exact observed `min`/`max` rather than a bucket bound — in particular
+    /// `quantile(0.0)` must not return `bounds[0]` just because a `target`
+    /// of zero is satisfied by the first (possibly empty) bucket.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let target = (q * self.total as f64).ceil() as u64;
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
         let mut acc = 0;
         for (i, c) in self.counts.iter().enumerate() {
             acc += c;
@@ -122,6 +136,17 @@ impl Histogram {
             }
         }
         self.max
+    }
+
+    /// The bucket upper bounds this histogram was built with (ascending).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket observation counts; one longer than [`Histogram::bounds`]
+    /// (the final entry is the overflow bucket above the last bound).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
     }
 }
 
@@ -262,6 +287,44 @@ mod tests {
         assert!(h.quantile(0.5) <= h.quantile(0.99));
         assert_eq!(h.min, 0.5);
         assert_eq!(h.max, 8.0);
+    }
+
+    #[test]
+    fn quantile_extremes_return_observed_min_max() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for x in [0.5, 1.5, 1.7, 3.0, 8.0] {
+            h.observe(x);
+        }
+        // the regression: q=0 used to compute target=0, which the first
+        // (possibly empty) bucket trivially satisfies, returning bounds[0]
+        assert_eq!(h.quantile(0.0), 0.5);
+        assert_eq!(h.quantile(1.0), 8.0);
+        // out-of-range q clamps to the extremes; NaN reads as 0
+        assert_eq!(h.quantile(-3.0), 0.5);
+        assert_eq!(h.quantile(7.0), 8.0);
+        assert_eq!(h.quantile(f64::NAN), 0.5);
+        // interior quantiles still report bucket bounds and stay monotone
+        assert_eq!(h.quantile(0.2), 1.0);
+        assert!(h.quantile(0.2) <= h.quantile(0.6));
+    }
+
+    #[test]
+    fn quantile_zero_with_empty_first_bucket() {
+        // nothing lands in the first bucket: q=0 must still be the true min,
+        // not the first bound whose cumulative count (0) matched target 0
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        h.observe(1.5);
+        h.observe(3.0);
+        assert_eq!(h.quantile(0.0), 1.5);
+        assert_eq!(h.quantile(1.0), 3.0);
+    }
+
+    #[test]
+    fn quantile_of_empty_histogram_is_zero() {
+        let h = Histogram::new(vec![1.0]);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Prometheus text exposition writer for the ops `/metrics` endpoint.
+//!
+//! Implements exactly the subset of the text format (version 0.0.4) the
+//! control plane serves: `# HELP` / `# TYPE` headers, counter/gauge samples
+//! with optional labels, and full histogram families (`_bucket` with
+//! cumulative `le` labels incl. `+Inf`, `_sum`, `_count`).  Std-only, like
+//! the rest of the repo — no client library, just careful string assembly
+//! with the escaping rules the format requires.
+
+use std::fmt::Write as _;
+
+use super::Histogram;
+
+/// Incremental builder for one exposition payload.  `family` writes the
+/// HELP/TYPE header, then any number of `sample` calls add series; call
+/// [`PromWriter::finish`] for the final body.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    /// Empty payload.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a metric family: writes the `# HELP` and `# TYPE` lines.
+    /// `kind` is the Prometheus type name (`counter`, `gauge`, `histogram`).
+    pub fn family(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {}", escape_help(help));
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// One sample line: `name{labels} value`.  Labels are `(key, value)`
+    /// pairs; pass `&[]` for an unlabelled series.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{}\"", escape_label(v));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Header + single unlabelled sample, for the common counter case.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.family(name, help, "counter");
+        self.sample(name, &[], value as f64);
+    }
+
+    /// Header + single unlabelled sample, for the common gauge case.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, help, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// A full histogram family from a [`Histogram`] snapshot: cumulative
+    /// `_bucket` series per bound plus `+Inf`, then `_sum` and `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Histogram) {
+        self.family(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        let mut acc = 0u64;
+        for (i, bound) in h.bounds().iter().enumerate() {
+            acc += h.counts()[i];
+            let le = fmt_value(*bound);
+            self.sample(&bucket, &[("le", &le)], acc as f64);
+        }
+        // overflow bucket: cumulative count over everything
+        self.sample(&bucket, &[("le", "+Inf")], h.total as f64);
+        // an empty histogram's sum is 0, not the NaN min+max would suggest
+        let sum = if h.total == 0 { 0.0 } else { h.sum };
+        self.sample(&format!("{name}_sum"), &[], sum);
+        self.sample(&format!("{name}_count"), &[], h.total as f64);
+    }
+
+    /// The assembled exposition body.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Sample-value formatting: integers render without a fractional part
+/// (Prometheus accepts both; the compact form diffs cleanly in tests),
+/// non-finite values use the spec's `NaN` / `+Inf` / `-Inf` spellings.
+fn fmt_value(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// HELP text escaping per the format: backslash and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Label value escaping per the format: backslash, double-quote, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render() {
+        let mut w = PromWriter::new();
+        w.counter("c3sl_steps_total", "Steps completed.", 42);
+        w.gauge("c3sl_clients_active", "Open connections.", 3.0);
+        let body = w.finish();
+        assert!(body.contains("# HELP c3sl_steps_total Steps completed.\n"));
+        assert!(body.contains("# TYPE c3sl_steps_total counter\n"));
+        assert!(body.contains("\nc3sl_steps_total 42\n"));
+        assert!(body.contains("# TYPE c3sl_clients_active gauge\n"));
+        assert!(body.contains("\nc3sl_clients_active 3\n"));
+    }
+
+    #[test]
+    fn labels_and_escaping() {
+        let mut w = PromWriter::new();
+        w.family("x", "with \\ and\nnewline", "gauge");
+        w.sample("x", &[("shard", "3"), ("who", "a\"b")], 1.0);
+        let body = w.finish();
+        assert!(body.contains("# HELP x with \\\\ and\\nnewline\n"));
+        assert!(body.contains("x{shard=\"3\",who=\"a\\\"b\"} 1\n"));
+    }
+
+    #[test]
+    fn histogram_family_is_cumulative_with_inf() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        // all binary-exact values so the _sum assertion is representation-safe
+        for x in [0.5, 1.5, 1.75, 3.0, 8.0] {
+            h.observe(x);
+        }
+        let mut w = PromWriter::new();
+        w.histogram("lat", "Latency.", &h);
+        let body = w.finish();
+        assert!(body.contains("# TYPE lat histogram\n"));
+        assert!(body.contains("lat_bucket{le=\"1\"} 1\n"));
+        assert!(body.contains("lat_bucket{le=\"2\"} 3\n"));
+        assert!(body.contains("lat_bucket{le=\"4\"} 4\n"));
+        assert!(body.contains("lat_bucket{le=\"+Inf\"} 5\n"));
+        assert!(body.contains("lat_count 5\n"));
+        assert!(body.contains("lat_sum 14.75\n"));
+    }
+
+    #[test]
+    fn empty_histogram_sum_is_zero() {
+        let h = Histogram::new(vec![1.0]);
+        let mut w = PromWriter::new();
+        w.histogram("lat", "Latency.", &h);
+        let body = w.finish();
+        assert!(body.contains("lat_bucket{le=\"+Inf\"} 0\n"));
+        assert!(body.contains("lat_sum 0\n"));
+        assert!(body.contains("lat_count 0\n"));
+    }
+
+    #[test]
+    fn nonfinite_values_use_spec_spellings() {
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(2.5), "2.5");
+        assert_eq!(fmt_value(-7.0), "-7");
+    }
+}

@@ -28,7 +28,11 @@ impl TensorSpec {
             .and_then(|s| s.as_arr())
             .ok_or_else(|| C3Error::msg("spec missing shape"))?
             .iter()
-            .map(|v| v.as_usize().ok_or_else(|| C3Error::msg("bad dim")))
+            .map(|v| {
+                // strict as_usize: negative / NaN / fractional dims are load
+                // errors here, not silently saturated small numbers
+                v.as_usize().ok_or_else(|| C3Error::msg("bad dim (not a non-negative integer)"))
+            })
             .collect::<Result<Vec<_>>>()?;
         let dtype = j
             .get("dtype")
@@ -119,7 +123,7 @@ impl ModelManifest {
         let field = |k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(|v| v.as_usize())
-                .ok_or_else(|| C3Error::msg(format!("manifest missing {k}")))
+                .ok_or_else(|| C3Error::msg(format!("manifest missing or non-integer {k}")))
         };
         let spec_list = |k: &str| -> Result<Vec<TensorSpec>> {
             j.get(k)
@@ -189,7 +193,7 @@ impl CodecManifest {
         let field = |k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(|v| v.as_usize())
-                .ok_or_else(|| C3Error::msg(format!("codec manifest missing {k}")))
+                .ok_or_else(|| C3Error::msg(format!("codec manifest missing or non-integer {k}")))
         };
         Ok(CodecManifest {
             r: field("r")?,

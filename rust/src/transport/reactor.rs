@@ -47,7 +47,7 @@
 
 use std::collections::VecDeque;
 use std::io::{IoSlice, Read, Write};
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -498,6 +498,65 @@ pub struct ReactorIoStats {
     pub io_cpu_seconds: Option<f64>,
 }
 
+// ---------------------------------------------------------------------------
+// The ops control plane: a plaintext HTTP listener served off the reactor's
+// own readiness pass — one more pollable fd, no extra I/O thread.
+// ---------------------------------------------------------------------------
+
+/// Registration token reserved for the ops listener fd (one below
+/// [`WAKER_TOKEN`]; never a valid connection index).
+const OPS_LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+/// Ops connection tokens are `OPS_CONN_BASE + slot` — a namespace far above
+/// any plausible client index, so the epoll dispatch can tell the two apart
+/// with one comparison.
+const OPS_CONN_BASE: u64 = 1 << 62;
+
+/// Concurrent ops connections served.  Excess accepts are dropped on the
+/// floor (scrapers retry); the ops plane must never be the reactor's memory
+/// or fd amplifier.
+const MAX_OPS_CONNS: usize = 32;
+
+/// Request-head cap: an ops request is one short line plus a few headers.
+/// Anything larger gets `431` and the connection closed, so a misdirected
+/// upload cannot balloon the pump's memory.
+const MAX_OPS_REQUEST_BYTES: usize = 8 * 1024;
+
+/// One HTTP request parsed off an ops connection, surfaced by
+/// [`Reactor::take_ops_requests`].  The serving loop interprets the path and
+/// answers via [`Reactor::ops_respond`] with the same `conn` handle.
+#[derive(Debug)]
+pub struct OpsRequest {
+    /// Ops connection handle (valid until responded or the peer hangs up).
+    pub conn: usize,
+    /// Request method (`GET`, `POST`, ...), verbatim.
+    pub method: String,
+    /// Request path (`/metrics`, `/healthz`, `/drain`, ...), verbatim.
+    pub path: String,
+}
+
+/// One accepted ops connection: a tiny nonblocking HTTP/1.0 state machine —
+/// read until the blank line, surface the request, write one response, close.
+struct OpsConn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    out_off: usize,
+    /// Head fully received (request surfaced or canned error queued): the
+    /// pump stops reading — any body bytes are ignored, the response closes
+    /// the connection.
+    head_done: bool,
+    /// Whether the fd is currently registered with the epoll backend.
+    registered: bool,
+}
+
+/// The ops listener plus its accepted connections.
+struct OpsState {
+    listener: TcpListener,
+    local: Option<SocketAddr>,
+    conns: Vec<Option<OpsConn>>,
+}
+
 struct Slot {
     link: Option<Box<dyn ReactorConn>>,
     stats: Arc<LinkStats>,
@@ -595,6 +654,11 @@ pub struct Reactor {
     /// Sweep passes so far (the sweep backend's wakeup counter).
     sweeps: u64,
     backend: BackendImpl,
+    /// The ops control plane, once [`Reactor::serve_ops`] installed it.
+    ops: Option<OpsState>,
+    /// Requests parsed off ops connections, awaiting
+    /// [`Reactor::take_ops_requests`].
+    ops_requests: Vec<OpsRequest>,
 }
 
 impl Reactor {
@@ -612,7 +676,7 @@ impl Reactor {
             .map(|link| Slot { stats: link.stats(), link: Some(link), hold: false })
             .collect();
         let backend = build_backend(&conns, cfg.backend);
-        Reactor { conns, cfg, rr: 0, sweeps: 0, backend }
+        Reactor { conns, cfg, rr: 0, sweeps: 0, backend, ops: None, ops_requests: Vec::new() }
     }
 
     /// Tunables this reactor runs with.
@@ -657,6 +721,90 @@ impl Reactor {
         }
     }
 
+    /// Install the ops control-plane listener: plaintext HTTP served off
+    /// this reactor's own readiness pass — the listener is just one more
+    /// pollable fd, no extra thread, no async runtime.  Under the epoll
+    /// backend the listener (and each accepted connection) registers as a
+    /// wakeup source; the sweep backend polls them on every pass like
+    /// everything else.  Parsed requests surface via
+    /// [`Reactor::take_ops_requests`]; the serving loop answers each with
+    /// [`Reactor::ops_respond`].
+    pub fn serve_ops(&mut self, listener: TcpListener) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr().ok();
+        self.ops = Some(OpsState { listener, local, conns: Vec::new() });
+        #[cfg(target_os = "linux")]
+        if let (BackendImpl::Epoll(st), Some(ops)) = (&mut self.backend, self.ops.as_ref()) {
+            use std::os::unix::io::AsRawFd;
+            // best-effort: an unregistered listener is still accepted from
+            // on every pump pass, just without event-driven latency
+            let _ = st.ep.add(
+                ops.listener.as_raw_fd(),
+                OPS_LISTENER_TOKEN,
+                Interest { read: true, write: false },
+            );
+        }
+        Ok(())
+    }
+
+    /// The bound address of the ops listener, if one is installed (callers
+    /// bind port 0 and discover the real port here).
+    pub fn ops_local_addr(&self) -> Option<SocketAddr> {
+        self.ops.as_ref().and_then(|o| o.local)
+    }
+
+    /// Drain the ops requests parsed since the last call.
+    pub fn take_ops_requests(&mut self) -> Vec<OpsRequest> {
+        std::mem::take(&mut self.ops_requests)
+    }
+
+    /// Answer one surfaced [`OpsRequest`]: a complete `HTTP/1.0` response
+    /// is assembled, flushed as far as the peer accepts without blocking,
+    /// and any remainder drains on subsequent passes; the connection closes
+    /// once the response is fully written.  A vanished connection (the peer
+    /// hung up first) or a double answer is a no-op.
+    pub fn ops_respond(
+        &mut self,
+        conn: usize,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+        body: &[u8],
+    ) {
+        let Some(ops) = self.ops.as_mut() else {
+            return;
+        };
+        match ops.conns.get_mut(conn) {
+            Some(Some(c)) if c.outbuf.is_empty() => {
+                c.outbuf = http_response(status, reason, content_type, body);
+                c.out_off = 0;
+            }
+            _ => return,
+        }
+        ops_flush_conn(&mut self.backend, ops, conn);
+    }
+
+    /// Live-retune the per-client outbox bound (the SIGHUP reload path).
+    /// The value is clamped to ≥ 1 exactly like [`ReactorConfig::clamped`],
+    /// and every connection's readiness interest is refreshed so the epoll
+    /// backend re-evaluates its read gate under the new bound.
+    pub fn set_max_outbox_frames(&mut self, frames: usize) {
+        let frames = frames.max(1);
+        if self.cfg.max_outbox_frames == frames {
+            return;
+        }
+        self.cfg.max_outbox_frames = frames;
+        for ci in 0..self.conns.len() {
+            self.touch(ci);
+        }
+    }
+
+    /// Live-retune the sweep backend's idle backoff (the SIGHUP reload
+    /// path).  The epoll backend blocks in `epoll_wait` and ignores this.
+    pub fn set_poll_sleep_us(&mut self, us: u64) {
+        self.cfg.poll_sleep_us = us;
+    }
+
     /// Mark one connection's readiness interest stale (epoll backend); the
     /// next poll re-arms it before waiting.
     fn touch(&mut self, _ci: usize) {
@@ -684,6 +832,9 @@ impl Reactor {
     /// channel, see `coordinator::multi`).
     pub fn poll_wait(&mut self, events: &mut Vec<Event>, timeout_ms: i32) -> bool {
         let _ = &timeout_ms;
+        let mut progress = false;
+        let mut discovered = false;
+        let _ = &mut discovered;
         #[cfg(target_os = "linux")]
         {
             let outcome = match &mut self.backend {
@@ -693,7 +844,10 @@ impl Reactor {
                 BackendImpl::Sweep => None,
             };
             match outcome {
-                Some(Some(progress)) => return progress,
+                Some(Some(p)) => {
+                    progress = p;
+                    discovered = true;
+                }
                 Some(None) => {
                     // epoll_wait is persistently failing: degrade to the
                     // sweep backend (which needs no registrations) instead
@@ -705,8 +859,16 @@ impl Reactor {
                 None => {}
             }
         }
-        self.sweeps += 1;
-        poll_sweep(&mut self.conns, &self.cfg, &mut self.rr, events)
+        if !discovered {
+            self.sweeps += 1;
+            progress |= poll_sweep(&mut self.conns, &self.cfg, &mut self.rr, events);
+        }
+        // ops control plane: accepted and served off this very same pass —
+        // the listener is one more readiness source, not another thread
+        if let Some(ops) = self.ops.as_mut() {
+            progress |= pump_ops(&mut self.backend, ops, &mut self.ops_requests);
+        }
+        progress
     }
 
     /// Queue a wire frame for `client` (dropped silently if already closed —
@@ -1041,6 +1203,12 @@ fn poll_epoll(
             st.waker.clear();
             continue;
         }
+        if r.token >= OPS_CONN_BASE {
+            // ops-plane fd (listener or conn): it exists only to wake this
+            // wait — the unconditional ops pump right after this pass does
+            // the actual accept/read/write service
+            continue;
+        }
         let ci = r.token as usize;
         if ci >= conns.len() {
             continue;
@@ -1063,6 +1231,303 @@ fn poll_epoll(
     }
     st.ready = ready;
     Some(progress)
+}
+
+// ---------------------------------------------------------------------------
+// Ops control-plane pump (free functions so the backend and the ops state
+// can be borrowed disjointly from the Reactor)
+// ---------------------------------------------------------------------------
+
+/// Accept pending ops connections and service every open one (reads, head
+/// parsing, response flushing).  Runs unconditionally after each discovery
+/// pass: under epoll the registered ops fds merely wake the wait early,
+/// under sweep this *is* the polling.  Returns `true` on any progress.
+fn pump_ops(
+    backend: &mut BackendImpl,
+    ops: &mut OpsState,
+    requests: &mut Vec<OpsRequest>,
+) -> bool {
+    let mut progress = false;
+    loop {
+        match ops.listener.accept() {
+            Ok((stream, _peer)) => {
+                progress = true;
+                if stream.set_nonblocking(true).is_err() {
+                    continue; // dropped; the scraper retries
+                }
+                let open = ops.conns.iter().filter(|c| c.is_some()).count();
+                if open >= MAX_OPS_CONNS {
+                    continue; // at capacity: drop, never amplify
+                }
+                let conn = OpsConn {
+                    stream,
+                    inbuf: Vec::new(),
+                    outbuf: Vec::new(),
+                    out_off: 0,
+                    head_done: false,
+                    registered: false,
+                };
+                let oi = match ops.conns.iter().position(|c| c.is_none()) {
+                    Some(i) => {
+                        ops.conns[i] = Some(conn);
+                        i
+                    }
+                    None => {
+                        ops.conns.push(Some(conn));
+                        ops.conns.len() - 1
+                    }
+                };
+                ops_arm(backend, ops, oi, true, false);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break, // transient accept failure: retried next pass
+        }
+    }
+    for oi in 0..ops.conns.len() {
+        progress |= pump_ops_conn(backend, ops, oi, requests);
+    }
+    progress
+}
+
+/// Service one ops connection: read until the request head completes (then
+/// surface it, or queue a canned error for garbage), and flush any queued
+/// response bytes.  Returns `true` on any progress.
+fn pump_ops_conn(
+    backend: &mut BackendImpl,
+    ops: &mut OpsState,
+    oi: usize,
+    requests: &mut Vec<OpsRequest>,
+) -> bool {
+    enum ReadOut {
+        Blocked,
+        HeadDone,
+        Close,
+        More,
+    }
+    let mut progress = false;
+    loop {
+        let out = {
+            let Some(Some(c)) = ops.conns.get_mut(oi) else {
+                return progress;
+            };
+            if c.head_done {
+                ReadOut::HeadDone
+            } else {
+                let mut buf = [0u8; 1024];
+                match c.stream.read(&mut buf) {
+                    Ok(0) => ReadOut::Close,
+                    Ok(n) => {
+                        progress = true;
+                        c.inbuf.extend_from_slice(&buf[..n]);
+                        if let Some(end) = find_head_end(&c.inbuf) {
+                            c.head_done = true;
+                            match parse_request_head(&c.inbuf[..end]) {
+                                Some((method, path)) => {
+                                    requests.push(OpsRequest { conn: oi, method, path });
+                                }
+                                None => {
+                                    c.outbuf = http_response(
+                                        400,
+                                        "Bad Request",
+                                        "text/plain; charset=utf-8",
+                                        b"malformed request\n",
+                                    );
+                                    c.out_off = 0;
+                                }
+                            }
+                            ReadOut::HeadDone
+                        } else if c.inbuf.len() > MAX_OPS_REQUEST_BYTES {
+                            c.head_done = true;
+                            c.outbuf = http_response(
+                                431,
+                                "Request Header Fields Too Large",
+                                "text/plain; charset=utf-8",
+                                b"request head too large\n",
+                            );
+                            c.out_off = 0;
+                            ReadOut::HeadDone
+                        } else {
+                            ReadOut::More
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => ReadOut::Blocked,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => ReadOut::More,
+                    Err(_) => ReadOut::Close,
+                }
+            }
+        };
+        match out {
+            ReadOut::More => {}
+            ReadOut::Blocked => break,
+            ReadOut::HeadDone => {
+                // head is in: stop watching reads — a surfaced request waits
+                // on the serving loop for its answer, a canned error flushes
+                // below (ops_flush_conn arms write interest if it parks)
+                ops_disarm(backend, ops, oi);
+                break;
+            }
+            ReadOut::Close => {
+                ops_close_conn(backend, ops, oi);
+                return true;
+            }
+        }
+    }
+    progress | ops_flush_conn(backend, ops, oi)
+}
+
+/// Flush one ops connection's queued response as far as the peer accepts.
+/// A fully written response closes the connection (HTTP/1.0 semantics);
+/// a partial write arms write interest so the epoll backend wakes when the
+/// peer drains.  Returns `true` on any progress.
+fn ops_flush_conn(backend: &mut BackendImpl, ops: &mut OpsState, oi: usize) -> bool {
+    enum WriteOut {
+        Idle,
+        Blocked,
+        Done,
+        Close,
+        More,
+    }
+    let mut progress = false;
+    loop {
+        let out = {
+            let Some(Some(c)) = ops.conns.get_mut(oi) else {
+                return progress;
+            };
+            if c.outbuf.is_empty() {
+                WriteOut::Idle
+            } else if c.out_off >= c.outbuf.len() {
+                WriteOut::Done
+            } else {
+                match c.stream.write(&c.outbuf[c.out_off..]) {
+                    Ok(0) => WriteOut::Close,
+                    Ok(n) => {
+                        c.out_off += n;
+                        progress = true;
+                        if c.out_off >= c.outbuf.len() {
+                            WriteOut::Done
+                        } else {
+                            WriteOut::More
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => WriteOut::Blocked,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => WriteOut::More,
+                    Err(_) => WriteOut::Close,
+                }
+            }
+        };
+        match out {
+            WriteOut::More => {}
+            WriteOut::Idle => return progress,
+            WriteOut::Blocked => {
+                ops_arm(backend, ops, oi, false, true);
+                return progress;
+            }
+            WriteOut::Done => {
+                // lingering close: discard any unread request bytes first so
+                // the close does not RST the connection and risk zapping the
+                // response bytes the peer has not yet consumed
+                ops_linger_drain(ops, oi);
+                ops_close_conn(backend, ops, oi);
+                return true;
+            }
+            WriteOut::Close => {
+                ops_close_conn(backend, ops, oi);
+                return true;
+            }
+        }
+    }
+}
+
+/// Best-effort, bounded read-and-discard of unread request bytes before a
+/// normal close (the classic lingering-close move — closing with unread
+/// data queued makes TCP reset the connection, which can discard the
+/// in-flight response on the peer's side).
+fn ops_linger_drain(ops: &mut OpsState, oi: usize) {
+    if let Some(Some(c)) = ops.conns.get_mut(oi) {
+        let mut scratch = [0u8; 4096];
+        for _ in 0..16 {
+            match c.stream.read(&mut scratch) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// (Re-)register one ops connection fd with the requested interest (epoll
+/// backend; a no-op under sweep).  Best-effort: on `epoll_ctl` failure the
+/// unconditional pump still services the connection every pass, just
+/// without event-driven latency.
+fn ops_arm(_backend: &mut BackendImpl, _ops: &mut OpsState, _oi: usize, _read: bool, _write: bool) {
+    #[cfg(target_os = "linux")]
+    if let BackendImpl::Epoll(st) = _backend {
+        if let Some(Some(c)) = _ops.conns.get_mut(_oi) {
+            use std::os::unix::io::AsRawFd;
+            let fd = c.stream.as_raw_fd();
+            let token = OPS_CONN_BASE + _oi as u64;
+            let interest = Interest { read: _read, write: _write };
+            c.registered = if c.registered {
+                st.ep.modify(fd, token, interest).is_ok()
+            } else {
+                st.ep.add(fd, token, interest).is_ok()
+            };
+        }
+    }
+}
+
+/// Deregister one ops connection fd from the epoll backend (no-op under
+/// sweep or when never registered).
+fn ops_disarm(_backend: &mut BackendImpl, _ops: &mut OpsState, _oi: usize) {
+    #[cfg(target_os = "linux")]
+    if let BackendImpl::Epoll(st) = _backend {
+        if let Some(Some(c)) = _ops.conns.get_mut(_oi) {
+            if c.registered {
+                use std::os::unix::io::AsRawFd;
+                st.ep.del(c.stream.as_raw_fd());
+                c.registered = false;
+            }
+        }
+    }
+}
+
+/// Deregister and drop one ops connection (dropping the stream closes the
+/// fd; the slot is reused by the next accept).
+fn ops_close_conn(backend: &mut BackendImpl, ops: &mut OpsState, oi: usize) {
+    ops_disarm(backend, ops, oi);
+    if let Some(slot) = ops.conns.get_mut(oi) {
+        *slot = None;
+    }
+}
+
+/// Byte offset just past the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Parse `METHOD PATH ...` off the request line; `None` for garbage (which
+/// the pump answers with a canned `400`).
+fn parse_request_head(head: &[u8]) -> Option<(String, String)> {
+    let text = std::str::from_utf8(head).ok()?;
+    let line = text.lines().next()?;
+    let mut it = line.split_whitespace();
+    let method = it.next()?.to_string();
+    let path = it.next()?.to_string();
+    Some((method, path))
+}
+
+/// Assemble one complete `HTTP/1.0` response with explicit length and
+/// `Connection: close` (the ops plane never keeps connections alive).
+fn http_response(status: u16, reason: &str, content_type: &str, body: &[u8]) -> Vec<u8> {
+    let head = format!(
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body);
+    out
 }
 
 #[cfg(test)]
@@ -1334,5 +1799,109 @@ mod tests {
             }
         };
         assert!(matches!(err, TransportError::FrameTooLarge(_)), "{err:?}");
+    }
+
+    /// Pump the reactor until `done` reports success (bounded; panics on a
+    /// stuck ops plane).
+    fn pump_until<F: FnMut(&mut Reactor) -> bool>(reactor: &mut Reactor, mut done: F) {
+        let mut events = Vec::new();
+        for _ in 0..2_000 {
+            reactor.poll_wait(&mut events, 5);
+            if done(reactor) {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        panic!("ops pump did not reach the expected state in time");
+    }
+
+    #[test]
+    fn ops_listener_serves_requests_all_backends() {
+        for backend in backends() {
+            let (_edge, cloud) = inproc_reactor_pair();
+            let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(backend));
+            assert_eq!(reactor.backend(), backend);
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            reactor.serve_ops(listener).unwrap();
+            let addr = reactor.ops_local_addr().expect("listener bound");
+
+            let mut client = std::net::TcpStream::connect(addr).unwrap();
+            client.write_all(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+
+            let mut reqs = Vec::new();
+            pump_until(&mut reactor, |r| {
+                reqs.extend(r.take_ops_requests());
+                !reqs.is_empty()
+            });
+            assert_eq!(reqs.len(), 1, "{backend:?}");
+            assert_eq!(reqs[0].method, "GET", "{backend:?}");
+            assert_eq!(reqs[0].path, "/healthz", "{backend:?}");
+
+            reactor.ops_respond(reqs[0].conn, 200, "OK", "text/plain; charset=utf-8", b"ok\n");
+            // flush any parked remainder; the conn closes after the response
+            let mut events = Vec::new();
+            for _ in 0..50 {
+                reactor.poll_wait(&mut events, 1);
+            }
+            client
+                .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+                .unwrap();
+            let mut resp = String::new();
+            client.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{backend:?}: {resp}");
+            assert!(resp.contains("Content-Length: 3\r\n"), "{resp}");
+            assert!(resp.ends_with("\r\n\r\nok\n"), "{resp}");
+        }
+    }
+
+    #[test]
+    fn ops_garbage_requests_get_canned_errors() {
+        let (_edge, cloud) = inproc_reactor_pair();
+        let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(ReadinessBackend::Sweep));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        reactor.serve_ops(listener).unwrap();
+        let addr = reactor.ops_local_addr().expect("listener bound");
+        let mut events = Vec::new();
+
+        // a head with no path token: canned 400, no request surfaced
+        let mut bad = std::net::TcpStream::connect(addr).unwrap();
+        bad.write_all(b"nonsense\r\n\r\n").unwrap();
+        for _ in 0..100 {
+            reactor.poll_wait(&mut events, 1);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(reactor.take_ops_requests().is_empty(), "garbage surfaces no request");
+        bad.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        let mut resp = String::new();
+        bad.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 400 "), "{resp}");
+
+        // a head that never terminates within the cap: canned 431
+        let mut big = std::net::TcpStream::connect(addr).unwrap();
+        big.write_all(&vec![b'a'; MAX_OPS_REQUEST_BYTES + 1024]).unwrap();
+        for _ in 0..100 {
+            reactor.poll_wait(&mut events, 1);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        big.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        let mut resp = String::new();
+        big.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 431 "), "{resp}");
+        assert!(reactor.take_ops_requests().is_empty());
+    }
+
+    #[test]
+    fn ops_reload_setters_clamp_and_apply() {
+        let (_edge, cloud) = inproc_reactor_pair();
+        let mut reactor = Reactor::new(vec![Box::new(cloud)], cfg_with(ReadinessBackend::Sweep));
+        reactor.set_max_outbox_frames(0); // clamped like ReactorConfig::clamped
+        assert_eq!(reactor.config().max_outbox_frames, 1);
+        reactor.set_max_outbox_frames(32);
+        assert_eq!(reactor.config().max_outbox_frames, 32);
+        reactor.set_poll_sleep_us(250);
+        assert_eq!(reactor.config().poll_sleep_us, 250);
+        // the reactor still pumps normally after a retune
+        let mut events = Vec::new();
+        reactor.poll(&mut events);
     }
 }

@@ -12,11 +12,36 @@ use crate::util::json::Json;
 
 /// The relative regression tolerance every bench gate applies: env
 /// `C3SL_BENCH_GATE_TOL` (a fraction, e.g. `0.15`), defaulting to 15%.
+///
+/// Invalid values are rejected loudly (panic): a negative or NaN tolerance
+/// silently inverts or disables the regression comparison, and a typo'd
+/// value that fails to parse used to fall back to the default — both turn
+/// the gate into a no-op exactly when someone is trying to tune it.
 pub fn gate_tolerance() -> f64 {
-    std::env::var("C3SL_BENCH_GATE_TOL")
-        .ok()
-        .and_then(|v| v.parse::<f64>().ok())
-        .unwrap_or(0.15)
+    match std::env::var("C3SL_BENCH_GATE_TOL") {
+        Err(_) => 0.15,
+        Ok(v) => match parse_tolerance(&v) {
+            Ok(t) => t,
+            Err(e) => panic!("invalid C3SL_BENCH_GATE_TOL: {e}"),
+        },
+    }
+}
+
+/// Validate a tolerance string: a finite, non-negative fraction.  Split out
+/// from the env lookup so the rejection policy is unit-testable without
+/// mutating process environment.
+pub fn parse_tolerance(v: &str) -> Result<f64, String> {
+    let t: f64 = v
+        .trim()
+        .parse()
+        .map_err(|_| format!("{v:?} does not parse as a number"))?;
+    if !t.is_finite() {
+        return Err(format!("{v:?} is not finite (NaN/inf disable the gate)"));
+    }
+    if t < 0.0 {
+        return Err(format!("{v:?} is negative (a negative tolerance inverts the gate)"));
+    }
+    Ok(t)
 }
 
 /// Whether a committed baseline is calibrated — i.e. its absolute numbers
@@ -50,5 +75,25 @@ mod tests {
         if std::env::var("C3SL_BENCH_GATE_TOL").is_err() {
             assert!((gate_tolerance() - 0.15).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn tolerance_parser_accepts_valid_fractions() {
+        assert_eq!(parse_tolerance("0.15").unwrap(), 0.15);
+        assert_eq!(parse_tolerance("0").unwrap(), 0.0);
+        assert_eq!(parse_tolerance(" 0.5 ").unwrap(), 0.5);
+        // permissive above 1: a deliberate 200% tolerance is loose but sane
+        assert_eq!(parse_tolerance("2.0").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn tolerance_parser_rejects_gate_disabling_values() {
+        // each of these used to silently fall back to 0.15 (parse failure)
+        // or flow straight into the comparison (negative / NaN / inf)
+        assert!(parse_tolerance("-0.1").unwrap_err().contains("negative"));
+        assert!(parse_tolerance("NaN").unwrap_err().contains("finite"));
+        assert!(parse_tolerance("inf").unwrap_err().contains("finite"));
+        assert!(parse_tolerance("15%").unwrap_err().contains("parse"));
+        assert!(parse_tolerance("").unwrap_err().contains("parse"));
     }
 }

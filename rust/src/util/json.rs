@@ -53,14 +53,29 @@ impl Json {
         }
     }
 
-    /// The numeric payload truncated to `usize` (manifest shapes/counts).
+    /// The numeric payload as a `usize` (manifest shapes/counts), or `None`
+    /// unless the value is an exactly-representable non-negative integer.
+    ///
+    /// The old `as`-cast version silently saturated: `-3` read as `0`, NaN
+    /// as `0`, `2.7` as `2` — a malformed manifest dimension became a
+    /// plausible small number instead of a load error.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        let x = self.as_f64()?;
+        if !exact_int(x) || x < 0.0 {
+            return None;
+        }
+        Some(x as usize)
     }
 
-    /// The numeric payload truncated to `i64`.
+    /// The numeric payload as an `i64`, or `None` unless the value is an
+    /// exactly-representable integer (no NaN, no fractional part, within
+    /// the f64 exact-integer range — same rationale as [`Json::as_usize`]).
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|x| x as i64)
+        let x = self.as_f64()?;
+        if !exact_int(x) {
+            return None;
+        }
+        Some(x as i64)
     }
 
     /// The string payload, if this is a [`Json::Str`].
@@ -387,6 +402,13 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Whether `x` is an integer every one of whose values survives a round
+/// trip through `f64` — finite, no fractional part, and within ±2^53
+/// (beyond that, adjacent integers alias and an `as` cast fabricates data).
+fn exact_int(x: f64) -> bool {
+    x.is_finite() && x.fract() == 0.0 && x.abs() <= 9_007_199_254_740_992.0
+}
+
 fn utf8_len(b: u8) -> usize {
     match b {
         0x00..=0x7f => 1,
@@ -441,6 +463,37 @@ mod tests {
     #[test]
     fn rejects_trailing() {
         assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn integer_accessors_reject_unrepresentable_values() {
+        // the regression: `as` casts silently saturated these to 0/garbage
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_i64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(f64::NEG_INFINITY).as_i64(), None);
+        assert_eq!(Json::Num(2.7).as_usize(), None);
+        assert_eq!(Json::Num(-0.5).as_i64(), None);
+        // beyond 2^53 adjacent integers alias in f64 — refuse to invent one
+        assert_eq!(Json::Num(1e300).as_i64(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        // non-numbers still read as None, as before
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
+        assert_eq!(Json::Null.as_i64(), None);
+    }
+
+    #[test]
+    fn integer_accessors_accept_exact_integers() {
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(32.0).as_usize(), Some(32));
+        assert_eq!(Json::Num(-7.0).as_i64(), Some(-7));
+        assert_eq!(Json::Num(-0.0).as_usize(), Some(0));
+        // 2^53, the largest f64 whose integer neighborhood is still exact
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_i64(), Some(1 << 53));
+        // parse path too: manifest-style literals keep working
+        assert_eq!(parse("1024").unwrap().as_usize(), Some(1024));
+        assert_eq!(parse("-12").unwrap().as_i64(), Some(-12));
     }
 
     #[test]

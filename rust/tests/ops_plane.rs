@@ -1,0 +1,581 @@
+//! Ops control plane end to end: live fleets scraped over real TCP while
+//! they serve, on BOTH readiness backends.
+//!
+//! The control plane's whole design claim is that `/metrics`, `/healthz`
+//! and `POST /drain` are answered from the reactor's own readiness loop —
+//! one more pollable fd, no extra thread — so these tests always scrape
+//! *mid-run*, while the serve loop is simultaneously pumping training
+//! traffic.  Covered here:
+//!
+//!   * mid-run `/metrics` scrapes are exact (a synchronous edge steps the
+//!     fleet one training step at a time, so every scrape has one correct
+//!     answer) and every counter is monotone and consistent with the final
+//!     `MultiStats`;
+//!   * `/healthz` flips `degraded: true` when a requested epoll backend
+//!     cannot be realized and the reactor falls back to the sweep;
+//!   * `POST /drain` under real load retires every client through the
+//!     normal accounting path — reports filled, shard claims released,
+//!     registry and `MultiStats` in exact agreement — with fd hygiene
+//!     checked across rounds on Linux;
+//!   * a rogue edge's loud failure is visible to scrapers while the rest
+//!     of the fleet keeps serving;
+//!   * a SIGHUP lands the reload-knob subset mid-run and is counted.
+//!
+//! Every test serializes on one mutex: the descriptor table and the SIGHUP
+//! handler are process-global, and concurrent fleets would make both lie.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use c3sl::coordinator::multi::{
+    self, CloudCodec, DrainState, EdgeCodec, OpsOptions, OpsRegistry,
+};
+use c3sl::coordinator::{RunCodec, ShardGate};
+use c3sl::hdc::keyring::KeyRing;
+use c3sl::hdc::FftBackend;
+use c3sl::tensor::{Labels, Tensor};
+use c3sl::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
+use c3sl::transport::readiness::ReadinessBackend;
+use c3sl::transport::tcp::Tcp;
+use c3sl::transport::{inproc_reactor_pair_with, Msg, Transport};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(target_os = "linux")]
+fn fd_count() -> usize {
+    std::fs::read_dir("/proc/self/fd")
+        .expect("procfs must be mounted on Linux")
+        .count()
+}
+
+/// One blocking HTTP/1.0 exchange against the ops endpoint: write the
+/// request, read to EOF (the plane always closes), return (status, body).
+fn ops_http(addr: &SocketAddr, request: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect ops endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    s.write_all(request.as_bytes()).expect("write ops request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read ops response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn ops_get(addr: &SocketAddr, path: &str) -> (u16, String) {
+    ops_http(addr, &format!("GET {path} HTTP/1.0\r\n\r\n"))
+}
+
+fn ops_post(addr: &SocketAddr, path: &str) -> (u16, String) {
+    ops_http(addr, &format!("POST {path} HTTP/1.0\r\n\r\n"))
+}
+
+/// The value of one sample line `name value` (label text included in
+/// `name` for labelled series) in a Prometheus text body.
+fn metric_value(body: &str, name: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        l.strip_prefix(name)?.strip_prefix(' ')?.parse().ok()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// 1. Mid-run scrapes are exact, monotone, and consistent with MultiStats
+// ---------------------------------------------------------------------------
+
+fn midrun_scrape_round(backend: ReadinessBackend) {
+    let steps = 5u64;
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let key_seed = 0xC3_5EEDu64;
+    let codec = RunCodec::host(key_seed, r, d, 1);
+    let listener = Tcp::bind("127.0.0.1:0").expect("bind fleet listener");
+    let addr = listener.local_addr().expect("fleet addr").to_string();
+    let ops_listener = TcpListener::bind("127.0.0.1:0").expect("bind ops listener");
+    let ops_addr = ops_listener.local_addr().expect("ops addr");
+    let registry = Arc::new(OpsRegistry::new());
+
+    let stats = std::thread::scope(|sc| {
+        let codec = &codec;
+        let listener = &listener;
+        let reg = registry.clone();
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(listener, 1, Duration::from_secs(30)).expect("accept edge");
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| {
+                    Box::new(NbTcp::from_stream(s).expect("nonblocking edge"))
+                        as Box<dyn ReactorConn>
+                })
+                .collect();
+            let cfg = ReactorConfig { backend, ..ReactorConfig::default() };
+            let ops = OpsOptions { listener: Some(ops_listener), registry: reg, reload: None };
+            multi::serve_clients_reactor_ops(CloudCodec::Shared(codec), conns, 2, cfg, ops)
+                .expect("instrumented fleet serves cleanly")
+        });
+
+        // a synchronous edge: one training step at a time, a scrape between
+        // each — so there is exactly one correct value for every scrape
+        let mut tp = Tcp::connect(&addr).expect("edge connect");
+        tp.send(&Msg::KeySeed { seed: key_seed }).expect("key seed");
+        let mut last_rx = 0.0f64;
+        for step in 0..steps {
+            tp.send(&Msg::Features { step, tensor: Tensor::zeros(&[batch / r, d]) })
+                .expect("features");
+            tp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })
+                .expect("labels");
+            match tp.recv().expect("gradient reply") {
+                Msg::Gradients { step: g, .. } => assert_eq!(g, step),
+                other => panic!("expected Gradients, got {other:?}"),
+            }
+            match tp.recv().expect("stats reply") {
+                Msg::StepStats { step: s, .. } => assert_eq!(s, step),
+                other => panic!("expected StepStats, got {other:?}"),
+            }
+            let (code, body) = ops_get(&ops_addr, "/metrics");
+            assert_eq!(code, 200, "mid-run scrape must succeed ({})", backend.name());
+            assert_eq!(
+                metric_value(&body, "c3sl_steps_total"),
+                Some((step + 1) as f64),
+                "exact step counter after step {step} on {}: {body}",
+                backend.name()
+            );
+            assert_eq!(metric_value(&body, "c3sl_clients_open"), Some(1.0), "{body}");
+            assert_eq!(metric_value(&body, "c3sl_clients_failed_total"), Some(0.0), "{body}");
+            assert_eq!(metric_value(&body, "c3sl_drain_state"), Some(0.0), "{body}");
+            assert!(body.contains("# TYPE c3sl_steps_total counter"), "{body}");
+            assert!(body.contains("# TYPE c3sl_step_loss histogram"), "{body}");
+            assert!(
+                body.contains(&format!(
+                    "c3sl_reactor_backend{{backend=\"{}\"}} 1",
+                    backend.name()
+                )),
+                "{body}"
+            );
+            let rx = metric_value(&body, "c3sl_rx_bytes_total").expect("rx series");
+            assert!(rx > 0.0 && rx >= last_rx, "rx bytes must be monotone: {rx} < {last_rx}");
+            last_rx = rx;
+        }
+
+        let (hcode, health) = ops_get(&ops_addr, "/healthz");
+        assert_eq!(hcode, 200);
+        assert!(health.starts_with("status: ok\n"), "healthz: {health}");
+        assert!(
+            health.contains(&format!("backend: {}\n", backend.name())),
+            "healthz: {health}"
+        );
+        assert!(health.contains("degraded: false\n"), "healthz: {health}");
+        assert!(health.contains("drain: serving\n"), "healthz: {health}");
+        assert!(health.contains("open_clients: 1\n"), "healthz: {health}");
+        // canned errors, also served mid-run from the same loop
+        assert_eq!(ops_get(&ops_addr, "/nope").0, 404);
+        assert_eq!(ops_get(&ops_addr, "/drain").0, 405, "GET /drain must be refused");
+
+        tp.send(&Msg::Shutdown).expect("shutdown");
+        cloud.join().expect("cloud thread")
+    });
+
+    assert_eq!(stats.per_client.len(), 1);
+    assert_eq!(stats.total_steps(), steps);
+    assert_eq!(registry.steps_total(), steps, "registry mirrors the final MultiStats");
+    assert_eq!(registry.clients_finished(), 1);
+    assert_eq!(registry.clients_failed(), 0);
+    assert_eq!(registry.drain_state(), DrainState::Serving);
+}
+
+#[test]
+fn midrun_metrics_scrape_is_exact_on_both_backends() {
+    let _guard = serial();
+    for backend in [ReadinessBackend::Sweep, ReadinessBackend::Epoll] {
+        if backend.supported() {
+            midrun_scrape_round(backend);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. /healthz reports a degraded reactor (requested epoll, realized sweep)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_flips_degraded_when_epoll_cannot_realize() {
+    let _guard = serial();
+    if !ReadinessBackend::Epoll.supported() {
+        return; // nothing to degrade from on sweep-only platforms
+    }
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let key_seed = 0xDE62_ADEDu64;
+    let codec = RunCodec::host(key_seed, r, d, 1);
+    // an fd-less in-proc connection: the epoll backend cannot register it,
+    // so the reactor must degrade to the sweep and keep serving
+    let (mut edge, nb) = inproc_reactor_pair_with(false);
+    let ops_listener = TcpListener::bind("127.0.0.1:0").expect("bind ops listener");
+    let ops_addr = ops_listener.local_addr().expect("ops addr");
+    let registry = Arc::new(OpsRegistry::new());
+
+    std::thread::scope(|sc| {
+        let codec = &codec;
+        let reg = registry.clone();
+        let cloud = sc.spawn(move || {
+            let conns: Vec<Box<dyn ReactorConn>> = vec![Box::new(nb)];
+            let cfg =
+                ReactorConfig { backend: ReadinessBackend::Epoll, ..ReactorConfig::default() };
+            let ops = OpsOptions { listener: Some(ops_listener), registry: reg, reload: None };
+            multi::serve_clients_reactor_ops(CloudCodec::Shared(codec), conns, 1, cfg, ops)
+                .expect("degraded serve still completes")
+        });
+
+        // hold the session open with one real training step, then scrape
+        edge.send(&Msg::KeySeed { seed: key_seed }).expect("key seed");
+        edge.send(&Msg::Features { step: 0, tensor: Tensor::zeros(&[batch / r, d]) })
+            .expect("features");
+        edge.send(&Msg::TrainLabels { step: 0, labels: Labels(vec![0; batch]) })
+            .expect("labels");
+        match edge.recv().expect("gradient reply") {
+            Msg::Gradients { .. } => {}
+            other => panic!("expected Gradients, got {other:?}"),
+        }
+        match edge.recv().expect("stats reply") {
+            Msg::StepStats { .. } => {}
+            other => panic!("expected StepStats, got {other:?}"),
+        }
+
+        let (code, health) = ops_get(&ops_addr, "/healthz");
+        assert_eq!(code, 200);
+        assert!(health.starts_with("status: ok\n"), "healthz: {health}");
+        assert!(health.contains("backend: sweep\n"), "healthz: {health}");
+        assert!(health.contains("requested: epoll\n"), "healthz: {health}");
+        assert!(health.contains("degraded: true\n"), "healthz: {health}");
+        let (_, body) = ops_get(&ops_addr, "/metrics");
+        assert!(body.contains("c3sl_reactor_backend{backend=\"sweep\"} 1"), "{body}");
+
+        edge.send(&Msg::Shutdown).expect("shutdown");
+        cloud.join().expect("cloud thread");
+    });
+    assert_eq!(registry.clients_finished(), 1);
+    assert_eq!(registry.steps_total(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// 3. POST /drain under load: exact accounting, claims released, fd hygiene
+// ---------------------------------------------------------------------------
+
+fn drain_round(backend: ReadinessBackend) {
+    let n = 2usize;
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let ring = KeyRing::new(0x00D1_2A17, r, d, 0);
+    let gate = ShardGate::new(ring, n);
+    let listener = Tcp::bind("127.0.0.1:0").expect("bind fleet listener");
+    let addr = listener.local_addr().expect("fleet addr").to_string();
+    let ops_listener = TcpListener::bind("127.0.0.1:0").expect("bind ops listener");
+    let ops_addr = ops_listener.local_addr().expect("ops addr");
+    let registry = Arc::new(OpsRegistry::new());
+
+    let (served, edge_results) = std::thread::scope(|sc| {
+        let gate = &gate;
+        let listener = &listener;
+        let addr = &addr;
+        let reg = registry.clone();
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(listener, n, Duration::from_secs(30)).expect("accept edges");
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| {
+                    Box::new(NbTcp::from_stream(s).expect("nonblocking edge"))
+                        as Box<dyn ReactorConn>
+                })
+                .collect();
+            let cfg = ReactorConfig { backend, ..ReactorConfig::default() };
+            let ops = OpsOptions { listener: Some(ops_listener), registry: reg, reload: None };
+            multi::serve_clients_reactor_ops(CloudCodec::Sharded(gate), conns, 2, cfg, ops)
+        });
+        let edges: Vec<_> = (0..n)
+            .map(|i| {
+                sc.spawn(move || {
+                    let mut tp = Tcp::connect(addr).expect("edge connect");
+                    multi::run_edge(
+                        EdgeCodec::Sharded {
+                            shard: ring.edge_shard(i as u64),
+                            workers: 1,
+                            fft: FftBackend::default(),
+                        },
+                        &mut tp,
+                        1_000_000, // far beyond what will run: drain cuts it
+                        0xDA7A + i as u64,
+                        batch,
+                        d,
+                    )
+                    .map_err(|e| e.to_string())
+                })
+            })
+            .collect();
+
+        // let the fleet reach steady load — steps flowing, every shard
+        // claimed and visible to scrapers — before pulling the lever
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (code, body) = ops_get(&ops_addr, "/metrics");
+            assert_eq!(code, 200, "mid-run scrape must succeed");
+            let steps = metric_value(&body, "c3sl_steps_total").expect("steps series");
+            let all_claimed = (0..n).all(|id| {
+                metric_value(&body, &format!("c3sl_shard_claimed{{shard=\"{id}\"}}"))
+                    == Some(1.0)
+            });
+            if steps >= 4.0 && all_claimed {
+                break;
+            }
+            assert!(Instant::now() < deadline, "fleet never reached load: {body}");
+        }
+        let (code, body) = ops_post(&ops_addr, "/drain");
+        assert_eq!(code, 200, "drain request must be accepted");
+        assert_eq!(body, "draining\n");
+
+        let edge_results: Vec<_> =
+            edges.into_iter().map(|h| h.join().expect("edge thread")).collect();
+        (cloud.join().expect("cloud thread"), edge_results)
+    });
+
+    let stats = served.expect("drained serve returns the full accounting");
+    assert_eq!(stats.per_client.len(), n, "every drained client leaves a report");
+    assert!(stats.total_steps() >= 4, "drain must not erase served steps");
+    assert_eq!(registry.drain_state(), DrainState::Drained);
+    assert_eq!(registry.clients_finished(), n as u64);
+    assert_eq!(registry.clients_failed(), 0);
+    assert_eq!(
+        registry.steps_total(),
+        stats.total_steps(),
+        "registry and MultiStats must agree on drained accounting"
+    );
+    for (i, res) in edge_results.iter().enumerate() {
+        assert!(
+            res.is_err(),
+            "edge {i} had 1M steps planned — drain must cut it, got {res:?}"
+        );
+    }
+    for id in 0..n {
+        assert!(
+            gate.claimant(id as u64).is_none(),
+            "shard {id} still claimed after drain"
+        );
+    }
+}
+
+#[test]
+fn drain_under_load_retires_cleanly_on_both_backends() {
+    let _guard = serial();
+    // a warm-up round settles one-time allocations under the fd baseline
+    drain_round(ReadinessBackend::Sweep);
+    #[cfg(target_os = "linux")]
+    let baseline = fd_count();
+    for backend in [ReadinessBackend::Sweep, ReadinessBackend::Epoll] {
+        if backend.supported() {
+            drain_round(backend);
+        }
+    }
+    #[cfg(target_os = "linux")]
+    assert_eq!(
+        fd_count(),
+        baseline,
+        "the ops plane must return every descriptor after drained rounds"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. Chaos scrape: a rogue edge fails loudly while scrapers watch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rogue_edge_failure_is_visible_to_scrapers_and_isolated() {
+    let _guard = serial();
+    let steps = 3u64;
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let key_seed = 0x000B_5E55u64;
+    let codec = RunCodec::host(key_seed, r, d, 1);
+    let listener = Tcp::bind("127.0.0.1:0").expect("bind fleet listener");
+    let addr = listener.local_addr().expect("fleet addr").to_string();
+    let ops_listener = TcpListener::bind("127.0.0.1:0").expect("bind ops listener");
+    let ops_addr = ops_listener.local_addr().expect("ops addr");
+    let registry = Arc::new(OpsRegistry::new());
+
+    let served = std::thread::scope(|sc| {
+        let codec = &codec;
+        let listener = &listener;
+        let addr = &addr;
+        let reg = registry.clone();
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(listener, 2, Duration::from_secs(30)).expect("accept edges");
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| {
+                    Box::new(NbTcp::from_stream(s).expect("nonblocking edge"))
+                        as Box<dyn ReactorConn>
+                })
+                .collect();
+            let cfg = ReactorConfig {
+                backend: ReadinessBackend::platform_default(),
+                ..ReactorConfig::default()
+            };
+            let ops = OpsOptions { listener: Some(ops_listener), registry: reg, reload: None };
+            multi::serve_clients_reactor_ops(CloudCodec::Shared(codec), conns, 2, cfg, ops)
+        });
+        let rogue = sc.spawn(move || {
+            let mut tp = Tcp::connect(addr).expect("rogue connect");
+            tp.send(&Msg::KeySeed { seed: key_seed }).expect("rogue key seed");
+            // protocol violation: labels with no features in flight — the
+            // cloud must cut this client, loudly, without touching the rest
+            tp.send(&Msg::TrainLabels { step: 0, labels: Labels(vec![0; batch]) })
+                .expect("rogue labels");
+            while tp.recv().is_ok() {}
+        });
+
+        let mut tp = Tcp::connect(addr).expect("healthy connect");
+        tp.send(&Msg::KeySeed { seed: key_seed }).expect("key seed");
+        // scrape until the cut shows, with the healthy client still open
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (code, body) = ops_get(&ops_addr, "/metrics");
+            assert_eq!(code, 200);
+            if metric_value(&body, "c3sl_clients_failed_total") == Some(1.0) {
+                assert_eq!(metric_value(&body, "c3sl_clients_open"), Some(1.0), "{body}");
+                assert_eq!(
+                    metric_value(&body, "c3sl_clients_finished_total"),
+                    Some(0.0),
+                    "{body}"
+                );
+                break;
+            }
+            assert!(Instant::now() < deadline, "rogue cut never surfaced: {body}");
+        }
+
+        // the survivor keeps training, and only its steps are counted
+        for step in 0..steps {
+            tp.send(&Msg::Features { step, tensor: Tensor::zeros(&[batch / r, d]) })
+                .expect("features");
+            tp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })
+                .expect("labels");
+            match tp.recv().expect("gradient reply") {
+                Msg::Gradients { step: g, .. } => assert_eq!(g, step),
+                other => panic!("expected Gradients, got {other:?}"),
+            }
+            match tp.recv().expect("stats reply") {
+                Msg::StepStats { step: s, .. } => assert_eq!(s, step),
+                other => panic!("expected StepStats, got {other:?}"),
+            }
+        }
+        let (_, body) = ops_get(&ops_addr, "/metrics");
+        assert_eq!(metric_value(&body, "c3sl_steps_total"), Some(steps as f64), "{body}");
+
+        tp.send(&Msg::Shutdown).expect("shutdown");
+        rogue.join().expect("rogue thread");
+        cloud.join().expect("cloud thread")
+    });
+
+    let err = match served {
+        Ok(stats) => panic!("rogue fleet must surface the failure, got {stats:?}"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("1 client(s) failed"), "aggregate error: {err}");
+    assert!(err.contains("labels before features"), "aggregate error: {err}");
+    assert_eq!(registry.clients_failed(), 1);
+    assert_eq!(registry.clients_finished(), 1);
+    assert_eq!(registry.steps_total(), steps);
+}
+
+// ---------------------------------------------------------------------------
+// 5. SIGHUP reload: the knob subset lands mid-run and is counted
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+#[test]
+fn sighup_reload_applies_knobs_midrun() {
+    use c3sl::coordinator::multi::OpsReload;
+    use c3sl::transport::readiness::raise_hangup;
+
+    let _guard = serial();
+    let steps = 3u64;
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+    let key_seed = 0x51_647Fu64;
+    let codec = RunCodec::host(key_seed, r, d, 1);
+    let listener = Tcp::bind("127.0.0.1:0").expect("bind fleet listener");
+    let addr = listener.local_addr().expect("fleet addr").to_string();
+    let ops_listener = TcpListener::bind("127.0.0.1:0").expect("bind ops listener");
+    let ops_addr = ops_listener.local_addr().expect("ops addr");
+    let registry = Arc::new(OpsRegistry::new());
+
+    std::thread::scope(|sc| {
+        let codec = &codec;
+        let listener = &listener;
+        let reg = registry.clone();
+        let cloud = sc.spawn(move || {
+            let streams =
+                Tcp::accept_streams(listener, 1, Duration::from_secs(30)).expect("accept edge");
+            let conns: Vec<Box<dyn ReactorConn>> = streams
+                .into_iter()
+                .map(|s| {
+                    Box::new(NbTcp::from_stream(s).expect("nonblocking edge"))
+                        as Box<dyn ReactorConn>
+                })
+                .collect();
+            let cfg =
+                ReactorConfig { backend: ReadinessBackend::Sweep, ..ReactorConfig::default() };
+            let ops = OpsOptions {
+                listener: Some(ops_listener),
+                registry: reg,
+                reload: Some(Box::new(|| OpsReload {
+                    max_outbox_frames: Some(32),
+                    poll_sleep_us: Some(250),
+                })),
+            };
+            multi::serve_clients_reactor_ops(CloudCodec::Shared(codec), conns, 1, cfg, ops)
+                .expect("reloaded fleet serves cleanly")
+        });
+
+        let mut tp = Tcp::connect(&addr).expect("edge connect");
+        tp.send(&Msg::KeySeed { seed: key_seed }).expect("key seed");
+        let mut step_once = |step: u64| {
+            tp.send(&Msg::Features { step, tensor: Tensor::zeros(&[batch / r, d]) })
+                .expect("features");
+            tp.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })
+                .expect("labels");
+            match tp.recv().expect("gradient reply") {
+                Msg::Gradients { step: g, .. } => assert_eq!(g, step),
+                other => panic!("expected Gradients, got {other:?}"),
+            }
+            match tp.recv().expect("stats reply") {
+                Msg::StepStats { step: s, .. } => assert_eq!(s, step),
+                other => panic!("expected StepStats, got {other:?}"),
+            }
+        };
+
+        // one full step proves the serve loop — and with it the SIGHUP
+        // handler install — is live before the signal is raised
+        step_once(0);
+        raise_hangup();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let (_, body) = ops_get(&ops_addr, "/metrics");
+            if metric_value(&body, "c3sl_reloads_total").expect("reload series") >= 1.0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "SIGHUP reload never applied: {body}");
+        }
+        for step in 1..steps {
+            step_once(step);
+        }
+        tp.send(&Msg::Shutdown).expect("shutdown");
+        cloud.join().expect("cloud thread");
+    });
+
+    assert_eq!(registry.reloads_total(), 1, "exactly one reload for one SIGHUP");
+    assert_eq!(registry.steps_total(), steps, "training is undisturbed by the reload");
+}

@@ -6,10 +6,11 @@
 //!
 //! * **safety-comment** — every `unsafe` keyword in code must carry a
 //!   `// SAFETY:` comment on the same line or within the six lines above it.
-//! * **ffi-containment** — raw `extern` blocks and the epoll/eventfd syscall
-//!   identifiers (`epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd`) may
-//!   appear only inside `rust/src/transport/readiness.rs`; every other
-//!   module goes through that safe wrapper.
+//! * **ffi-containment** — raw `extern` blocks, the epoll/eventfd syscall
+//!   identifiers (`epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd`) and
+//!   the signal-handling identifiers (`signal`, `raise`) may appear only
+//!   inside `rust/src/transport/readiness.rs`; every other module goes
+//!   through that safe wrapper.
 //! * **read-gate** — the reactor read-gate (a comparison against
 //!   `max_outbox_frames`) may only be expressed inside `Slot::wants_read` in
 //!   `rust/src/transport/reactor.rs`; inline re-derivations of the gate are
@@ -317,8 +318,11 @@ fn check_safety_comments(rel: &str, raw: &str, stripped: &str) -> Vec<Violation>
 /// The only file allowed to contain raw FFI.
 const FFI_HOME: &str = "src/transport/readiness.rs";
 
-/// Identifiers that mark raw epoll/eventfd FFI usage.
-const FFI_WORDS: [&str; 5] = ["extern", "epoll_create1", "epoll_ctl", "epoll_wait", "eventfd"];
+/// Identifiers that mark raw epoll/eventfd/signal FFI usage.  `signal` and
+/// `raise` cover the SIGHUP reload surface: an async-signal handler installed
+/// anywhere else could never be audited for signal-safety in one place.
+const FFI_WORDS: [&str; 7] =
+    ["extern", "epoll_create1", "epoll_ctl", "epoll_wait", "eventfd", "signal", "raise"];
 
 /// Lint: raw `extern` / epoll / eventfd FFI only inside transport::readiness.
 fn check_ffi_containment(rel: &str, stripped: &str) -> Vec<Violation> {
@@ -629,6 +633,14 @@ mod tests {
         let call = "let rc = epoll_ctl(ep, op, fd, &mut ev);";
         let v = check_ffi_containment("src/coordinator/multi.rs", &strip_code(call));
         assert_eq!(v.len(), 1, "raw epoll syscall outside readiness must fail");
+
+        let sig = "let old = signal(1, handler as usize);";
+        let v = check_ffi_containment("src/coordinator/driver.rs", &strip_code(sig));
+        assert_eq!(v.len(), 1, "raw signal(2) outside readiness must fail");
+
+        let rse = "let rc = raise(1);";
+        let v = check_ffi_containment("src/transport/reactor.rs", &strip_code(rse));
+        assert_eq!(v.len(), 1, "raw raise(3) outside readiness must fail");
     }
 
     #[test]
@@ -640,6 +652,12 @@ mod tests {
         let prose = "// the epoll_wait loop is documented here; \"eventfd\" label";
         let v = check_ffi_containment("src/coordinator/multi.rs", &strip_code(prose));
         assert!(v.is_empty(), "comments and strings never trip the lint: {v:?}");
+
+        // the safe wrappers' *names* embed the words but are distinct
+        // identifiers — word-boundary matching must not flag them
+        let wrapped = "raise_hangup(); let n = hangup_count(); signal_strength();";
+        let v = check_ffi_containment("src/coordinator/multi.rs", &strip_code(wrapped));
+        assert!(v.is_empty(), "wrapper identifiers never trip the lint: {v:?}");
     }
 
     #[test]
