@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Fill zeroed BENCH_baseline.json cells from a freshly measured bench run.
+
+Usage: calibrate_baseline.py BASELINE_JSON FRESH_JSON
+
+The CI bench-gate job runs this on green pushes to main, after both bench
+gates passed.  It copies a measured value over every baseline cell that
+still reads 0 ("no absolute trajectory recorded") — and ONLY those cells:
+
+  * existing non-zero baseline numbers are never overwritten, so
+    re-baselining a measured trajectory stays a reviewed human decision;
+  * venues or sizes absent from the baseline are never added, so structural
+    changes to the gate surface stay in code review;
+  * `bytes_per_step` style structural fields are identical by construction
+    and are skipped (they are non-zero already).
+
+Exit status 0 always (an already-calibrated baseline is a no-op); the job
+decides whether to commit by diffing the file.  Stdlib only — no pip.
+"""
+
+import json
+import sys
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} BASELINE_JSON FRESH_JSON")
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    with open(baseline_path, encoding="utf-8") as f:
+        baseline = json.load(f)
+    with open(fresh_path, encoding="utf-8") as f:
+        fresh = json.load(f)
+
+    fresh_venues = fresh.get("venues", {})
+    filled = 0
+    skipped_unmeasured = 0
+    for venue, per_size in baseline.get("venues", {}).items():
+        for size, cells in per_size.items():
+            fresh_cells = fresh_venues.get(venue, {}).get(size, {})
+            for key, value in cells.items():
+                if value != 0:
+                    continue  # measured already (or structural): hands off
+                fresh_value = fresh_cells.get(key)
+                if isinstance(fresh_value, (int, float)) and fresh_value > 0:
+                    cells[key] = fresh_value
+                    filled += 1
+                else:
+                    skipped_unmeasured += 1
+
+    if filled:
+        with open(baseline_path, "w", encoding="utf-8") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+    print(
+        f"calibrate_baseline: filled {filled} zero cell(s); "
+        f"{skipped_unmeasured} zero cell(s) had no fresh measurement"
+    )
+
+
+if __name__ == "__main__":
+    main()

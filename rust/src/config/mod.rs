@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod toml;
 
+use crate::fft::kernels::Isa;
 use crate::hdc::FftBackend;
 use crate::transport::readiness::ReadinessBackend;
 use crate::transport::sim::LinkModel;
@@ -90,6 +91,11 @@ pub struct ExperimentConfig {
     /// degenerate D) or `"reference"` (full-spectrum, bit-identical to the
     /// seed kernels).
     pub fft_backend: FftBackend,
+    /// Pinned SIMD kernel set for the packed host codec (`[scheme] simd`):
+    /// `"scalar"`, `"avx2"` or `"neon"`.  `None` (the default) auto-detects
+    /// the widest available ISA at engine build, same as the `C3SL_SIMD`
+    /// environment knob; pinning an ISA the host lacks fails loudly.
+    pub simd: Option<Isa>,
     /// Derive a per-client key shard for every edge (multi-edge scenarios)
     /// instead of one global key set, so a compromised edge cannot decode
     /// any other edge's uplink.
@@ -164,6 +170,7 @@ impl Default for ExperimentConfig {
             // packed-FFT PR); `reference` remains available as the
             // bit-identical seed-kernel family
             fft_backend: FftBackend::Packed,
+            simd: None,
             key_sharding: false,
             rotation_steps: 0,
             transport: TransportKind::InProc,
@@ -290,6 +297,14 @@ impl ExperimentConfig {
                     "scheme.fft_backend must be \"packed\" or \"reference\", got {s:?}"
                 ))
             })?;
+        }
+        if let Some(v) = get(&doc, "scheme", "simd") {
+            let s = v.as_str().ok_or_else(|| inv("scheme.simd".into()))?;
+            cfg.simd = Some(Isa::parse(s).ok_or_else(|| {
+                inv(format!(
+                    "scheme.simd must be \"scalar\", \"avx2\" or \"neon\", got {s:?}"
+                ))
+            })?);
         }
         if let Some(v) = get(&doc, "scheme", "key_sharding") {
             cfg.key_sharding = v.as_bool().ok_or_else(|| inv("scheme.key_sharding".into()))?;
@@ -440,6 +455,15 @@ impl ExperimentConfig {
                      control plane is served from the reactor's readiness loop"
                         .into(),
                 ));
+            }
+        }
+        if let Some(isa) = self.simd {
+            if !isa.available() {
+                return Err(ConfigError::Invalid(format!(
+                    "scheme.simd = \"{}\" is not available on this host \
+                     (use \"scalar\", or drop the knob to auto-detect)",
+                    isa.name()
+                )));
             }
         }
         if self.rotation_steps > 0 && !self.key_sharding {
@@ -662,6 +686,31 @@ mod tests {
             ExperimentConfig::from_toml_str("[scheme]\nfft_backend = \"magic\"\n").is_err()
         );
         assert!(ExperimentConfig::from_toml_str("[scheme]\nfft_backend = 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_simd_knob() {
+        // scalar is available on every host
+        let cfg = ExperimentConfig::from_toml_str("[scheme]\nsimd = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.simd, Some(Isa::Scalar));
+        // default: auto-detect at engine build
+        assert!(ExperimentConfig::default().simd.is_none());
+        // explicit vector ISAs: accepted exactly where they can actually
+        // run, rejected loudly (not silently downgraded) elsewhere
+        for isa in [Isa::Avx2, Isa::Neon] {
+            let r = ExperimentConfig::from_toml_str(&format!(
+                "[scheme]\nsimd = \"{}\"\n",
+                isa.name()
+            ));
+            if isa.available() {
+                assert_eq!(r.unwrap().simd, Some(isa));
+            } else {
+                assert!(r.is_err());
+            }
+        }
+        // unknown values are rejected loudly, never silently defaulted
+        assert!(ExperimentConfig::from_toml_str("[scheme]\nsimd = \"magic\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[scheme]\nsimd = 3\n").is_err());
     }
 
     #[test]

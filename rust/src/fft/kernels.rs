@@ -1,0 +1,691 @@
+//! Runtime-dispatched SIMD kernels for the packed codec hot path.
+//!
+//! The C3 codec's per-row cost is dominated by three inner loops: the
+//! butterfly passes of the half-/full-size complex FFTs behind
+//! [`RfftPlan`](super::RfftPlan), the `acc[j] += K[j]*Z[j]` pointwise
+//! multiply-accumulate of the packed encode superposition, and the
+//! `out[j] = conj(K[j])*S[j]` unbind multiplies of the packed decode.  This
+//! module exposes exactly those three row primitives behind a [`Kernels`]
+//! handle whose instruction set is selected ONCE, at plan/engine build time:
+//!
+//! | ISA      | register shape                                 | selected when |
+//! |----------|------------------------------------------------|---------------|
+//! | `scalar` | one `C64` at a time                            | always available; bit-identical to the seed loops |
+//! | `avx2`   | 2 complex bins per 256-bit vector (AVX2 + FMA) | `x86_64` with a runtime CPUID proof |
+//! | `neon`   | 1 complex bin per 128-bit vector               | every `aarch64` build (NEON is baseline there) |
+//!
+//! Dispatch policy:
+//!
+//! * [`Kernels::detect`] resolves the process-wide default once and caches
+//!   it: the [`ENV_KNOB`] environment variable (`C3SL_SIMD`) wins when set
+//!   (`scalar`/`avx2`/`neon`, panicking loudly when the named ISA is
+//!   unavailable so a CI matrix run can never silently fall back to a path
+//!   it did not mean to test), otherwise the best ISA the host proves at
+//!   runtime.  The detection itself is cheap and cached.
+//! * [`Kernels::scalar`] / [`Kernels::forced`] pin an ISA per engine — the
+//!   bench harness uses this to keep the `host/fft-packed` venue on the
+//!   pre-SIMD scalar kernels while `host/fft-simd` runs the detected set,
+//!   so the venue delta measures exactly the vectorization win.
+//! * The seed-reference transforms ([`FftPlan::forward`](super::FftPlan) /
+//!   [`inverse`](super::FftPlan::inverse) and everything the `Reference` FFT
+//!   backend in `hdc` touches) never route through this module: their
+//!   outputs are pinned bit-for-bit by tests, and FMA contraction changes
+//!   the last ulp.  The scalar kernels here replicate the seed inner loops
+//!   operation-for-operation, so a forced-`scalar` packed engine stays
+//!   bit-identical to the pre-SIMD packed path.
+//!
+//! Under Miri the dispatcher always picks `scalar` — vendor intrinsics sit
+//! outside Miri's interpreter, and the portable scalar kernels are the ones
+//! Miri is meant to vet.
+//!
+//! The raw `std::arch` surface is confined to this file by the repolint
+//! `simd-containment` invariant; everything else in the crate speaks
+//! [`Kernels`].
+
+use super::C64;
+
+/// Environment variable naming the kernel ISA to force: `scalar`, `avx2` or
+/// `neon`.  Read once per process by [`Kernels::detect`]; unknown values and
+/// unavailable ISAs abort loudly rather than silently falling back.
+pub const ENV_KNOB: &str = "C3SL_SIMD";
+
+/// Instruction-set choices for the packed-path row kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops — bit-identical to the seed kernels, and the
+    /// only ISA Miri interprets.
+    Scalar,
+    /// x86-64 AVX2 + FMA: four f64 lanes, two complex bins per register.
+    Avx2,
+    /// aarch64 NEON: two f64 lanes, one complex bin per register.
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase name — the config/env spelling and the bench banner.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse the config/env spelling (`scalar`, `avx2`, `neon`).  `None` for
+    /// anything else — callers decide how loudly to fail.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this ISA can actually run on the current host: compile-time
+    /// architecture AND (for AVX2) a runtime CPUID check.  Always `false`
+    /// for vector ISAs under Miri.
+    pub fn available(&self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                cfg!(not(miri))
+                    && std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => false,
+            Isa::Neon => cfg!(all(target_arch = "aarch64", not(miri))),
+        }
+    }
+}
+
+/// A resolved kernel set: the three row primitives of the packed hot path,
+/// dispatching to the ISA chosen at construction.  Cheap to copy; engines
+/// and plans embed one by value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernels {
+    isa: Isa,
+}
+
+impl Kernels {
+    /// The portable scalar kernel set — bit-identical to the seed loops.
+    pub fn scalar() -> Self {
+        Kernels { isa: Isa::Scalar }
+    }
+
+    /// Pin a specific ISA.  Panics loudly when the ISA is not available on
+    /// this host — an explicitly requested path must never silently degrade
+    /// (the CI dispatch matrix depends on this).
+    pub fn forced(isa: Isa) -> Self {
+        assert!(
+            isa.available(),
+            "SIMD kernel ISA {:?} was requested (e.g. via {ENV_KNOB} or --simd) but is \
+             not available on this host (arch: {}); use \"scalar\" or drop the knob",
+            isa.name(),
+            std::env::consts::ARCH
+        );
+        Kernels { isa }
+    }
+
+    /// Resolve the process-wide default kernel set, once, and cache it:
+    /// honor [`ENV_KNOB`] when set (panicking on unknown values or on an ISA
+    /// the host cannot run), otherwise pick the best available ISA.  Under
+    /// Miri this is always the scalar set.
+    pub fn detect() -> Self {
+        #[cfg(miri)]
+        {
+            // Miri interprets portable Rust only; the vector paths are
+            // compiled but never taken there.
+            Kernels::scalar()
+        }
+        #[cfg(not(miri))]
+        {
+            use std::sync::OnceLock;
+            static CHOICE: OnceLock<Isa> = OnceLock::new();
+            let isa = *CHOICE.get_or_init(|| match std::env::var(ENV_KNOB) {
+                Ok(v) => match Isa::parse(&v) {
+                    Some(isa) => Kernels::forced(isa).isa,
+                    None => panic!(
+                        "{ENV_KNOB} must be \"scalar\", \"avx2\" or \"neon\", got {v:?}"
+                    ),
+                },
+                Err(_) => [Isa::Avx2, Isa::Neon]
+                    .into_iter()
+                    .find(Isa::available)
+                    .unwrap_or(Isa::Scalar),
+            });
+            Kernels { isa }
+        }
+    }
+
+    /// The ISA this kernel set dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Encode superposition row primitive: `acc[j] += k[j] * z[j]` (complex
+    /// multiply-accumulate) over equal-length half-spectrum rows.
+    ///
+    /// Scalar replays the seed loop bit-for-bit; the vector paths may fuse
+    /// multiplies and adds (FMA), shifting the last ulp.
+    pub fn cmul_acc(&self, acc: &mut [C64], k: &[C64], z: &[C64]) {
+        assert_eq!(acc.len(), k.len());
+        assert_eq!(acc.len(), z.len());
+        match self.isa {
+            Isa::Scalar => cmul_acc_scalar(acc, k, z),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                // SAFETY: a `Kernels` carrying `Isa::Avx2` is only built after
+                // `Isa::available` proved avx2+fma via CPUID, which is exactly
+                // the #[target_feature] contract of `avx2::cmul_acc`; lengths
+                // are asserted equal above.
+                unsafe { avx2::cmul_acc(acc, k, z) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                // SAFETY: NEON is a baseline feature of every aarch64 target
+                // this crate builds for, and `Isa::available` admits
+                // `Isa::Neon` only on aarch64; lengths are asserted above.
+                unsafe { neon::cmul_acc(acc, k, z) }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => unreachable!("Isa::Avx2 is gated by Isa::available on x86_64"),
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => unreachable!("Isa::Neon is gated by Isa::available on aarch64"),
+        }
+    }
+
+    /// Decode unbind row primitive: `out[j] = conj(k[j]) * s[j]` (circular
+    /// correlation in the frequency domain) over equal-length rows.
+    pub fn cmul_conj(&self, out: &mut [C64], k: &[C64], s: &[C64]) {
+        assert_eq!(out.len(), k.len());
+        assert_eq!(out.len(), s.len());
+        match self.isa {
+            Isa::Scalar => cmul_conj_scalar(out, k, s),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                // SAFETY: `Isa::Avx2` implies the CPUID proof of avx2+fma
+                // demanded by `avx2::cmul_conj`'s #[target_feature] contract;
+                // lengths are asserted equal above.
+                unsafe { avx2::cmul_conj(out, k, s) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                // SAFETY: NEON is baseline on aarch64 and `Isa::Neon` is only
+                // constructible there; lengths are asserted equal above.
+                unsafe { neon::cmul_conj(out, k, s) }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => unreachable!("Isa::Avx2 is gated by Isa::available on x86_64"),
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => unreachable!("Isa::Neon is gated by Isa::available on aarch64"),
+        }
+    }
+
+    /// One radix-2 butterfly pass over a chunk: for each `j`,
+    /// `t = hi[j] * twiddles[j*step]; hi[j] = lo[j] - t; lo[j] = lo[j] + t`.
+    /// `lo`/`hi` are the two halves of one `chunks_exact_mut` chunk of the
+    /// transform buffer; `twiddles` is the plan's full table, strided by
+    /// `step` exactly as the seed loop's `iter().step_by(step)` walks it.
+    pub fn butterfly(&self, lo: &mut [C64], hi: &mut [C64], twiddles: &[C64], step: usize) {
+        assert_eq!(lo.len(), hi.len());
+        assert!(lo.is_empty() || (lo.len() - 1) * step < twiddles.len());
+        match self.isa {
+            Isa::Scalar => butterfly_scalar(lo, hi, twiddles, step),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                // SAFETY: `Isa::Avx2` implies the CPUID proof of avx2+fma
+                // demanded by `avx2::butterfly`; the asserts above pin equal
+                // halves and an in-bounds strided twiddle walk.
+                unsafe { avx2::butterfly(lo, hi, twiddles, step) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                // SAFETY: NEON is baseline on aarch64 and `Isa::Neon` is only
+                // constructible there; bounds are asserted above.
+                unsafe { neon::butterfly(lo, hi, twiddles, step) }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => unreachable!("Isa::Avx2 is gated by Isa::available on x86_64"),
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => unreachable!("Isa::Neon is gated by Isa::available on aarch64"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar kernels — operation-for-operation replicas of the seed inner loops,
+// so a forced-scalar engine is bit-identical to the pre-SIMD packed path.
+// ---------------------------------------------------------------------------
+
+fn cmul_acc_scalar(acc: &mut [C64], k: &[C64], z: &[C64]) {
+    for ((a, kv), zv) in acc.iter_mut().zip(k).zip(z) {
+        *a = a.add(kv.mul(*zv));
+    }
+}
+
+fn cmul_conj_scalar(out: &mut [C64], k: &[C64], s: &[C64]) {
+    for ((o, kv), sv) in out.iter_mut().zip(k).zip(s) {
+        *o = kv.conj().mul(*sv);
+    }
+}
+
+fn butterfly_scalar(lo: &mut [C64], hi: &mut [C64], twiddles: &[C64], step: usize) {
+    for ((a, b), &w) in lo.iter_mut().zip(hi.iter_mut()).zip(twiddles.iter().step_by(step))
+    {
+        let t = b.mul(w);
+        let u = *a;
+        *a = u.add(t);
+        *b = u.sub(t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels: 4 f64 lanes = 2 interleaved complex bins per register.
+//
+// Layout contract: `C64` is `#[repr(C)] { re: f64, im: f64 }`, so a `&[C64]`
+// of length m is exactly 2m contiguous f64s — `[re0, im0, re1, im1, ...]` —
+// and a 256-bit load at f64 offset 4i reads bins i and i+1.
+//
+// Complex products use the fmaddsub idiom: with `ar`/`ai` the broadcast
+// real/imag parts of `a` and `bs` the re/im-swapped `b`,
+//   a*b        = fmaddsub(ar, b, ai*bs)   → [ar*br - ai*bi, ar*bi + ai*br]
+//   conj(a)*b  = fmsubadd(ar, b, ai*bs)   → [ar*br + ai*bi, ar*bi - ai*br]
+// (fmaddsub subtracts in even lanes and adds in odd lanes; fmsubadd is the
+// mirror).  Odd trailing bins fall through to the scalar kernels.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::fft::C64;
+    use std::arch::x86_64::*;
+
+    /// `acc[j] += k[j] * z[j]`, two bins per iteration.
+    ///
+    /// # Safety
+    /// The host must support `avx2` and `fma` (the dispatcher checks CPUID
+    /// before ever selecting this path), and all three slices must have
+    /// equal length (asserted by the dispatcher).
+    // SAFETY: see the # Safety section — the #[target_feature] contract is
+    // discharged by the CPUID check in `Isa::available`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn cmul_acc(acc: &mut [C64], k: &[C64], z: &[C64]) {
+        let n = acc.len();
+        let pairs = n / 2;
+        // SAFETY: C64 is #[repr(C)] (re, im), so each slice is 2n contiguous
+        // f64s; every load/store below touches f64s [4i, 4i+4) with
+        // 4*pairs <= 2n, inside the allocations the slices borrow.
+        let ap = acc.as_mut_ptr().cast::<f64>();
+        let kp = k.as_ptr().cast::<f64>();
+        let zp = z.as_ptr().cast::<f64>();
+        for i in 0..pairs {
+            let off = 4 * i;
+            let kv = _mm256_loadu_pd(kp.add(off));
+            let zv = _mm256_loadu_pd(zp.add(off));
+            let av = _mm256_loadu_pd(ap.add(off));
+            let kr = _mm256_movedup_pd(kv); // [kre, kre, kre', kre']
+            let ki = _mm256_permute_pd(kv, 0b1111); // [kim, kim, kim', kim']
+            let zs = _mm256_permute_pd(zv, 0b0101); // [zim, zre, zim', zre']
+            let t = _mm256_mul_pd(ki, zs);
+            let prod = _mm256_fmaddsub_pd(kr, zv, t);
+            _mm256_storeu_pd(ap.add(off), _mm256_add_pd(av, prod));
+        }
+        let tail = 2 * pairs;
+        for ((a, kv), zv) in acc[tail..].iter_mut().zip(&k[tail..]).zip(&z[tail..]) {
+            *a = a.add(kv.mul(*zv));
+        }
+    }
+
+    /// `out[j] = conj(k[j]) * s[j]`, two bins per iteration.
+    ///
+    /// # Safety
+    /// Same contract as [`cmul_acc`]: avx2+fma proven by the dispatcher,
+    /// equal slice lengths asserted by the dispatcher.
+    // SAFETY: see the # Safety section — the #[target_feature] contract is
+    // discharged by the CPUID check in `Isa::available`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn cmul_conj(out: &mut [C64], k: &[C64], s: &[C64]) {
+        let n = out.len();
+        let pairs = n / 2;
+        // SAFETY: same repr(C) layout argument as `cmul_acc` — all accesses
+        // stay inside the 2n f64s each slice owns.
+        let op = out.as_mut_ptr().cast::<f64>();
+        let kp = k.as_ptr().cast::<f64>();
+        let sp = s.as_ptr().cast::<f64>();
+        for i in 0..pairs {
+            let off = 4 * i;
+            let kv = _mm256_loadu_pd(kp.add(off));
+            let sv = _mm256_loadu_pd(sp.add(off));
+            let kr = _mm256_movedup_pd(kv);
+            let ki = _mm256_permute_pd(kv, 0b1111);
+            let ss = _mm256_permute_pd(sv, 0b0101);
+            let t = _mm256_mul_pd(ki, ss);
+            _mm256_storeu_pd(op.add(off), _mm256_fmsubadd_pd(kr, sv, t));
+        }
+        let tail = 2 * pairs;
+        for ((o, kv), sv) in out[tail..].iter_mut().zip(&k[tail..]).zip(&s[tail..]) {
+            *o = kv.conj().mul(*sv);
+        }
+    }
+
+    /// One butterfly pass: `t = hi[j]*w[j*step]; lo[j] += t; hi[j] = lo - t`,
+    /// two bins per iteration with a strided twiddle gather.
+    ///
+    /// # Safety
+    /// avx2+fma proven by the dispatcher; `lo.len() == hi.len()` and
+    /// `(lo.len()-1)*step < twiddles.len()` asserted by the dispatcher.
+    // SAFETY: see the # Safety section — the #[target_feature] contract is
+    // discharged by the CPUID check in `Isa::available`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn butterfly(lo: &mut [C64], hi: &mut [C64], twiddles: &[C64], step: usize) {
+        let half = lo.len();
+        let pairs = half / 2;
+        // SAFETY: repr(C) layout as above; lo/hi accesses cover f64s
+        // [4j, 4j+4) with 4*pairs <= 2*half, and the two 128-bit twiddle
+        // loads read bins (2j)*step and (2j+1)*step, both < twiddles.len()
+        // by the dispatcher's stride assert.
+        let lp = lo.as_mut_ptr().cast::<f64>();
+        let hp = hi.as_mut_ptr().cast::<f64>();
+        let wp = twiddles.as_ptr().cast::<f64>();
+        for j in 0..pairs {
+            let off = 4 * j;
+            let w0 = _mm_loadu_pd(wp.add(2 * (2 * j) * step));
+            let w1 = _mm_loadu_pd(wp.add(2 * (2 * j + 1) * step));
+            let wv = _mm256_insertf128_pd(_mm256_castpd128_pd256(w0), w1, 1);
+            let bv = _mm256_loadu_pd(hp.add(off));
+            let av = _mm256_loadu_pd(lp.add(off));
+            let br = _mm256_movedup_pd(bv);
+            let bi = _mm256_permute_pd(bv, 0b1111);
+            let ws = _mm256_permute_pd(wv, 0b0101);
+            let t = _mm256_mul_pd(bi, ws);
+            let tv = _mm256_fmaddsub_pd(br, wv, t); // t = hi[j] * w
+            _mm256_storeu_pd(lp.add(off), _mm256_add_pd(av, tv));
+            _mm256_storeu_pd(hp.add(off), _mm256_sub_pd(av, tv));
+        }
+        let tail = 2 * pairs;
+        for ((a, b), &w) in lo[tail..]
+            .iter_mut()
+            .zip(hi[tail..].iter_mut())
+            .zip(twiddles.iter().step_by(step).skip(tail))
+        {
+            let t = b.mul(w);
+            let u = *a;
+            *a = u.add(t);
+            *b = u.sub(t);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON kernels (aarch64): 2 f64 lanes = 1 complex bin per register.
+//
+// Complex products use a sign-vector FMA: with `ar`/`ai` the broadcast
+// real/imag lanes of `a` and `bs` the re/im-swapped `b`,
+//   a*b       = fma(sign_mul  * (ai*bs), ar, b)   sign_mul  = [-1, +1]
+//   conj(a)*b = fma(sign_conj * (ai*bs), ar, b)   sign_conj = [+1, -1]
+// NEON is part of the aarch64 baseline, so there is no runtime probe — the
+// dispatcher only constructs `Isa::Neon` on aarch64 builds.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use crate::fft::C64;
+    use std::arch::aarch64::*;
+
+    /// `acc[j] += k[j] * z[j]`, one bin per iteration.
+    ///
+    /// # Safety
+    /// aarch64-only (NEON is baseline); all three slices must have equal
+    /// length (asserted by the dispatcher).
+    // SAFETY: see the # Safety section — NEON is statically present on every
+    // aarch64 target this crate builds for.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cmul_acc(acc: &mut [C64], k: &[C64], z: &[C64]) {
+        let sign = vld1q_f64([-1.0f64, 1.0].as_ptr());
+        // SAFETY: C64 is #[repr(C)] (re, im), so each slice is 2n contiguous
+        // f64s; every load/store below reads f64s [2i, 2i+2) with i < n.
+        let ap = acc.as_mut_ptr().cast::<f64>();
+        let kp = k.as_ptr().cast::<f64>();
+        let zp = z.as_ptr().cast::<f64>();
+        for i in 0..acc.len() {
+            let off = 2 * i;
+            let kv = vld1q_f64(kp.add(off));
+            let zv = vld1q_f64(zp.add(off));
+            let av = vld1q_f64(ap.add(off));
+            let kr = vdupq_laneq_f64::<0>(kv);
+            let ki = vdupq_laneq_f64::<1>(kv);
+            let zs = vextq_f64::<1>(zv, zv);
+            let t = vmulq_f64(vmulq_f64(ki, zs), sign); // [-ki*zi, ki*zr]
+            let prod = vfmaq_f64(t, kr, zv); // [kr*zr - ki*zi, kr*zi + ki*zr]
+            vst1q_f64(ap.add(off), vaddq_f64(av, prod));
+        }
+    }
+
+    /// `out[j] = conj(k[j]) * s[j]`, one bin per iteration.
+    ///
+    /// # Safety
+    /// Same contract as [`cmul_acc`]: aarch64-only, equal slice lengths
+    /// asserted by the dispatcher.
+    // SAFETY: see the # Safety section — NEON is statically present on every
+    // aarch64 target this crate builds for.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cmul_conj(out: &mut [C64], k: &[C64], s: &[C64]) {
+        let sign = vld1q_f64([1.0f64, -1.0].as_ptr());
+        // SAFETY: same repr(C) layout argument as `cmul_acc`.
+        let op = out.as_mut_ptr().cast::<f64>();
+        let kp = k.as_ptr().cast::<f64>();
+        let sp = s.as_ptr().cast::<f64>();
+        for i in 0..out.len() {
+            let off = 2 * i;
+            let kv = vld1q_f64(kp.add(off));
+            let sv = vld1q_f64(sp.add(off));
+            let kr = vdupq_laneq_f64::<0>(kv);
+            let ki = vdupq_laneq_f64::<1>(kv);
+            let ss = vextq_f64::<1>(sv, sv);
+            let t = vmulq_f64(vmulq_f64(ki, ss), sign); // [ki*si, -ki*sr]
+            vst1q_f64(op.add(off), vfmaq_f64(t, kr, sv));
+        }
+    }
+
+    /// One butterfly pass, one bin per iteration with strided twiddles.
+    ///
+    /// # Safety
+    /// aarch64-only; `lo.len() == hi.len()` and the strided twiddle walk
+    /// in-bounds, both asserted by the dispatcher.
+    // SAFETY: see the # Safety section — NEON is statically present on every
+    // aarch64 target this crate builds for.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn butterfly(lo: &mut [C64], hi: &mut [C64], twiddles: &[C64], step: usize) {
+        let sign = vld1q_f64([-1.0f64, 1.0].as_ptr());
+        // SAFETY: repr(C) layout as above; lo/hi accesses cover f64s
+        // [2j, 2j+2) with j < lo.len(), and the twiddle load reads bin
+        // j*step < twiddles.len() by the dispatcher's stride assert.
+        let lp = lo.as_mut_ptr().cast::<f64>();
+        let hp = hi.as_mut_ptr().cast::<f64>();
+        let wp = twiddles.as_ptr().cast::<f64>();
+        for j in 0..lo.len() {
+            let off = 2 * j;
+            let wv = vld1q_f64(wp.add(2 * j * step));
+            let bv = vld1q_f64(hp.add(off));
+            let av = vld1q_f64(lp.add(off));
+            let br = vdupq_laneq_f64::<0>(bv);
+            let bi = vdupq_laneq_f64::<1>(bv);
+            let ws = vextq_f64::<1>(wv, wv);
+            let t = vmulq_f64(vmulq_f64(bi, ws), sign);
+            let tv = vfmaq_f64(t, br, wv); // t = hi[j] * w
+            vst1q_f64(lp.add(off), vaddq_f64(av, tv));
+            vst1q_f64(hp.add(off), vsubq_f64(av, tv));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cvec(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn assert_bits(a: &[C64], b: &[C64], what: &str) {
+        for (i, (u, v)) in a.iter().zip(b).enumerate() {
+            assert_eq!(u.re.to_bits(), v.re.to_bits(), "{what}: re bin {i}");
+            assert_eq!(u.im.to_bits(), v.im.to_bits(), "{what}: im bin {i}");
+        }
+    }
+
+    fn assert_close(a: &[C64], b: &[C64], what: &str) {
+        use crate::util::testing::close;
+        for (i, (u, v)) in a.iter().zip(b).enumerate() {
+            assert!(
+                close(u.re, v.re, 1e-12, 1e-12) && close(u.im, v.im, 1e-12, 1e-12),
+                "{what}: bin {i}: ({}, {}) vs ({}, {})",
+                u.re,
+                u.im,
+                v.re,
+                v.im
+            );
+        }
+    }
+
+    #[test]
+    fn isa_parse_and_names_round_trip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("auto"), None);
+        assert_eq!(Isa::parse("AVX2"), None);
+        assert_eq!(Isa::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detect_is_stable() {
+        assert!(Isa::Scalar.available());
+        assert_eq!(Kernels::scalar().isa(), Isa::Scalar);
+        // detect() caches: two calls must agree.
+        assert_eq!(Kernels::detect(), Kernels::detect());
+        assert!(Kernels::detect().isa().available());
+    }
+
+    #[test]
+    fn scalar_kernels_replicate_seed_loops_bitwise() {
+        // The forced-scalar contract: exactly the seed inner loops, so the
+        // outputs must match a direct transcription bit for bit.
+        let mut rng = Rng::new(11);
+        let ker = Kernels::scalar();
+        for &n in &[1usize, 2, 7, 64, 129] {
+            let k = cvec(&mut rng, n);
+            let z = cvec(&mut rng, n);
+
+            let mut acc = cvec(&mut rng, n);
+            let mut want = acc.clone();
+            ker.cmul_acc(&mut acc, &k, &z);
+            for ((a, kv), zv) in want.iter_mut().zip(&k).zip(&z) {
+                *a = a.add(kv.mul(*zv));
+            }
+            assert_bits(&acc, &want, "cmul_acc");
+
+            let mut out = vec![C64::new(0.0, 0.0); n];
+            let mut wout = out.clone();
+            ker.cmul_conj(&mut out, &k, &z);
+            for ((o, kv), zv) in wout.iter_mut().zip(&k).zip(&z) {
+                *o = kv.conj().mul(*zv);
+            }
+            assert_bits(&out, &wout, "cmul_conj");
+
+            for &step in &[1usize, 2, 4] {
+                let mut lo = cvec(&mut rng, n);
+                let mut hi = cvec(&mut rng, n);
+                let tw = cvec(&mut rng, n * step);
+                let (mut wlo, mut whi) = (lo.clone(), hi.clone());
+                ker.butterfly(&mut lo, &mut hi, &tw, step);
+                for ((a, b), &w) in
+                    wlo.iter_mut().zip(whi.iter_mut()).zip(tw.iter().step_by(step))
+                {
+                    let t = b.mul(w);
+                    let u = *a;
+                    *a = u.add(t);
+                    *b = u.sub(t);
+                }
+                assert_bits(&lo, &wlo, "butterfly lo");
+                assert_bits(&hi, &whi, "butterfly hi");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn detected_kernels_match_scalar_within_fma_tolerance() {
+        // When the host offers a vector ISA (or the env knob pins one), its
+        // kernels must agree with the scalar replicas to FMA rounding.
+        let det = Kernels::detect();
+        if det.isa() == Isa::Scalar {
+            return; // nothing to compare on this host
+        }
+        let sc = Kernels::scalar();
+        let mut rng = Rng::new(29);
+        for &n in &[1usize, 2, 3, 8, 63, 64, 65, 129] {
+            let k = cvec(&mut rng, n);
+            let z = cvec(&mut rng, n);
+
+            let mut a1 = cvec(&mut rng, n);
+            let mut a2 = a1.clone();
+            det.cmul_acc(&mut a1, &k, &z);
+            sc.cmul_acc(&mut a2, &k, &z);
+            assert_close(&a1, &a2, "cmul_acc");
+
+            let mut o1 = vec![C64::new(0.0, 0.0); n];
+            let mut o2 = o1.clone();
+            det.cmul_conj(&mut o1, &k, &z);
+            sc.cmul_conj(&mut o2, &k, &z);
+            assert_close(&o1, &o2, "cmul_conj");
+
+            for &step in &[1usize, 2, 4] {
+                let lo0 = cvec(&mut rng, n);
+                let hi0 = cvec(&mut rng, n);
+                let tw = cvec(&mut rng, n * step);
+                let (mut lo1, mut hi1) = (lo0.clone(), hi0.clone());
+                let (mut lo2, mut hi2) = (lo0, hi0);
+                det.butterfly(&mut lo1, &mut hi1, &tw, step);
+                sc.butterfly(&mut lo2, &mut hi2, &tw, step);
+                assert_close(&lo1, &lo2, "butterfly lo");
+                assert_close(&hi1, &hi2, "butterfly hi");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    #[should_panic(expected = "not available on this host")]
+    fn forcing_neon_on_x86_64_is_a_loud_error() {
+        let _ = Kernels::forced(Isa::Neon);
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    #[should_panic(expected = "not available on this host")]
+    fn forcing_avx2_on_aarch64_is_a_loud_error() {
+        let _ = Kernels::forced(Isa::Avx2);
+    }
+
+    #[test]
+    fn empty_and_unit_rows_are_handled() {
+        // Degenerate shapes the tail/pair split must not trip over.
+        let ker = Kernels::detect();
+        let mut empty: Vec<C64> = Vec::new();
+        ker.cmul_acc(&mut empty, &[], &[]);
+        ker.cmul_conj(&mut empty, &[], &[]);
+        ker.butterfly(&mut [], &mut [], &[], 1);
+        let k = [C64::new(2.0, -1.0)];
+        let z = [C64::new(0.5, 3.0)];
+        let mut acc = [C64::new(1.0, 1.0)];
+        ker.cmul_acc(&mut acc, &k, &z);
+        let want = C64::new(1.0, 1.0).add(k[0].mul(z[0]));
+        assert!((acc[0].re - want.re).abs() < 1e-12);
+        assert!((acc[0].im - want.im).abs() < 1e-12);
+    }
+}
+

@@ -23,10 +23,23 @@
 //!
 //! Only power-of-two lengths go through the FFT; the `hdc` module falls back
 //! to the direct O(D²) path otherwise (real workloads here have D = 2^k).
+//!
+//! The packed kernels' inner loops dispatch through [`kernels::Kernels`] — a
+//! per-plan SIMD kernel set (scalar / AVX2+FMA / NEON) chosen once at build
+//! time.  [`FftPlan::new`] always builds the scalar set so the bit-identical
+//! reference/scratch contract survives; [`RfftPlan::new`] auto-detects
+//! (overridable via the `C3SL_SIMD` knob, see [`kernels`]).
 
+pub mod kernels;
+
+use kernels::Kernels;
 use std::f64::consts::PI;
 
 /// Complex number as (re, im) over f64 for accumulation accuracy.
+///
+/// `#[repr(C)]` pins the `[re, im]` field order and layout so the SIMD
+/// kernels in [`kernels`] may view a `&[C64]` as interleaved contiguous f64s.
+#[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct C64 {
     /// Real part.
@@ -96,12 +109,25 @@ pub struct FftPlan {
     itwiddles: Vec<C64>,
     /// Precomputed bit-reversal permutation for the scratch kernel.
     bitrev: Vec<u32>,
+    /// SIMD kernel set driving the scratch kernel's butterfly passes.
+    /// Always scalar for plans built via [`FftPlan::new`], so the
+    /// reference/scratch bit-identity contract holds.
+    kernels: Kernels,
 }
 
 impl FftPlan {
     /// Precompute twiddle and bit-reversal tables for length `n` (must be a
-    /// power of two; panics otherwise).
+    /// power of two; panics otherwise).  The scratch kernel runs on the
+    /// scalar butterfly set — bit-identical to the reference transform.
     pub fn new(n: usize) -> Self {
+        Self::with_kernels(n, Kernels::scalar())
+    }
+
+    /// Like [`FftPlan::new`], but with an explicit SIMD kernel set for the
+    /// scratch kernel's butterflies.  Non-scalar sets trade last-ulp
+    /// bit-identity with the reference transform for FMA throughput — only
+    /// the tolerance-pinned packed path ([`RfftPlan`]) builds plans this way.
+    pub fn with_kernels(n: usize, kernels: Kernels) -> Self {
         assert!(n.is_power_of_two(), "FftPlan requires power-of-two n, got {n}");
         let twiddles: Vec<C64> = (0..n / 2)
             .map(|k| {
@@ -120,7 +146,7 @@ impl FftPlan {
                 }
             })
             .collect();
-        FftPlan { n, twiddles, itwiddles, bitrev }
+        FftPlan { n, twiddles, itwiddles, bitrev, kernels }
     }
 
     /// In-place forward FFT (decimation in time, bit-reversal permutation).
@@ -203,14 +229,7 @@ impl FftPlan {
             let step = n / len;
             for chunk in buf.chunks_exact_mut(len) {
                 let (lo, hi) = chunk.split_at_mut(half);
-                for ((a, b), &w) in
-                    lo.iter_mut().zip(hi.iter_mut()).zip(twiddles.iter().step_by(step))
-                {
-                    let t = b.mul(w);
-                    let u = *a;
-                    *a = u.add(t);
-                    *b = u.sub(t);
-                }
+                self.kernels.butterfly(lo, hi, twiddles, step);
             }
             len <<= 1;
         }
@@ -310,13 +329,27 @@ pub struct RfftPlan {
     full: FftPlan,
     /// Split/merge twiddles w[k] = exp(−2πi k / n) for k <= n/2.
     w: Vec<C64>,
+    /// SIMD kernel set the embedded plans' butterflies dispatch through.
+    kernels: Kernels,
 }
 
 impl RfftPlan {
     /// Precompute the packed-transform tables for real length `n` (must be a
     /// power of two `>= 2`; panics otherwise — length 1 has no half plan, so
-    /// callers fall back to the reference kernels there).
+    /// callers fall back to the reference kernels there).  The butterfly
+    /// passes run on the auto-detected SIMD kernel set
+    /// ([`Kernels::detect`](kernels::Kernels::detect), honoring the
+    /// `C3SL_SIMD` knob); packed outputs are tolerance-pinned, not bitwise,
+    /// so the ISA choice stays inside the tested envelope.
     pub fn new(n: usize) -> Self {
+        Self::with_kernels(n, Kernels::detect())
+    }
+
+    /// Like [`RfftPlan::new`], but with an explicit SIMD kernel set — the
+    /// bench harness and the parity tests use this to pin venues to a
+    /// specific ISA (forced-scalar reproduces the pre-SIMD packed kernels
+    /// bit for bit).
+    pub fn with_kernels(n: usize, kernels: Kernels) -> Self {
         assert!(
             n.is_power_of_two() && n >= 2,
             "RfftPlan requires power-of-two n >= 2, got {n}"
@@ -327,12 +360,23 @@ impl RfftPlan {
                 C64::new(ang.cos(), ang.sin())
             })
             .collect();
-        RfftPlan { n, half: FftPlan::new(n / 2), full: FftPlan::new(n), w }
+        RfftPlan {
+            n,
+            half: FftPlan::with_kernels(n / 2, kernels),
+            full: FftPlan::with_kernels(n, kernels),
+            w,
+            kernels,
+        }
     }
 
     /// Real transform length N.
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// The SIMD kernel set this plan's butterflies dispatch through.
+    pub fn kernels(&self) -> Kernels {
+        self.kernels
     }
 
     /// Half-spectrum length N/2 + 1 (bins `0..=N/2`).

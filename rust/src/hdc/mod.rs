@@ -13,6 +13,7 @@
 
 pub mod keyring;
 
+use crate::fft::kernels::Kernels;
 use crate::fft::{
     circular_convolve_fft, circular_correlate_fft, irfft_into, rfft_into, C64, FftPlan,
     RfftPlan,
@@ -265,6 +266,10 @@ pub struct C3 {
     spectra_work: Vec<C64>,
     backend: Backend,
     fft_backend: FftBackend,
+    /// SIMD kernel set for the packed hot path's pointwise loops (the packed
+    /// plan's butterflies carry the same set).  The reference backend never
+    /// consults it — its bit-identity contract demands the scalar seed loops.
+    simd: Kernels,
     /// Worker threads for group-parallel encode/decode (1 = serial).
     workers: usize,
 }
@@ -289,11 +294,29 @@ impl C3 {
     /// with no half) stays on the reference kernels, and non-power-of-two D
     /// falls back to the direct path exactly as with [`Backend::Auto`] —
     /// requesting [`FftBackend::Packed`] is always safe.
+    ///
+    /// The packed path runs on the auto-detected SIMD kernel set
+    /// ([`Kernels::detect`], honoring the `C3SL_SIMD` env knob); use
+    /// [`C3::with_kernels`] to pin an ISA explicitly.
     pub fn with_backends(
         keys: KeySet,
         backend: Backend,
         fft_backend: FftBackend,
         workers: usize,
+    ) -> Self {
+        Self::with_kernels(keys, backend, fft_backend, workers, Kernels::detect())
+    }
+
+    /// Like [`C3::with_backends`], but with an explicit SIMD kernel set for
+    /// the packed hot path (bench venues and the SIMD parity tests pin ISAs
+    /// this way; `Kernels::scalar()` reproduces the pre-SIMD packed kernels
+    /// bit for bit).  The reference backend ignores the set by contract.
+    pub fn with_kernels(
+        keys: KeySet,
+        backend: Backend,
+        fft_backend: FftBackend,
+        workers: usize,
+        simd: Kernels,
     ) -> Self {
         let use_fft = match backend {
             Backend::Direct => false,
@@ -305,7 +328,7 @@ impl C3 {
         };
         let use_packed = use_fft && fft_backend == FftBackend::Packed && keys.d >= 2;
         let plan = (use_fft && !use_packed).then(|| FftPlan::new(keys.d));
-        let rplan = use_packed.then(|| RfftPlan::new(keys.d));
+        let rplan = use_packed.then(|| RfftPlan::with_kernels(keys.d, simd));
         let (key_spectra, spectra_work) = match (&plan, &rplan) {
             (_, Some(rp)) => {
                 let mut work = vec![C64::new(0.0, 0.0); keys.d / 2];
@@ -332,6 +355,7 @@ impl C3 {
             spectra_work,
             backend,
             fft_backend,
+            simd,
             workers: workers.max(1),
         }
     }
@@ -379,6 +403,13 @@ impl C3 {
     /// reference backend was selected).
     pub fn is_packed(&self) -> bool {
         self.rplan.is_some()
+    }
+
+    /// The SIMD kernel set the packed hot path dispatches through (scalar on
+    /// engines built via [`C3::new`]-family constructors when no vector ISA
+    /// is available or the `C3SL_SIMD` knob pinned `scalar`).
+    pub fn simd(&self) -> Kernels {
+        self.simd
     }
 
     /// The full-length reference plan, whichever backend owns it (the
@@ -467,11 +498,7 @@ impl C3 {
                     &mut scratch.ha,
                     &mut scratch.a[..h],
                 );
-                for ((acc, k), zv) in
-                    scratch.hb.iter_mut().zip(&self.key_spectra[i]).zip(scratch.ha.iter())
-                {
-                    *acc = acc.add(k.mul(*zv));
-                }
+                self.simd.cmul_acc(&mut scratch.hb, &self.key_spectra[i], &scratch.ha);
             }
             rp.irfft_into(&scratch.hb, out, &mut scratch.a[..h]);
             return;
@@ -519,27 +546,15 @@ impl C3 {
             rp.rfft_into(srow, &mut scratch.ha, &mut scratch.a[..h]);
             let mut i = 0;
             while i + 1 < r {
-                for ((p, k), sv) in
-                    scratch.hb.iter_mut().zip(&self.key_spectra[i]).zip(scratch.ha.iter())
-                {
-                    *p = k.conj().mul(*sv);
-                }
-                for ((p, k), sv) in
-                    scratch.hc.iter_mut().zip(&self.key_spectra[i + 1]).zip(scratch.ha.iter())
-                {
-                    *p = k.conj().mul(*sv);
-                }
+                self.simd.cmul_conj(&mut scratch.hb, &self.key_spectra[i], &scratch.ha);
+                self.simd.cmul_conj(&mut scratch.hc, &self.key_spectra[i + 1], &scratch.ha);
                 let (oa, ob) = out[i * d..(i + 2) * d].split_at_mut(d);
                 rp.irfft2_into(&scratch.hb, &scratch.hc, oa, ob, &mut scratch.a);
                 i += 2;
             }
             if i < r {
                 // odd tail row: one packed (half-size) inverse
-                for ((p, k), sv) in
-                    scratch.hb.iter_mut().zip(&self.key_spectra[i]).zip(scratch.ha.iter())
-                {
-                    *p = k.conj().mul(*sv);
-                }
+                self.simd.cmul_conj(&mut scratch.hb, &self.key_spectra[i], &scratch.ha);
                 rp.irfft_into(&scratch.hb, &mut out[i * d..(i + 1) * d], &mut scratch.a[..h]);
             }
             return;
@@ -1257,6 +1272,50 @@ mod tests {
         assert_bits_eq(&fresh.encode(&z), &rotated.encode(&z), "packed rekey encode");
         let s = fresh.encode(&z);
         assert_bits_eq(&fresh.decode(&s), &rotated.decode(&s), "packed rekey decode");
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn packed_simd_matches_forced_scalar_at_acceptance_dims() {
+        // SIMD-vs-scalar parity at the acceptance dims: a detected-ISA packed
+        // engine (avx2/neon where the host offers it, or whatever C3SL_SIMD
+        // pinned) must agree with a forced-scalar engine — whose kernels are
+        // the pre-SIMD packed loops, bit for bit — within the packed
+        // tolerances, across odd/even R and batches up to 64 rows.
+        use crate::fft::kernels::Isa;
+        Prop::new("packed simd == packed scalar (tolerance)", 8).run(|g| {
+            let d = *g.choose(&[256usize, 2048]);
+            let r = *g.choose(&[1usize, 2, 3, 4, 8]);
+            let gcount = *g.choose(&[1usize, 2, 64 / r.max(1)]);
+            let b = gcount * r; // up to 64 rows
+            let mut rng = Rng::new(227);
+            let ks = KeySet::generate(&mut rng, r, d);
+            let simd = packed_engine(ks.clone()); // detected kernel set
+            let scalar =
+                C3::with_kernels(ks, Backend::Auto, FftBackend::Packed, 1, Kernels::scalar());
+            assert_eq!(scalar.simd().isa(), Isa::Scalar);
+            assert!(simd.is_packed() && scalar.is_packed());
+            let z = Tensor::from_vec(&[b, d], g.vec_normal(b * d, 0.0, 1.0));
+
+            let got_e = simd.encode(&z);
+            let want_e = scalar.encode(&z);
+            assert_close_slice(
+                want_e.data(),
+                got_e.data(),
+                DEFAULT_REL,
+                DEFAULT_ABS,
+                "simd encode parity",
+            );
+            let got_d = simd.decode(&want_e);
+            let want_d = scalar.decode(&want_e);
+            assert_close_slice(
+                want_d.data(),
+                got_d.data(),
+                DEFAULT_REL,
+                DEFAULT_ABS,
+                "simd decode parity",
+            );
+        });
     }
 
     #[test]

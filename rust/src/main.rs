@@ -20,6 +20,8 @@
 //!   c3sl multi --reactor --ops-addr 127.0.0.1:9100  # /metrics /healthz /drain
 //!   c3sl multi --fft-backend reference          # seed full-spectrum kernels
 //!                                               # (default is packed)
+//!   c3sl multi --simd scalar                    # pin the packed codec's SIMD
+//!                                               # kernel set (default: detect)
 
 use c3sl::transport::readiness::ReadinessBackend;
 use c3sl::{bail, ensure};
@@ -27,6 +29,7 @@ use c3sl::config::cli::Args;
 use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
 use c3sl::coordinator::{run_experiment, run_multi_edge, CloudWorker, EdgeWorker, MultiEdgeSpec};
 use c3sl::data::open_dataset;
+use c3sl::fft::kernels::{Isa, Kernels, ENV_KNOB};
 use c3sl::flops::{bottlenetpp_cost, bottlenetpp_cost_published, c3sl_cost, CutSpec};
 use c3sl::hdc::{crosstalk_report, Backend, FftBackend, KeySet, C3};
 use c3sl::runtime::Engine;
@@ -74,6 +77,35 @@ fn dispatch(argv: &[String]) -> Result<()> {
             bail!("unknown subcommand '{other}'")
         }
     }
+}
+
+/// Pin the packed codec's SIMD kernel set for this process by exporting the
+/// `C3SL_SIMD` environment knob before any engine is built — the kernel
+/// choice is resolved once and cached at the first plan build, so this must
+/// run ahead of all engine construction.  `None` leaves auto-detection (or a
+/// knob the caller already exported) in effect.
+fn apply_simd(simd: Option<Isa>) {
+    if let Some(isa) = simd {
+        std::env::set_var(ENV_KNOB, isa.name());
+    }
+}
+
+/// Parse a `--simd scalar|avx2|neon` flag, rejecting ISAs the host cannot
+/// run loudly rather than silently downgrading.
+fn parse_simd_flag(args: &Args) -> Result<Option<Isa>> {
+    let Some(s) = args.get("simd") else {
+        return Ok(None);
+    };
+    let isa = Isa::parse(s).with_context(|| {
+        format!("--simd must be \"scalar\", \"avx2\" or \"neon\", got {s:?}")
+    })?;
+    ensure!(
+        isa.available(),
+        "--simd {} is not available on this host (use scalar, or drop the \
+         flag to auto-detect)",
+        isa.name()
+    );
+    Ok(Some(isa))
 }
 
 /// Build a config from --config file + flag overrides.
@@ -128,10 +160,14 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
             format!("--fft-backend must be \"packed\" or \"reference\", got {s:?}")
         })?;
     }
+    if let Some(isa) = parse_simd_flag(args)? {
+        cfg.simd = Some(isa);
+    }
     if let Some(n) = args.get_usize("edges")? {
         cfg.num_edges = n;
     }
     cfg.validate()?;
+    apply_simd(cfg.simd);
     // A security toggle must never silently no-op: only the multi-edge
     // coordinator implements per-client shards today (single-edge sharding
     // is a ROADMAP follow-up), so reject rather than ignore it here.
@@ -221,7 +257,10 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// derives a per-client key shard for every edge (challenge/`Msg::KeyShard`
 /// handshake) and `--rotate-every N` rotates each shard to a fresh key epoch
 /// every N steps.  `--fft-backend packed|reference` selects the codec's FFT
-/// kernel family (packed half-spectrum real transforms are the default).
+/// kernel family (packed half-spectrum real transforms are the default) and
+/// `--simd scalar|avx2|neon` pins the packed codec's SIMD kernel set (same
+/// as the `C3SL_SIMD` env knob; default auto-detects the widest ISA and an
+/// unavailable pin fails loudly).
 /// `--ops-addr HOST:PORT` serves the plaintext ops control plane
 /// (`GET /metrics` Prometheus text, `GET /healthz`, `POST /drain`) off the
 /// reactor's own readiness loop — no extra thread — and `--ops-reload PATH`
@@ -229,7 +268,7 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// (`transport.outbox_frames`, `transport.poll_us`) live; both require
 /// `--reactor`.  `--config` seeds
 /// the defaults (transport.edges/reactor/backend/poll_us/outbox_frames,
-/// ops.addr, scheme.r/workers/fft_backend/key_sharding/rotation_steps,
+/// ops.addr, scheme.r/workers/fft_backend/simd/key_sharding/rotation_steps,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
     let base = match args.get("config") {
@@ -239,6 +278,7 @@ fn cmd_multi(args: &Args) -> Result<()> {
         None => None,
     };
     let b = base.as_ref();
+    apply_simd(parse_simd_flag(args)?.or_else(|| b.and_then(|c| c.simd)));
     let def = MultiEdgeSpec::default();
     let reactor_backend = match args.get("reactor-backend") {
         Some(s) => {
@@ -308,7 +348,7 @@ fn cmd_multi(args: &Args) -> Result<()> {
     }
     println!(
         "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} fft={} \
-         transport={:?} serve={} keys={}",
+         simd={} transport={:?} serve={} keys={}",
         spec.edges,
         spec.steps,
         spec.r,
@@ -316,6 +356,7 @@ fn cmd_multi(args: &Args) -> Result<()> {
         spec.batch,
         spec.workers,
         spec.fft_backend.name(),
+        Kernels::detect().isa().name(),
         spec.transport,
         if spec.reactor {
             format!("reactor/{}", spec.poll.backend.name())

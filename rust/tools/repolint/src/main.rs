@@ -11,6 +11,11 @@
 //!   the signal-handling identifiers (`signal`, `raise`) may appear only
 //!   inside `rust/src/transport/readiness.rs`; every other module goes
 //!   through that safe wrapper.
+//! * **simd-containment** — `std::arch` SIMD surface (the `x86_64`/`aarch64`
+//!   arch-module names, `is_x86_feature_detected`, `_mm*` x86 intrinsics and
+//!   `v*q_f32`/`v*q_f64` NEON intrinsics) may appear only inside
+//!   `rust/src/fft/kernels.rs`; every other module dispatches through the
+//!   safe `Kernels` wrapper there.
 //! * **read-gate** — the reactor read-gate (a comparison against
 //!   `max_outbox_frames`) may only be expressed inside `Slot::wants_read` in
 //!   `rust/src/transport/reactor.rs`; inline re-derivations of the gate are
@@ -348,6 +353,82 @@ fn check_ffi_containment(rel: &str, stripped: &str) -> Vec<Violation> {
     out
 }
 
+/// The only file allowed to touch `std::arch` SIMD intrinsics.
+const KERNELS_HOME: &str = "src/fft/kernels.rs";
+
+/// Exact identifiers that mark direct `std::arch` SIMD usage.  The arch
+/// module names only ever appear in code as `std::arch::x86_64` /
+/// `std::arch::aarch64` paths (cfg attributes quote them as strings, which
+/// stripping blanks), and the CPUID probe macro is the detection surface.
+const SIMD_WORDS: [&str; 3] = ["x86_64", "aarch64", "is_x86_feature_detected"];
+
+/// True when the line holds an identifier starting with `_mm` (the x86
+/// intrinsic families `_mm_*` / `_mm256_*` / `_mm512_*`).
+fn has_mm_intrinsic(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find("_mm") {
+        let p = start + pos;
+        if p == 0 || !is_ident_byte(bytes[p - 1]) {
+            return true;
+        }
+        start = p + "_mm".len();
+    }
+    false
+}
+
+/// True when the line holds a NEON-shaped identifier: starts with `v` and
+/// embeds the `q_f32`/`q_f64` vector-type suffix (`vfmaq_f64`, `vld1q_f32`).
+fn has_neon_intrinsic(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if is_ident_byte(bytes[i]) {
+            let start = i;
+            while i < bytes.len() && is_ident_byte(bytes[i]) {
+                i += 1;
+            }
+            let ident = &line[start..i];
+            if ident.starts_with('v') && (ident.contains("q_f32") || ident.contains("q_f64")) {
+                return true;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+/// Lint: `std::arch` SIMD intrinsics only inside fft::kernels.
+fn check_simd_containment(rel: &str, stripped: &str) -> Vec<Violation> {
+    if rel.ends_with(KERNELS_HOME) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in stripped.lines().enumerate() {
+        let hit = SIMD_WORDS
+            .iter()
+            .find(|w| contains_word(line, w))
+            .map(|w| (*w).to_string())
+            .or_else(|| has_mm_intrinsic(line).then(|| "_mm* intrinsic".to_string()))
+            .or_else(|| {
+                has_neon_intrinsic(line).then(|| "v*q_f32/v*q_f64 intrinsic".to_string())
+            });
+        if let Some(what) = hit {
+            out.push(Violation::new(
+                rel,
+                i + 1,
+                "simd-containment",
+                format!(
+                    "`{what}` outside fft::kernels — std::arch SIMD lives only in \
+                     rust/{KERNELS_HOME} (dispatch through its Kernels wrapper)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
 /// File that owns the reactor read-gate.
 const GATE_HOME: &str = "src/transport/reactor.rs";
 
@@ -495,6 +576,7 @@ fn main() {
             .replace('\\', "/");
         violations.extend(check_safety_comments(&rel, &raw, &stripped));
         violations.extend(check_ffi_containment(&rel, &stripped));
+        violations.extend(check_simd_containment(&rel, &stripped));
         violations.extend(check_read_gate(&rel, &stripped));
         violations.extend(check_hot_path_unwrap(&rel, &stripped));
         for line in doc_debt_markers(&stripped) {
@@ -658,6 +740,57 @@ mod tests {
         let wrapped = "raise_hangup(); let n = hangup_count(); signal_strength();";
         let v = check_ffi_containment("src/coordinator/multi.rs", &strip_code(wrapped));
         assert!(v.is_empty(), "wrapper identifiers never trip the lint: {v:?}");
+    }
+
+    #[test]
+    fn simd_lint_fires_outside_kernels() {
+        let v = check_simd_containment(
+            "src/hdc/mod.rs",
+            &strip_code("let v = _mm256_loadu_pd(p);"),
+        );
+        assert_eq!(v.len(), 1, "x86 intrinsic outside kernels must fail");
+        assert_eq!(v[0].lint, "simd-containment");
+        assert_eq!(v[0].line, 1);
+
+        let v = check_simd_containment(
+            "src/fft/mod.rs",
+            &strip_code("let t = vfmaq_f64(acc, a, b);"),
+        );
+        assert_eq!(v.len(), 1, "NEON intrinsic outside kernels must fail");
+
+        let v = check_simd_containment("src/main.rs", &strip_code("use std::arch::x86_64::*;"));
+        assert_eq!(v.len(), 1, "std::arch imports outside kernels must fail");
+
+        let v = check_simd_containment(
+            "src/config/mod.rs",
+            &strip_code("if std::arch::is_x86_feature_detected!(\"avx2\") {}"),
+        );
+        assert_eq!(v.len(), 1, "ad-hoc CPUID probes outside kernels must fail");
+    }
+
+    #[test]
+    fn simd_lint_allows_kernels_prose_and_boundary_words() {
+        let ok = src(&[
+            "use std::arch::x86_64::*;",
+            "let v = _mm256_fmaddsub_pd(a, b, c);",
+            "let t = vdupq_laneq_f64::<0>(kv);",
+        ]);
+        let v = check_simd_containment("src/fft/kernels.rs", &strip_code(&ok));
+        assert!(v.is_empty(), "the kernels module is the one home: {v:?}");
+
+        let prose = "// _mm256_loadu_pd and vfmaq_f64 live in kernels; \"x86_64\" label";
+        let v = check_simd_containment("src/hdc/mod.rs", &strip_code(prose));
+        assert!(v.is_empty(), "comments and strings never trip the lint: {v:?}");
+
+        // cfg attributes quote the arch names as strings — stripped away
+        let cfg = "#[cfg_attr(target_arch = \"x86_64\", repr(C, packed))]";
+        let v = check_simd_containment("src/transport/readiness.rs", &strip_code(cfg));
+        assert!(v.is_empty(), "cfg strings are stripped: {v:?}");
+
+        // distinct identifiers embedding the patterns must not trip
+        let near = "let freq_f32 = 1.0; let my_aarch64_flag = m.arch.clone();";
+        let v = check_simd_containment("src/runtime/manifest.rs", &strip_code(near));
+        assert!(v.is_empty(), "word boundaries respected: {v:?}");
     }
 
     #[test]
