@@ -70,6 +70,75 @@ pub enum CodecVenue {
     Artifact,
 }
 
+/// Edge retry/backoff and cloud-side session deadlines (`[resilience]`).
+///
+/// Millisecond knobs use 0 = disabled.  The retry path (multi-edge TCP venue
+/// only) turns a mid-stream disconnect into backoff → reconnect →
+/// `Msg::Resume` instead of a failed run; the cloud-side deadlines reap
+/// stalled clients (connected but never handshaking, or gone quiet
+/// mid-session) so their accept slot and shard claim come back.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResilienceConfig {
+    /// Enable edge-side reconnect + session resumption (`retry = true`).
+    /// Requires `scheme.key_sharding` and the TCP transport: resumption
+    /// re-proves shard possession over every fresh connection.
+    pub retry: bool,
+    /// Consecutive failed attempts tolerated before an edge gives up
+    /// (progress resets the counter).
+    pub retry_max_attempts: u32,
+    /// First backoff sleep in milliseconds; doubles per consecutive failure.
+    pub retry_base_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub retry_max_ms: u64,
+    /// Jitter fraction in `[0, 1]`: each sleep is scaled by a factor drawn
+    /// uniformly from `[1-j, 1+j]` (deterministic, seeded from the run seed).
+    pub retry_jitter: f64,
+    /// Bound on each TCP connect attempt, in milliseconds (0 = a generous
+    /// built-in bound).
+    pub connect_timeout_ms: u64,
+    /// Edge-side read/write deadline on the session socket, in milliseconds
+    /// (0 = none): a cloud gone quiet past this is retried as a dead link.
+    pub io_timeout_ms: u64,
+    /// Cloud-side deadline for a connected client to complete its handshake,
+    /// in milliseconds (0 = none): never-handshaking clients are reaped and
+    /// their accept slot reused.
+    pub handshake_timeout_ms: u64,
+    /// Cloud-side idle deadline between data frames of an admitted session,
+    /// in milliseconds (0 = none): a stalled edge is reaped and its shard
+    /// claim released for resumption.
+    pub idle_timeout_ms: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            retry: false,
+            retry_max_attempts: 5,
+            retry_base_ms: 100,
+            retry_max_ms: 5_000,
+            retry_jitter: 0.2,
+            connect_timeout_ms: 5_000,
+            io_timeout_ms: 30_000,
+            handshake_timeout_ms: 10_000,
+            idle_timeout_ms: 60_000,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// `handshake_timeout_ms` as an `Option<Duration>` (0 = none).
+    pub fn handshake_deadline(&self) -> Option<std::time::Duration> {
+        (self.handshake_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.handshake_timeout_ms))
+    }
+
+    /// `idle_timeout_ms` as an `Option<Duration>` (0 = none).
+    pub fn idle_deadline(&self) -> Option<std::time::Duration> {
+        (self.idle_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.idle_timeout_ms))
+    }
+}
+
 /// Everything one training run needs, fully validated
 /// ([`ExperimentConfig::validate`]) before any actor starts.
 #[derive(Clone, Debug)]
@@ -128,6 +197,8 @@ pub struct ExperimentConfig {
     /// readiness loop.  Requires `transport.reactor = true`; `None` disables
     /// the endpoint.
     pub ops_addr: Option<String>,
+    /// Edge retry/backoff + cloud deadline knobs (`[resilience]`).
+    pub resilience: ResilienceConfig,
 
     // training
     /// Training steps to run.
@@ -182,6 +253,7 @@ impl Default for ExperimentConfig {
             reactor_outbox: 8,
             link: None,
             ops_addr: None,
+            resilience: ResilienceConfig::default(),
             steps: 200,
             lr: 1e-4, // paper §4.1
             seed: 0,
@@ -361,6 +433,47 @@ impl ExperimentConfig {
         if let Some(v) = get(&doc, "ops", "addr") {
             cfg.ops_addr = Some(v.as_str().ok_or_else(|| inv("ops.addr".into()))?.into());
         }
+        if let Some(v) = get(&doc, "resilience", "retry") {
+            cfg.resilience.retry =
+                v.as_bool().ok_or_else(|| inv("resilience.retry".into()))?;
+        }
+        if let Some(v) = get(&doc, "resilience", "retry_max_attempts") {
+            let n = v.as_i64().ok_or_else(|| inv("resilience.retry_max_attempts".into()))?;
+            if n < 1 {
+                return Err(inv(format!(
+                    "resilience.retry_max_attempts must be >= 1, got {n}"
+                )));
+            }
+            cfg.resilience.retry_max_attempts = n as u32;
+        }
+        for (key, field) in [
+            ("retry_base_ms", &mut cfg.resilience.retry_base_ms as *mut u64),
+            ("retry_max_ms", &mut cfg.resilience.retry_max_ms as *mut u64),
+            ("connect_timeout_ms", &mut cfg.resilience.connect_timeout_ms as *mut u64),
+            ("io_timeout_ms", &mut cfg.resilience.io_timeout_ms as *mut u64),
+            ("handshake_timeout_ms", &mut cfg.resilience.handshake_timeout_ms as *mut u64),
+            ("idle_timeout_ms", &mut cfg.resilience.idle_timeout_ms as *mut u64),
+        ] {
+            if let Some(v) = get(&doc, "resilience", key) {
+                let ms = v.as_i64().ok_or_else(|| inv(format!("resilience.{key}")))?;
+                if ms < 0 {
+                    return Err(inv(format!("resilience.{key} must be >= 0, got {ms}")));
+                }
+                // SAFETY: each pointer was taken from a distinct live field
+                // of `cfg` just above, `cfg` outlives the loop, and no other
+                // reference to those fields exists while we write.
+                unsafe { *field = ms as u64 };
+            }
+        }
+        if let Some(v) = get(&doc, "resilience", "retry_jitter") {
+            let j = v.as_f64().ok_or_else(|| inv("resilience.retry_jitter".into()))?;
+            if !(0.0..=1.0).contains(&j) {
+                return Err(inv(format!(
+                    "resilience.retry_jitter must be in [0, 1], got {j}"
+                )));
+            }
+            cfg.resilience.retry_jitter = j;
+        }
         if let (Some(lat), Some(bw)) = (
             get(&doc, "link", "latency_ms").and_then(|v| v.as_f64()),
             get(&doc, "link", "bandwidth_mbps").and_then(|v| v.as_f64()),
@@ -464,6 +577,34 @@ impl ExperimentConfig {
                      (use \"scalar\", or drop the knob to auto-detect)",
                     isa.name()
                 )));
+            }
+        }
+        if self.resilience.retry_base_ms == 0 {
+            return Err(ConfigError::Invalid(
+                "resilience.retry_base_ms must be >= 1".into(),
+            ));
+        }
+        if self.resilience.retry_max_ms < self.resilience.retry_base_ms {
+            return Err(ConfigError::Invalid(format!(
+                "resilience.retry_max_ms ({}) must be >= retry_base_ms ({})",
+                self.resilience.retry_max_ms, self.resilience.retry_base_ms
+            )));
+        }
+        if self.resilience.retry {
+            if !self.key_sharding {
+                return Err(ConfigError::Invalid(
+                    "resilience.retry requires scheme.key_sharding = true — \
+                     session resumption re-proves shard possession over every \
+                     fresh connection"
+                        .into(),
+                ));
+            }
+            if self.transport != TransportKind::Tcp {
+                return Err(ConfigError::Invalid(
+                    "resilience.retry requires transport.kind = \"tcp\" — an \
+                     in-proc channel cannot be redialed"
+                        .into(),
+                ));
             }
         }
         if self.rotation_steps > 0 && !self.key_sharding {
@@ -659,6 +800,74 @@ mod tests {
         .is_err());
         assert!(ExperimentConfig::from_toml_str(
             "[transport]\nreactor = true\n[ops]\naddr = 9100\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_resilience_knobs() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[scheme]\nkey_sharding = true\n[transport]\nkind = \"tcp\"\n\
+             [resilience]\nretry = true\nretry_max_attempts = 8\n\
+             retry_base_ms = 50\nretry_max_ms = 2000\nretry_jitter = 0.1\n\
+             connect_timeout_ms = 1000\nio_timeout_ms = 4000\n\
+             handshake_timeout_ms = 500\nidle_timeout_ms = 9000\n",
+        )
+        .unwrap();
+        assert!(cfg.resilience.retry);
+        assert_eq!(cfg.resilience.retry_max_attempts, 8);
+        assert_eq!(cfg.resilience.retry_base_ms, 50);
+        assert_eq!(cfg.resilience.retry_max_ms, 2000);
+        assert_eq!(cfg.resilience.retry_jitter, 0.1);
+        assert_eq!(cfg.resilience.connect_timeout_ms, 1000);
+        assert_eq!(cfg.resilience.io_timeout_ms, 4000);
+        assert_eq!(
+            cfg.resilience.handshake_deadline(),
+            Some(std::time::Duration::from_millis(500))
+        );
+        assert_eq!(
+            cfg.resilience.idle_deadline(),
+            Some(std::time::Duration::from_millis(9000))
+        );
+        // defaults: retry off, generous deadlines
+        let d = ExperimentConfig::default();
+        assert!(!d.resilience.retry);
+        assert_eq!(d.resilience.retry_max_attempts, 5);
+        // 0 disables a deadline
+        let cfg = ExperimentConfig::from_toml_str(
+            "[resilience]\nhandshake_timeout_ms = 0\nidle_timeout_ms = 0\n",
+        )
+        .unwrap();
+        assert!(cfg.resilience.handshake_deadline().is_none());
+        assert!(cfg.resilience.idle_deadline().is_none());
+    }
+
+    #[test]
+    fn rejects_incoherent_resilience_knobs() {
+        // retry without key sharding: nothing to re-prove on resume
+        assert!(ExperimentConfig::from_toml_str(
+            "[transport]\nkind = \"tcp\"\n[resilience]\nretry = true\n"
+        )
+        .is_err());
+        // retry over in-proc channels: nothing to redial
+        assert!(ExperimentConfig::from_toml_str(
+            "[scheme]\nkey_sharding = true\n[resilience]\nretry = true\n"
+        )
+        .is_err());
+        // range checks, including negative values that must not wrap
+        assert!(ExperimentConfig::from_toml_str(
+            "[resilience]\nretry_max_attempts = 0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[resilience]\nretry_base_ms = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[resilience]\nio_timeout_ms = -1\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[resilience]\nretry_jitter = 1.5\n").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("[resilience]\nretry_jitter = -0.1\n").is_err()
+        );
+        // max below base would silently clamp the whole schedule
+        assert!(ExperimentConfig::from_toml_str(
+            "[resilience]\nretry_base_ms = 500\nretry_max_ms = 100\n"
         )
         .is_err());
     }

@@ -8,8 +8,9 @@
 
 use super::multi::{
     self, CloudCodec, EdgeCodec, EdgeReport, MultiStats, OpsOptions, OpsRegistry, OpsReload,
-    ShardGate,
+    SessionDeadlines, ShardGate,
 };
+use super::resilience::{run_edge_retry, RetryPolicy};
 use super::run_codec::RunCodec;
 use super::{CloudWorker, EdgeWorker};
 use crate::config::{ExperimentConfig, TransportKind};
@@ -160,6 +161,18 @@ pub struct MultiEdgeSpec {
     /// Config file re-parsed on SIGHUP for the live-reload knob subset
     /// (`transport.outbox_frames`, `transport.poll_us`); reactor mode only.
     pub ops_reload_path: Option<String>,
+    /// Edge-side reconnect/backoff policy.  `Some` switches the TCP venue to
+    /// the churn-tolerant path: the cloud serves from an accept loop (a
+    /// reconnecting edge gets a fresh slot) and every edge runs
+    /// [`run_edge_retry`] instead of `run_edge`, resuming its session with
+    /// `Msg::Resume` after a mid-stream disconnect.  Requires
+    /// `key_sharding` (resumption re-proves shard possession) and the TCP
+    /// venue (an in-proc channel cannot be redialed).
+    pub retry: Option<RetryPolicy>,
+    /// Cloud-side handshake/idle deadlines, applied on the churn-tolerant
+    /// accept-loop serve (`retry` runs): stalled clients are reaped, their
+    /// claim released, their slot reusable.
+    pub deadlines: SessionDeadlines,
 }
 
 impl Default for MultiEdgeSpec {
@@ -185,6 +198,8 @@ impl Default for MultiEdgeSpec {
             rotation_steps: 0,
             ops_addr: None,
             ops_reload_path: None,
+            retry: None,
+            deadlines: SessionDeadlines::default(),
         }
     }
 }
@@ -209,6 +224,14 @@ enum CloudPlan {
     Reactor(Vec<Box<dyn ReactorConn>>),
     /// Accept `n` TCP edges, then serve in the chosen style.
     TcpAccept {
+        listener: std::net::TcpListener,
+        n: usize,
+        reactor: bool,
+    },
+    /// Keep accepting TCP edges until `n` sessions retire cleanly — the
+    /// churn-tolerant serve (`spec.retry`): a reconnecting edge gets a
+    /// fresh slot, a reaped or failed one frees its old slot.
+    TcpAcceptLoop {
         listener: std::net::TcpListener,
         n: usize,
         reactor: bool,
@@ -249,6 +272,11 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
         (spec.ops_addr.is_none() && spec.ops_reload_path.is_none()) || spec.reactor,
         "the ops control plane rides the reactor's readiness loop — \
          ops_addr / ops_reload_path require reactor serving"
+    );
+    ensure!(
+        spec.retry.is_none() || (spec.key_sharding && spec.transport == TransportKind::Tcp),
+        "retry/resume needs key_sharding and the tcp venue — session \
+         resumption re-proves shard possession over a fresh connection"
     );
     // bind the ops listener before anything spawns, so an unusable address
     // fails the run loudly up front instead of inside the cloud thread
@@ -315,10 +343,12 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
             // Bind before spawning edges so connects never race the listener.
             let listener = Tcp::bind(&spec.tcp_addr)
                 .with_context(|| format!("binding {}", spec.tcp_addr))?;
-            (
-                CloudPlan::TcpAccept { listener, n: spec.edges, reactor: spec.reactor },
-                EdgePlan::Connect,
-            )
+            let plan = if spec.retry.is_some() {
+                CloudPlan::TcpAcceptLoop { listener, n: spec.edges, reactor: spec.reactor }
+            } else {
+                CloudPlan::TcpAccept { listener, n: spec.edges, reactor: spec.reactor }
+            };
+            (plan, EdgePlan::Connect)
         }
     };
 
@@ -327,6 +357,7 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
     let workers = spec.workers;
     let fft_backend = spec.fft_backend;
     let poll = spec.poll;
+    let deadlines = spec.deadlines;
     let n_edges = spec.edges;
     let reload_path = spec.ops_reload_path.clone();
     let cloud_registry = ops_registry.clone();
@@ -394,6 +425,15 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
                         multi::serve_clients_with_ops(codec, tps, &ops.registry)
                     }
                 }
+                CloudPlan::TcpAcceptLoop { listener, n, reactor } => {
+                    if reactor {
+                        multi::serve_clients_reactor_accept(
+                            codec, listener, n, workers, poll, ops, deadlines,
+                        )
+                    } else {
+                        multi::serve_clients_accept(codec, listener, n, &ops.registry, deadlines)
+                    }
+                }
             }
         })
         .context("spawning multi-cloud thread")?;
@@ -433,18 +473,49 @@ pub fn run_multi_edge(spec: &MultiEdgeSpec) -> Result<MultiRunOutput> {
             EdgePlan::Connect => {
                 for (i, keys) in edge_keys.into_iter().enumerate() {
                     let addr = spec.tcp_addr.clone();
-                    handles.push(sc.spawn(move || -> Result<EdgeReport> {
-                        let mut tp =
-                            Tcp::connect(&addr).with_context(|| format!("connecting {addr}"))?;
-                        multi::run_edge(
-                            keys,
-                            &mut tp,
-                            spec.steps,
-                            spec.seed.wrapping_add(i as u64),
-                            spec.batch,
-                            spec.d,
-                        )
-                    }));
+                    if let Some(policy) = spec.retry {
+                        // retry requires key_sharding (enforced above), so
+                        // every selected codec is a shard handle
+                        let EdgeCodec::Sharded { shard, workers, fft } = keys else {
+                            unreachable!("retry runs are always sharded")
+                        };
+                        let registry = ops_registry.clone();
+                        handles.push(sc.spawn(move || -> Result<EdgeReport> {
+                            // de-phase the fleet's backoff sleeps while
+                            // keeping each edge's jitter stream replayable
+                            let mut p = policy;
+                            p.seed = policy.seed.wrapping_add(i as u64);
+                            run_edge_retry(
+                                shard,
+                                workers,
+                                fft,
+                                |_| {
+                                    let tp = Tcp::connect_within(&addr, p.connect_timeout())
+                                        .with_context(|| format!("connecting {addr}"))?;
+                                    Ok(Box::new(tp) as Box<dyn Transport>)
+                                },
+                                spec.steps,
+                                spec.seed.wrapping_add(i as u64),
+                                spec.batch,
+                                spec.d,
+                                &p,
+                                Some(&registry),
+                            )
+                        }));
+                    } else {
+                        handles.push(sc.spawn(move || -> Result<EdgeReport> {
+                            let mut tp = Tcp::connect(&addr)
+                                .with_context(|| format!("connecting {addr}"))?;
+                            multi::run_edge(
+                                keys,
+                                &mut tp,
+                                spec.steps,
+                                spec.seed.wrapping_add(i as u64),
+                                spec.batch,
+                                spec.d,
+                            )
+                        }));
+                    }
                 }
             }
         }

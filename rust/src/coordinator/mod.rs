@@ -24,10 +24,14 @@ pub mod cloud;
 pub mod driver;
 pub mod edge;
 pub mod multi;
+pub mod resilience;
 pub mod run_codec;
 
 pub use cloud::CloudWorker;
 pub use driver::{run_experiment, run_multi_edge, MultiEdgeSpec, MultiRunOutput, RunOutput};
 pub use edge::EdgeWorker;
-pub use multi::{ClientReport, CloudCodec, EdgeCodec, EdgeReport, MultiStats, ShardGate};
+pub use multi::{
+    ClientReport, CloudCodec, EdgeCodec, EdgeReport, MultiStats, SessionDeadlines, ShardGate,
+};
+pub use resilience::{run_edge_retry, RetryPolicy};
 pub use run_codec::RunCodec;

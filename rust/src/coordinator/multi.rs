@@ -72,6 +72,7 @@ use crate::transport::reactor::{
 use crate::transport::readiness::{
     hangup_count, install_hangup_handler, thread_cpu_time, ReadinessBackend, WakeHandle,
 };
+use crate::transport::seq::Seq;
 use crate::transport::{Msg, Transport};
 use crate::util::error::{C3Error, Context, Result};
 use crate::util::rng::Rng;
@@ -368,6 +369,96 @@ impl ShardGate {
         Ok(self.ring.edge_shard(client_id))
     }
 
+    /// Validate one `Msg::Resume` claim from accept-slot `client` and hand
+    /// back the shard handle plus the step the session restarts at.  A
+    /// resume is a re-claim with *exact accounting*: the edge announces the
+    /// last step it holds an acknowledgement for (`last_acked_step`), and
+    /// the gate checks it against this shard's [`ShardGate::observe_step`]
+    /// watermark `w`.  Only two positions are coherent:
+    ///
+    /// * `last_acked_step == w` — the edge saw every reply; the session
+    ///   resumes at `w + 1`;
+    /// * `last_acked_step == w - 1` — the connection died between the
+    ///   edge's uplink of step `w` and the cloud's reply; the edge re-runs
+    ///   step `w`, which the cloud re-executes idempotently (the probe step
+    ///   is a pure function of the uplink, and the watermark is monotonic).
+    ///
+    /// Anything staler is a loud `stale resume watermark` rejection (the
+    /// edge lost state it claims to hold), anything ahead is a loud
+    /// `resume ahead of watermark` rejection (the edge claims replies this
+    /// cloud never sent).  Like [`ShardGate::admit`], the proof must answer
+    /// this connection's own challenge, the nonce burns before the
+    /// revocation check, and the claim must be free.
+    pub fn resume(
+        &self,
+        client: usize,
+        client_id: u64,
+        epoch: u64,
+        last_acked_step: u64,
+        proof: u64,
+    ) -> Result<(EdgeShard, u64)> {
+        let mut st = self
+            .state
+            .lock()
+            .map_err(|_| C3Error::msg("shard gate lock poisoned"))?;
+        let n = st.claimed.len();
+        ensure!(
+            client_id < n as u64,
+            "client {client}: shard id {client_id} out of range (serving {n} shards)"
+        );
+        let w = st.last_step[client_id as usize].with_context(|| {
+            format!(
+                "client {client}: nothing to resume for shard {client_id} \
+                 (no step observed this session — claim fresh with KeyShard)"
+            )
+        })?;
+        ensure!(
+            last_acked_step.saturating_add(1) >= w,
+            "client {client}: stale resume watermark for shard {client_id} \
+             (last acked {last_acked_step}, but this cloud observed step {w})"
+        );
+        ensure!(
+            last_acked_step <= w,
+            "client {client}: resume ahead of watermark for shard {client_id} \
+             (last acked {last_acked_step}, but this cloud observed only step {w})"
+        );
+        let resume_step = last_acked_step.saturating_add(1);
+        let want_epoch = self.ring.epoch_of_step(resume_step);
+        ensure!(
+            epoch == want_epoch,
+            "client {client}: stale key epoch {epoch} for shard {client_id} \
+             (resuming at step {resume_step} requires epoch {want_epoch})"
+        );
+        let nonce = st.nonces.get(client).copied().flatten().with_context(|| {
+            format!(
+                "client {client}: Resume before ShardHello — no challenge \
+                 issued for this connection"
+            )
+        })?;
+        let want_proof = self.ring.shard_proof(client_id, epoch, nonce);
+        ensure!(
+            proof == want_proof,
+            "client {client}: shard proof mismatch for shard {client_id} \
+             (announced {proof:#x} — wrong master seed, or a replayed/stale \
+             proof that does not answer this connection's challenge?)"
+        );
+        // burn the answered challenge before any further outcome, exactly
+        // like admit: a recorded resume proof must verify at most once
+        st.nonces[client] = None;
+        ensure!(
+            !st.revoked.is_revoked(client_id, epoch),
+            "client {client}: shard {client_id} epoch {epoch} is revoked \
+             (valid proof refused by policy)"
+        );
+        let slot = &mut st.claimed[client_id as usize];
+        ensure!(
+            slot.is_none(),
+            "client {client}: shard id {client_id} already claimed"
+        );
+        *slot = Some(client);
+        Ok((self.ring.edge_shard(client_id), resume_step))
+    }
+
     /// Release a shard claim: accept-slot `client`'s connection is gone.
     /// Both serve paths call this when a client's connection closes —
     /// cleanly or not — so a restarted edge can re-handshake the same
@@ -597,8 +688,45 @@ pub fn serve_one_ops(
     client: usize,
     registry: Option<&OpsRegistry>,
 ) -> Result<ClientReport> {
+    serve_one_deadlines(codec, transport, client, registry, SessionDeadlines::default())
+}
+
+/// Cloud-side per-session deadlines.  `None` disables a deadline; the
+/// defaults disable both, so embedders opt in explicitly (the driver wires
+/// the `[resilience]` config keys here).  The *handshake* deadline bounds a
+/// connection that never completes key agreement (a connect-and-stall edge
+/// must not occupy an accept slot forever); the *idle* deadline bounds a
+/// handshaken session that stops sending (a vanished edge is reaped and its
+/// shard claim released for the reconnect).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionDeadlines {
+    /// Max wait for key agreement to complete after accept.
+    pub handshake: Option<std::time::Duration>,
+    /// Max gap between messages once the session is handshaken.
+    pub idle: Option<std::time::Duration>,
+}
+
+/// Whether an error chain bottoms out in a transport deadline
+/// ([`crate::transport::TransportError::TimedOut`] renders exactly this).
+fn is_deadline_error(e: &C3Error) -> bool {
+    e.to_string().contains("link deadline elapsed")
+}
+
+/// [`serve_one_ops`] with cloud-side deadlines applied to the blocking
+/// transport: a connection that stalls before key agreement is reaped after
+/// `deadlines.handshake`, a handshaken session that goes quiet after
+/// `deadlines.idle` — both loudly, with the shard claim released so a
+/// reconnecting edge can resume.
+pub fn serve_one_deadlines(
+    codec: CloudCodec<'_>,
+    transport: &mut dyn Transport,
+    client: usize,
+    registry: Option<&OpsRegistry>,
+    deadlines: SessionDeadlines,
+) -> Result<ClientReport> {
     let mut shard: Option<ClientCodec> = None;
-    let served = serve_one_session(codec, transport, client, &mut shard, registry);
+    let served =
+        serve_one_session(codec, transport, client, &mut shard, registry, deadlines);
     // Shard re-claim: this connection is over on every path through the
     // session loop.  The gate frees the claim only if THIS slot owns it
     // (and a rejected claim leaves `shard` empty anyway).
@@ -634,11 +762,18 @@ fn serve_one_session(
     client: usize,
     shard: &mut Option<ClientCodec>,
     registry: Option<&OpsRegistry>,
+    deadlines: SessionDeadlines,
 ) -> Result<(u64, f32)> {
     let mut challenged = false;
     let mut pending: Option<(u64, Tensor)> = None;
     let mut steps = 0u64;
     let mut last_loss = 0.0f32;
+    // per-connection sequencing state: the edge's first Sequenced envelope
+    // locks the session, after which gaps / duplicates / bare frames are
+    // connection-fatal — and the cloud mirrors by stamping its own replies
+    let mut seq = Seq::new();
+    // key agreement done: flips the per-recv deadline from handshake to idle
+    let mut handshaken = false;
     loop {
         // drain: stop admitting at the message boundary (a blocking recv
         // in progress still completes — the blocking path cannot interrupt
@@ -648,7 +783,29 @@ fn serve_one_session(
                 break;
             }
         }
-        match transport.recv()? {
+        let want = if handshaken { deadlines.idle } else { deadlines.handshake };
+        if deadlines.handshake.is_some() || deadlines.idle.is_some() {
+            // best-effort: transports without OS deadlines (in-proc) report
+            // false and serve without reaping — the reactor path covers them
+            let _ = transport.set_deadline(want, want);
+        }
+        let raw = match transport.recv() {
+            Ok(m) => m,
+            Err(e) if want.is_some() && is_deadline_error(&e) => {
+                if let Some(reg) = registry {
+                    reg.note_client_reaped();
+                }
+                bail!(
+                    "client {client}: {} deadline elapsed; reaping the connection",
+                    if handshaken { "idle" } else { "handshake" }
+                );
+            }
+            Err(e) => return Err(e),
+        };
+        let msg = seq
+            .accept(raw)
+            .map_err(|e| C3Error::msg(format!("client {client}: {e}")))?;
+        match msg {
             Msg::KeySeed { .. } => {
                 // keys already derived from the shared seed at construction
                 ensure!(
@@ -656,6 +813,7 @@ fn serve_one_session(
                     "client {client}: KeySeed handshake while key sharding is \
                      enabled (expected ShardHello)"
                 );
+                handshaken = true;
             }
             Msg::ShardHello => {
                 let CloudCodec::Sharded(gate) = codec else {
@@ -689,6 +847,30 @@ fn serve_one_session(
                 cc.set_workers(gate.workers);
                 cc.set_fft_backend(gate.fft_backend());
                 *shard = Some(cc);
+                handshaken = true;
+            }
+            Msg::Resume { client_id, epoch, last_acked_step, proof } => {
+                let CloudCodec::Sharded(gate) = codec else {
+                    bail!(
+                        "client {client}: Resume handshake but key sharding \
+                         is not enabled on this cloud"
+                    );
+                };
+                ensure!(
+                    shard.is_none(),
+                    "client {client}: Resume after key agreement"
+                );
+                let (sh, resume_step) =
+                    gate.resume(client, client_id, epoch, last_acked_step, proof)?;
+                let mut cc = sh.client_codec_lazy();
+                cc.set_workers(gate.workers);
+                cc.set_fft_backend(gate.fft_backend());
+                *shard = Some(cc);
+                handshaken = true;
+                if let Some(reg) = registry {
+                    reg.note_resume();
+                }
+                transport.send(&Msg::ResumeOk { resume_step })?;
             }
             Msg::Features { step, tensor } => {
                 ensure!(
@@ -740,8 +922,12 @@ fn serve_one_session(
                 if let Some(reg) = registry {
                     reg.note_step(loss);
                 }
-                transport.send(&Msg::Gradients { step, tensor: gs })?;
-                transport.send(&Msg::StepStats { step, loss, ncorrect: 0.0 })?;
+                send_session_frame(transport, &mut seq, Msg::Gradients { step, tensor: gs })?;
+                send_session_frame(
+                    transport,
+                    &mut seq,
+                    Msg::StepStats { step, loss, ncorrect: 0.0 },
+                )?;
             }
             Msg::EvalFeatures { step, tensor, labels } => {
                 ensure!(
@@ -756,17 +942,115 @@ fn serve_one_session(
                     }
                     (CloudCodec::Sharded(_), None) => unreachable!("checked above"),
                 };
-                transport.send(&Msg::EvalStats {
-                    step,
-                    loss,
-                    ncorrect: labels.len() as f32,
-                })?;
+                send_session_frame(
+                    transport,
+                    &mut seq,
+                    Msg::EvalStats { step, loss, ncorrect: labels.len() as f32 },
+                )?;
             }
             Msg::Shutdown => break,
             other => bail!("client {client}: unexpected message {other:?}"),
         }
     }
     Ok((steps, last_loss))
+}
+
+/// Send one cloud data frame, sequenced iff the edge locked the session
+/// into sequencing (the cloud mirrors the edge's opt-in; handshake replies
+/// stay bare everywhere).
+fn send_session_frame(
+    transport: &mut dyn Transport,
+    seq: &mut Seq,
+    msg: Msg,
+) -> Result<()> {
+    if seq.locked() {
+        transport.send(&seq.stamp(msg))
+    } else {
+        transport.send(&msg)
+    }
+}
+
+/// Thread-per-client serving over a live accept loop: unlike
+/// [`serve_clients`] (which takes a fixed transport set), the cloud keeps
+/// accepting for the whole session, so an edge that disconnects mid-stream
+/// can reconnect, prove its shard again through `Msg::Resume`, and finish —
+/// faults become recoveries.  Each accepted connection gets its own serving
+/// thread and a monotonically increasing accept slot (the gate grows its
+/// challenge table on demand).
+///
+/// A session that ends in a transport or protocol error — the *expected*
+/// shape of a mid-stream disconnect under churn — releases its shard claim,
+/// feeds [`OpsRegistry::note_client_failed`], and is otherwise tolerated:
+/// the serve returns once `expected_clean` sessions ended with a clean
+/// `Msg::Shutdown`, reporting exactly those.  Pass `deadlines` with an idle
+/// bound so a half-open connection cannot park its serving thread forever.
+pub fn serve_clients_accept(
+    codec: CloudCodec<'_>,
+    listener: std::net::TcpListener,
+    expected_clean: usize,
+    registry: &OpsRegistry,
+    deadlines: SessionDeadlines,
+) -> Result<MultiStats> {
+    use std::sync::atomic::Ordering as AOrd;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| C3Error::msg(format!("accept listener: {e}")))?;
+    let clean = AtomicU64::new(0);
+    let reports: Mutex<Vec<ClientReport>> = Mutex::new(Vec::new());
+    std::thread::scope(|sc| -> Result<()> {
+        let mut slot = 0usize;
+        while (clean.load(AOrd::Acquire) as usize) < expected_clean {
+            if registry.drain_state() != DrainState::Serving {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let ci = slot;
+                    slot += 1;
+                    let clean = &clean;
+                    let reports = &reports;
+                    sc.spawn(move || {
+                        // an unwrappable stream is dropped; the edge retries
+                        let Ok(mut tp) = crate::transport::tcp::Tcp::from_stream(stream)
+                        else {
+                            return;
+                        };
+                        match serve_one_deadlines(
+                            codec,
+                            &mut tp,
+                            ci,
+                            Some(registry),
+                            deadlines,
+                        ) {
+                            Ok(rep) => {
+                                if let Ok(mut r) = reports.lock() {
+                                    r.push(rep);
+                                }
+                                clean.fetch_add(1, AOrd::AcqRel);
+                            }
+                            // churn casualty: claim already released, failure
+                            // already counted — the reconnect finishes the job
+                            Err(_) => {}
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(C3Error::msg(format!("accept: {e}"))),
+            }
+        }
+        Ok(())
+    })?;
+    let mut reports = reports
+        .into_inner()
+        .map_err(|_| C3Error::msg("accept-serve report lock poisoned"))?;
+    reports.sort_by_key(|r| r.client);
+    if registry.drain_state() == DrainState::Draining {
+        registry.mark_drained();
+    }
+    Ok(MultiStats { per_client: reports, reactor_io: None })
 }
 
 /// Serve N edges concurrently, one OS thread per client.
@@ -887,6 +1171,15 @@ struct ClientSm {
     /// Connection observed closed by the peer.
     peer_gone: bool,
     closed: bool,
+    /// Per-connection frame sequencing (unwraps inbound envelopes, stamps
+    /// outbound data frames once the edge locks the session).
+    seq: Seq,
+    /// Key agreement completed (flips the reaping deadline from handshake
+    /// to idle).
+    handshaken: bool,
+    /// Last inbound message (or accept) time; `None` until the serve loop
+    /// arms deadlines for this client.
+    last_activity: Option<std::time::Instant>,
     /// Why this client was failed, if it was.  One broken client never
     /// takes the pool down (matching thread-per-client, where a failing
     /// `serve_one` only errors its own thread); the aggregate error
@@ -1091,6 +1384,7 @@ fn handle_client_msg(
     reactor: &mut Reactor,
     client: usize,
     msg: Msg,
+    registry: &OpsRegistry,
 ) -> Result<()> {
     ensure!(!c.finishing, "client {client}: message after Shutdown");
     match msg {
@@ -1101,6 +1395,7 @@ fn handle_client_msg(
                 "client {client}: KeySeed handshake while key sharding is \
                  enabled (expected ShardHello)"
             );
+            c.handshaken = true;
         }
         Msg::ShardHello => {
             let CloudCodec::Sharded(gate) = codec else {
@@ -1139,6 +1434,31 @@ fn handle_client_msg(
             cc.set_fft_backend(gate.fft_backend());
             c.shard = Some(Arc::new(Mutex::new(cc)));
             c.shard_id = Some(client_id);
+            c.handshaken = true;
+        }
+        Msg::Resume { client_id, epoch, last_acked_step, proof } => {
+            let CloudCodec::Sharded(gate) = codec else {
+                bail!(
+                    "client {client}: Resume handshake but key sharding is \
+                     not enabled on this cloud"
+                );
+            };
+            ensure!(
+                c.shard.is_none(),
+                "client {client}: Resume after key agreement"
+            );
+            let (sh, resume_step) =
+                gate.resume(client, client_id, epoch, last_acked_step, proof)?;
+            let mut cc = sh.client_codec_lazy();
+            cc.set_fft_backend(gate.fft_backend());
+            c.shard = Some(Arc::new(Mutex::new(cc)));
+            c.shard_id = Some(client_id);
+            c.handshaken = true;
+            registry.note_resume();
+            reactor.queue_frame(
+                client,
+                crate::transport::wire::encode(&Msg::ResumeOk { resume_step }),
+            );
         }
         Msg::Features { step, tensor } => {
             ensure!(
@@ -1221,6 +1541,13 @@ fn apply_done(
                 registry.note_step(ok.loss);
             }
             for frame in ok.frames {
+                // mirror the edge's sequencing opt-in: stamp the
+                // pre-encoded worker frame without re-serializing it
+                let frame = if c.seq.locked() {
+                    crate::transport::wire::seq_frame(c.seq.take_tx(), &frame)
+                } else {
+                    frame
+                };
                 reactor.queue_frame(client, frame);
             }
         }
@@ -1260,8 +1587,12 @@ pub struct OpsRegistry {
     clients_finished: AtomicU64,
     clients_failed: AtomicU64,
     reloads_total: AtomicU64,
+    reconnects_total: AtomicU64,
+    resumes_total: AtomicU64,
+    clients_reaped_total: AtomicU64,
     drain: AtomicU8,
     step_loss: Mutex<Histogram>,
+    retry_backoff_ms: Mutex<Histogram>,
 }
 
 impl Default for OpsRegistry {
@@ -1278,12 +1609,66 @@ impl OpsRegistry {
             clients_finished: AtomicU64::new(0),
             clients_failed: AtomicU64::new(0),
             reloads_total: AtomicU64::new(0),
+            reconnects_total: AtomicU64::new(0),
+            resumes_total: AtomicU64::new(0),
+            clients_reaped_total: AtomicU64::new(0),
             drain: AtomicU8::new(0),
             // probe losses span orders of magnitude across geometries, so
             // the buckets are log-spaced rather than latency-shaped
             step_loss: Mutex::new(Histogram::new(vec![
                 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0, 100.0,
             ])),
+            // exponential backoff doubles per attempt, so the buckets do too
+            retry_backoff_ms: Mutex::new(Histogram::new(vec![
+                10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0,
+            ])),
+        }
+    }
+
+    /// Record one edge reconnect attempt (retry runner, after the first
+    /// connection).
+    pub fn note_reconnect(&self) {
+        self.reconnects_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one accepted `Msg::Resume` (session picked back up with exact
+    /// accounting).
+    pub fn note_resume(&self) {
+        self.resumes_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one client reaped by a cloud-side handshake/idle deadline.
+    pub fn note_client_reaped(&self) {
+        self.clients_reaped_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one retry backoff sleep, in milliseconds.
+    pub fn observe_backoff_ms(&self, ms: f64) {
+        if let Ok(mut h) = self.retry_backoff_ms.lock() {
+            h.observe(ms);
+        }
+    }
+
+    /// Edge reconnect attempts recorded so far.
+    pub fn reconnects_total(&self) -> u64 {
+        self.reconnects_total.load(Ordering::Relaxed)
+    }
+
+    /// Accepted session resumes so far.
+    pub fn resumes_total(&self) -> u64 {
+        self.resumes_total.load(Ordering::Relaxed)
+    }
+
+    /// Clients reaped by cloud-side deadlines so far.
+    pub fn clients_reaped_total(&self) -> u64 {
+        self.clients_reaped_total.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the retry-backoff histogram (milliseconds).
+    pub fn retry_backoff_snapshot(&self) -> Histogram {
+        match self.retry_backoff_ms.lock() {
+            Ok(h) => h.clone(),
+            Err(e) => e.into_inner().clone(),
         }
     }
 
@@ -1427,6 +1812,21 @@ fn render_metrics(codec: CloudCodec<'_>, reactor: &Reactor, registry: &OpsRegist
         registry.clients_failed(),
     );
     w.counter("c3sl_reloads_total", "SIGHUP knob reloads applied.", registry.reloads_total());
+    w.counter(
+        "c3sl_reconnects_total",
+        "Edge reconnect attempts after a dropped connection.",
+        registry.reconnects_total(),
+    );
+    w.counter(
+        "c3sl_resumes_total",
+        "Sessions resumed with exact accounting via Msg::Resume.",
+        registry.resumes_total(),
+    );
+    w.counter(
+        "c3sl_clients_reaped_total",
+        "Clients reaped by cloud-side handshake/idle deadlines.",
+        registry.clients_reaped_total(),
+    );
     w.gauge(
         "c3sl_clients_open",
         "Client connections currently open.",
@@ -1457,6 +1857,11 @@ fn render_metrics(codec: CloudCodec<'_>, reactor: &Reactor, registry: &OpsRegist
     w.counter("c3sl_tx_bytes_total", "Bytes sent to clients (cloud downlink).", tx);
     w.counter("c3sl_rx_bytes_total", "Bytes received from clients (cloud uplink).", rx);
     w.histogram("c3sl_step_loss", "Per-step probe loss.", &registry.step_loss_snapshot());
+    w.histogram(
+        "c3sl_retry_backoff_ms",
+        "Edge retry backoff sleeps, in milliseconds.",
+        &registry.retry_backoff_snapshot(),
+    );
     if let CloudCodec::Sharded(gate) = codec {
         w.family(
             "c3sl_shard_claimed",
@@ -1646,7 +2051,16 @@ pub fn serve_clients_reactor_ops(
         drop(done_tx);
         // job_tx moves into the loop and drops on return, which is what
         // releases the workers (and lets this scope join them)
-        reactor_serve_loop(codec, &mut reactor, job_tx, &done_rx, &registry, reload.as_deref())
+        reactor_serve_loop(
+            codec,
+            &mut reactor,
+            job_tx,
+            &done_rx,
+            &registry,
+            reload.as_deref(),
+            ServeMode::Fixed,
+            SessionDeadlines::default(),
+        )
     });
     let mut stats = served?;
     stats.reactor_io = Some(ReactorIoStats {
@@ -1660,6 +2074,90 @@ pub fn serve_clients_reactor_ops(
     Ok(stats)
 }
 
+/// Reactor serving over a live TCP accept loop — the one-I/O-thread twin of
+/// [`serve_clients_accept`].  The data listener registers with the
+/// reactor's own readiness backend (one more pollable fd, like the ops
+/// listener), every accepted connection becomes a fresh dynamic slot, and
+/// the serve returns once `expected_clean` sessions retired with a clean
+/// `Msg::Shutdown`.  Mid-stream disconnects release their shard claims and
+/// feed the failure counters without aborting the serve, so an edge driving
+/// [`crate::coordinator::resilience::run_edge_retry`] reconnects, proves
+/// its shard through `Msg::Resume`, and finishes with exact accounting.
+/// `deadlines` reaps connections that stall before key agreement or go
+/// quiet mid-session (checked on the reactor's bounded idle tick).
+pub fn serve_clients_reactor_accept(
+    codec: CloudCodec<'_>,
+    listener: std::net::TcpListener,
+    expected_clean: usize,
+    workers: usize,
+    cfg: ReactorConfig,
+    ops: OpsOptions,
+    deadlines: SessionDeadlines,
+) -> Result<MultiStats> {
+    let OpsOptions { listener: ops_listener, registry, reload } = ops;
+    let cpu0 = thread_cpu_time();
+    let mut reactor = Reactor::new(Vec::new(), cfg);
+    reactor
+        .serve_accept(listener)
+        .map_err(|e| C3Error::msg(format!("registering data accept listener: {e}")))?;
+    if let Some(ops_listener) = ops_listener {
+        reactor
+            .serve_ops(ops_listener)
+            .map_err(|e| C3Error::msg(format!("registering ops listener: {e}")))?;
+    }
+    if reload.is_some() {
+        install_hangup_handler();
+    }
+    let waker = reactor.waker();
+    let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<Done>();
+    let job_rx = Mutex::new(job_rx);
+    let served = std::thread::scope(|sc| {
+        for _ in 0..workers.max(1) {
+            let done_tx = done_tx.clone();
+            let waker = waker.clone();
+            let job_rx = &job_rx;
+            sc.spawn(move || codec_worker(codec, job_rx, done_tx, waker));
+        }
+        drop(done_tx);
+        reactor_serve_loop(
+            codec,
+            &mut reactor,
+            job_tx,
+            &done_rx,
+            &registry,
+            reload.as_deref(),
+            ServeMode::Accept { expected_clean },
+            deadlines,
+        )
+    });
+    let mut stats = served?;
+    stats.reactor_io = Some(ReactorIoStats {
+        backend: reactor.backend(),
+        wakeups: reactor.wakeups(),
+        io_cpu_seconds: match (cpu0, thread_cpu_time()) {
+            (Some(a), Some(b)) => Some((b - a).max(0.0)),
+            _ => None,
+        },
+    });
+    Ok(stats)
+}
+
+/// Termination policy for [`reactor_serve_loop`].
+#[derive(Clone, Copy)]
+enum ServeMode {
+    /// Serve a fixed connection set until every client retires.
+    Fixed,
+    /// Live accept loop: serve until this many sessions ended with a clean
+    /// `Msg::Shutdown` (churn casualties release their claims, feed the
+    /// failure counters, and are otherwise tolerated — the reconnect
+    /// finishes the job).
+    Accept {
+        /// Clean retirements to serve before returning.
+        expected_clean: usize,
+    },
+}
+
 fn reactor_serve_loop(
     codec: CloudCodec<'_>,
     reactor: &mut Reactor,
@@ -1667,13 +2165,25 @@ fn reactor_serve_loop(
     done_rx: &std::sync::mpsc::Receiver<Done>,
     registry: &OpsRegistry,
     reload: Option<&(dyn Fn() -> OpsReload + Send)>,
+    mode: ServeMode,
+    deadlines: SessionDeadlines,
 ) -> Result<MultiStats> {
     use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
     let n = reactor.client_count();
     let mut st: Vec<ClientSm> = (0..n).map(|_| ClientSm::default()).collect();
     let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
+    let reap_enabled = deadlines.handshake.is_some() || deadlines.idle.is_some();
+    if reap_enabled {
+        // fixed connections are "accepted" at serve start; accept-mode
+        // clients get their timestamp from Event::Accepted
+        let now = std::time::Instant::now();
+        for c in st.iter_mut() {
+            c.last_activity = Some(now);
+        }
+    }
     let mut events: Vec<Event> = Vec::new();
     let mut open = n;
+    let mut clean = 0usize;
     let mut inflight_total = 0usize;
     // event-driven: once a full pass finds no work, the NEXT pass blocks in
     // epoll_wait — sockets, doorbells and the worker waker cut it short
@@ -1681,7 +2191,24 @@ fn reactor_serve_loop(
     // SIGHUPs observed before the serve started are not reload requests
     let mut seen_hups = hangup_count();
 
-    while open > 0 {
+    loop {
+        match mode {
+            ServeMode::Fixed => {
+                if open == 0 {
+                    break;
+                }
+            }
+            ServeMode::Accept { expected_clean } => {
+                if clean >= expected_clean {
+                    break;
+                }
+                // a requested drain with nobody left to retire is terminal
+                // even though the clean target was never reached
+                if registry.drain_state() != DrainState::Serving && open == 0 {
+                    break;
+                }
+            }
+        }
         // Reactor::new normalized the bounds; re-read them every pass so a
         // SIGHUP retune below reaches step 3's hold and step 5's backoff
         let cfg = reactor.config();
@@ -1696,13 +2223,49 @@ fn reactor_serve_loop(
         let mut worked = reactor.poll_wait(&mut events, timeout_ms);
         for ev in events.drain(..) {
             match ev {
+                Event::Accepted { client } => {
+                    // a reconnecting (or brand-new) edge: grow the state
+                    // tables to cover its fresh slot
+                    while st.len() <= client {
+                        st.push(ClientSm::default());
+                        reports.push(None);
+                    }
+                    st[client].last_activity = Some(std::time::Instant::now());
+                    open += 1;
+                }
                 Event::Msg { client, msg } => {
                     if st[client].closed {
                         continue;
                     }
-                    if let Err(e) =
-                        handle_client_msg(codec, &mut st[client], reactor, client, msg)
-                    {
+                    if reap_enabled {
+                        st[client].last_activity = Some(std::time::Instant::now());
+                    }
+                    // sequencing layer: unwrap (and validate) before the
+                    // protocol sees the message — gaps, duplicates, swaps
+                    // and lapsed stamping all fail this client loudly here
+                    let msg = match st[client].seq.accept(msg) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            fail_client(
+                                codec,
+                                &mut st,
+                                reactor,
+                                &mut open,
+                                client,
+                                e.to_string(),
+                                registry,
+                            );
+                            continue;
+                        }
+                    };
+                    if let Err(e) = handle_client_msg(
+                        codec,
+                        &mut st[client],
+                        reactor,
+                        client,
+                        msg,
+                        registry,
+                    ) {
                         fail_client(
                             codec,
                             &mut st,
@@ -1792,7 +2355,7 @@ fn reactor_serve_loop(
             }
         }
         if registry.drain_state() == DrainState::Draining {
-            for ci in 0..n {
+            for ci in 0..st.len() {
                 let c = &mut st[ci];
                 if !c.closed && !c.finishing {
                     c.finishing = true;
@@ -1803,9 +2366,55 @@ fn reactor_serve_loop(
             }
         }
 
+        // 2c) cloud-side deadlines: reap a client that stalls before key
+        //     agreement (handshake deadline) or goes quiet mid-session
+        //     (idle deadline) — its shard claim releases with the failure,
+        //     so a reconnecting edge can resume the session.  The pump's
+        //     idle block is bounded (EPOLL_IDLE_TIMEOUT_MS), so this check
+        //     runs at least every ~100 ms even on a silent fleet.
+        if reap_enabled {
+            let now = std::time::Instant::now();
+            for ci in 0..st.len() {
+                let (reap, handshaken) = {
+                    let c = &st[ci];
+                    if c.closed || c.finishing {
+                        (false, false)
+                    } else {
+                        let limit = if c.handshaken {
+                            deadlines.idle
+                        } else {
+                            deadlines.handshake
+                        };
+                        match (c.last_activity, limit) {
+                            (Some(t0), Some(lim)) => {
+                                (now.duration_since(t0) > lim, c.handshaken)
+                            }
+                            _ => (false, false),
+                        }
+                    }
+                };
+                if reap {
+                    registry.note_client_reaped();
+                    fail_client(
+                        codec,
+                        &mut st,
+                        reactor,
+                        &mut open,
+                        ci,
+                        format!(
+                            "{} deadline elapsed; reaping the connection",
+                            if handshaken { "idle" } else { "handshake" }
+                        ),
+                        registry,
+                    );
+                    worked = true;
+                }
+            }
+        }
+
         // 3) dispatch ready jobs (one in flight per client keeps replies in
         //    step order) and refresh job-queue backpressure holds
-        for ci in 0..n {
+        for ci in 0..st.len() {
             let c = &mut st[ci];
             if c.closed {
                 continue;
@@ -1828,7 +2437,7 @@ fn reactor_serve_loop(
 
         // 4) retire clients whose protocol, compute and outbox all drained,
         //    releasing any shard claim for a future reconnect
-        for ci in 0..n {
+        for ci in 0..st.len() {
             let c = &mut st[ci];
             if !c.closed
                 && c.finishing
@@ -1853,6 +2462,7 @@ fn reactor_serve_loop(
                 reactor.close(ci);
                 c.closed = true;
                 open -= 1;
+                clean += 1;
                 registry.note_client_finished();
                 worked = true;
             }
@@ -1865,7 +2475,9 @@ fn reactor_serve_loop(
         //    finished compute and at worst poll_us later for socket data.
         if worked {
             idle = false;
-        } else if open > 0 {
+        } else {
+            // accept mode idles with zero open clients too, parked on the
+            // (registered) data listener instead of spinning
             if event_driven {
                 idle = true;
             } else {
@@ -1903,24 +2515,33 @@ fn reactor_serve_loop(
 
     // every healthy client has fully retired; only now surface failures,
     // matching serve_clients (whose per-client threads all finish before
-    // the aggregate join reports the first error)
-    let failures: Vec<String> = st
-        .iter()
-        .enumerate()
-        .filter_map(|(ci, c)| c.failed.as_ref().map(|why| format!("client {ci}: {why}")))
-        .collect();
-    ensure!(
-        failures.is_empty(),
-        "reactor serve: {} client(s) failed: {}",
-        failures.len(),
-        failures.join("; ")
-    );
+    // the aggregate join reports the first error).  Accept mode tolerates
+    // failed sessions by design — they are the churn the resume protocol
+    // recovers from, already recorded on the registry's failure counters.
+    if matches!(mode, ServeMode::Fixed) {
+        let failures: Vec<String> = st
+            .iter()
+            .enumerate()
+            .filter_map(|(ci, c)| c.failed.as_ref().map(|why| format!("client {ci}: {why}")))
+            .collect();
+        ensure!(
+            failures.is_empty(),
+            "reactor serve: {} client(s) failed: {}",
+            failures.len(),
+            failures.join("; ")
+        );
+    }
 
-    Ok(MultiStats {
-        per_client: reports
+    let per_client: Vec<ClientReport> = match mode {
+        ServeMode::Fixed => reports
             .into_iter()
             .map(|r| r.expect("every retired client leaves a report"))
             .collect(),
+        // accept mode: exactly the clean retirements leave reports
+        ServeMode::Accept { .. } => reports.into_iter().flatten().collect(),
+    };
+    Ok(MultiStats {
+        per_client,
         reactor_io: None, // filled by serve_clients_reactor
     })
 }
@@ -2002,19 +2623,29 @@ pub fn run_edge_resumed(
     // while still shrinking the probe loss measurably over a few steps.
     let lr = 0.005f32 * (batch * d) as f32;
     let (mut first_loss, mut last_loss) = (0.0f32, 0.0f32);
+    // every data frame rides a Sequenced envelope (the handshake above went
+    // bare): a dropped, duplicated or swapped frame in either direction is
+    // a loud sequencing error instead of a silent wrong-step decode
+    let mut seq = Seq::new();
     for step in first_step..first_step.saturating_add(steps) {
         let s = engine.encode(step, &z)?;
-        transport.send(&Msg::Features { step, tensor: s })?;
-        transport.send(&Msg::TrainLabels { step, labels: Labels(vec![0; batch]) })?;
+        transport.send(&seq.stamp(Msg::Features { step, tensor: s }))?;
+        transport.send(&seq.stamp(Msg::TrainLabels { step, labels: Labels(vec![0; batch]) }))?;
 
-        let gs = match transport.recv()? {
+        let gs = match seq
+            .accept(transport.recv()?)
+            .map_err(|e| C3Error::msg(format!("edge: {e}")))?
+        {
             Msg::Gradients { step: gstep, tensor } => {
                 ensure!(gstep == step, "gradient step mismatch: {gstep} != {step}");
                 tensor
             }
             other => bail!("edge expected Gradients, got {other:?}"),
         };
-        let loss = match transport.recv()? {
+        let loss = match seq
+            .accept(transport.recv()?)
+            .map_err(|e| C3Error::msg(format!("edge: {e}")))?
+        {
             Msg::StepStats { loss, .. } => loss,
             other => bail!("edge expected StepStats, got {other:?}"),
         };
@@ -2033,7 +2664,7 @@ pub fn run_edge_resumed(
         }
         last_loss = loss;
     }
-    transport.send(&Msg::Shutdown)?;
+    transport.send(&seq.stamp(Msg::Shutdown))?;
     let stats = transport.stats();
     Ok(EdgeReport {
         steps,

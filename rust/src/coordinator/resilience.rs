@@ -1,0 +1,378 @@
+//! Edge-side resilience: automatic reconnect with exponential backoff and
+//! session resumption — faults become recoveries, not failures.
+//!
+//! [`run_edge_retry`] is the churn-tolerant twin of
+//! [`crate::coordinator::multi::run_edge`]: the probe state `z` and the
+//! step cursor live *outside* any single connection, so when a link dies
+//! mid-stream the edge backs off (exponential, deterministically jittered
+//! from [`RetryPolicy::seed`] — a recovery run replays bit-identically
+//! under the same seed, exactly like the chaos harness), reconnects through
+//! a caller-supplied connect closure, and picks the session back up with
+//! `Msg::Resume`:
+//!
+//! ```text
+//!   edge                                cloud
+//!    │ ── ShardHello ──────────────────▶ │
+//!    │ ◀─ ShardChallenge { nonce } ───── │   fresh nonce, every connection
+//!    │ ── Resume { id, epoch,          ─▶ │   gate checks last_acked against
+//!    │            last_acked, proof }    │   its observe_step watermark w:
+//!    │                                   │   only {w-1, w} is coherent;
+//!    │ ◀─ ResumeOk { resume_step } ───── │   nonce burns BEFORE revocation
+//!    │ ══ Sequenced data frames ═══════▶ │   counters start fresh at 0
+//! ```
+//!
+//! The proof binds the resume epoch AND the fresh nonce, so a recorded
+//! resume replays no better than a recorded claim; a `last_acked_step`
+//! staler than `w - 1` is rejected loudly (`stale resume watermark`) —
+//! an edge that lost state must not silently rewind the session.  The
+//! in-flight step (uplinked but unacknowledged) is simply re-run: the cloud
+//! probe step is a pure function of the uplink and the watermark is
+//! monotonic, so the replay is idempotent and the loss trajectory matches
+//! an unimpaired run bit-for-bit.
+
+use crate::coordinator::multi::{EdgeReport, OpsRegistry};
+use crate::hdc::keyring::EdgeShard;
+use crate::hdc::FftBackend;
+use crate::tensor::{Labels, Tensor};
+use crate::transport::seq::Seq;
+use crate::transport::{Msg, Transport};
+use crate::util::error::{C3Error, Result};
+use crate::util::rng::Rng;
+use crate::{bail, ensure};
+
+/// Reconnect/backoff knobs for [`run_edge_retry`] (config: `[resilience]`,
+/// CLI: `--retry-*` / `--connect-timeout-ms` / `--io-timeout-ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Consecutive failed attempts tolerated before the edge gives up
+    /// loudly.  An attempt that makes step progress resets the counter —
+    /// bounded retries per fault, not per session.
+    pub max_attempts: u32,
+    /// First backoff sleep, in milliseconds; doubles per consecutive
+    /// failure.
+    pub base_backoff_ms: u64,
+    /// Backoff ceiling, in milliseconds.
+    pub max_backoff_ms: u64,
+    /// Jitter fraction `j`: each sleep is scaled by a factor drawn
+    /// uniformly from `[1-j, 1+j]` (0 disables jitter).
+    pub jitter_frac: f64,
+    /// Bound on each TCP connect attempt, in milliseconds (0 = unbounded;
+    /// honored by the connect closure, e.g. via
+    /// [`crate::transport::tcp::Tcp::connect_within`]).
+    pub connect_timeout_ms: u64,
+    /// Read deadline on the session transport, in milliseconds (0 =
+    /// none).  A cloud that goes quiet past this is treated as a dead link
+    /// and retried.
+    pub read_timeout_ms: u64,
+    /// Write deadline on the session transport, in milliseconds (0 = none).
+    pub write_timeout_ms: u64,
+    /// Seed for the deterministic jitter stream (replayable recovery runs).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_backoff_ms: 100,
+            max_backoff_ms: 5_000,
+            jitter_frac: 0.2,
+            connect_timeout_ms: 5_000,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 30_000,
+            seed: 0x0C3_51,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt` (1-based): exponential
+    /// doubling from [`RetryPolicy::base_backoff_ms`], capped at
+    /// [`RetryPolicy::max_backoff_ms`], scaled by the deterministic jitter
+    /// factor drawn from `rng`.
+    pub fn backoff_ms(&self, attempt: u32, rng: &mut Rng) -> u64 {
+        let exp = attempt.saturating_sub(1).min(32);
+        let raw = self
+            .base_backoff_ms
+            .saturating_mul(1u64 << exp)
+            .min(self.max_backoff_ms.max(self.base_backoff_ms));
+        // uniform in [0,1): 53 mantissa bits of one PRNG draw — consumed
+        // even when jitter is disabled so the replayable stream position
+        // does not depend on the knob
+        let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        let j = self.jitter_frac.clamp(0.0, 1.0);
+        let factor = 1.0 - j + 2.0 * j * u;
+        ((raw as f64) * factor).round().max(0.0) as u64
+    }
+
+    /// [`RetryPolicy::read_timeout_ms`] as an `Option<Duration>` (0 = none).
+    pub fn read_deadline(&self) -> Option<std::time::Duration> {
+        (self.read_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.read_timeout_ms))
+    }
+
+    /// [`RetryPolicy::write_timeout_ms`] as an `Option<Duration>` (0 = none).
+    pub fn write_deadline(&self) -> Option<std::time::Duration> {
+        (self.write_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.write_timeout_ms))
+    }
+
+    /// [`RetryPolicy::connect_timeout_ms`] as a `Duration` (0 = a generous
+    /// bound rather than forever, so a misconfigured knob cannot hang the
+    /// connect closure).
+    pub fn connect_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(if self.connect_timeout_ms == 0 {
+            60_000
+        } else {
+            self.connect_timeout_ms
+        })
+    }
+}
+
+/// Cross-connection session state: everything that must survive a dropped
+/// link for the resumed session to be exact.
+struct EdgeSession {
+    z: Tensor,
+    /// First step not yet acknowledged by the cloud (the resume point).
+    next_step: u64,
+    end_step: u64,
+    batch: usize,
+    first_loss: Option<f32>,
+    last_loss: f32,
+}
+
+/// One sharded training run with automatic reconnect + resume.  `connect`
+/// builds a fresh transport per attempt (its argument is the 0-based
+/// connection count, so tests can impair specific connections); the first
+/// connection claims the shard with `Msg::KeyShard`, every later one
+/// resumes it with `Msg::Resume` at the exact step after the last
+/// acknowledged one.  The probe state `z` lives here, across connections,
+/// so the loss trajectory of a recovered run is bit-identical to an
+/// unimpaired one.  `registry` (when given) receives
+/// [`OpsRegistry::note_reconnect`] per reconnect and the backoff sleeps.
+#[allow(clippy::too_many_arguments)]
+pub fn run_edge_retry(
+    shard: EdgeShard,
+    workers: usize,
+    fft: FftBackend,
+    mut connect: impl FnMut(u32) -> Result<Box<dyn Transport>>,
+    steps: u64,
+    data_seed: u64,
+    batch: usize,
+    d: usize,
+    policy: &RetryPolicy,
+    registry: Option<&OpsRegistry>,
+) -> Result<EdgeReport> {
+    ensure!(steps >= 1, "edge needs at least one step");
+    let mut rng = Rng::new(data_seed);
+    let mut zdata = vec![0.0f32; batch * d];
+    rng.fill_normal(&mut zdata, 0.0, 1.0);
+    let mut ss = EdgeSession {
+        z: Tensor::from_vec(&[batch, d], zdata),
+        next_step: 0,
+        end_step: steps,
+        batch,
+        first_loss: None,
+        last_loss: 0.0,
+    };
+    let mut backoff_rng = Rng::new(policy.seed);
+    let (mut tx_bytes, mut rx_bytes) = (0u64, 0u64);
+    let mut connects = 0u32;
+    let mut attempt = 0u32; // consecutive no-progress failures
+    loop {
+        let fault = match connect(connects) {
+            Ok(mut tp) => {
+                connects += 1;
+                if connects > 1 {
+                    if let Some(reg) = registry {
+                        reg.note_reconnect();
+                    }
+                }
+                let start_step = ss.next_step;
+                let outcome = edge_session(&mut *tp, shard, workers, fft, &mut ss, policy);
+                let stats = tp.stats();
+                tx_bytes += stats.tx();
+                rx_bytes += stats.rx();
+                match outcome {
+                    Ok(()) => break,
+                    Err(e) => {
+                        if ss.next_step > start_step {
+                            // progress resets the budget: retries are
+                            // bounded per fault, not per session
+                            attempt = 0;
+                        }
+                        e
+                    }
+                }
+            }
+            Err(e) => e,
+        };
+        attempt += 1;
+        ensure!(
+            attempt < policy.max_attempts.max(1),
+            "edge shard {}: giving up after {attempt} consecutive failed \
+             attempt(s) at step {}: {fault}",
+            shard.client_id(),
+            ss.next_step,
+        );
+        let ms = policy.backoff_ms(attempt, &mut backoff_rng);
+        if let Some(reg) = registry {
+            reg.observe_backoff_ms(ms as f64);
+        }
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+    Ok(EdgeReport {
+        steps,
+        first_loss: ss.first_loss.unwrap_or(0.0),
+        last_loss: ss.last_loss,
+        tx_bytes,
+        rx_bytes,
+    })
+}
+
+/// One connection's worth of the session: handshake (fresh claim at step 0,
+/// `Msg::Resume` otherwise), then sequenced training steps until `end_step`
+/// or a transport fault.  Progress is committed into `ss` step by step, so
+/// the caller resumes exactly where the fault interrupted.
+fn edge_session(
+    tp: &mut dyn Transport,
+    shard: EdgeShard,
+    workers: usize,
+    fft: FftBackend,
+    ss: &mut EdgeSession,
+    policy: &RetryPolicy,
+) -> Result<()> {
+    if policy.read_timeout_ms > 0 || policy.write_timeout_ms > 0 {
+        // best-effort: transports without OS deadlines (in-proc) surface
+        // faults as closed channels instead
+        let _ = tp.set_deadline(policy.read_deadline(), policy.write_deadline());
+    }
+    tp.send(&Msg::ShardHello)?;
+    let nonce = match tp.recv()? {
+        Msg::ShardChallenge { nonce } => nonce,
+        other => bail!("edge expected ShardChallenge, got {other:?}"),
+    };
+    if ss.next_step == 0 {
+        let epoch = shard.epoch_of_step(0);
+        tp.send(&Msg::KeyShard {
+            client_id: shard.client_id(),
+            epoch,
+            proof: shard.proof(epoch, nonce),
+        })?;
+    } else {
+        let last_acked_step = ss.next_step - 1;
+        let epoch = shard.epoch_of_step(ss.next_step);
+        tp.send(&Msg::Resume {
+            client_id: shard.client_id(),
+            epoch,
+            last_acked_step,
+            proof: shard.proof(epoch, nonce),
+        })?;
+        match tp.recv()? {
+            Msg::ResumeOk { resume_step } => ensure!(
+                resume_step == ss.next_step,
+                "cloud resumed at step {resume_step}, edge expected {}",
+                ss.next_step
+            ),
+            other => bail!("edge expected ResumeOk, got {other:?}"),
+        }
+    }
+    let mut cc = shard.client_codec_lazy();
+    cc.set_workers(workers);
+    cc.set_fft_backend(fft);
+
+    // same contraction constant as run_edge — the recovered trajectory must
+    // be bit-identical to the unimpaired one
+    let d = ss.z.shape()[1];
+    let lr = 0.005f32 * (ss.batch * d) as f32;
+    let mut seq = Seq::new();
+    for step in ss.next_step..ss.end_step {
+        let s = cc.for_step(step)?.encode(&ss.z);
+        tp.send(&seq.stamp(Msg::Features { step, tensor: s }))?;
+        tp.send(&seq.stamp(Msg::TrainLabels { step, labels: Labels(vec![0; ss.batch]) }))?;
+
+        let gs = match seq
+            .accept(tp.recv()?)
+            .map_err(|e| C3Error::msg(format!("edge: {e}")))?
+        {
+            Msg::Gradients { step: gstep, tensor } => {
+                ensure!(gstep == step, "gradient step mismatch: {gstep} != {step}");
+                tensor
+            }
+            other => bail!("edge expected Gradients, got {other:?}"),
+        };
+        let loss = match seq
+            .accept(tp.recv()?)
+            .map_err(|e| C3Error::msg(format!("edge: {e}")))?
+        {
+            Msg::StepStats { loss, .. } => loss,
+            other => bail!("edge expected StepStats, got {other:?}"),
+        };
+
+        let gz = cc.for_step(step)?.decode(&gs);
+        ensure!(
+            gz.shape() == ss.z.shape(),
+            "gradient shape {:?} vs features {:?}",
+            gz.shape(),
+            ss.z.shape()
+        );
+        ss.z = ss.z.sub(&gz.scale(lr));
+        if ss.first_loss.is_none() {
+            ss.first_loss = Some(loss);
+        }
+        ss.last_loss = loss;
+        // the gradient for `step` is applied and acknowledged: the resume
+        // point moves past it
+        ss.next_step = step + 1;
+    }
+    tp.send(&seq.stamp(Msg::Shutdown))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_caps_and_jitters_deterministically() {
+        let policy = RetryPolicy {
+            base_backoff_ms: 100,
+            max_backoff_ms: 800,
+            jitter_frac: 0.2,
+            seed: 7,
+            ..RetryPolicy::default()
+        };
+        let mut a = Rng::new(policy.seed);
+        let mut b = Rng::new(policy.seed);
+        for attempt in 1..=6 {
+            let x = policy.backoff_ms(attempt, &mut a);
+            let y = policy.backoff_ms(attempt, &mut b);
+            assert_eq!(x, y, "same seed must give the same jitter");
+            let raw = (100u64 << (attempt - 1)).min(800);
+            let lo = (raw as f64 * 0.8).floor() as u64;
+            let hi = (raw as f64 * 1.2).ceil() as u64;
+            assert!(
+                (lo..=hi).contains(&x),
+                "attempt {attempt}: backoff {x} outside [{lo}, {hi}]"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_jitter_is_exact_exponential() {
+        let policy = RetryPolicy {
+            base_backoff_ms: 50,
+            max_backoff_ms: 400,
+            jitter_frac: 0.0,
+            ..RetryPolicy::default()
+        };
+        let mut rng = Rng::new(1);
+        assert_eq!(policy.backoff_ms(1, &mut rng), 50);
+        assert_eq!(policy.backoff_ms(2, &mut rng), 100);
+        assert_eq!(policy.backoff_ms(3, &mut rng), 200);
+        assert_eq!(policy.backoff_ms(4, &mut rng), 400);
+        assert_eq!(policy.backoff_ms(5, &mut rng), 400, "capped at max");
+    }
+}

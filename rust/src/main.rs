@@ -18,6 +18,7 @@
 //!   c3sl multi --edges 64 --reactor --key-sharding --rotate-every 20
 //!   c3sl multi --reactor --reactor-backend sweep  # portable poll-sweep pump
 //!   c3sl multi --reactor --ops-addr 127.0.0.1:9100  # /metrics /healthz /drain
+//!   c3sl multi --tcp --key-sharding --retry     # reconnect + resume on faults
 //!   c3sl multi --fft-backend reference          # seed full-spectrum kernels
 //!                                               # (default is packed)
 //!   c3sl multi --simd scalar                    # pin the packed codec's SIMD
@@ -27,7 +28,10 @@ use c3sl::transport::readiness::ReadinessBackend;
 use c3sl::{bail, ensure};
 use c3sl::config::cli::Args;
 use c3sl::config::{CodecVenue, ExperimentConfig, SchemeKind, TransportKind};
-use c3sl::coordinator::{run_experiment, run_multi_edge, CloudWorker, EdgeWorker, MultiEdgeSpec};
+use c3sl::coordinator::{
+    run_experiment, run_multi_edge, CloudWorker, EdgeWorker, MultiEdgeSpec, RetryPolicy,
+    SessionDeadlines,
+};
 use c3sl::data::open_dataset;
 use c3sl::fft::kernels::{Isa, Kernels, ENV_KNOB};
 use c3sl::flops::{bottlenetpp_cost, bottlenetpp_cost_published, c3sl_cost, CutSpec};
@@ -266,9 +270,17 @@ fn cmd_cloud(args: &Args) -> Result<()> {
 /// reactor's own readiness loop — no extra thread — and `--ops-reload PATH`
 /// re-parses that config file on SIGHUP to retune the safe reactor knobs
 /// (`transport.outbox_frames`, `transport.poll_us`) live; both require
-/// `--reactor`.  `--config` seeds
+/// `--reactor`.
+/// `--retry` (requires `--tcp --key-sharding`) makes every edge reconnect
+/// with exponential backoff and resume its session (`Msg::Resume`) after a
+/// mid-stream disconnect, and switches the cloud to a live accept loop with
+/// handshake/idle reaping deadlines; tune with `--retry-max-attempts`,
+/// `--retry-base-ms`, `--retry-max-ms`, `--retry-jitter`,
+/// `--connect-timeout-ms`, `--io-timeout-ms`, `--handshake-timeout-ms` and
+/// `--idle-timeout-ms` (0 disables a deadline).  `--config` seeds
 /// the defaults (transport.edges/reactor/backend/poll_us/outbox_frames,
-/// ops.addr, scheme.r/workers/fft_backend/simd/key_sharding/rotation_steps,
+/// ops.addr, resilience.*,
+/// scheme.r/workers/fft_backend/simd/key_sharding/rotation_steps,
 /// train.steps/seed, transport kind/addr, link model); flags override.
 fn cmd_multi(args: &Args) -> Result<()> {
     let base = match args.get("config") {
@@ -293,6 +305,33 @@ fn cmd_multi(args: &Args) -> Result<()> {
             backend
         }
         None => b.map(|c| c.reactor_backend).unwrap_or(def.poll.backend),
+    };
+    // resilience knobs: config `[resilience]` seeds the defaults, flags
+    // override; `--retry` (or `resilience.retry = true`) opts in
+    let resilience = b.map(|c| c.resilience).unwrap_or_default();
+    let retry_on = args.has("retry") || resilience.retry;
+    let io_timeout_ms = args.get_u64("io-timeout-ms")?.unwrap_or(resilience.io_timeout_ms);
+    let retry_policy = RetryPolicy {
+        max_attempts: args
+            .get_u64("retry-max-attempts")?
+            .map(|v| v as u32)
+            .unwrap_or(resilience.retry_max_attempts),
+        base_backoff_ms: args.get_u64("retry-base-ms")?.unwrap_or(resilience.retry_base_ms),
+        max_backoff_ms: args.get_u64("retry-max-ms")?.unwrap_or(resilience.retry_max_ms),
+        jitter_frac: args.get_f64("retry-jitter")?.unwrap_or(resilience.retry_jitter),
+        connect_timeout_ms: args
+            .get_u64("connect-timeout-ms")?
+            .unwrap_or(resilience.connect_timeout_ms),
+        read_timeout_ms: io_timeout_ms,
+        write_timeout_ms: io_timeout_ms,
+        ..RetryPolicy::default()
+    };
+    let ms = |v: u64| (v > 0).then(|| std::time::Duration::from_millis(v));
+    let deadlines = SessionDeadlines {
+        handshake: ms(args
+            .get_u64("handshake-timeout-ms")?
+            .unwrap_or(resilience.handshake_timeout_ms)),
+        idle: ms(args.get_u64("idle-timeout-ms")?.unwrap_or(resilience.idle_timeout_ms)),
     };
     let spec = MultiEdgeSpec {
         edges: args.get_usize("edges")?.or(b.map(|c| c.num_edges)).unwrap_or(def.edges),
@@ -342,9 +381,25 @@ fn cmd_multi(args: &Args) -> Result<()> {
             .map(Into::into)
             .or_else(|| b.and_then(|c| c.ops_addr.clone())),
         ops_reload_path: args.get("ops-reload").map(Into::into),
+        retry: retry_on.then_some(retry_policy),
+        deadlines,
     };
     if let Some(addr) = &spec.ops_addr {
         println!("[c3sl] ops: http://{addr}/metrics /healthz (POST /drain)");
+    }
+    if let Some(p) = &spec.retry {
+        println!(
+            "[c3sl] resilience: retry on — attempts={} backoff={}..{}ms \
+             jitter={} connect={}ms io={}ms handshake={:?} idle={:?}",
+            p.max_attempts,
+            p.base_backoff_ms,
+            p.max_backoff_ms,
+            p.jitter_frac,
+            p.connect_timeout_ms,
+            p.read_timeout_ms,
+            spec.deadlines.handshake,
+            spec.deadlines.idle
+        );
     }
     println!(
         "[c3sl] multi: {} edges x {} steps, R={} D={} B={} workers={} fft={} \

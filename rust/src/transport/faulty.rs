@@ -220,6 +220,14 @@ pub struct Impairments {
     pub truncate_prob: f64,
     /// Deterministically truncate this frame index.
     pub truncate_at: Option<u64>,
+    /// Swap this frame index with the next delivered frame: the frame is
+    /// stashed and ships immediately *after* the following carried frame,
+    /// so the peer observes the adjacent pair in inverted order.  Only an
+    /// otherwise-intact delivery is swapped (a dropped/corrupted/truncated
+    /// frame at this index wins its own fate), and the stash is stranded if
+    /// no later frame is ever carried — schedule mid-stream indices.  Draws
+    /// zero RNG rolls, so enabling it never shifts a sibling's schedule.
+    pub reorder_at: Option<u64>,
     /// Sever the link instead of carrying this frame index.
     pub disconnect_at: Option<u64>,
     /// Trickle roughly half of this frame index, then sever mid-frame:
@@ -289,6 +297,10 @@ pub enum FaultAction {
         /// Bytes kept (0 ≤ kept < original length).
         kept: usize,
     },
+    /// Stashed to ship after the next carried frame: the peer observes the
+    /// adjacent pair swapped.  Only the sequencing layer (`transport::seq`)
+    /// makes this loud — bare frames decode fine in either order.
+    Reordered,
     /// Link severed instead of carrying the frame.
     Disconnected,
     /// Partial frame trickled, then the link severed mid-frame.
@@ -347,7 +359,7 @@ enum Decision {
     Disconnect,
     DieMidFrame,
     Drop,
-    Deliver { corrupt: bool, truncate: Option<usize>, delay_us: u64 },
+    Deliver { corrupt: bool, truncate: Option<usize>, delay_us: u64, reorder: bool },
 }
 
 /// One direction's live schedule: matrix + RNG stream + frame counter.
@@ -400,7 +412,12 @@ impl DirState {
             let bits = (len as u64 + 4).saturating_mul(8_000_000);
             delay_us += bits / self.imp.bandwidth_bps;
         }
-        (idx, Decision::Deliver { corrupt, truncate, delay_us })
+        // reorder costs no roll (pure index test), so it cannot shift the
+        // fixed five-roll schedule above; a corrupted/truncated frame keeps
+        // its own fate rather than being swapped
+        let reorder =
+            self.imp.reorder_at == Some(idx) && !corrupt && truncate.is_none();
+        (idx, Decision::Deliver { corrupt, truncate, delay_us, reorder })
     }
 }
 
@@ -450,6 +467,13 @@ pub struct FaultyLink<T: FrameLink> {
     tx: DirState,
     rx: DirState,
     rec: Arc<FaultRecorder>,
+    /// Outbound frame stashed by `reorder_at`, shipped after the next
+    /// carried frame.
+    tx_stash: Option<Vec<u8>>,
+    /// Inbound frame stashed by `reorder_at` on the receive side.
+    rx_stash: Option<Vec<u8>>,
+    /// Inbound frame whose swap completed: returned by the next `recv`.
+    rx_ready: Option<Vec<u8>>,
     /// Severed by a disconnect/die impairment; all further I/O is `Closed`.
     dead: bool,
 }
@@ -471,6 +495,9 @@ impl<T: FrameLink> FaultyLink<T> {
             tx: DirState::new(tx, txr),
             rx: DirState::new(rx, rxr),
             rec: Arc::new(FaultRecorder::default()),
+            tx_stash: None,
+            rx_stash: None,
+            rx_ready: None,
             dead: false,
         }
     }
@@ -510,12 +537,23 @@ impl<T: FrameLink> Transport for FaultyLink<T> {
                 self.rec.push(Dir::Tx, idx, FaultAction::Dropped);
                 Ok(())
             }
-            Decision::Deliver { corrupt, truncate, delay_us } => {
+            Decision::Deliver { corrupt, truncate, delay_us, reorder } => {
+                if reorder {
+                    // stash; the swap completes when the next frame ships
+                    self.rec.push(Dir::Tx, idx, FaultAction::Reordered);
+                    self.tx_stash = Some(frame);
+                    return Ok(());
+                }
                 sleep_us(delay_us);
                 mutate_frame(
                     &mut frame, corrupt, truncate, delay_us, &self.rec, Dir::Tx, idx,
                 );
-                self.inner.send_frame(frame, self.tx.imp.pacing())
+                let pace = self.tx.imp.pacing();
+                self.inner.send_frame(frame, pace)?;
+                if let Some(stash) = self.tx_stash.take() {
+                    self.inner.send_frame(stash, pace)?;
+                }
+                Ok(())
             }
         }
     }
@@ -523,6 +561,10 @@ impl<T: FrameLink> Transport for FaultyLink<T> {
     fn recv(&mut self) -> Result<Msg, TransportError> {
         if self.dead {
             return Err(TransportError::Closed);
+        }
+        if let Some(stash) = self.rx_ready.take() {
+            // second half of a completed swap
+            return Ok(wire::decode(&stash)?);
         }
         loop {
             let mut frame = self.inner.recv_frame()?;
@@ -539,11 +581,20 @@ impl<T: FrameLink> Transport for FaultyLink<T> {
                     self.rec.push(Dir::Rx, idx, FaultAction::Dropped);
                     continue;
                 }
-                Decision::Deliver { corrupt, truncate, delay_us } => {
+                Decision::Deliver { corrupt, truncate, delay_us, reorder } => {
+                    if reorder {
+                        self.rec.push(Dir::Rx, idx, FaultAction::Reordered);
+                        self.rx_stash = Some(frame);
+                        continue;
+                    }
                     sleep_us(delay_us);
                     mutate_frame(
                         &mut frame, corrupt, truncate, delay_us, &self.rec, Dir::Rx, idx,
                     );
+                    if let Some(stash) = self.rx_stash.take() {
+                        // deliver this frame now, the stashed one next call
+                        self.rx_ready = Some(stash);
+                    }
                     return Ok(wire::decode(&frame)?);
                 }
             }
@@ -582,6 +633,11 @@ pub struct FaultyConn<C: ReactorConn> {
     /// Inbound frames pulled from the inner connection but not yet due for
     /// delivery (latency/jitter staging).
     held_in: VecDeque<(Instant, Vec<u8>)>,
+    /// Outbound frame stashed by `reorder_at`, queued after the next
+    /// carried frame.
+    tx_stash: Option<Vec<u8>>,
+    /// Inbound frame stashed by `reorder_at` on the receive side.
+    rx_stash: Option<Vec<u8>>,
     dead: bool,
 }
 
@@ -600,6 +656,8 @@ impl<C: ReactorConn> FaultyConn<C> {
             rec: Arc::new(FaultRecorder::default()),
             staged_out: VecDeque::new(),
             held_in: VecDeque::new(),
+            tx_stash: None,
+            rx_stash: None,
             dead: false,
         }
     }
@@ -639,17 +697,31 @@ impl<C: ReactorConn> ReactorConn for FaultyConn<C> {
                             self.rec.push(Dir::Rx, idx, FaultAction::Dropped);
                             continue;
                         }
-                        Decision::Deliver { corrupt, truncate, delay_us } => {
+                        Decision::Deliver { corrupt, truncate, delay_us, reorder } => {
+                            if reorder {
+                                self.rec.push(Dir::Rx, idx, FaultAction::Reordered);
+                                self.rx_stash = Some(frame);
+                                continue;
+                            }
                             mutate_frame(
                                 &mut frame, corrupt, truncate, delay_us, &self.rec,
                                 Dir::Rx, idx,
                             );
+                            let stash = self.rx_stash.take();
                             if delay_us == 0 {
+                                if let Some(st) = stash {
+                                    // swap completes: this frame now, the
+                                    // stash on the next poll (held, due now)
+                                    self.held_in.push_back((Instant::now(), st));
+                                }
                                 return Ok(PollIn::Frame(frame));
                             }
                             let due =
                                 Instant::now() + Duration::from_micros(delay_us);
                             self.held_in.push_back((due, frame));
+                            if let Some(st) = stash {
+                                self.held_in.push_back((due, st));
+                            }
                             return Ok(PollIn::Idle);
                         }
                     }
@@ -673,15 +745,27 @@ impl<C: ReactorConn> ReactorConn for FaultyConn<C> {
             Decision::Drop => {
                 self.rec.push(Dir::Tx, idx, FaultAction::Dropped);
             }
-            Decision::Deliver { corrupt, truncate, delay_us } => {
+            Decision::Deliver { corrupt, truncate, delay_us, reorder } => {
+                if reorder {
+                    self.rec.push(Dir::Tx, idx, FaultAction::Reordered);
+                    self.tx_stash = Some(frame);
+                    return;
+                }
                 mutate_frame(
                     &mut frame, corrupt, truncate, delay_us, &self.rec, Dir::Tx, idx,
                 );
+                let stash = self.tx_stash.take();
                 if delay_us == 0 && self.staged_out.is_empty() {
                     self.inner.queue_frame(frame);
+                    if let Some(st) = stash {
+                        self.inner.queue_frame(st);
+                    }
                 } else {
                     let due = Instant::now() + Duration::from_micros(delay_us);
                     self.staged_out.push_back((due, frame));
+                    if let Some(st) = stash {
+                        self.staged_out.push_back((due, st));
+                    }
                 }
             }
         }
@@ -914,6 +998,95 @@ mod tests {
         assert!(matches!(b.recv(), Err(TransportError::Wire(_))));
         assert_eq!(b.recv().unwrap(), feat(2));
         assert_eq!(b.recorder().dropped(Dir::Rx), 1);
+    }
+
+    #[test]
+    fn reorder_swaps_adjacent_frames_and_is_recorded() {
+        let (a, b) = inproc_pair();
+        let imp = Impairments { reorder_at: Some(1), ..Impairments::off() };
+        let mut a = FaultyLink::new(a, 21, imp, Impairments::off());
+        let mut b = b;
+        for i in 0..4 {
+            a.send(&feat(i)).unwrap();
+        }
+        // frames 1 and 2 arrive swapped; 0 and 3 are untouched
+        for step in [0u64, 2, 1, 3] {
+            assert_eq!(b.recv().unwrap(), feat(step));
+        }
+        let log = a.recorder().events();
+        assert_eq!(log[1].action, FaultAction::Reordered);
+        assert_eq!(log[1].frame, 1);
+        // reorder draws no rolls: the sibling deliveries schedule exactly
+        // as they would with the impairment off
+        assert!(log.iter().filter(|e| e.frame != 1).all(|e| matches!(
+            e.action,
+            FaultAction::Delivered { delay_us: 0 }
+        )));
+    }
+
+    #[test]
+    fn reorder_applies_on_the_receive_side_too() {
+        let (a, b) = inproc_pair();
+        let imp = Impairments { reorder_at: Some(0), ..Impairments::off() };
+        let mut a = a;
+        let mut b = FaultyLink::new(b, 22, Impairments::off(), imp);
+        for i in 0..3 {
+            a.send(&feat(i)).unwrap();
+        }
+        for step in [1u64, 0, 2] {
+            assert_eq!(b.recv().unwrap(), feat(step));
+        }
+        assert_eq!(b.recorder().count(Dir::Rx, |a| *a == FaultAction::Reordered), 1);
+    }
+
+    #[test]
+    fn reorder_on_faulty_conn_matches_link_schedule() {
+        let (mut edge, conn) = inproc_reactor_pair_with(false);
+        let imp = Impairments { reorder_at: Some(1), ..Impairments::off() };
+        let mut conn = FaultyConn::new(conn, 21, Impairments::off(), imp);
+        for i in 0..4 {
+            edge.send(&feat(i)).unwrap();
+        }
+        let mut got = Vec::new();
+        while got.len() < 4 {
+            match conn.poll_recv().unwrap() {
+                PollIn::Frame(f) => got.push(wire::decode(&f).unwrap()),
+                PollIn::Idle => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, vec![feat(0), feat(2), feat(1), feat(3)]);
+    }
+
+    #[test]
+    fn unsequenced_reorder_is_silent_sequenced_is_loud() {
+        // The negative control for the sequencing layer: two bare data
+        // frames swapped in flight DECODE FINE in the wrong order — the
+        // receiver cannot tell — while the same traffic under Sequenced
+        // envelopes trips a loud SeqError on the very first swapped frame.
+        use crate::transport::seq::{Seq, SeqError};
+        let run = |sequenced: bool| -> Result<Vec<Msg>, SeqError> {
+            let (a, b) = inproc_pair();
+            let imp = Impairments { reorder_at: Some(0), ..Impairments::off() };
+            let mut a = FaultyLink::new(a, 33, imp, Impairments::off());
+            let mut b = b;
+            let mut tx = Seq::new();
+            let mut rx = Seq::new();
+            for i in 0..3 {
+                let m = feat(i);
+                let m = if sequenced { tx.stamp(m) } else { m };
+                a.send(&m).unwrap();
+            }
+            let mut got = Vec::new();
+            for _ in 0..3 {
+                got.push(rx.accept(b.recv().unwrap())?);
+            }
+            Ok(got)
+        };
+        // bare: silently mis-ordered — steps 1 and 0 swapped, no error
+        assert_eq!(run(false).unwrap(), vec![feat(1), feat(0), feat(2)]);
+        // sequenced: the swap is loud (frame 1 lands where 0 was expected)
+        assert_eq!(run(true).unwrap_err(), SeqError::Gap { expected: 0, got: 1 });
     }
 
     #[test]

@@ -17,6 +17,7 @@
 pub mod faulty;
 pub mod reactor;
 pub mod readiness;
+pub mod seq;
 pub mod sim;
 pub mod tcp;
 pub mod wire;
@@ -119,6 +120,46 @@ pub enum Msg {
     },
     /// Orderly shutdown.
     Shutdown,
+    /// Envelope carrying any data-plane message with a per-session monotonic
+    /// sequence number.  Once a peer has seen one sequenced frame on a
+    /// connection, every later data frame must arrive sequenced and in
+    /// order — gaps, duplicates, and reorderings are then protocol errors
+    /// detected loudly at the transport layer instead of silently
+    /// mis-decoding downstream (see `transport::seq`).  Envelopes never
+    /// nest: a `Sequenced` inside a `Sequenced` is a wire error.
+    Sequenced {
+        /// Position of this frame in the sender's per-session stream,
+        /// starting at 0 and incrementing by exactly 1 per data frame.
+        seq: u64,
+        /// The enveloped data-plane message.
+        inner: Box<Msg>,
+    },
+    /// Edge → cloud, replacing [`Msg::KeyShard`] when reconnecting to a
+    /// session that already made progress: claim the shard *and* agree on
+    /// the exact resume point.  Travels through the same challenge/nonce
+    /// leg as a fresh claim (the proof binds this connection's
+    /// [`Msg::ShardChallenge`] nonce), so a recorded resume is as
+    /// unreplayable as a recorded claim.  The cloud validates
+    /// `last_acked_step` against its `ShardGate` watermark and answers
+    /// [`Msg::ResumeOk`] with the step training continues from.
+    Resume {
+        /// The shard (client) id being re-claimed.
+        client_id: u64,
+        /// The key epoch of the step the session resumes at.
+        epoch: u64,
+        /// Highest step whose `StepStats` the edge received before the
+        /// connection died; the in-flight step (if any) is re-executed.
+        last_acked_step: u64,
+        /// `KeyRing::shard_proof(client_id, epoch, nonce)` over this
+        /// connection's fresh challenge nonce.
+        proof: u64,
+    },
+    /// Cloud → edge, answering an accepted [`Msg::Resume`]: the session
+    /// continues at `resume_step` with fresh sequence counters.
+    ResumeOk {
+        /// First step of the resumed session (`last_acked_step + 1`).
+        resume_step: u64,
+    },
 }
 
 /// Byte counters shared between the two endpoints of a link.
@@ -163,6 +204,11 @@ pub enum TransportError {
     /// is rejected at the transport layer rather than surfacing later as a
     /// confusing truncation error from the decoder.
     EmptyFrame,
+    /// A read or write deadline elapsed before the peer made progress
+    /// (see [`Transport::set_deadline`]).  Distinct from
+    /// [`TransportError::Closed`]: the link may still be alive, merely
+    /// stalled past the caller's patience.
+    TimedOut,
 }
 
 /// Validate a peer-announced frame length *before* any allocation: rejects
@@ -195,6 +241,7 @@ impl fmt::Display for TransportError {
             TransportError::EmptyFrame => {
                 write!(f, "zero-length frame (every message carries at least its tag byte)")
             }
+            TransportError::TimedOut => write!(f, "link deadline elapsed"),
         }
     }
 }
@@ -217,7 +264,16 @@ impl From<WireError> for TransportError {
 
 impl From<std::io::Error> for TransportError {
     fn from(e: std::io::Error) -> Self {
-        TransportError::Io(e)
+        // A socket read/write timeout surfaces as WouldBlock (EAGAIN) or
+        // TimedOut depending on platform; both mean "deadline elapsed",
+        // not "link broken" — fold them into the dedicated variant so
+        // callers can tell a stall from a hangup.
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                TransportError::TimedOut
+            }
+            _ => TransportError::Io(e),
+        }
     }
 }
 
@@ -235,6 +291,18 @@ pub trait Transport: Send {
     fn recv(&mut self) -> Result<Msg, TransportError>;
     /// Shared byte counters for this endpoint's half of the link.
     fn stats(&self) -> Arc<LinkStats>;
+    /// Bound how long `recv` and `send` may block (`None` = forever); a
+    /// breached deadline surfaces as [`TransportError::TimedOut`].  Returns
+    /// `false` when the endpoint cannot enforce deadlines (the in-process
+    /// channel, for one) so callers know the bound is advisory there.
+    fn set_deadline(
+        &mut self,
+        read: Option<std::time::Duration>,
+        write: Option<std::time::Duration>,
+    ) -> bool {
+        let _ = (read, write);
+        false
+    }
 }
 
 impl<T: Transport + ?Sized> Transport for Box<T> {
@@ -248,6 +316,14 @@ impl<T: Transport + ?Sized> Transport for Box<T> {
 
     fn stats(&self) -> Arc<LinkStats> {
         (**self).stats()
+    }
+
+    fn set_deadline(
+        &mut self,
+        read: Option<std::time::Duration>,
+        write: Option<std::time::Duration>,
+    ) -> bool {
+        (**self).set_deadline(read, write)
     }
 }
 

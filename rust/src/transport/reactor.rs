@@ -478,6 +478,14 @@ pub enum Event {
         /// The transport-level failure.
         error: TransportError,
     },
+    /// The data-plane accept listener ([`Reactor::serve_accept`]) admitted
+    /// a new connection; `client` is its freshly assigned slot.  Always
+    /// surfaced before any [`Event::Msg`] from that slot, so the serving
+    /// loop can grow its per-client state first.
+    Accepted {
+        /// The new connection's slot (continues accept order).
+        client: usize,
+    },
 }
 
 /// I/O-side observability for one reactor serve, surfaced by
@@ -506,6 +514,11 @@ pub struct ReactorIoStats {
 /// Registration token reserved for the ops listener fd (one below
 /// [`WAKER_TOKEN`]; never a valid connection index).
 const OPS_LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+/// Registration token reserved for the data-plane accept listener
+/// ([`Reactor::serve_accept`]); like the ops tokens it only wakes the
+/// wait — the unconditional accept pump after each pass does the service.
+const DATA_LISTENER_TOKEN: u64 = u64::MAX - 2;
 
 /// Ops connection tokens are `OPS_CONN_BASE + slot` — a namespace far above
 /// any plausible client index, so the epoll dispatch can tell the two apart
@@ -555,6 +568,12 @@ struct OpsState {
     listener: TcpListener,
     local: Option<SocketAddr>,
     conns: Vec<Option<OpsConn>>,
+}
+
+/// The data-plane accept listener ([`Reactor::serve_accept`]).
+struct AcceptState {
+    listener: TcpListener,
+    local: Option<SocketAddr>,
 }
 
 struct Slot {
@@ -659,6 +678,9 @@ pub struct Reactor {
     /// Requests parsed off ops connections, awaiting
     /// [`Reactor::take_ops_requests`].
     ops_requests: Vec<OpsRequest>,
+    /// The data-plane accept listener, once [`Reactor::serve_accept`]
+    /// installed it.
+    accept: Option<AcceptState>,
 }
 
 impl Reactor {
@@ -676,7 +698,73 @@ impl Reactor {
             .map(|link| Slot { stats: link.stats(), link: Some(link), hold: false })
             .collect();
         let backend = build_backend(&conns, cfg.backend);
-        Reactor { conns, cfg, rr: 0, sweeps: 0, backend, ops: None, ops_requests: Vec::new() }
+        Reactor {
+            conns,
+            cfg,
+            rr: 0,
+            sweeps: 0,
+            backend,
+            ops: None,
+            ops_requests: Vec::new(),
+            accept: None,
+        }
+    }
+
+    /// Install the data-plane accept listener: new edge connections are
+    /// admitted on every pump pass (under the epoll backend the listener
+    /// also registers as a wakeup source), wrapped in [`NbTcp`], appended
+    /// as fresh slots, and surfaced as [`Event::Accepted`].  This is what
+    /// lets a serving session outlive any single connection — the
+    /// reconnect-and-resume path accepts mid-serve instead of locking the
+    /// fleet at construction.
+    pub fn serve_accept(&mut self, listener: TcpListener) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr().ok();
+        #[cfg(target_os = "linux")]
+        if let BackendImpl::Epoll(st) = &mut self.backend {
+            use std::os::unix::io::AsRawFd;
+            // best-effort: an unregistered listener is still accepted from
+            // on every pump pass, just without event-driven latency
+            let _ = st.ep.add(
+                listener.as_raw_fd(),
+                DATA_LISTENER_TOKEN,
+                Interest { read: true, write: false },
+            );
+        }
+        self.accept = Some(AcceptState { listener, local });
+        Ok(())
+    }
+
+    /// The bound address of the data accept listener, if one is installed.
+    pub fn accept_local_addr(&self) -> Option<SocketAddr> {
+        self.accept.as_ref().and_then(|a| a.local)
+    }
+
+    /// Append a connection as a fresh slot mid-serve, returning its index.
+    /// Under the epoll backend the new fd registers immediately; if it
+    /// cannot (no fd, registration failure) the whole reactor degrades to
+    /// the sweep backend rather than stranding one unserviceable slot.
+    pub fn add_conn(&mut self, link: Box<dyn ReactorConn>) -> usize {
+        let ci = self.conns.len();
+        self.conns.push(Slot { stats: link.stats(), link: Some(link), hold: false });
+        #[cfg(target_os = "linux")]
+        if let BackendImpl::Epoll(st) = &mut self.backend {
+            let fd = self.conns[ci].link.as_ref().and_then(|l| l.readiness_fd());
+            let interest = Interest { read: true, write: false };
+            match fd {
+                Some(fd) if st.ep.add(fd, ci as u64, interest).is_ok() => {
+                    st.reg.push(Some(EpollReg { fd, armed: Some(interest) }));
+                    st.is_dirty.push(false);
+                }
+                _ => {
+                    // an unarmable connection would never be serviced:
+                    // degrade the whole pump to the sweep, which needs no
+                    // registrations (matching the poll_wait failure path)
+                    self.backend = BackendImpl::Sweep;
+                }
+            }
+        }
+        ci
     }
 
     /// Tunables this reactor runs with.
@@ -867,6 +955,28 @@ impl Reactor {
         // the listener is one more readiness source, not another thread
         if let Some(ops) = self.ops.as_mut() {
             progress |= pump_ops(&mut self.backend, ops, &mut self.ops_requests);
+        }
+        // data-plane accept: each pending connection becomes a fresh slot
+        // and surfaces as Event::Accepted — always ahead of any Event::Msg
+        // from that slot, which only its NEXT pass can produce
+        while self.accept.is_some() {
+            let accepted = match self.accept.as_ref() {
+                Some(acc) => acc.listener.accept(),
+                None => break,
+            };
+            match accepted {
+                Ok((stream, _peer)) => {
+                    progress = true;
+                    // an unwrappable stream is dropped; the edge retries
+                    if let Ok(conn) = NbTcp::from_stream(stream) {
+                        let ci = self.add_conn(Box::new(conn));
+                        events.push(Event::Accepted { client: ci });
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => break, // transient accept failure: retried next pass
+            }
         }
         progress
     }

@@ -1,0 +1,197 @@
+//! Per-session frame sequencing: loud detection of reordering, loss, and
+//! duplication at the protocol layer.
+//!
+//! Each direction of a session carries its own monotonic counter, stamped
+//! onto every data frame as a [`Msg::Sequenced`] envelope.  The receiver is
+//! **opt-in-and-lock**: a connection starts tolerant (bare frames pass
+//! through untouched, so hand-rolled legacy peers and the adversarial rogue
+//! tests keep working), but the first sequenced frame *locks* the session —
+//! from then on every data frame must arrive enveloped and in exact order.
+//! Anything else — a gap where the network dropped a frame, a duplicate,
+//! two frames swapped in flight, or a peer that quietly stops sequencing —
+//! is a [`SeqError`], surfaced as a connection-fatal transport error rather
+//! than silently mis-decoding downstream (a reordered `Features`/`Gradients`
+//! pair would otherwise still *decode*, just into the wrong step).
+//!
+//! Handshake traffic (`KeySeed`, `ShardHello`, `ShardChallenge`,
+//! `KeyShard`, `Resume`, `ResumeOk`) is never enveloped: it runs before the
+//! session exists, and its own challenge/nonce discipline already rejects
+//! replay.  Counters are per *connection* — a resumed session starts fresh
+//! at 0 on both sides, with the resume point pinned by
+//! `Msg::Resume::last_acked_step` instead of the old counters.
+
+use std::fmt;
+
+use crate::transport::Msg;
+
+/// Sequencing violation on a received frame — always connection-fatal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqError {
+    /// A sequenced frame skipped ahead: at least one frame was lost.
+    Gap {
+        /// The sequence number the receiver required next.
+        expected: u64,
+        /// The (higher) sequence number that actually arrived.
+        got: u64,
+    },
+    /// A sequenced frame arrived at or below the watermark: a duplicate,
+    /// or two frames swapped in flight (the later one already advanced
+    /// the counter past this one).
+    Reordered {
+        /// The sequence number the receiver required next.
+        expected: u64,
+        /// The (lower) sequence number that actually arrived.
+        got: u64,
+    },
+    /// A bare data frame arrived on a session that already locked into
+    /// sequencing — a peer must not stop stamping mid-session.
+    Unsequenced,
+}
+
+impl fmt::Display for SeqError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SeqError::Gap { expected, got } => {
+                write!(f, "sequence gap: expected frame {expected}, got {got}")
+            }
+            SeqError::Reordered { expected, got } => {
+                write!(f, "duplicate or reordered frame: expected frame {expected}, got {got}")
+            }
+            SeqError::Unsequenced => write!(f, "unsequenced frame in a sequenced session"),
+        }
+    }
+}
+
+impl std::error::Error for SeqError {}
+
+/// One direction-pair of session sequence state (own transmit counter,
+/// peer's expected-next counter, and the opt-in lock).
+#[derive(Debug, Default, Clone)]
+pub struct Seq {
+    next_tx: u64,
+    next_rx: u64,
+    locked: bool,
+}
+
+impl Seq {
+    /// Fresh counters: transmit starts at 0, receive side still tolerant.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Envelope one outbound data frame with the next transmit number.
+    pub fn stamp(&mut self, msg: Msg) -> Msg {
+        let seq = self.next_tx;
+        self.next_tx += 1;
+        Msg::Sequenced { seq, inner: Box::new(msg) }
+    }
+
+    /// The sequence number [`Seq::stamp`] will assign next; for callers
+    /// that stamp pre-encoded frames via [`crate::transport::wire::seq_frame`]
+    /// instead of re-encoding a [`Msg`].
+    pub fn take_tx(&mut self) -> u64 {
+        let seq = self.next_tx;
+        self.next_tx += 1;
+        seq
+    }
+
+    /// Validate one inbound frame.  Sequenced frames must carry exactly the
+    /// expected number (and lock the session); bare frames pass through
+    /// only while the session is still unlocked.
+    pub fn accept(&mut self, msg: Msg) -> Result<Msg, SeqError> {
+        match msg {
+            Msg::Sequenced { seq, inner } => {
+                let expected = self.next_rx;
+                if seq > expected {
+                    return Err(SeqError::Gap { expected, got: seq });
+                }
+                if seq < expected {
+                    return Err(SeqError::Reordered { expected, got: seq });
+                }
+                self.next_rx += 1;
+                self.locked = true;
+                Ok(*inner)
+            }
+            m if self.locked => {
+                // handshake re-runs never reach here (a resume is a new
+                // connection with a new Seq), so any bare frame is a peer
+                // that stopped sequencing mid-session
+                let _ = m;
+                Err(SeqError::Unsequenced)
+            }
+            m => Ok(m),
+        }
+    }
+
+    /// Whether the peer has locked this session into sequencing.
+    pub fn locked(&self) -> bool {
+        self.locked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_stream_passes_and_unwraps() {
+        let mut tx = Seq::new();
+        let mut rx = Seq::new();
+        for step in 0..5u64 {
+            let m = tx.stamp(Msg::KeySeed { seed: step });
+            assert_eq!(rx.accept(m).unwrap(), Msg::KeySeed { seed: step });
+        }
+        assert!(rx.locked());
+    }
+
+    #[test]
+    fn gap_detected() {
+        let mut tx = Seq::new();
+        let mut rx = Seq::new();
+        rx.accept(tx.stamp(Msg::Shutdown)).unwrap();
+        let _lost = tx.stamp(Msg::Shutdown);
+        let err = rx.accept(tx.stamp(Msg::Shutdown)).unwrap_err();
+        assert_eq!(err, SeqError::Gap { expected: 1, got: 2 });
+        assert_eq!(err.to_string(), "sequence gap: expected frame 1, got 2");
+    }
+
+    #[test]
+    fn duplicate_and_swap_detected() {
+        let mut tx = Seq::new();
+        let mut rx = Seq::new();
+        let a = tx.stamp(Msg::KeySeed { seed: 1 });
+        let b = tx.stamp(Msg::KeySeed { seed: 2 });
+        // swapped in flight: b lands first (a gap), then retrying in the
+        // true order trips the reorder arm on a fresh receiver
+        assert!(matches!(rx.accept(b.clone()), Err(SeqError::Gap { expected: 0, got: 1 })));
+        let mut rx = Seq::new();
+        rx.accept(a.clone()).unwrap();
+        rx.accept(b).unwrap();
+        let err = rx.accept(a).unwrap_err();
+        assert_eq!(err, SeqError::Reordered { expected: 2, got: 0 });
+    }
+
+    #[test]
+    fn tolerant_until_locked_then_strict() {
+        let mut rx = Seq::new();
+        // legacy peer: bare frames sail through while unlocked
+        assert_eq!(rx.accept(Msg::Shutdown).unwrap(), Msg::Shutdown);
+        assert!(!rx.locked());
+        let mut tx = Seq::new();
+        rx.accept(tx.stamp(Msg::Shutdown)).unwrap();
+        // the first envelope locked the session: bare frames now fail
+        assert_eq!(rx.accept(Msg::Shutdown).unwrap_err(), SeqError::Unsequenced);
+        assert_eq!(
+            SeqError::Unsequenced.to_string(),
+            "unsequenced frame in a sequenced session"
+        );
+    }
+
+    #[test]
+    fn take_tx_matches_stamp_numbering() {
+        let mut s = Seq::new();
+        assert_eq!(s.take_tx(), 0);
+        assert!(matches!(s.stamp(Msg::Shutdown), Msg::Sequenced { seq: 1, .. }));
+        assert_eq!(s.take_tx(), 2);
+    }
+}

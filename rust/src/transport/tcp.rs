@@ -178,6 +178,27 @@ impl Tcp {
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 
+    /// One connection attempt bounded by `timeout`.  Unlike [`Tcp::connect`]
+    /// this never retries — the caller (the edge's `RetryPolicy` runner)
+    /// owns the retry/backoff schedule and only needs each individual
+    /// attempt to give up in bounded time.
+    pub fn connect_within(addr: &str, timeout: std::time::Duration) -> std::io::Result<Self> {
+        use std::net::ToSocketAddrs;
+        let mut last_err = None;
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    return Ok(Tcp { stream, stats: Arc::new(LinkStats::default()) });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "address resolved to nothing")
+        }))
+    }
+
     /// Connect to a listening peer (edge side), retrying briefly while the
     /// server comes up.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
@@ -231,6 +252,16 @@ impl Transport for Tcp {
 
     fn stats(&self) -> Arc<LinkStats> {
         self.stats.clone()
+    }
+
+    fn set_deadline(
+        &mut self,
+        read: Option<std::time::Duration>,
+        write: Option<std::time::Duration>,
+    ) -> bool {
+        // Real socket deadlines: a breached one surfaces from recv/send as
+        // TransportError::TimedOut via the io-error mapping.
+        self.stream.set_read_timeout(read).is_ok() && self.stream.set_write_timeout(write).is_ok()
     }
 }
 
@@ -355,6 +386,43 @@ mod tests {
         assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
         assert!(err.to_string().contains("1 of 2"), "{err}");
         client.join().unwrap();
+    }
+
+    #[test]
+    fn read_deadline_surfaces_timed_out() {
+        let addr = "127.0.0.1:39388";
+        let listener = Tcp::bind(addr).unwrap();
+        let server = std::thread::spawn(move || {
+            // accept, then go silent: never send a byte
+            let t = Tcp::accept(&listener).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(400));
+            drop(t);
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        assert!(c.set_deadline(Some(std::time::Duration::from_millis(50)), None));
+        match c.recv() {
+            Err(TransportError::TimedOut) => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        // the link itself is still alive after the stall: clearing the
+        // deadline and sending still works
+        assert!(c.set_deadline(None, None));
+        c.send(&Msg::Shutdown).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connect_within_bounds_a_dead_address() {
+        // RFC 5737 TEST-NET-1: unroutable, so the SYN goes unanswered and
+        // only the caller's timeout ends the attempt.
+        let t0 = std::time::Instant::now();
+        let res = Tcp::connect_within("192.0.2.1:9", std::time::Duration::from_millis(100));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "attempt must give up near the 100ms deadline, took {:?} ({:?})",
+            t0.elapsed(),
+            res.err()
+        );
     }
 
     #[test]

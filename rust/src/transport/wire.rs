@@ -22,6 +22,10 @@ pub enum WireError {
     UnknownTag(u8),
     /// Announced element count exceeds [`MAX_ELEMS`] or contradicts shape.
     TooLarge(u64),
+    /// A [`Msg::Sequenced`] envelope enveloping another envelope.  The
+    /// sequencing layer stamps exactly one sequence number per data frame;
+    /// nesting can only be a corrupt or malicious peer.
+    NestedSequence,
 }
 
 impl fmt::Display for WireError {
@@ -30,6 +34,7 @@ impl fmt::Display for WireError {
             WireError::Truncated(pos) => write!(f, "truncated frame at byte {pos}"),
             WireError::UnknownTag(tag) => write!(f, "unknown tag {tag}"),
             WireError::TooLarge(n) => write!(f, "tensor too large: {n} elements"),
+            WireError::NestedSequence => write!(f, "nested sequenced envelope"),
         }
     }
 }
@@ -47,6 +52,9 @@ const TAG_SHUTDOWN: u8 = 8;
 const TAG_KEY_SHARD: u8 = 9;
 const TAG_SHARD_CHALLENGE: u8 = 10;
 const TAG_SHARD_HELLO: u8 = 11;
+const TAG_SEQUENCED: u8 = 12;
+const TAG_RESUME: u8 = 13;
+const TAG_RESUME_OK: u8 = 14;
 
 /// Hard cap on decoded element counts (guards fuzz/corruption OOM).
 pub const MAX_ELEMS: u64 = 1 << 28;
@@ -122,7 +130,40 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_u64(&mut out, *proof);
         }
         Msg::Shutdown => out.push(TAG_SHUTDOWN),
+        Msg::Sequenced { seq, inner } => {
+            debug_assert!(
+                !matches!(**inner, Msg::Sequenced { .. }),
+                "sequenced envelopes never nest"
+            );
+            out.push(TAG_SEQUENCED);
+            put_u64(&mut out, *seq);
+            out.extend_from_slice(&encode(inner));
+        }
+        Msg::Resume { client_id, epoch, last_acked_step, proof } => {
+            out.push(TAG_RESUME);
+            put_u64(&mut out, *client_id);
+            put_u64(&mut out, *epoch);
+            put_u64(&mut out, *last_acked_step);
+            put_u64(&mut out, *proof);
+        }
+        Msg::ResumeOk { resume_step } => {
+            out.push(TAG_RESUME_OK);
+            put_u64(&mut out, *resume_step);
+        }
     }
+    out
+}
+
+/// Build a `[`[`Msg::Sequenced`]`]` wire frame around an already-encoded
+/// inner frame without re-decoding it — the reactor's codec workers hand the
+/// serve loop finished frames, and the sequencing layer stamps them on the
+/// way out.
+pub fn seq_frame(seq: u64, inner: &[u8]) -> Vec<u8> {
+    debug_assert_ne!(inner.first(), Some(&TAG_SEQUENCED), "sequenced envelopes never nest");
+    let mut out = Vec::with_capacity(9 + inner.len());
+    out.push(TAG_SEQUENCED);
+    put_u64(&mut out, seq);
+    out.extend_from_slice(inner);
     out
 }
 
@@ -232,6 +273,22 @@ impl<'a> Reader<'a> {
 pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
     let mut r = Reader { b: frame, pos: 0 };
     let tag = r.u8()?;
+    if tag == TAG_SEQUENCED {
+        let seq = r.u64()?;
+        let inner_tag = r.u8()?;
+        if inner_tag == TAG_SEQUENCED {
+            return Err(WireError::NestedSequence);
+        }
+        let inner = decode_body(&mut r, inner_tag)?;
+        return Ok(Msg::Sequenced { seq, inner: Box::new(inner) });
+    }
+    decode_body(&mut r, tag)
+}
+
+/// Decode the body of one non-envelope message after its tag byte.  Shared
+/// by the top-level frame path and the single permitted envelope level —
+/// deliberately NOT recursive, so nesting depth is bounded by construction.
+fn decode_body(r: &mut Reader<'_>, tag: u8) -> Result<Msg, WireError> {
     let msg = match tag {
         TAG_FEATURES => Msg::Features { step: r.u64()?, tensor: r.tensor()? },
         TAG_TRAIN_LABELS => Msg::TrainLabels { step: r.u64()?, labels: r.labels()? },
@@ -260,6 +317,13 @@ pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
             proof: r.u64()?,
         },
         TAG_SHUTDOWN => Msg::Shutdown,
+        TAG_RESUME => Msg::Resume {
+            client_id: r.u64()?,
+            epoch: r.u64()?,
+            last_acked_step: r.u64()?,
+            proof: r.u64()?,
+        },
+        TAG_RESUME_OK => Msg::ResumeOk { resume_step: r.u64()? },
         t => return Err(WireError::UnknownTag(t)),
     };
     Ok(msg)
@@ -367,6 +431,52 @@ mod tests {
         let f = encode(&Msg::ShardHello);
         assert_eq!(f.len(), 1);
         assert_eq!(decode(&f).unwrap(), Msg::ShardHello);
+    }
+
+    #[test]
+    fn sequenced_roundtrip_and_truncation() {
+        let inner = Msg::Gradients {
+            step: 9,
+            tensor: Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]),
+        };
+        let m = Msg::Sequenced { seq: 41, inner: Box::new(inner.clone()) };
+        let f = encode(&m);
+        assert_eq!(decode(&f).unwrap(), m);
+        for cut in 1..f.len() {
+            assert!(decode(&f[..cut]).is_err(), "cut={cut} should fail");
+        }
+        // the envelope is exactly tag + seq prepended to the inner frame,
+        // and seq_frame builds the identical bytes from the encoded inner
+        assert_eq!(f.len(), 1 + 8 + encode(&inner).len());
+        assert_eq!(seq_frame(41, &encode(&inner)), f);
+    }
+
+    #[test]
+    fn nested_sequence_rejected() {
+        let inner = encode(&Msg::Sequenced { seq: 1, inner: Box::new(Msg::Shutdown) });
+        let f = seq_frame(0, &inner); // forged: encode() would assert
+        assert!(matches!(decode(&f), Err(WireError::NestedSequence)));
+    }
+
+    #[test]
+    fn resume_roundtrip_and_truncation() {
+        let m = Msg::Resume {
+            client_id: 5,
+            epoch: 2,
+            last_acked_step: 117,
+            proof: 0xFACE_0FF5_1DE5_EED5,
+        };
+        let f = encode(&m);
+        // tag + four u64 fields, nothing more
+        assert_eq!(f.len(), 1 + 8 * 4);
+        assert_eq!(decode(&f).unwrap(), m);
+        for cut in 1..f.len() {
+            assert!(decode(&f[..cut]).is_err(), "cut={cut} should fail");
+        }
+        let ok = Msg::ResumeOk { resume_step: 118 };
+        let f = encode(&ok);
+        assert_eq!(f.len(), 1 + 8);
+        assert_eq!(decode(&f).unwrap(), ok);
     }
 
     #[test]

@@ -8,14 +8,19 @@
 //! accounting while the rogue fails loudly and its shard claim is
 //! released.  Ports 39440+ (one per scenario, like every TCP test here).
 //!
-//! The long-soak churn test is `#[ignore]`-gated: CI smoke skips it, the
-//! scheduled `chaos-soak` workflow runs it with `--ignored` and scales it
-//! via `C3SL_SOAK_EDGES` / `C3SL_SOAK_ROUNDS` / `C3SL_SOAK_STEPS`.
+//! The long-soak tests are `#[ignore]`-gated: CI smoke skips them, the
+//! scheduled `chaos-soak` workflow runs them with `--ignored` and scales
+//! them via `C3SL_SOAK_EDGES` / `C3SL_SOAK_ROUNDS` / `C3SL_SOAK_STEPS`
+//! (plus `C3SL_SOAK_RECONNECT=1` to enable the in-round recovery soak).
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use c3sl::coordinator::multi::{self, CloudCodec, EdgeCodec};
-use c3sl::coordinator::{ClientReport, EdgeReport, RunCodec, ShardGate};
+use c3sl::coordinator::multi::{self, CloudCodec, EdgeCodec, OpsOptions, OpsRegistry};
+use c3sl::coordinator::{
+    run_edge_retry, ClientReport, EdgeReport, RetryPolicy, RunCodec, SessionDeadlines, ShardGate,
+};
+use c3sl::util::error::C3Error;
 use c3sl::hdc::keyring::KeyRing;
 use c3sl::hdc::FftBackend;
 use c3sl::tensor::{Labels, Tensor};
@@ -681,6 +686,417 @@ fn reconnect_storm_reclaim_and_revocation_accounting() {
 }
 
 // ---------------------------------------------------------------------------
+// 10b. Recovery: a mid-stream disconnect becomes backoff → reconnect →
+//      Msg::Resume → exact accounting, on BOTH accept-loop serve paths
+// ---------------------------------------------------------------------------
+
+/// Everything a recovery fleet run produced.
+struct RecoveryRun {
+    cloud: Result<c3sl::coordinator::MultiStats, String>,
+    edges: Vec<Result<EdgeReport, String>>,
+    registry: Arc<OpsRegistry>,
+    watermark0: Option<u64>,
+    unreleased: Vec<u64>,
+}
+
+/// Two retrying edges against one accept-loop cloud.  When `impair` is set,
+/// edge 0's FIRST connection dies at frame 4 (step 1's Features, after one
+/// fully acknowledged step) and its retry runner must reconnect and resume;
+/// with `impair` off the same fleet is the clean reference.
+fn recovery_run(seed: u64, addr: &'static str, reactor: bool, impair: bool) -> RecoveryRun {
+    let n = 2usize;
+    let (r, d, batch, steps) = (4usize, 128usize, 8usize, 4u64);
+    let ring = KeyRing::new(sub_seed(seed, 0x4B45_5952, 0), r, d, 0);
+    let gate = ShardGate::new(ring, n);
+    let registry = Arc::new(OpsRegistry::new());
+    let listener = Tcp::bind(addr).expect("bind recovery listener");
+    let deadlines = SessionDeadlines {
+        handshake: Some(Duration::from_secs(10)),
+        idle: Some(Duration::from_secs(10)),
+    };
+    let policy = RetryPolicy {
+        max_attempts: 4,
+        base_backoff_ms: 40,
+        max_backoff_ms: 200,
+        jitter_frac: 0.2,
+        connect_timeout_ms: 5_000,
+        read_timeout_ms: 5_000,
+        write_timeout_ms: 5_000,
+        seed: sub_seed(seed, 0xB0FF, 0),
+    };
+
+    let (cloud, edges) = std::thread::scope(|sc| {
+        let gate = &gate;
+        let cloud_registry = registry.clone();
+        let cloud = sc.spawn(move || -> Result<c3sl::coordinator::MultiStats, String> {
+            if reactor {
+                let cfg = ReactorConfig {
+                    backend: ReadinessBackend::platform_default(),
+                    ..ReactorConfig::default()
+                };
+                let ops = OpsOptions {
+                    listener: None,
+                    registry: cloud_registry,
+                    reload: None,
+                };
+                multi::serve_clients_reactor_accept(
+                    CloudCodec::Sharded(gate),
+                    listener,
+                    n,
+                    2,
+                    cfg,
+                    ops,
+                    deadlines,
+                )
+                .map_err(|e| e.to_string())
+            } else {
+                multi::serve_clients_accept(
+                    CloudCodec::Sharded(gate),
+                    listener,
+                    n,
+                    &cloud_registry,
+                    deadlines,
+                )
+                .map_err(|e| e.to_string())
+            }
+        });
+
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let edge_registry = registry.clone();
+            let mut p = policy;
+            // de-phased, replayable per-edge jitter (same rule as the driver)
+            p.seed = policy.seed.wrapping_add(i as u64);
+            let link_seed = sub_seed(seed, 0x4C49_4E4B, i as u64);
+            let data_seed = sub_seed(seed, 0x4441_5441, i as u64);
+            handles.push(sc.spawn(move || -> Result<EdgeReport, String> {
+                run_edge_retry(
+                    ring.edge_shard(i as u64),
+                    1,
+                    FftBackend::default(),
+                    |attempt| {
+                        let tp = Tcp::connect(addr)
+                            .map_err(|e| C3Error::msg(format!("connect {addr}: {e}")))?;
+                        if impair && i == 0 && attempt == 0 {
+                            let imp = Impairments {
+                                disconnect_at: Some(4),
+                                ..Impairments::off()
+                            };
+                            Ok(Box::new(FaultyLink::new(
+                                tp,
+                                link_seed,
+                                imp,
+                                Impairments::off(),
+                            )) as Box<dyn Transport>)
+                        } else {
+                            Ok(Box::new(tp) as Box<dyn Transport>)
+                        }
+                    },
+                    steps,
+                    data_seed,
+                    batch,
+                    d,
+                    &p,
+                    Some(&*edge_registry),
+                )
+                .map_err(|e| e.to_string())
+            }));
+        }
+        let edges: Vec<_> =
+            handles.into_iter().map(|h| h.join().expect("recovery edge thread")).collect();
+        (cloud.join().expect("recovery cloud thread"), edges)
+    });
+
+    let unreleased = (0..n as u64).filter(|&id| gate.claimant(id).is_some()).collect();
+    RecoveryRun {
+        cloud,
+        edges,
+        registry,
+        watermark0: gate.last_step(0),
+        unreleased,
+    }
+}
+
+/// Loss trajectory + step count of an edge report — the fields that must be
+/// bit-identical between a recovered run and its unimpaired reference (byte
+/// totals legitimately differ: the recovery pays an extra handshake and a
+/// replayed step).
+fn trajectory(r: &EdgeReport) -> (u64, f32, f32) {
+    (r.steps, r.first_loss, r.last_loss)
+}
+
+#[test]
+fn mid_stream_disconnect_recovers_via_resume_on_both_serve_paths() {
+    let ctx = ChaosCtx::new("disconnect-recovery", 0xC3_000D);
+    let steps = 4u64;
+    let plans: [(&str, &str, bool); 2] = [
+        ("127.0.0.1:39463", "127.0.0.1:39464", false),
+        ("127.0.0.1:39465", "127.0.0.1:39466", true),
+    ];
+    for (addr, ref_addr, reactor) in plans {
+        let style = if reactor { "reactor" } else { "threaded" };
+        let run = recovery_run(ctx.seed(), addr, reactor, true);
+        let reference = recovery_run(ctx.seed(), ref_addr, reactor, false);
+
+        // the faulted edge FINISHES — the disconnect became a recovery —
+        // and its loss trajectory is bit-identical to the unimpaired twin
+        for i in 0..2 {
+            let got = match &run.edges[i] {
+                Ok(rep) => rep,
+                Err(e) => ctx.fail(&format!("{style}: edge {i} failed: {e}")),
+            };
+            let want = match &reference.edges[i] {
+                Ok(rep) => rep,
+                Err(e) => ctx.fail(&format!("{style}: reference edge {i} failed: {e}")),
+            };
+            ctx.check_eq(&trajectory(got), &trajectory(want), "recovered trajectory");
+            ctx.check_eq(&got.steps, &steps, "every step trained");
+        }
+        // exact cloud accounting: two clean retirements; the resumed
+        // session served exactly the steps after the acknowledged one
+        // (steps-1), the failed first connection contributed no report
+        let stats = match &run.cloud {
+            Ok(s) => s,
+            Err(e) => ctx.fail(&format!("{style}: recovery serve failed: {e}")),
+        };
+        ctx.check_eq(&stats.per_client.len(), &2, "clean session count");
+        let served: u64 = stats.per_client.iter().map(|c| c.steps).sum();
+        ctx.check_eq(&served, &(2 * steps - 1), "steps served across sessions");
+        ctx.check_eq(&run.watermark0, &Some(steps - 1), "shard 0 watermark");
+        ctx.check(
+            run.unreleased.is_empty(),
+            &format!("{style}: shards still claimed: {:?}", run.unreleased),
+        );
+        // recovery observability: one reconnect, one resume, no reaps, and
+        // the backoff sleep was recorded
+        ctx.check_eq(&run.registry.reconnects_total(), &1, "reconnects counter");
+        ctx.check_eq(&run.registry.resumes_total(), &1, "resumes counter");
+        ctx.check_eq(&run.registry.clients_reaped_total(), &0, "reap counter");
+        let backoff = run.registry.retry_backoff_snapshot();
+        ctx.check_eq(&backoff.counts().iter().sum::<u64>(), &1, "backoff observations");
+        // the reference saw no recovery machinery at all
+        ctx.check_eq(&reference.registry.reconnects_total(), &0, "reference reconnects");
+        ctx.check_eq(&reference.registry.resumes_total(), &0, "reference resumes");
+    }
+}
+
+#[test]
+fn same_seed_recovery_replays_bit_identically() {
+    let ctx = ChaosCtx::new("recovery-replay", 0xC3_000E);
+    let a = recovery_run(ctx.seed(), "127.0.0.1:39467", false, true);
+    let b = recovery_run(ctx.seed(), "127.0.0.1:39468", false, true);
+    // per-edge reports replay exactly — byte totals included: the same
+    // disconnect script, the same resume point, the same jitter stream
+    ctx.check_eq(&a.edges, &b.edges, "edge reports across replays");
+    ctx.check_eq(&a.watermark0, &b.watermark0, "watermarks across replays");
+    ctx.check_eq(
+        &a.registry.retry_backoff_snapshot().counts(),
+        &b.registry.retry_backoff_snapshot().counts(),
+        "backoff histograms across replays",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 10c. A resume claiming a watermark the cloud never observed, or one too
+//      stale to splice, is rejected loudly — never silently rewound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stale_watermark_resume_is_rejected_loudly() {
+    let ctx = ChaosCtx::new("stale-resume", 0xC3_000F);
+    let addr = "127.0.0.1:39469";
+    let ring = KeyRing::new(ctx.seed(), 2, 64, 0);
+    let gate = ShardGate::new(ring, 1);
+    let listener = Tcp::bind(addr).expect("bind");
+
+    // round 1: a clean 4-step session leaves the watermark at step 3
+    let (serve, edge) = reconnect_round(
+        &listener,
+        &gate,
+        ring,
+        addr,
+        0,
+        0,
+        4,
+        sub_seed(ctx.seed(), 0x4C4B, 0),
+        Impairments::off(),
+    );
+    ctx.check(serve.is_ok(), &format!("seed session must serve: {serve:?}"));
+    ctx.check(edge.is_ok(), "seed session edge must finish");
+    ctx.check_eq(&gate.last_step(0), &Some(3), "seeded watermark");
+
+    // round 2: a hand-driven resume with a perfectly valid proof but a
+    // last-acked step (0) far behind the observed watermark (3) — an edge
+    // that lost state must not silently rewind the session
+    let serve_res = std::thread::scope(|sc| {
+        let gate = &gate;
+        let listener = &listener;
+        let serve = sc.spawn(move || {
+            let mut tp = Tcp::accept(listener).map_err(|e| e.to_string())?;
+            multi::serve_one(CloudCodec::Sharded(gate), &mut tp, 1).map_err(|e| e.to_string())
+        });
+        let mut tp = Tcp::connect(addr).expect("connect");
+        tp.send(&Msg::ShardHello).expect("hello");
+        let nonce = match tp.recv().expect("challenge") {
+            Msg::ShardChallenge { nonce } => nonce,
+            other => ctx.fail(&format!("expected ShardChallenge, got {other:?}")),
+        };
+        let shard = ring.edge_shard(0);
+        let epoch = shard.epoch_of_step(1);
+        tp.send(&Msg::Resume {
+            client_id: 0,
+            epoch,
+            last_acked_step: 0,
+            proof: shard.proof(epoch, nonce),
+        })
+        .expect("resume");
+        serve.join().expect("serve thread")
+    });
+    match serve_res {
+        Ok(rep) => ctx.fail(&format!("stale resume was admitted: {rep:?}")),
+        Err(e) => ctx.check(
+            e.contains("stale resume watermark"),
+            &format!("serve error {e:?} lacks the stale-watermark refusal"),
+        ),
+    }
+    ctx.check(gate.claimant(0).is_none(), "refused resume must hold nothing");
+    ctx.check_eq(&gate.last_step(0), &Some(3), "watermark untouched by the refusal");
+}
+
+// ---------------------------------------------------------------------------
+// 10d. Reordering: swapped adjacent frames are a LOUD sequencing error on
+//      both serve paths — never a silent wrong-step decode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reordered_frames_are_rejected_by_the_sequencing_layer_on_both_paths() {
+    let ctx = ChaosCtx::new("reorder-loud", 0xC3_0010);
+    let plans = [
+        (ServeStyle::Threaded, "127.0.0.1:39470", "127.0.0.1:39471"),
+        (reactor_style(), "127.0.0.1:39472", "127.0.0.1:39473"),
+    ];
+    for (serve, addr, ref_addr) in plans {
+        let mut fleet = ChaosFleet::clean("reorder-loud", ctx.seed(), serve, addr, 2);
+        // swap frame 2 (step 0's Features, sequence 0) with frame 3 (its
+        // TrainLabels, sequence 1): the cloud sees sequence 1 first
+        fleet.edges[0].tx.reorder_at = Some(2);
+        let run = run_fleet(&fleet);
+        expect_cloud_err(&ctx, &run, "sequence gap");
+        expect_edge_err(&ctx, &run, 0);
+        ctx.check(
+            run.events[0]
+                .iter()
+                .any(|ev| ev.dir == Dir::Tx
+                    && ev.frame == 2
+                    && matches!(ev.action, FaultAction::Reordered)),
+            "schedule must record the scripted swap",
+        );
+        let reference = reference_reports(&fleet, ref_addr, &ctx);
+        ctx.check_eq(expect_edge_ok(&ctx, &run, 1), &reference[1], "healthy edge report");
+        released(&ctx, &run);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 10e. Handshake deadline: a client that connects and never says hello is
+//      reaped — it must not occupy a serve slot forever (regression)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn silent_client_is_reaped_by_the_handshake_deadline_on_both_paths() {
+    let ctx = ChaosCtx::new("handshake-reap", 0xC3_0011);
+    let plans: [(&str, bool); 2] =
+        [("127.0.0.1:39474", false), ("127.0.0.1:39475", true)];
+    for (addr, reactor) in plans {
+        let style = if reactor { "reactor" } else { "threaded" };
+        let ring = KeyRing::new(ctx.seed(), 2, 64, 0);
+        let gate = ShardGate::new(ring, 2);
+        let registry = Arc::new(OpsRegistry::new());
+        let listener = Tcp::bind(addr).expect("bind");
+        let deadlines = SessionDeadlines {
+            handshake: Some(Duration::from_millis(250)),
+            idle: Some(Duration::from_secs(10)),
+        };
+        let (served, edge) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let cloud_registry = registry.clone();
+            let cloud = sc.spawn(move || {
+                if reactor {
+                    let cfg = ReactorConfig {
+                        backend: ReadinessBackend::platform_default(),
+                        ..ReactorConfig::default()
+                    };
+                    let ops = OpsOptions {
+                        listener: None,
+                        registry: cloud_registry,
+                        reload: None,
+                    };
+                    multi::serve_clients_reactor_accept(
+                        CloudCodec::Sharded(gate),
+                        listener,
+                        1,
+                        2,
+                        cfg,
+                        ops,
+                        deadlines,
+                    )
+                    .map_err(|e| e.to_string())
+                } else {
+                    multi::serve_clients_accept(
+                        CloudCodec::Sharded(gate),
+                        listener,
+                        1,
+                        &cloud_registry,
+                        deadlines,
+                    )
+                    .map_err(|e| e.to_string())
+                }
+            });
+            // the mute: connects, never sends a byte — before the deadline
+            // existed, this occupied a threaded serve slot forever
+            let mute = Tcp::connect(addr).expect("mute connect");
+            let t0 = std::time::Instant::now();
+            while registry.clients_reaped_total() == 0
+                && t0.elapsed() < Duration::from_secs(10)
+            {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            ctx.check_eq(
+                &registry.clients_reaped_total(),
+                &1,
+                &format!("{style}: mute must be reaped by the handshake deadline"),
+            );
+            // with the mute reaped, a real edge claims, trains, retires —
+            // and the serve completes on its single clean retirement
+            let mut tp = Tcp::connect(addr).expect("edge connect");
+            let edge = multi::run_edge(
+                EdgeCodec::Sharded {
+                    shard: ring.edge_shard(1),
+                    workers: 1,
+                    fft: FftBackend::default(),
+                },
+                &mut tp,
+                2,
+                0xDA7A,
+                4,
+                64,
+            )
+            .map_err(|e| e.to_string());
+            drop(mute);
+            (cloud.join().expect("cloud thread"), edge)
+        });
+        ctx.check(edge.is_ok(), &format!("{style}: live edge failed: {edge:?}"));
+        let stats = match served {
+            Ok(s) => s,
+            Err(e) => ctx.fail(&format!("{style}: serve failed: {e}")),
+        };
+        ctx.check_eq(&stats.per_client.len(), &1, "one clean session");
+        ctx.check_eq(&stats.per_client[0].steps, &2, "live edge steps");
+        ctx.check(gate.claimant(1).is_none(), "claim released after retirement");
+    }
+}
+
+// ---------------------------------------------------------------------------
 // 11. Seed reproducibility: one seed, two runs, identical everything
 // ---------------------------------------------------------------------------
 
@@ -865,5 +1281,168 @@ fn long_soak_churn_under_rotation_with_exact_accounting() {
                 &format!("round {round}: shard {i} watermark"),
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 13. Reconnect-churn soak: every churner recovers IN-round through the
+//     retry runner — #[ignore]-gated, enabled by C3SL_SOAK_RECONNECT=1
+//     (chaos-soak workflow)
+// ---------------------------------------------------------------------------
+
+#[test]
+#[ignore = "long soak: set C3SL_SOAK_RECONNECT=1 and run via `cargo test --test chaos -- --ignored` (chaos-soak workflow)"]
+fn long_soak_reconnect_churn_with_retry_recovery() {
+    if env_u64("C3SL_SOAK_RECONNECT", 0) == 0 {
+        eprintln!("chaos[reconnect-soak] skipped: set C3SL_SOAK_RECONNECT=1 to enable");
+        return;
+    }
+    let ctx = ChaosCtx::new("reconnect-soak", 0xC3_0012);
+    let n = env_u64("C3SL_SOAK_EDGES", 96).max(2) as usize;
+    let rounds = env_u64("C3SL_SOAK_ROUNDS", 4).max(1);
+    let steps = env_u64("C3SL_SOAK_STEPS", 3).max(2);
+    let (r, d, batch) = (2usize, 64usize, 4usize);
+
+    // each round is an independent fleet: unlike the cross-round soak
+    // above (where a churner's death is repaired by the NEXT round's
+    // connection), every churner here recovers within its own round via
+    // backoff → reconnect → Msg::Resume, and the round must end with a
+    // full ledger anyway
+    for round in 0..rounds {
+        let ring = KeyRing::new(sub_seed(ctx.seed(), 0x4B45_5952, round), r, d, 0);
+        let gate = ShardGate::new(ring, n);
+        let registry = Arc::new(OpsRegistry::new());
+        let listener = Tcp::bind("127.0.0.1:0").expect("bind reconnect-soak listener");
+        let addr = listener.local_addr().expect("reconnect-soak addr").to_string();
+        let deadlines = SessionDeadlines {
+            handshake: Some(Duration::from_secs(30)),
+            idle: Some(Duration::from_secs(30)),
+        };
+        // roughly one in five edges loses its first connection at a
+        // scripted step (kc completed steps; kc = 0 churners re-claim
+        // fresh rather than resume — both paths must recover)
+        let churn: Vec<Option<u64>> = (0..n)
+            .map(|i| {
+                let roll = sub_seed(ctx.seed(), 0xC4 + round, i as u64);
+                if roll % 5 == 0 { Some((roll >> 8) % steps) } else { None }
+            })
+            .collect();
+        let churned = churn.iter().filter(|c| c.is_some()).count() as u64;
+        let resumed =
+            churn.iter().flatten().filter(|&&kc| kc > 0).count() as u64;
+
+        let (cloud_res, edge_res) = std::thread::scope(|sc| {
+            let gate = &gate;
+            let addr = &addr;
+            let reg = registry.clone();
+            let cloud = sc.spawn(move || {
+                let cfg = ReactorConfig {
+                    backend: ReadinessBackend::platform_default(),
+                    ..ReactorConfig::default()
+                };
+                let ops = OpsOptions { listener: None, registry: reg, reload: None };
+                multi::serve_clients_reactor_accept(
+                    CloudCodec::Sharded(gate),
+                    listener,
+                    n,
+                    4,
+                    cfg,
+                    ops,
+                    deadlines,
+                )
+                .map_err(|e| e.to_string())
+            });
+            let mut handles = Vec::new();
+            for i in 0..n {
+                let edge_registry = registry.clone();
+                let kc = churn[i];
+                let link_seed = sub_seed(ctx.seed(), 0x50A0 + round, i as u64);
+                let policy = RetryPolicy {
+                    max_attempts: 4,
+                    base_backoff_ms: 40,
+                    max_backoff_ms: 400,
+                    jitter_frac: 0.2,
+                    connect_timeout_ms: 10_000,
+                    read_timeout_ms: 30_000,
+                    write_timeout_ms: 30_000,
+                    seed: sub_seed(ctx.seed(), 0xB0FF + round, i as u64),
+                };
+                handles.push(sc.spawn(move || {
+                    run_edge_retry(
+                        ring.edge_shard(i as u64),
+                        1,
+                        FftBackend::default(),
+                        |attempt| {
+                            let tp = Tcp::connect(addr)
+                                .map_err(|e| C3Error::msg(format!("connect {addr}: {e}")))?;
+                            match kc {
+                                Some(kc) if attempt == 0 => {
+                                    let imp = Impairments {
+                                        disconnect_at: Some(2 + 2 * kc),
+                                        ..Impairments::off()
+                                    };
+                                    Ok(Box::new(FaultyLink::new(
+                                        tp,
+                                        link_seed,
+                                        imp,
+                                        Impairments::off(),
+                                    ))
+                                        as Box<dyn Transport>)
+                                }
+                                _ => Ok(Box::new(tp) as Box<dyn Transport>),
+                            }
+                        },
+                        steps,
+                        0xDA7A + i as u64,
+                        batch,
+                        d,
+                        &policy,
+                        Some(&*edge_registry),
+                    )
+                    .map_err(|e| e.to_string())
+                }));
+            }
+            let edges: Vec<_> =
+                handles.into_iter().map(|h| h.join().expect("reconnect-soak edge")).collect();
+            (cloud.join().expect("reconnect-soak cloud"), edges)
+        });
+
+        // every edge — churner or survivor — finishes every step, the
+        // cloud retires exactly n clean sessions, and the step ledger
+        // balances: a churner's kc pre-fault steps died with its failed
+        // connection, so the clean sessions carry n·steps − Σkc
+        let stats = match &cloud_res {
+            Ok(s) => s,
+            Err(e) => ctx.fail(&format!("round {round}: accept serve failed: {e}")),
+        };
+        ctx.check_eq(&stats.per_client.len(), &n, "clean session count");
+        for (i, res) in edge_res.iter().enumerate() {
+            match res {
+                Ok(rep) => ctx.check_eq(&rep.steps, &steps, "reconnect-soak edge steps"),
+                Err(e) => ctx.fail(&format!("round {round}: edge {i} failed: {e}")),
+            }
+        }
+        let served: u64 = stats.per_client.iter().map(|c| c.steps).sum();
+        let lost: u64 = churn.iter().flatten().sum();
+        ctx.check_eq(&served, &(n as u64 * steps - lost), "clean-session step ledger");
+        ctx.check_eq(&registry.reconnects_total(), &churned, "reconnects this round");
+        ctx.check_eq(&registry.resumes_total(), &resumed, "resumes this round");
+        ctx.check_eq(&registry.clients_reaped_total(), &0, "no deadline reaps");
+        for i in 0..n as u64 {
+            ctx.check(
+                gate.claimant(i).is_none(),
+                &format!("round {round}: shard {i} still claimed"),
+            );
+            ctx.check_eq(
+                &gate.last_step(i),
+                &Some(steps - 1),
+                &format!("round {round}: shard {i} watermark"),
+            );
+        }
+        eprintln!(
+            "chaos[reconnect-soak] round {round}: {n} edges, {churned} churned \
+             ({resumed} resumed, {} re-claimed), ledger exact",
+            churned - resumed
+        );
     }
 }

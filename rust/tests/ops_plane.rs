@@ -32,14 +32,18 @@ use std::time::{Duration, Instant};
 use c3sl::coordinator::multi::{
     self, CloudCodec, DrainState, EdgeCodec, OpsOptions, OpsRegistry,
 };
-use c3sl::coordinator::{RunCodec, ShardGate};
+use c3sl::coordinator::{
+    run_edge_retry, RetryPolicy, RunCodec, SessionDeadlines, ShardGate,
+};
 use c3sl::hdc::keyring::KeyRing;
 use c3sl::hdc::FftBackend;
 use c3sl::tensor::{Labels, Tensor};
+use c3sl::transport::faulty::{FaultyLink, Impairments};
 use c3sl::transport::reactor::{NbTcp, ReactorConfig, ReactorConn};
 use c3sl::transport::readiness::ReadinessBackend;
 use c3sl::transport::tcp::Tcp;
 use c3sl::transport::{inproc_reactor_pair_with, Msg, Transport};
+use c3sl::util::error::C3Error;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -492,7 +496,150 @@ fn rogue_edge_failure_is_visible_to_scrapers_and_isolated() {
 }
 
 // ---------------------------------------------------------------------------
-// 5. SIGHUP reload: the knob subset lands mid-run and is counted
+// 5. Recovery counters: a live mid-run scrape sees the reconnect, the
+//    resume, and the backoff sleep of an in-process recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recovery_counters_surface_on_live_metrics_scrapes() {
+    let _guard = serial();
+    let n = 2usize;
+    let (r, d, batch, steps) = (2usize, 64usize, 4usize, 4u64);
+    let ring = KeyRing::new(0x0C3_4EC0, r, d, 0);
+    let gate = ShardGate::new(ring, n);
+    let listener = Tcp::bind("127.0.0.1:0").expect("bind fleet listener");
+    let addr = listener.local_addr().expect("fleet addr").to_string();
+    let ops_listener = TcpListener::bind("127.0.0.1:0").expect("bind ops listener");
+    let ops_addr = ops_listener.local_addr().expect("ops addr");
+    let registry = Arc::new(OpsRegistry::new());
+    let deadlines = SessionDeadlines {
+        handshake: Some(Duration::from_secs(30)),
+        idle: Some(Duration::from_secs(30)),
+    };
+
+    let served = std::thread::scope(|sc| {
+        let gate = &gate;
+        let addr = &addr;
+        let reg = registry.clone();
+        let cloud = sc.spawn(move || {
+            let cfg = ReactorConfig {
+                backend: ReadinessBackend::platform_default(),
+                ..ReactorConfig::default()
+            };
+            let ops = OpsOptions { listener: Some(ops_listener), registry: reg, reload: None };
+            multi::serve_clients_reactor_accept(
+                CloudCodec::Sharded(gate),
+                listener,
+                n,
+                2,
+                cfg,
+                ops,
+                deadlines,
+            )
+        });
+
+        // the recovering edge: its first connection is severed at frame 4
+        // (step 1's Features) after exactly one acknowledged step — the
+        // retry runner backs off, reconnects, resumes, and every event
+        // lands in the same registry the ops loop scrapes from
+        let retry_registry = registry.clone();
+        let recovering = sc.spawn(move || {
+            let policy = RetryPolicy {
+                max_attempts: 4,
+                base_backoff_ms: 40,
+                max_backoff_ms: 200,
+                jitter_frac: 0.2,
+                connect_timeout_ms: 5_000,
+                read_timeout_ms: 5_000,
+                write_timeout_ms: 5_000,
+                seed: 0xB0FF,
+            };
+            run_edge_retry(
+                ring.edge_shard(0),
+                1,
+                FftBackend::default(),
+                |attempt| {
+                    let tp = Tcp::connect(addr)
+                        .map_err(|e| C3Error::msg(format!("connect {addr}: {e}")))?;
+                    if attempt == 0 {
+                        let imp =
+                            Impairments { disconnect_at: Some(4), ..Impairments::off() };
+                        Ok(Box::new(FaultyLink::new(tp, 0xFA_17, imp, Impairments::off()))
+                            as Box<dyn Transport>)
+                    } else {
+                        Ok(Box::new(tp) as Box<dyn Transport>)
+                    }
+                },
+                steps,
+                0xDA7A,
+                batch,
+                d,
+                &policy,
+                Some(&*retry_registry),
+            )
+        });
+
+        // a second edge claims its shard and then just sits there, holding
+        // the serve (and with it the ops loop) open for the live scrape
+        let mut tp = Tcp::connect(addr).expect("holder connect");
+        tp.send(&Msg::ShardHello).expect("hello");
+        let nonce = match tp.recv().expect("challenge") {
+            Msg::ShardChallenge { nonce } => nonce,
+            other => panic!("expected ShardChallenge, got {other:?}"),
+        };
+        let shard = ring.edge_shard(1);
+        let epoch = shard.epoch_of_step(0);
+        tp.send(&Msg::KeyShard { client_id: 1, epoch, proof: shard.proof(epoch, nonce) })
+            .expect("claim");
+
+        let report = recovering
+            .join()
+            .expect("recovering edge thread")
+            .expect("recovery must complete every step");
+        assert_eq!(report.steps, steps, "no step lost to the disconnect");
+
+        // recovery fully accounted, fleet still serving: scrape it live
+        let (code, body) = ops_get(&ops_addr, "/metrics");
+        assert_eq!(code, 200, "live scrape must succeed");
+        assert_eq!(metric_value(&body, "c3sl_reconnects_total"), Some(1.0), "{body}");
+        assert_eq!(metric_value(&body, "c3sl_resumes_total"), Some(1.0), "{body}");
+        assert_eq!(metric_value(&body, "c3sl_clients_reaped_total"), Some(0.0), "{body}");
+        assert!(body.contains("# TYPE c3sl_retry_backoff_ms histogram"), "{body}");
+        assert_eq!(
+            metric_value(&body, "c3sl_retry_backoff_ms_count"),
+            Some(1.0),
+            "exactly one backoff sleep: {body}"
+        );
+
+        // retire the holder cleanly so the serve completes its accounting
+        tp.send(&Msg::Features { step: 0, tensor: Tensor::zeros(&[batch / r, d]) })
+            .expect("features");
+        tp.send(&Msg::TrainLabels { step: 0, labels: Labels(vec![0; batch]) })
+            .expect("labels");
+        match tp.recv().expect("gradient reply") {
+            Msg::Gradients { .. } => {}
+            other => panic!("expected Gradients, got {other:?}"),
+        }
+        match tp.recv().expect("stats reply") {
+            Msg::StepStats { .. } => {}
+            other => panic!("expected StepStats, got {other:?}"),
+        }
+        tp.send(&Msg::Shutdown).expect("shutdown");
+        cloud.join().expect("cloud thread")
+    });
+
+    let stats = served.expect("accept serve returns the clean accounting");
+    assert_eq!(stats.per_client.len(), n, "two clean retirements, casualty excluded");
+    assert_eq!(registry.reconnects_total(), 1);
+    assert_eq!(registry.resumes_total(), 1);
+    assert_eq!(registry.clients_reaped_total(), 0);
+    for id in 0..n as u64 {
+        assert!(gate.claimant(id).is_none(), "shard {id} still claimed after the run");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. SIGHUP reload: the knob subset lands mid-run and is counted
 // ---------------------------------------------------------------------------
 
 #[cfg(target_os = "linux")]
